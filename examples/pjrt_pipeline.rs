@@ -1,0 +1,107 @@
+//! END-TO-END driver: proves all three layers compose on a real workload.
+//!
+//!   L1 Pallas kernels + L2 JAX graphs  ──(make artifacts)──►  HLO text
+//!   L3 rust coordinator: generate CHOA-like data → bucket/pack slices →
+//!   PJRT-execute procrustes_pack + mttkrp kernels → full PARAFAC2 fit →
+//!   parity check against the native engine → throughput report.
+//!
+//! Requires `make artifacts` (artifacts/manifest.json). Results are
+//! recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example pjrt_pipeline`
+
+use spartan::coordinator::{PjrtDriver, PjrtFitConfig};
+use spartan::datagen::ehr::{generate, EhrSpec};
+use spartan::parafac2::{fit_parafac2, Parafac2Config};
+use spartan::runtime::{ArtifactRegistry, PjrtContext};
+use spartan::util::timer::Stopwatch;
+use std::path::Path;
+
+fn main() {
+    let artifacts = std::env::var("SPARTAN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let reg = match ArtifactRegistry::load(Path::new(&artifacts)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e:#}\nhint: run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "artifacts: batch={} rank={} i_buckets={:?} c_buckets={:?}",
+        reg.batch, reg.rank, reg.i_buckets, reg.c_buckets
+    );
+    let ctx = PjrtContext::cpu().expect("PJRT CPU client");
+    println!("pjrt platform: {}", ctx.platform_name());
+
+    // A small-but-real workload: CHOA-like cohort sized so most subjects
+    // land in PJRT buckets (I ≤ 128, c_k ≤ 128).
+    let spec = EhrSpec {
+        k: 800,
+        n_diag: 300,
+        n_med: 100,
+        n_phenotypes: 5,
+        max_weeks: 100,
+        mean_active_weeks: 20.0,
+        events_per_week: 2.0,
+        seed: 99,
+    };
+    let data = generate(&spec);
+    println!("workload: {}", data.tensor.summary());
+
+    let rank = 5.min(reg.rank);
+    let iters = 20;
+
+    // --- PJRT path ---------------------------------------------------------
+    let mut driver = PjrtDriver::new(&ctx, &reg);
+    let pcfg = PjrtFitConfig {
+        rank,
+        max_iters: iters,
+        tol: 0.0, // run all iterations for a clean throughput number
+        nonneg: true,
+        seed: 3,
+        workers: 0,
+        ..Default::default()
+    };
+    let sw = Stopwatch::start();
+    let pjrt_model = driver.fit(&data.tensor, &pcfg).expect("pjrt fit");
+    let pjrt_secs = sw.elapsed_secs();
+
+    // --- native path (same config) ------------------------------------------
+    let ncfg = Parafac2Config {
+        rank,
+        max_iters: iters,
+        tol: 0.0,
+        nonneg: true,
+        seed: 3,
+        workers: 0,
+        ..Default::default()
+    };
+    let sw = Stopwatch::start();
+    let native_model = fit_parafac2(&data.tensor, &ncfg).expect("native fit");
+    let native_secs = sw.elapsed_secs();
+
+    // --- parity --------------------------------------------------------------
+    let dv = pjrt_model.v.max_abs_diff(&native_model.v);
+    let dw = pjrt_model.w.max_abs_diff(&native_model.w);
+    let dfit = (pjrt_model.stats.final_fit - native_model.stats.final_fit).abs();
+    println!("\n=== cross-layer parity (f32 artifacts vs f64 native) ===");
+    println!("fit: pjrt {:.5} vs native {:.5} (|Δ| = {dfit:.2e})", pjrt_model.stats.final_fit, native_model.stats.final_fit);
+    println!("max|ΔV| = {dv:.2e}, max|ΔW| = {dw:.2e}");
+    assert!(dfit < 5e-3, "fit parity violated");
+
+    // --- throughput report ----------------------------------------------------
+    let m = &driver.metrics;
+    let per_iter_pjrt = pjrt_secs / iters as f64;
+    let per_iter_native = native_secs / iters as f64;
+    println!("\n=== end-to-end throughput ===");
+    println!(
+        "pjrt:   {pjrt_secs:.2}s total, {per_iter_pjrt:.3}s/iter ({} kernel invocations, kernel {:.2}s, pack {:.2}s, {} batches/iter, {} fallback subjects)",
+        m.kernel_invocations, m.kernel_secs, m.pack_secs, m.batches_per_iter, m.native_fallback_subjects
+    );
+    println!("native: {native_secs:.2}s total, {per_iter_native:.3}s/iter");
+    println!(
+        "subjects/sec through the PJRT path: {:.0}",
+        (m.pjrt_subjects * iters) as f64 / pjrt_secs
+    );
+    println!("\npjrt_pipeline OK — all three layers compose");
+}

@@ -1,0 +1,160 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the rust binary then loads and
+executes the artifacts via the PJRT C API and Python never appears on the
+request path.
+
+HLO *text* — not ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids, which the xla crate's runtime (xla_extension 0.5.1) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Shape buckets: PJRT executables are fixed-shape, so the rust coordinator
+buckets slices by padded observation count I and support size C (powers of
+two) and pads with zeros — exact for every kernel here (validated by
+python/tests/test_model.py::test_padding_invariance).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--batch 16] [--rank 8] [--i-buckets 32,128] [--c-buckets 32,128]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def build_entries(batch, rank, i_buckets, c_buckets):
+    """Enumerate (name, fn, input shapes, output shapes) per bucket."""
+    entries = []
+    r = rank
+    for c in c_buckets:
+        entries.append(
+            dict(
+                kind="mttkrp_mode1",
+                fn=lambda yt, vc, w: (model.mttkrp_mode1(yt, vc, w),),
+                inputs=[[batch, c, r], [batch, c, r], [batch, r]],
+                outputs=[[r, r]],
+                b=batch, i=None, c=c, r=r,
+            )
+        )
+        entries.append(
+            dict(
+                kind="mttkrp_mode2",
+                fn=lambda yt, h, w: (model.mttkrp_mode2(yt, h, w),),
+                inputs=[[batch, c, r], [r, r], [batch, r]],
+                outputs=[[batch, c, r]],
+                b=batch, i=None, c=c, r=r,
+            )
+        )
+        entries.append(
+            dict(
+                kind="mttkrp_mode3",
+                fn=lambda yt, vc, h: (model.mttkrp_mode3(yt, vc, h),),
+                inputs=[[batch, c, r], [batch, c, r], [r, r]],
+                outputs=[[batch, r]],
+                b=batch, i=None, c=c, r=r,
+            )
+        )
+        for i in i_buckets:
+            entries.append(
+                dict(
+                    kind="procrustes_pack",
+                    fn=model.procrustes_pack,
+                    inputs=[[batch, i, c], [batch, c, r], [r, r], [batch, r]],
+                    outputs=[[batch, c, r], [batch, i, r]],
+                    b=batch, i=i, c=c, r=r,
+                )
+            )
+    return entries
+
+
+def artifact_name(entry) -> str:
+    parts = [entry["kind"], f"b{entry['b']}"]
+    if entry["i"] is not None:
+        parts.append(f"i{entry['i']}")
+    parts += [f"c{entry['c']}", f"r{entry['r']}"]
+    return "_".join(parts)
+
+
+def lower_entry(entry) -> str:
+    specs = [_spec(s) for s in entry["inputs"]]
+    lowered = jax.jit(entry["fn"]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--i-buckets", default="32,128")
+    ap.add_argument("--c-buckets", default="32,128")
+    args = ap.parse_args(argv)
+
+    i_buckets = [int(x) for x in args.i_buckets.split(",") if x]
+    c_buckets = [int(x) for x in args.c_buckets.split(",") if x]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = build_entries(args.batch, args.rank, i_buckets, c_buckets)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "dtype": "f32",
+        "batch": args.batch,
+        "rank": args.rank,
+        "i_buckets": i_buckets,
+        "c_buckets": c_buckets,
+        "polar_iters": model.POLAR_ITERS,
+        "entries": [],
+    }
+    for entry in entries:
+        name = artifact_name(entry)
+        path = f"{name}.hlo.txt"
+        text = lower_entry(entry)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": entry["kind"],
+                "path": path,
+                "b": entry["b"],
+                "i": entry["i"],
+                "c": entry["c"],
+                "r": entry["r"],
+                "inputs": entry["inputs"],
+                "outputs": entry["outputs"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(manifest['entries'])} entries")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the Pallas kernels — the build-time correctness
+signal. Implements the MTTKRP the *expensive* way (explicit Khatri-Rao
+materialization over dense slices, paper Eqs. 7/11/14) so any structural
+mistake in the packed kernels shows up as a numeric mismatch.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_y_from_packed(yt, support, j_dim):
+    """Rebuild dense frontal slices Y (B, R, J) from packed blocks.
+
+    yt:      (B, C, R) packed Y_kᵀ blocks
+    support: (B, C) int32 original column ids; entries < 0 mark padding
+    """
+    batch, c, r = yt.shape
+    y = jnp.zeros((batch, r, j_dim), dtype=yt.dtype)
+    for b in range(batch):
+        for cc in range(c):
+            j = int(support[b, cc])
+            if j >= 0:
+                y = y.at[b, :, j].add(yt[b, cc, :])
+    return y
+
+
+def khatri_rao(a, b):
+    """Column-wise Kronecker: (m, r) ⊙ (n, r) → (m·n, r)."""
+    m, r = a.shape
+    n, _ = b.shape
+    return (a[:, None, :] * b[None, :, :]).reshape(m * n, r)
+
+
+def mttkrp_mode1_dense(y, v, w):
+    """M¹ = Y_(1)(W ⊙ V): y is (B, R, J) dense slices."""
+    batch, r, j = y.shape
+    y1 = jnp.concatenate([y[b] for b in range(batch)], axis=1)  # (R, B·J)
+    krp = khatri_rao(w, v)  # (B·J, R)
+    return y1 @ krp
+
+
+def mttkrp_mode2_dense(y, h, w):
+    """M² = Y_(2)(W ⊙ H)."""
+    batch, r, j = y.shape
+    y2 = jnp.concatenate([y[b].T for b in range(batch)], axis=1)  # (J, B·R)
+    krp = khatri_rao(w, h)  # (B·R, R)
+    return y2 @ krp
+
+
+def mttkrp_mode3_dense(y, h, v):
+    """M³(k, r) = H(:,r)ᵀ Y_k V(:,r)  (paper Eq. 15)."""
+    batch = y.shape[0]
+    rows = []
+    for b in range(batch):
+        p = y[b] @ v  # (R, R)
+        rows.append(jnp.sum(h * p, axis=0))
+    return jnp.stack(rows)
+
+
+# ---- packed-space references (same math as the kernels, plain jnp) -------
+
+def mttkrp_mode1_packed(yt, vc, w):
+    temp = jnp.einsum("bcr,bcs->brs", yt, vc)
+    return jnp.sum(temp * w[:, None, :], axis=0)
+
+
+def mttkrp_mode2_packed(yt, h, w):
+    return jnp.einsum("bcr,rs->bcs", yt, h) * w[:, None, :]
+
+
+def mttkrp_mode3_packed(yt, vc, h):
+    p = jnp.einsum("bcr,bcs->brs", yt, vc)
+    return jnp.sum(h[None] * p, axis=1)
+
+
+# ---- reference polar factor (for the Procrustes step) --------------------
+
+def polar_svd(b):
+    """Orthonormal polar factor via jnp SVD (build-time reference only —
+    lowers to a LAPACK custom-call, so it must never reach an artifact)."""
+    u, _s, vt = jnp.linalg.svd(b, full_matrices=False)
+    return u @ vt

@@ -1,0 +1,161 @@
+"""L1 — Pallas kernels for SPARTan's packed per-slice MTTKRP (paper Alg. 3).
+
+Each kernel processes a *bucket batch* of packed slices prepared by the
+rust coordinator:
+
+  yt : f32[B, C, R]   packed Y_kᵀ blocks (row c = Y_k(:, support[c])ᵀ),
+                      zero-padded to the bucket's C
+  vc : f32[B, C, R]   gathered V rows (row c = V(support[c], :)),
+                      zero-padded identically
+  w  : f32[B, R]      W rows of the batch subjects
+  h  : f32[R, R]      the H factor (shared)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper exploits
+column sparsity on a CPU; here the sparsity exploitation happens at pack
+time (host gather), and the kernel sees dense MXU-shaped contractions
+(C×R · C×R). The grid iterates over the batch dimension; with R ≤ 64 and
+C ≤ 512 a block (yt + vc + out) is ≤ 0.3 MiB — far under VMEM, leaving
+room for double buffering.
+
+Kernels MUST run with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT requirement; flip only for real-TPU compiles.
+
+
+# --------------------------------------------------------------------------
+# mode 1: M¹ = Σ_k rowhad(Y_k V_c, W(k,:))    (paper Eq. 10, Fig. 2)
+# --------------------------------------------------------------------------
+def _mode1_kernel(yt_ref, vc_ref, w_ref, o_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    yt = yt_ref[0]  # (C, R)
+    vc = vc_ref[0]  # (C, R)
+    w = w_ref[0]  # (R,)
+    # temp = Y_k · V_c = ytᵀ · vc  (R×R), then row-Hadamard with W(k,:)
+    temp = jnp.dot(yt.T, vc, preferred_element_type=jnp.float32)
+    o_ref[...] += temp * w[None, :]
+
+
+def mttkrp_mode1(yt, vc, w):
+    """Batched mode-1 partial sum: returns f32[R, R]."""
+    batch, c, r = yt.shape
+    assert vc.shape == (batch, c, r) and w.shape == (batch, r)
+    return pl.pallas_call(
+        _mode1_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, r), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, r), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=INTERPRET,
+    )(yt, vc, w)
+
+
+# --------------------------------------------------------------------------
+# mode 2: rows (Y_k(:,j)ᵀ H) ∗ W(k,:) per support column   (Eq. 13, Fig. 3)
+# --------------------------------------------------------------------------
+def _mode2_kernel(yt_ref, h_ref, w_ref, o_ref):
+    yt = yt_ref[0]  # (C, R)
+    h = h_ref[...]  # (R, R)
+    w = w_ref[0]  # (R,)
+    rows = jnp.dot(yt, h, preferred_element_type=jnp.float32)  # (C, R)
+    o_ref[0] = rows * w[None, :]
+
+
+def mttkrp_mode2(yt, h, w):
+    """Batched mode-2 rows: returns f32[B, C, R]; the coordinator scatters
+    row c of batch element b into M²(support_b[c], :)."""
+    batch, c, r = yt.shape
+    assert h.shape == (r, r) and w.shape == (batch, r)
+    return pl.pallas_call(
+        _mode2_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+            pl.BlockSpec((r, r), lambda b: (0, 0)),
+            pl.BlockSpec((1, r), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, c, r), jnp.float32),
+        interpret=INTERPRET,
+    )(yt, h, w)
+
+
+# --------------------------------------------------------------------------
+# mode 3: M³(k,:) = dot(H, Y_k V_c) column-wise   (Eq. 16, Fig. 4)
+# --------------------------------------------------------------------------
+def _mode3_kernel(yt_ref, vc_ref, h_ref, o_ref):
+    yt = yt_ref[0]  # (C, R)
+    vc = vc_ref[0]  # (C, R)
+    h = h_ref[...]  # (R, R)
+    p = jnp.dot(yt.T, vc, preferred_element_type=jnp.float32)  # Y_k V_c
+    o_ref[0] = jnp.sum(h * p, axis=0)  # column-wise inner products
+
+
+def mttkrp_mode3(yt, vc, h):
+    """Batched mode-3 rows: returns f32[B, R] (row b = M³(k_b, :))."""
+    batch, c, r = yt.shape
+    assert vc.shape == (batch, c, r) and h.shape == (r, r)
+    return pl.pallas_call(
+        _mode3_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+            pl.BlockSpec((r, r), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, r), jnp.float32),
+        interpret=INTERPRET,
+    )(yt, vc, h)
+
+
+# --------------------------------------------------------------------------
+# Fused per-slice Y_k·V_c product reused by L2 (exposed for tests)
+# --------------------------------------------------------------------------
+def _ykv_kernel(yt_ref, vc_ref, o_ref):
+    o_ref[0] = jnp.dot(yt_ref[0].T, vc_ref[0], preferred_element_type=jnp.float32)
+
+
+def batched_ykv(yt, vc):
+    """f32[B, R, R]: per-slice Y_k · V_c products."""
+    batch, c, r = yt.shape
+    return pl.pallas_call(
+        _ykv_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, c, r), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, r), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, r, r), jnp.float32),
+        interpret=INTERPRET,
+    )(yt, vc)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_per_block(c: int, r: int, mode: int) -> int:
+    """Structural VMEM estimate for one grid step (DESIGN.md §Perf / L1):
+    resident input blocks + output block, f32."""
+    if mode == 1:
+        return 4 * (c * r + c * r + r + r * r)
+    if mode == 2:
+        return 4 * (c * r + r * r + r + c * r)
+    if mode == 3:
+        return 4 * (c * r + c * r + r * r + r)
+    raise ValueError(mode)

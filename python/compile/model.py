@@ -1,0 +1,107 @@
+"""L2 — the PARAFAC2 inner-step compute graphs in JAX.
+
+Two graphs get AOT-lowered per shape bucket (see aot.py):
+
+* ``procrustes_pack`` — step 1 of PARAFAC2-ALS for a batch of packed
+  slices: form B_k = X_k V S_k Hᵀ, take its orthonormal polar factor
+  (Newton–Schulz iteration — pure matmuls, no LAPACK custom-calls, MXU-
+  friendly; see DESIGN.md §Hardware-Adaptation), and emit the packed
+  Y_k = Q_kᵀ X_k blocks.
+* ``mttkrp_mode{1,2,3}`` — step 2 building blocks, thin wrappers over the
+  L1 Pallas kernels so they lower into the same HLO module.
+
+Everything is f32 (the artifact path trades the Matlab-reference f64 for
+MXU-shaped arithmetic; the rust native path remains f64 and the two are
+parity-tested at 1e-3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import spartan_mttkrp as kernels
+
+#: Newton–Schulz iterations for the polar factor. Quadratic convergence;
+#: 18 steps drive the orthonormality defect below ~1e-6 f32 for condition
+#: numbers up to ~1e3 (validated in tests/test_model.py).
+POLAR_ITERS = 18
+
+
+def newton_schulz_polar(b, iters: int = POLAR_ITERS):
+    """Orthonormal polar factor of a batch of matrices, f32[B, I, R].
+
+    X₀ = B/‖B‖_F (per batch element; guarantees ‖X₀‖₂ ≤ 1), then
+    X_{t+1} = 1.5·X_t − 0.5·X_t X_tᵀ X_t. Zero singular directions stay
+    exactly zero (matching the rust-side convention for rank-deficient
+    Procrustes targets).
+    """
+    norm = jnp.sqrt(jnp.sum(b * b, axis=(-2, -1), keepdims=True))
+    x = b / jnp.maximum(norm, 1e-30)
+
+    def step(x, _):
+        xtx = jnp.einsum("bir,bis->brs", x, x)
+        x = 1.5 * x - 0.5 * jnp.einsum("bir,brs->bis", x, xtx)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, None, length=iters)
+    return x
+
+
+def procrustes_pack(xc, vc, h, w):
+    """Fused step-1 for one bucket batch.
+
+    xc : f32[B, I, C]  packed X_k (support columns only, zero-padded)
+    vc : f32[B, C, R]  gathered V rows (same support order)
+    h  : f32[R, R]
+    w  : f32[B, R]     rows of W (diag(S_k))
+
+    Returns (yt, q):
+    yt : f32[B, C, R]  packed Y_kᵀ = (Q_kᵀ X_k restricted to support)ᵀ
+    q  : f32[B, I, R]  orthonormal Q_k (zero rows beyond I_k)
+    """
+    # C_k = X_k V  — only support rows of V participate (host pre-gathered)
+    ck = jnp.einsum("bic,bcr->bir", xc, vc)
+    # B_k = C_k · (S_k Hᵀ);  (S_k Hᵀ)(r, :) = w_k[r] · H(:, r)ᵀ
+    skht = w[:, :, None] * jnp.swapaxes(h, 0, 1)[None, :, :]  # (B, R, R)
+    bk = jnp.einsum("bir,brs->bis", ck, skht)
+    q = newton_schulz_polar(bk)
+    # Y_kᵀ packed: yt(c, :) = Σ_i X_k(i, c) · Q_k(i, :)
+    yt = jnp.einsum("bic,bir->bcr", xc, q)
+    return yt, q
+
+
+def mttkrp_mode1(yt, vc, w):
+    """Σ over the batch of rowhad(Y_k V_c, W(k,:)) — f32[R, R]."""
+    return kernels.mttkrp_mode1(yt, vc, w)
+
+
+def mttkrp_mode2(yt, h, w):
+    """Per-slice scatter rows — f32[B, C, R]."""
+    return kernels.mttkrp_mode2(yt, h, w)
+
+
+def mttkrp_mode3(yt, vc, h):
+    """Per-slice M³ rows — f32[B, R]."""
+    return kernels.mttkrp_mode3(yt, vc, h)
+
+
+def slice_sse_terms(yt, vc, h, w):
+    """Per-batch fit bookkeeping: (‖Y_k‖², ⟨Y_k, H S_k V_cᵀ⟩) — lets the
+    coordinator track the ALS objective without extra passes."""
+    ynorm = jnp.sum(yt * yt, axis=(1, 2))
+    p = jnp.einsum("bcr,bcs->brs", yt, vc)  # Y_k V_c
+    hs = h[None, :, :] * w[:, None, :]  # H S_k
+    cross = jnp.sum(p * hs, axis=(1, 2))
+    return ynorm, cross
+
+
+# ---- reference PARAFAC2 step in pure jnp (tests only) ---------------------
+
+def reference_full_step(x_dense, v, h, w):
+    """One full PARAFAC2 step-1 on dense slices via SVD polar (oracle)."""
+    from compile.kernels import ref
+
+    sk_ht = w[:, :, None] * jnp.swapaxes(h, 0, 1)[None, :, :]
+    bk = jnp.einsum("bij,jr,brs->bis", x_dense, v, sk_ht)
+    q = jnp.stack([ref.polar_svd(bk[i]) for i in range(bk.shape[0])])
+    y = jnp.einsum("bir,bij->brj", q, x_dense)
+    return y, q

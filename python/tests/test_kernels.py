@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py), with
+hypothesis sweeping shapes and against the dense Khatri-Rao reference."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import spartan_mttkrp as k
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def packed_case(rng, b, c, r, j_dim):
+    """Random packed batch + a support map into a J-dim variable space."""
+    yt = rand(rng, b, c, r)
+    vc = rand(rng, b, c, r)
+    w = rand(rng, b, r)
+    h = rand(rng, r, r)
+    # each batch element picks c distinct columns of J (padding: -1)
+    support = np.stack(
+        [rng.choice(j_dim, size=c, replace=False) for _ in range(b)]
+    ).astype(np.int32)
+    return yt, vc, w, h, support
+
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=5),   # B
+    st.integers(min_value=1, max_value=9),   # C
+    st.integers(min_value=1, max_value=6),   # R
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+def test_mode1_matches_packed_ref(shape, seed):
+    b, c, r = shape
+    rng = np.random.default_rng(seed)
+    yt, vc, w = rand(rng, b, c, r), rand(rng, b, c, r), rand(rng, b, r)
+    got = k.mttkrp_mode1(yt, vc, w)
+    want = ref.mttkrp_mode1_packed(yt, vc, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+def test_mode2_matches_packed_ref(shape, seed):
+    b, c, r = shape
+    rng = np.random.default_rng(seed)
+    yt, w, h = rand(rng, b, c, r), rand(rng, b, r), rand(rng, r, r)
+    got = k.mttkrp_mode2(yt, h, w)
+    want = ref.mttkrp_mode2_packed(yt, h, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+def test_mode3_matches_packed_ref(shape, seed):
+    b, c, r = shape
+    rng = np.random.default_rng(seed)
+    yt, vc, h = rand(rng, b, c, r), rand(rng, b, c, r), rand(rng, r, r)
+    got = k.mttkrp_mode3(yt, vc, h)
+    want = ref.mttkrp_mode3_packed(yt, vc, h)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_all_modes_match_dense_khatri_rao_reference():
+    """End-to-end against Eqs. 7/11/14 with explicit KRP materialization,
+    including the support scatter (what the rust coordinator does)."""
+    rng = np.random.default_rng(7)
+    b, c, r, j_dim = 4, 5, 3, 12
+    yt, vc0, w, h, support = packed_case(rng, b, c, r, j_dim)
+    v_full = rand(rng, j_dim, r)
+    # vc must be the gathered rows of v_full
+    vc = jnp.stack([v_full[support[i]] for i in range(b)])
+    del vc0
+    y_dense = ref.dense_y_from_packed(yt, support, j_dim)
+
+    m1 = k.mttkrp_mode1(yt, vc, w)
+    np.testing.assert_allclose(
+        m1, ref.mttkrp_mode1_dense(y_dense, v_full, w), rtol=3e-5, atol=3e-5
+    )
+
+    m2_rows = k.mttkrp_mode2(yt, h, w)
+    m2 = np.zeros((j_dim, r), dtype=np.float32)
+    for i in range(b):
+        for cc in range(c):
+            m2[support[i, cc]] += np.asarray(m2_rows[i, cc])
+    np.testing.assert_allclose(
+        m2, ref.mttkrp_mode2_dense(y_dense, h, w), rtol=3e-5, atol=3e-5
+    )
+
+    m3 = k.mttkrp_mode3(yt, vc, h)
+    np.testing.assert_allclose(
+        m3, ref.mttkrp_mode3_dense(y_dense, h, v_full), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_zero_padding_invariance():
+    """Zero-padding the support dimension must not change any mode output
+    (the bucket-padding contract the rust coordinator relies on)."""
+    rng = np.random.default_rng(11)
+    b, c, r = 3, 4, 3
+    pad = 3
+    yt, vc, w = rand(rng, b, c, r), rand(rng, b, c, r), rand(rng, b, r)
+    h = rand(rng, r, r)
+    ytp = jnp.concatenate([yt, jnp.zeros((b, pad, r), jnp.float32)], axis=1)
+    vcp = jnp.concatenate([vc, jnp.zeros((b, pad, r), jnp.float32)], axis=1)
+
+    np.testing.assert_allclose(
+        k.mttkrp_mode1(yt, vc, w), k.mttkrp_mode1(ytp, vcp, w), rtol=1e-6, atol=1e-6
+    )
+    m2 = k.mttkrp_mode2(yt, h, w)
+    m2p = k.mttkrp_mode2(ytp, h, w)
+    np.testing.assert_allclose(m2, m2p[:, :c, :], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(m2p[:, c:, :], 0.0, atol=1e-7)
+    np.testing.assert_allclose(
+        k.mttkrp_mode3(yt, vc, h), k.mttkrp_mode3(ytp, vcp, h), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_batch_padding_invariance_mode1():
+    """Padding the batch with all-zero slices must not change the mode-1
+    accumulation."""
+    rng = np.random.default_rng(13)
+    b, c, r = 3, 4, 2
+    yt, vc, w = rand(rng, b, c, r), rand(rng, b, c, r), rand(rng, b, r)
+    ytp = jnp.concatenate([yt, jnp.zeros((2, c, r), jnp.float32)])
+    vcp = jnp.concatenate([vc, jnp.zeros((2, c, r), jnp.float32)])
+    wp = jnp.concatenate([w, jnp.zeros((2, r), jnp.float32)])
+    np.testing.assert_allclose(
+        k.mttkrp_mode1(yt, vc, w), k.mttkrp_mode1(ytp, vcp, wp), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_batched_ykv():
+    rng = np.random.default_rng(17)
+    yt, vc = rand(rng, 4, 6, 3), rand(rng, 4, 6, 3)
+    got = k.batched_ykv(yt, vc)
+    want = jnp.einsum("bcr,bcs->brs", yt, vc)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", [1, 2, 3])
+def test_vmem_estimate_positive_and_monotone(mode):
+    small = k.vmem_bytes_per_block(32, 8, mode)
+    big = k.vmem_bytes_per_block(512, 64, mode)
+    assert 0 < small < big
+    # stays well under a 16 MiB VMEM budget at the largest bucket
+    assert big < 16 * 2**20

@@ -1,0 +1,200 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **column-sparsity exploitation** (SPARTan's core trick) — run the
+//!    mode-1/3 kernels with the support artificially densified to all J
+//!    columns, vs the real packed support.
+//! 2. **per-mode rewrite vs materialized Khatri-Rao blocks** — Eq. 10's
+//!    `rowhad(Y_k V_c, W(k,:))` vs Eq. 8's explicit per-slice `T^(k)`
+//!    block of (W ⊙ V).
+//! 3. **scheduler chunk size** — fixed-chunk parallel reduction at
+//!    {1, 8, 64, 512} subjects per chunk.
+//! 4. **native vs PJRT backend** at equal workload (skipped when the AOT
+//!    artifacts are absent).
+//!
+//! Run: `cargo bench --bench ablations [-- --filter NAME]`
+
+use spartan::bench::{bench, write_results, BenchConfig, Measurement};
+use spartan::datagen::ehr::{self, EhrSpec};
+use spartan::linalg::{blas, Mat};
+use spartan::parafac2::intermediate::{PackedSlice, PackedY};
+use spartan::parafac2::{mttkrp, procrustes};
+use spartan::threadpool::Pool;
+use spartan::util::json::Json;
+use spartan::util::rng::Pcg64;
+
+fn filter() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--filter")
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let fast = std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1");
+    let which = filter();
+    let run = |name: &str| which.as_deref().map_or(true, |f| name.contains(f));
+    let cfg = BenchConfig::default();
+    let mut measurements: Vec<Measurement> = Vec::new();
+
+    // Shared workload: CHOA-like slices, packed once.
+    let data = ehr::generate(&EhrSpec {
+        k: if fast { 200 } else { 3_000 },
+        n_diag: 700,
+        n_med: 300,
+        n_phenotypes: 8,
+        max_weeks: 100,
+        mean_active_weeks: 24.0,
+        events_per_week: 2.0,
+        seed: 7,
+    })
+    .tensor;
+    let rank = 16;
+    let mut rng = Pcg64::seed(5);
+    let pool = Pool::new(0);
+    let h = Mat::rand_normal(rank, rank, &mut rng);
+    let v = Mat::rand_uniform(data.j(), rank, &mut rng);
+    let w = Mat::rand_uniform(data.k(), rank, &mut rng);
+    let (y, _) = procrustes::procrustes_all(&data, &v, &h, &w, &pool, false);
+    println!("workload: {} (rank {rank}, packed nnz(Y) = {})", data.summary(), y.nnz());
+
+    // ---- 1. sparsity exploitation --------------------------------------
+    if run("sparsity") {
+        let m = bench("mode1_packed_support", &cfg, || {
+            std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool));
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+
+        // densify: every slice claims the full column set (zeros included)
+        let dense_y = PackedY {
+            j_dim: y.j_dim,
+            slices: y
+                .slices
+                .iter()
+                .map(|s| {
+                    let mut yt = Mat::zeros(y.j_dim, rank);
+                    for (c, &j) in s.support.iter().enumerate() {
+                        yt.row_mut(j as usize).copy_from_slice(s.yt.row(c));
+                    }
+                    PackedSlice { support: (0..y.j_dim as u32).collect(), yt }
+                })
+                .collect(),
+        };
+        let m = bench("mode1_densified_support", &cfg, || {
+            std::hint::black_box(mttkrp::mttkrp_mode1(&dense_y, &v, &w, &pool));
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+    }
+
+    // ---- 2. per-mode rewrite vs materialized KRP blocks ------------------
+    if run("krp") {
+        let m = bench("mode1_eq10_no_krp", &cfg, || {
+            std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool));
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+
+        let m = bench("mode1_eq8_materialized_krp_blocks", &cfg, || {
+            // Σ_k Y_k · T^(k) with T^(k)(i,:) = V(i,:) ∗ W(k,:) materialized
+            let mut acc = Mat::zeros(rank, rank);
+            for (kk, s) in y.slices.iter().enumerate() {
+                let wk = w.row(kk);
+                let mut tk = s.gather_rows(&v); // c_k × R
+                blas::rowhad_inplace(&mut tk, wk);
+                let part = blas::matmul_at_b(&s.yt, &tk);
+                acc.axpy(1.0, &part);
+            }
+            std::hint::black_box(acc);
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+    }
+
+    // ---- 3. chunk size ----------------------------------------------------
+    if run("chunk") {
+        for chunk in [1usize, 8, 64, 512] {
+            let m = bench(&format!("mode1_chunk{chunk}"), &cfg, || {
+                let part = pool
+                    .par_fold(
+                        y.k(),
+                        chunk,
+                        |range| {
+                            let mut acc = Mat::zeros(rank, rank);
+                            for kk in range {
+                                let s = &y.slices[kk];
+                                let mut t = s.yk_times_v(&v);
+                                blas::rowhad_inplace(&mut t, w.row(kk));
+                                acc.axpy(1.0, &t);
+                            }
+                            acc
+                        },
+                        |mut a, b| {
+                            a.axpy(1.0, &b);
+                            a
+                        },
+                    )
+                    .unwrap();
+                std::hint::black_box(part);
+            });
+            println!("{}", m.summary());
+            measurements.push(m);
+        }
+    }
+
+    // ---- 4. native vs PJRT backend ----------------------------------------
+    if run("backend") {
+        use spartan::coordinator::{PjrtDriver, PjrtFitConfig};
+        use spartan::parafac2::{fit_parafac2, Parafac2Config};
+        use spartan::runtime::{ArtifactRegistry, PjrtContext};
+        let dir = std::path::Path::new("artifacts");
+        match ArtifactRegistry::load(dir) {
+            Ok(reg) => {
+                let ctx = PjrtContext::cpu().expect("pjrt");
+                let small = ehr::generate(&EhrSpec {
+                    k: if fast { 100 } else { 600 },
+                    n_diag: 300,
+                    n_med: 100,
+                    n_phenotypes: 5,
+                    max_weeks: 100,
+                    mean_active_weeks: 20.0,
+                    events_per_week: 2.0,
+                    seed: 9,
+                })
+                .tensor;
+                let r = 5.min(reg.rank);
+                let iters = 5;
+                let m = bench("backend_native_5iters", &cfg, || {
+                    let c = Parafac2Config {
+                        rank: r,
+                        max_iters: iters,
+                        tol: 0.0,
+                        workers: 0,
+                        ..Default::default()
+                    };
+                    std::hint::black_box(fit_parafac2(&small, &c).unwrap());
+                });
+                println!("{}", m.summary());
+                measurements.push(m);
+                let m = bench("backend_pjrt_5iters", &cfg, || {
+                    let mut d = PjrtDriver::new(&ctx, &reg);
+                    let c = PjrtFitConfig {
+                        rank: r,
+                        max_iters: iters,
+                        tol: 0.0,
+                        workers: 0,
+                        ..Default::default()
+                    };
+                    std::hint::black_box(d.fit(&small, &c).unwrap());
+                });
+                println!("{}", m.summary());
+                measurements.push(m);
+            }
+            Err(_) => println!("backend ablation skipped: no artifacts (run `make artifacts`)"),
+        }
+    }
+
+    let ctx = Json::obj(vec![("bench", Json::str("ablations"))]);
+    let path = write_results("ablations", ctx, &measurements);
+    println!("json → {}", path.display());
+}

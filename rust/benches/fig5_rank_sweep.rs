@@ -1,0 +1,72 @@
+//! **Figure 5 reproduction** — time per iteration vs target rank on both
+//! "real" datasets (CHOA-like EHR and MovieLens-like; DESIGN.md §3
+//! documents the data substitution).
+//!
+//! Paper claim: the baseline's time/iteration grows dramatically with R
+//! while SPARTan's grows only slightly — up to 12× (CHOA) and 11×
+//! (MovieLens) speedup at R = 40.
+//!
+//! Run: `cargo bench --bench fig5_rank_sweep`
+
+use spartan::bench::als_runner::{speedup, time_als};
+use spartan::bench::{summarize, table, write_results, Measurement};
+use spartan::datagen::ehr::{self, EhrSpec};
+use spartan::datagen::movielens::{self, MovieLensSpec};
+use spartan::parafac2::Backend;
+use spartan::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1");
+    let ranks: Vec<usize> = if fast { vec![5, 10] } else { vec![5, 10, 20, 40] };
+
+    let ehr_data = ehr::generate(&EhrSpec {
+        k: if fast { 300 } else { 6_000 },
+        n_diag: 1_000,
+        n_med: 328, // J = 1,328 like CHOA
+        n_phenotypes: 10,
+        max_weeks: 166,
+        mean_active_weeks: 26.0,
+        events_per_week: 2.0,
+        seed: 464_900,
+    });
+    let ml_data = movielens::generate(&MovieLensSpec {
+        k: if fast { 200 } else { 3_000 },
+        j: if fast { 2_000 } else { 12_000 },
+        max_years: 19,
+        n_genres: 12,
+        ratings_per_year: 35.0,
+        seed: 25_249,
+    });
+
+    let mut measurements: Vec<Measurement> = Vec::new();
+    for (name, data) in [("choa-like", &ehr_data.tensor), ("movielens-like", &ml_data)] {
+        println!("\n=== Figure 5 ({name}): time/iter vs rank ===");
+        println!("{}", data.summary());
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        for &rank in &ranks {
+            let s = time_als(data, rank, Backend::Spartan, None);
+            let b = time_als(data, rank, Backend::Baseline, None);
+            let row = vec![
+                rank.to_string(),
+                s.render(),
+                b.render(),
+                speedup(&s, &b),
+            ];
+            println!("R={}: spartan {} baseline {} ({})", row[0], row[1], row[2], row[3]);
+            if let Some(x) = s.secs() {
+                measurements.push(summarize(&format!("{name}_spartan_r{rank}"), &[x]));
+            }
+            if let Some(x) = b.secs() {
+                measurements.push(summarize(&format!("{name}_baseline_r{rank}"), &[x]));
+            }
+            rows.push(row);
+        }
+        println!(
+            "\n{}",
+            table::render(&["R", "SPARTan (s/iter)", "baseline (s/iter)", "speedup"], &rows)
+        );
+    }
+    let ctx = Json::obj(vec![("paper_figure", Json::str("Figure 5"))]);
+    let path = write_results("fig5_rank_sweep", ctx, &measurements);
+    println!("json → {}", path.display());
+}

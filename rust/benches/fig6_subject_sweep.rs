@@ -1,0 +1,72 @@
+//! **Figure 6 reproduction** — CHOA-like dataset: time per iteration vs
+//! number of subjects K, at fixed ranks R ∈ {10, 40}.
+//!
+//! Paper claim: SPARTan scales better than the baseline in K at both
+//! ranks (near-linear growth, consistently below the baseline).
+//!
+//! Run: `cargo bench --bench fig6_subject_sweep`
+
+use spartan::bench::als_runner::{speedup, time_als};
+use spartan::bench::{summarize, table, write_results, Measurement};
+use spartan::datagen::ehr::{self, EhrSpec};
+use spartan::parafac2::Backend;
+use spartan::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1");
+    let k_points: Vec<usize> = if fast {
+        vec![100, 200]
+    } else {
+        vec![1_500, 3_000, 6_000, 12_000]
+    };
+    let k_max = *k_points.last().unwrap();
+    // generate once at the largest K, sweep by prefix (paper: "varying
+    // number of subjects included")
+    let full = ehr::generate(&EhrSpec {
+        k: k_max,
+        n_diag: 1_000,
+        n_med: 328,
+        n_phenotypes: 10,
+        max_weeks: 166,
+        mean_active_weeks: 26.0,
+        events_per_week: 2.0,
+        seed: 464_900,
+    });
+    println!("=== Figure 6 (CHOA-like): time/iter vs K ===");
+    println!("full data: {}", full.tensor.summary());
+
+    let mut measurements: Vec<Measurement> = Vec::new();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &rank in &[10usize, 40] {
+        for &k in &k_points {
+            let data = full.tensor.take_subjects(k);
+            let s = time_als(&data, rank, Backend::Spartan, None);
+            let b = time_als(&data, rank, Backend::Baseline, None);
+            let row = vec![
+                rank.to_string(),
+                k.to_string(),
+                s.render(),
+                b.render(),
+                speedup(&s, &b),
+            ];
+            println!(
+                "R={} K={}: spartan {} baseline {} ({})",
+                row[0], row[1], row[2], row[3], row[4]
+            );
+            if let Some(x) = s.secs() {
+                measurements.push(summarize(&format!("spartan_r{rank}_k{k}"), &[x]));
+            }
+            if let Some(x) = b.secs() {
+                measurements.push(summarize(&format!("baseline_r{rank}_k{k}"), &[x]));
+            }
+            rows.push(row);
+        }
+    }
+    println!(
+        "\n{}",
+        table::render(&["R", "K", "SPARTan (s/iter)", "baseline (s/iter)", "speedup"], &rows)
+    );
+    let ctx = Json::obj(vec![("paper_figure", Json::str("Figure 6"))]);
+    let path = write_results("fig6_subject_sweep", ctx, &measurements);
+    println!("json → {}", path.display());
+}

@@ -1,0 +1,70 @@
+//! **Figure 7 reproduction** — MovieLens-like dataset: time per iteration
+//! vs number of variables J (movies), at fixed ranks R ∈ {10, 40}.
+//!
+//! Paper claim: SPARTan's advantage holds in the J ≫ K regime as J grows
+//! ("favorable scalability properties … for large and sparse 'irregular'
+//! tensors").
+//!
+//! Run: `cargo bench --bench fig7_variable_sweep`
+
+use spartan::bench::als_runner::{speedup, time_als};
+use spartan::bench::{summarize, table, write_results, Measurement};
+use spartan::datagen::movielens::{self, MovieLensSpec};
+use spartan::parafac2::Backend;
+use spartan::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1");
+    let j_points: Vec<usize> = if fast {
+        vec![500, 1_000]
+    } else {
+        vec![2_500, 5_000, 10_000, 20_000]
+    };
+    let j_max = *j_points.last().unwrap();
+    let full = movielens::generate(&MovieLensSpec {
+        k: if fast { 150 } else { 2_500 },
+        j: j_max,
+        max_years: 19,
+        n_genres: 12,
+        ratings_per_year: 35.0,
+        seed: 25_249,
+    });
+    println!("=== Figure 7 (MovieLens-like): time/iter vs J ===");
+    println!("full data: {}", full.summary());
+
+    let mut measurements: Vec<Measurement> = Vec::new();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &rank in &[10usize, 40] {
+        for &j in &j_points {
+            // paper: "increasing subsets of variables considered"
+            let data = full.take_variables(j);
+            let s = time_als(&data, rank, Backend::Spartan, None);
+            let b = time_als(&data, rank, Backend::Baseline, None);
+            let row = vec![
+                rank.to_string(),
+                j.to_string(),
+                s.render(),
+                b.render(),
+                speedup(&s, &b),
+            ];
+            println!(
+                "R={} J={}: spartan {} baseline {} ({})",
+                row[0], row[1], row[2], row[3], row[4]
+            );
+            if let Some(x) = s.secs() {
+                measurements.push(summarize(&format!("spartan_r{rank}_j{j}"), &[x]));
+            }
+            if let Some(x) = b.secs() {
+                measurements.push(summarize(&format!("baseline_r{rank}_j{j}"), &[x]));
+            }
+            rows.push(row);
+        }
+    }
+    println!(
+        "\n{}",
+        table::render(&["R", "J", "SPARTan (s/iter)", "baseline (s/iter)", "speedup"], &rows)
+    );
+    let ctx = Json::obj(vec![("paper_figure", Json::str("Figure 7"))]);
+    let path = write_results("fig7_variable_sweep", ctx, &measurements);
+    println!("json → {}", path.display());
+}

@@ -1,0 +1,119 @@
+//! Micro-benchmarks of the linalg substrate at the exact shapes the
+//! PARAFAC2 hot paths use. The GEMM numbers double as the practical
+//! single-core roofline referenced by EXPERIMENTS.md §Perf: SPARTan's
+//! per-slice products should achieve a large fraction of the plain-GEMM
+//! rate at matching shapes.
+//!
+//! Run: `cargo bench --bench micro_linalg`
+
+use spartan::bench::{bench, write_results, BenchConfig, Measurement};
+use spartan::linalg::{blas, nnls, svd, Mat};
+use spartan::util::json::Json;
+use spartan::util::rng::Pcg64;
+
+fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+fn main() {
+    let mut cfg = BenchConfig::default();
+    cfg.measure_iters = cfg.measure_iters.max(5);
+    let mut rng = Pcg64::seed(3);
+    let mut measurements: Vec<Measurement> = Vec::new();
+
+    // ---- GEMM at MTTKRP shapes: (R×c)·(c×R), batched over subjects -----
+    println!("=== GEMM at per-slice MTTKRP shapes (single core) ===");
+    for &(r, c) in &[(10usize, 64usize), (10, 256), (40, 64), (40, 256), (40, 1024)] {
+        let reps = (50_000_000 / (2 * r * r * c)).max(1);
+        let a = Mat::rand_normal(c, r, &mut rng); // ytᵀ layout (c×R)
+        let b = Mat::rand_normal(c, r, &mut rng);
+        let m = bench(&format!("gemm_atb_r{r}_c{c}"), &cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(blas::matmul_at_b(&a, &b));
+            }
+        });
+        let fl = (reps * 2 * r * r * c) as f64;
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+        measurements.push(m);
+    }
+
+    // ---- big-panel GEMM (blocked path roofline) --------------------------
+    for &(mm, kk, nn) in &[(256usize, 256usize, 256usize), (512, 512, 512)] {
+        let a = Mat::rand_normal(mm, kk, &mut rng);
+        let b = Mat::rand_normal(kk, nn, &mut rng);
+        let m = bench(&format!("gemm_{mm}x{kk}x{nn}"), &cfg, || {
+            std::hint::black_box(blas::matmul(&a, &b));
+        });
+        let fl = (2 * mm * kk * nn) as f64;
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+        measurements.push(m);
+    }
+
+    // ---- Procrustes polar factor at per-subject shapes -------------------
+    println!("\n=== Procrustes polar (per-subject step-1 kernel) ===");
+    for &(ik, r) in &[(30usize, 10usize), (100, 10), (60, 40), (150, 40)] {
+        let reps = 200_000 / (ik * r) + 1;
+        let b = Mat::rand_normal(ik, r, &mut rng);
+        // production path: one-sided Jacobi on transposed storage
+        let m = bench(&format!("polar_jacobi_i{ik}_r{r}"), &cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(svd::procrustes_polar_jacobi(&b));
+            }
+        });
+        println!(
+            "{} → {:.1} subjects/ms",
+            m.summary(),
+            reps as f64 / m.mean_secs / 1e3
+        );
+        measurements.push(m);
+        // §Perf reference: the Gram+eig route it replaced
+        let m = bench(&format!("polar_eig_route_i{ik}_r{r}"), &cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(svd::polar_orthonormal_completed(&b));
+            }
+        });
+        println!(
+            "{} → {:.1} subjects/ms",
+            m.summary(),
+            reps as f64 / m.mean_secs / 1e3
+        );
+        measurements.push(m);
+    }
+
+    // ---- sym_eig (the R×R eigensolve inside polar) ------------------------
+    for &r in &[10usize, 40] {
+        let g0 = Mat::rand_normal(r + 5, r, &mut rng);
+        let g = blas::gram(&g0);
+        let m = bench(&format!("sym_eig_r{r}"), &cfg, || {
+            for _ in 0..50 {
+                std::hint::black_box(svd::sym_eig(&g));
+            }
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+    }
+
+    // ---- FNNLS row solves (V/W updates under non-negativity) -------------
+    println!("\n=== FNNLS (non-negative row solves) ===");
+    for &r in &[10usize, 40] {
+        let a = Mat::rand_uniform(3 * r, r, &mut rng);
+        let g = blas::gram(&a);
+        let rows: Vec<Vec<f64>> =
+            (0..64).map(|_| (0..r).map(|_| rng.normal()).collect()).collect();
+        let m = bench(&format!("fnnls_r{r}_64rows"), &cfg, || {
+            for row in &rows {
+                std::hint::black_box(nnls::fnnls(&g, row));
+            }
+        });
+        println!(
+            "{} → {:.1} rows/ms",
+            m.summary(),
+            64.0 / m.mean_secs / 1e3
+        );
+        measurements.push(m);
+    }
+
+    let ctx = Json::obj(vec![("bench", Json::str("micro_linalg"))]);
+    let path = write_results("micro_linalg", ctx, &measurements);
+    println!("json → {}", path.display());
+}

@@ -1,0 +1,99 @@
+//! **Table 1 reproduction** — synthetic scalability sweep.
+//!
+//! Paper: K = 1M subjects, J = 5K variables, ≤100 observations, nnz ∈
+//! {63, 125, 250, 500}M, R ∈ {10, 40}; SPARTan vs "Sparse PARAFAC2"
+//! baseline; the baseline goes OoM on the two largest instances at R = 40
+//! on a 1 TB server.
+//!
+//! Here (single core, 35 GB): the same generator with nnz scaled ÷200
+//! (and K, J scaled so the per-subject density profile matches), and the
+//! baseline running against a proportional memory budget chosen so the
+//! COO-materialization wall lands at the same *relative* position
+//! (DESIGN.md §3 documents the substitution). The claim reproduced is the
+//! *shape*: SPARTan faster everywhere, gap growing with nnz and R,
+//! baseline OoM on the largest R = 40 cells.
+//!
+//! Run: `cargo bench --bench table1_synthetic`
+//! (set SPARTAN_BENCH_FAST=1 for a smoke-sized run)
+
+use spartan::bench::als_runner::{speedup, time_als};
+use spartan::bench::{table, write_results, summarize, Measurement};
+use spartan::datagen::synthetic::{generate, SyntheticSpec};
+use spartan::parafac2::Backend;
+use spartan::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1");
+    // paper ÷200 by default; fast mode ÷20 further for CI smoke
+    let scale = if fast { 4_000 } else { 200 };
+    let nnz_points: Vec<usize> =
+        [63_000_000usize, 125_000_000, 250_000_000, 500_000_000]
+            .iter()
+            .map(|n| n / scale)
+            .collect();
+    let k = 1_000_000 / scale * 2; // keep mean nnz/subject ≈ paper ÷2
+    let j = 1_000;
+    let ranks = [10usize, 40];
+    // Baseline memory budget: the paper's wall is the explicit COO Y (+
+    // TTB temporaries); 1.5 GiB places it at the same relative cells
+    // (3rd/4th of R=40) for the ÷200 workload given our 20 B/nnz COO.
+    let budget_bytes: u64 = if fast { 64 << 20 } else { 3 << 29 };
+
+    println!("=== Table 1: time per ALS iteration, synthetic sweep ===");
+    println!(
+        "K={k} J={j} max_obs=100, nnz scaled ÷{scale}, baseline budget = {}",
+        spartan::util::humansize::bytes(budget_bytes)
+    );
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut measurements: Vec<Measurement> = Vec::new();
+    for &rank in &ranks {
+        for &nnz in &nnz_points {
+            let data = generate(&SyntheticSpec {
+                k,
+                j,
+                max_i_k: 100,
+                target_nnz: nnz,
+                rank: 40, // the paper plants rank-40 truth for all cells
+                noise: 0.0,
+                seed: 1717,
+            })
+            .tensor;
+            let spartan_res = time_als(&data, rank, Backend::Spartan, None);
+            let baseline_res =
+                time_als(&data, rank, Backend::Baseline, Some(budget_bytes));
+            let row = vec![
+                rank.to_string(),
+                spartan::util::humansize::count(data.nnz() as u64),
+                spartan_res.render(),
+                baseline_res.render(),
+                speedup(&spartan_res, &baseline_res),
+            ];
+            println!(
+                "R={} nnz={}: spartan {} baseline {} ({})",
+                row[0], row[1], row[2], row[3], row[4]
+            );
+            if let Some(s) = spartan_res.secs() {
+                measurements.push(summarize(&format!("spartan_r{rank}_nnz{nnz}"), &[s]));
+            }
+            if let Some(s) = baseline_res.secs() {
+                measurements.push(summarize(&format!("baseline_r{rank}_nnz{nnz}"), &[s]));
+            }
+            rows.push(row);
+        }
+    }
+    let rendered = table::render(
+        &["R", "nnz", "SPARTan (s/iter)", "Sparse PARAFAC2 (s/iter)", "speedup"],
+        &rows,
+    );
+    println!("\n{rendered}");
+    let ctx = Json::obj(vec![
+        ("paper_table", Json::str("Table 1")),
+        ("k", Json::num(k as f64)),
+        ("j", Json::num(j as f64)),
+        ("scale_divisor", Json::num(scale as f64)),
+        ("budget_bytes", Json::num(budget_bytes as f64)),
+    ]);
+    let path = write_results("table1_synthetic", ctx, &measurements);
+    println!("json → {}", path.display());
+}

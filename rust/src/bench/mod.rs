@@ -1,0 +1,153 @@
+//! Criterion-lite: a small benchmarking harness (the offline crate set has
+//! no criterion). Provides warmup + timed iterations, mean/σ/min, table
+//! rendering that mirrors the paper's tables, and JSON export so
+//! EXPERIMENTS.md numbers are regenerable.
+
+pub mod als_runner;
+pub mod table;
+
+use crate::util::json::Json;
+use crate::util::timer::{fmt_secs, Stopwatch};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_secs", Json::num(self.mean_secs)),
+            ("std_secs", Json::num(self.std_secs)),
+            ("min_secs", Json::num(self.min_secs)),
+            ("max_secs", Json::num(self.max_secs)),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: mean {} ± {} (min {}, {} iters)",
+            self.name,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.std_secs),
+            fmt_secs(self.min_secs),
+            self.iters
+        )
+    }
+}
+
+/// Harness configuration. `SPARTAN_BENCH_FAST=1` shrinks everything for
+/// smoke runs (CI / test of the bench binaries themselves).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total measurement time; stop early past it.
+    pub max_total_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1") {
+            BenchConfig { warmup_iters: 0, measure_iters: 1, max_total_secs: 30.0 }
+        } else {
+            BenchConfig { warmup_iters: 1, measure_iters: 3, max_total_secs: 600.0 }
+        }
+    }
+}
+
+/// Run a benchmark: `f` is invoked once per iteration and must do the full
+/// unit of work (e.g. one PARAFAC2-ALS iteration). Returns the measurement.
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    let total = Stopwatch::start();
+    for _ in 0..cfg.measure_iters.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed_secs());
+        if total.elapsed_secs() > cfg.max_total_secs {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+/// Build a measurement from raw samples.
+pub fn summarize(name: &str, samples: &[f64]) -> Measurement {
+    assert!(!samples.is_empty());
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: mean,
+        std_secs: var.sqrt(),
+        min_secs: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_secs: samples.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Write a set of measurements (plus free-form context) to a JSON file
+/// under `bench_results/`.
+pub fn write_results(file_stem: &str, context: Json, measurements: &[Measurement]) -> std::path::PathBuf {
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir).ok();
+    let out = Json::obj(vec![
+        ("bench", Json::str(file_stem)),
+        ("context", context),
+        (
+            "measurements",
+            Json::arr(measurements.iter().map(|m| m.to_json())),
+        ),
+    ]);
+    let path = dir.join(format!("{file_stem}.json"));
+    std::fs::write(&path, out.pretty()).expect("writing bench results");
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarizes() {
+        let cfg = BenchConfig { warmup_iters: 1, measure_iters: 4, max_total_secs: 10.0 };
+        let mut count = 0usize;
+        let m = bench("noop", &cfg, || {
+            count += 1;
+        });
+        assert_eq!(count, 5); // 1 warmup + 4 measured
+        assert_eq!(m.iters, 4);
+        assert!(m.mean_secs >= 0.0);
+        assert!(m.min_secs <= m.mean_secs && m.mean_secs <= m.max_secs + 1e-12);
+    }
+
+    #[test]
+    fn summarize_statistics() {
+        let m = summarize("x", &[1.0, 2.0, 3.0]);
+        assert!((m.mean_secs - 2.0).abs() < 1e-12);
+        assert_eq!(m.min_secs, 1.0);
+        assert_eq!(m.max_secs, 3.0);
+        assert!((m.std_secs - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let m = summarize("x", &[0.5]);
+        let j = m.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "x");
+        assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 1);
+    }
+}

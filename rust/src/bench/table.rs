@@ -1,0 +1,66 @@
+//! ASCII table renderer for bench output (mirrors the paper's tables).
+
+/// Render rows as an aligned ASCII table with a header row.
+pub fn render(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            for _ in 0..w + 2 {
+                out.push('-');
+            }
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    out.push('|');
+    for (h, w) in header.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (cell, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {cell:<w$} |"));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["name", "time"],
+            &[
+                vec!["spartan".into(), "1.2s".into()],
+                vec!["baseline".into(), "22.4s".into()],
+            ],
+        );
+        assert!(t.contains("| spartan "));
+        assert!(t.contains("| baseline "));
+        // all lines same width
+        let lens: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        render(&["a", "b"], &[vec!["x".into()]]);
+    }
+}

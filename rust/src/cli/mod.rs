@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (no `clap` offline) for the `spartan`
+//! launcher: subcommand + `--key value` / `--key=value` / boolean
+//! `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("stray `--`".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--{key}: expected integer, got `{v}`")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{key}: expected number, got `{v}`")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|_| format!("--{key}: expected integer, got `{v}`")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Keys the user supplied (for unknown-option detection).
+    pub fn option_keys(&self) -> Vec<&str> {
+        self.options
+            .keys()
+            .map(String::as_str)
+            .chain(self.flags.iter().map(String::as_str))
+            .collect()
+    }
+
+    /// Error if any supplied option is not in the allowed list.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.option_keys() {
+            if !allowed.contains(&k) {
+                return Err(format!("unknown option --{k} (allowed: {})", allowed.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("decompose --rank 10 --nonneg --input=data.spt pos1");
+        assert_eq!(a.subcommand.as_deref(), Some("decompose"));
+        assert_eq!(a.get("rank"), Some("10"));
+        assert_eq!(a.get("input"), Some("data.spt"));
+        assert!(a.has_flag("nonneg"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 5 --t 0.5");
+        assert_eq!(a.get_usize("n").unwrap(), Some(5));
+        assert_eq!(a.get_f64("t").unwrap(), Some(0.5));
+        assert_eq!(a.get_usize("missing").unwrap(), None);
+        let bad = parse("x --n five");
+        assert!(bad.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn flag_vs_option_disambiguation() {
+        // --a followed by another option ⇒ flag; --a value ⇒ option
+        let a = parse("cmd --verbose --rank 3");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("rank"), Some("3"));
+    }
+
+    #[test]
+    fn reject_unknown_lists_allowed() {
+        let a = parse("cmd --oops 1");
+        let err = a.reject_unknown(&["rank"]).unwrap_err();
+        assert!(err.contains("--oops"));
+        assert!(err.contains("rank"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Run configuration: a minimal TOML-subset parser (no `serde`/`toml` in
+//! the offline crate set) plus the typed [`RunConfig`] schema with
+//! validation and CLI overrides.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, and boolean values, `#` comments. That
+//! covers every knob the launcher exposes.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::RunConfig;

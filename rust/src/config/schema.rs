@@ -1,0 +1,173 @@
+//! Typed run configuration with defaults, file loading, and validation.
+
+use super::toml::{self, Doc};
+use crate::parafac2::als::{Backend, Parafac2Config};
+use crate::parafac2::init::InitMethod;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Everything a `spartan decompose` run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub fit: Parafac2Config,
+    /// "native" | "baseline" | "pjrt"
+    pub engine: Engine,
+    /// Artifact directory for the pjrt engine.
+    pub artifacts_dir: String,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Native,
+    Baseline,
+    Pjrt,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "spartan" => Some(Engine::Native),
+            "baseline" | "sparse-parafac2" => Some(Engine::Baseline),
+            "pjrt" | "xla" => Some(Engine::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            fit: Parafac2Config::default(),
+            engine: Engine::Native,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file ([fit] / [runtime] sections).
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("fit", "rank").and_then(|v| v.as_int()) {
+            cfg.fit.rank = v as usize;
+        }
+        if let Some(v) = doc.get("fit", "max_iters").and_then(|v| v.as_int()) {
+            cfg.fit.max_iters = v as usize;
+        }
+        if let Some(v) = doc.get("fit", "tol").and_then(|v| v.as_float()) {
+            cfg.fit.tol = v;
+        }
+        if let Some(v) = doc.get("fit", "nonneg").and_then(|v| v.as_bool()) {
+            cfg.fit.nonneg = v;
+        }
+        if let Some(v) = doc.get("fit", "seed").and_then(|v| v.as_int()) {
+            cfg.fit.seed = v as u64;
+        }
+        if let Some(v) = doc.get("fit", "init").and_then(|v| v.as_str()) {
+            cfg.fit.init = InitMethod::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown init method `{v}`"))?;
+        }
+        if let Some(v) = doc.get("runtime", "workers").and_then(|v| v.as_int()) {
+            cfg.fit.workers = v as usize;
+        }
+        if let Some(v) = doc.get("runtime", "engine").and_then(|v| v.as_str()) {
+            cfg.engine =
+                Engine::parse(v).ok_or_else(|| anyhow::anyhow!("unknown engine `{v}`"))?;
+        }
+        if let Some(v) = doc.get("runtime", "artifacts_dir").and_then(|v| v.as_str()) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get("runtime", "mem_budget").and_then(|v| v.as_str()) {
+            cfg.fit.mem_budget = Some(
+                crate::util::humansize::parse_bytes(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad mem_budget `{v}`"))?,
+            );
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.fit.rank == 0 {
+            bail!("fit.rank must be ≥ 1");
+        }
+        if self.fit.max_iters == 0 {
+            bail!("fit.max_iters must be ≥ 1");
+        }
+        if !(self.fit.tol >= 0.0) {
+            bail!("fit.tol must be ≥ 0");
+        }
+        // keep Backend consistent with engine for the native driver
+        Ok(())
+    }
+
+    /// The `Backend` enum for the native ALS driver (Pjrt handled apart).
+    pub fn native_backend(&self) -> Backend {
+        match self.engine {
+            Engine::Baseline => Backend::Baseline,
+            _ => Backend::Spartan,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_file_roundtrip() {
+        let text = r#"
+            [fit]
+            rank = 7
+            max_iters = 33
+            tol = 1e-5
+            nonneg = false
+            seed = 99
+            init = "svd-warm"
+            [runtime]
+            engine = "pjrt"
+            workers = 2
+            artifacts_dir = "my_artifacts"
+            mem_budget = "512MiB"
+        "#;
+        let doc = toml::parse(text).unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.fit.rank, 7);
+        assert_eq!(cfg.fit.max_iters, 33);
+        assert_eq!(cfg.fit.tol, 1e-5);
+        assert!(!cfg.fit.nonneg);
+        assert_eq!(cfg.fit.seed, 99);
+        assert_eq!(cfg.fit.init, InitMethod::SvdWarm);
+        assert_eq!(cfg.engine, Engine::Pjrt);
+        assert_eq!(cfg.fit.workers, 2);
+        assert_eq!(cfg.artifacts_dir, "my_artifacts");
+        assert_eq!(cfg.fit.mem_budget, Some(512 << 20));
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let doc = toml::parse("[fit]\nrank = 0").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = toml::parse("[runtime]\nengine = \"gpu\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn engine_parse_aliases() {
+        assert_eq!(Engine::parse("spartan"), Some(Engine::Native));
+        assert_eq!(Engine::parse("XLA"), Some(Engine::Pjrt));
+        assert_eq!(Engine::parse("sparse-parafac2"), Some(Engine::Baseline));
+    }
+}

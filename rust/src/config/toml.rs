@@ -1,0 +1,185 @@
+//! Minimal TOML-subset parser (see module docs in `config/mod.rs`).
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key → value`. Keys before any `[section]`
+/// live in the empty section `""`.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    values: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self.values.keys().map(|(s, _)| s.as_str()).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+}
+
+/// Parse a document; errors carry 1-based line numbers.
+pub fn parse(input: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (ln, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", ln + 1))?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(format!("line {}: empty section name", ln + 1));
+            }
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = line[..eq].trim();
+        let val_str = line[eq + 1..].trim();
+        if key.is_empty() || val_str.is_empty() {
+            return Err(format!("line {}: empty key or value", ln + 1));
+        }
+        let value = parse_value(val_str).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        doc.values.insert((section.clone(), key.to_string()), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            # top comment
+            name = "run1"
+            [fit]
+            rank = 10
+            tol = 1e-6
+            nonneg = true
+            [data]
+            kind = "ehr"  # inline comment
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("run1"));
+        assert_eq!(doc.get("fit", "rank").unwrap().as_int(), Some(10));
+        assert_eq!(doc.get("fit", "tol").unwrap().as_float(), Some(1e-6));
+        assert_eq!(doc.get("fit", "nonneg").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("data", "kind").unwrap().as_str(), Some("ehr"));
+        assert!(doc.get("fit", "missing").is_none());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert!(parse("[broken").unwrap_err().contains("line 1"));
+        assert!(parse("\njust a line").unwrap_err().contains("line 2"));
+        assert!(parse("x = @@").unwrap_err().contains("line 1"));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse(r##"x = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_str(), Some("a#b"));
+    }
+}

@@ -1,0 +1,418 @@
+//! The PJRT-backed PARAFAC2-ALS driver: the same outer loop as
+//! [`crate::parafac2::als`], with step 1 (Procrustes+pack) and the three
+//! MTTKRPs executing as AOT-compiled JAX/Pallas artifacts on the XLA CPU
+//! client. Factor solves, normalization and convergence bookkeeping stay
+//! native (tiny R×R problems).
+//!
+//! Hybrid execution: subjects whose slices exceed every shape bucket run
+//! on the native f64 path and their partial results merge with the PJRT
+//! partials. Mixed precision: artifacts compute in f32 (the MXU story),
+//! the driver accumulates in f64; parity with the native backend is
+//! asserted at ~1e-3 in the integration tests.
+
+use super::packing::{self, PackPlan};
+use crate::linalg::{blas, Mat};
+use crate::parafac2::cp_als::{normalize_cols_safe, residual_stats, solve_mode, CpFactors};
+use crate::parafac2::init::{initialize, InitMethod};
+use crate::parafac2::intermediate::{PackedSlice, PackedY};
+use crate::parafac2::model::{FitStats, Parafac2Model};
+use crate::parafac2::procrustes;
+use crate::runtime::{ArtifactRegistry, HostTensor, Kind, PjrtContext};
+use crate::sparse::IrregularTensor;
+use crate::threadpool::Pool;
+use crate::util::timer::Stopwatch;
+use anyhow::{bail, Result};
+
+/// Configuration for the PJRT driver (a subset of [`crate::parafac2::als::Parafac2Config`]
+/// — the backend is implied and the baseline knobs don't apply).
+#[derive(Clone, Debug)]
+pub struct PjrtFitConfig {
+    pub rank: usize,
+    pub max_iters: usize,
+    pub tol: f64,
+    pub nonneg: bool,
+    pub init: InitMethod,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl Default for PjrtFitConfig {
+    fn default() -> Self {
+        PjrtFitConfig {
+            rank: 8,
+            max_iters: 50,
+            tol: 1e-6,
+            nonneg: true,
+            init: InitMethod::Random,
+            seed: 42,
+            workers: 0,
+        }
+    }
+}
+
+/// Throughput/latency counters for the end-to-end example.
+#[derive(Clone, Debug, Default)]
+pub struct PjrtRunMetrics {
+    pub kernel_invocations: usize,
+    pub kernel_secs: f64,
+    pub pack_secs: f64,
+    pub native_fallback_subjects: usize,
+    pub pjrt_subjects: usize,
+    pub batches_per_iter: usize,
+}
+
+/// The driver: owns the client, registry, and per-fit plan.
+pub struct PjrtDriver<'a> {
+    ctx: &'a PjrtContext,
+    reg: &'a ArtifactRegistry,
+    pub metrics: PjrtRunMetrics,
+}
+
+/// The per-iteration intermediate state: yt batches (PJRT side) and packed
+/// fallback slices (native side).
+struct YState {
+    /// One HostTensor [B, C, R_pad] per batch, parallel to plan.batches.
+    yt_batches: Vec<HostTensor>,
+    /// Native packed slices for fallback subjects.
+    fallback: Vec<(usize, PackedSlice)>,
+    /// Σ‖Y_k‖² over every subject.
+    norm_sq: f64,
+    /// Q_k per subject, only materialized on the final pass.
+    q: Option<Vec<Option<Mat>>>,
+}
+
+impl<'a> PjrtDriver<'a> {
+    pub fn new(ctx: &'a PjrtContext, reg: &'a ArtifactRegistry) -> PjrtDriver<'a> {
+        PjrtDriver { ctx, reg, metrics: PjrtRunMetrics::default() }
+    }
+
+    /// Fit a PARAFAC2 model through the artifact path.
+    pub fn fit(&mut self, data: &IrregularTensor, cfg: &PjrtFitConfig) -> Result<Parafac2Model> {
+        if cfg.rank == 0 || cfg.rank > self.reg.rank {
+            bail!(
+                "rank {} outside artifact support (manifest rank {}; regenerate with `python -m compile.aot --rank N`)",
+                cfg.rank,
+                self.reg.rank
+            );
+        }
+        let pool = Pool::new(cfg.workers);
+        let plan = packing::plan(data, self.reg);
+        self.metrics.pjrt_subjects = data.k() - plan.fallback.len();
+        self.metrics.native_fallback_subjects = plan.fallback.len();
+        self.metrics.batches_per_iter = plan.batches.len();
+        crate::info!(
+            "pjrt plan: {} batches across {} subjects ({} native fallback)",
+            plan.batches.len(),
+            data.k(),
+            plan.fallback.len()
+        );
+
+        let total_sw = Stopwatch::start();
+        let x_norm_sq = data.fro_norm_sq();
+        let x_norm = x_norm_sq.sqrt();
+        let init = initialize(data, cfg.rank, cfg.init, cfg.seed, &pool);
+        let mut factors = CpFactors { h: init.h, v: init.v, w: init.w };
+
+        let mut stats = FitStats::default();
+        let mut prev_sse = f64::INFINITY;
+        let mut iters_done = 0;
+
+        for iter in 0..cfg.max_iters {
+            let sw = Stopwatch::start();
+            let y = self.procrustes_step(data, &plan, &factors, &pool, false)?;
+            stats.procrustes_secs += sw.elapsed_secs();
+
+            let sw = Stopwatch::start();
+            let cp_res = self.cp_step(data, &plan, &y, &mut factors, cfg)?;
+            stats.cp_secs += sw.elapsed_secs();
+
+            let sse = (x_norm_sq - y.norm_sq + cp_res).max(0.0);
+            let fit = 1.0 - sse.sqrt() / x_norm;
+            stats.fit_history.push(fit);
+            iters_done = iter + 1;
+            crate::debug!("pjrt iter {iter}: sse={sse:.6e} fit={fit:.6}");
+
+            let converged = prev_sse.is_finite()
+                && (prev_sse - sse).abs() / prev_sse.max(f64::MIN_POSITIVE) < cfg.tol;
+            prev_sse = sse;
+            if converged {
+                break;
+            }
+        }
+
+        // Final pass with Q materialization.
+        let y = self.procrustes_step(data, &plan, &factors, &pool, true)?;
+        let qs: Vec<Mat> = y
+            .q
+            .expect("q requested")
+            .into_iter()
+            .map(|q| q.expect("every subject materialized"))
+            .collect();
+        // exact final SSE on the refreshed Q (same convention as native)
+        let m3 = self.mttkrp3(data, &plan, &y.yt_batches, &y.fallback, &factors, &pool)?;
+        let res = residual_stats(&m3, &factors, y.norm_sq);
+        let final_sse = (x_norm_sq - y.norm_sq + res.y_residual_sq).max(0.0);
+
+        stats.iterations = iters_done;
+        stats.final_sse = final_sse;
+        stats.final_fit = 1.0 - final_sse.sqrt() / x_norm;
+        stats.total_secs = total_sw.elapsed_secs();
+        stats.secs_per_iter = if iters_done > 0 {
+            (stats.procrustes_secs + stats.cp_secs) / iters_done as f64
+        } else {
+            0.0
+        };
+        Ok(Parafac2Model {
+            rank: cfg.rank,
+            h: factors.h,
+            v: factors.v,
+            w: factors.w,
+            q: qs,
+            stats,
+        })
+    }
+
+    // --- step 1 -----------------------------------------------------------
+
+    fn procrustes_step(
+        &mut self,
+        data: &IrregularTensor,
+        plan: &PackPlan,
+        f: &CpFactors,
+        pool: &Pool,
+        keep_q: bool,
+    ) -> Result<YState> {
+        let r_pad = self.reg.rank;
+        let b_size = plan.batch_size;
+        let h_t = packing::pack_h(&f.h, r_pad);
+        let mut yt_batches = Vec::with_capacity(plan.batches.len());
+        let mut q_store: Vec<Option<Mat>> = if keep_q { vec![None; data.k()] } else { Vec::new() };
+        let mut norm_sq = 0.0;
+        for batch in &plan.batches {
+            let sw = Stopwatch::start();
+            let xc = packing::pack_xc(data, batch, &plan.plans, b_size);
+            let vc = packing::pack_vc(&f.v, batch, &plan.plans, b_size, r_pad);
+            let w = packing::pack_w(&f.w, batch, b_size, r_pad);
+            self.metrics.pack_secs += sw.elapsed_secs();
+
+            let kernel = self.reg.kernel(
+                self.ctx,
+                Kind::ProcrustesPack,
+                Some(batch.i_bucket),
+                batch.c_bucket,
+            )?;
+            let sw = Stopwatch::start();
+            let out = kernel.run(&[xc, vc, h_t.clone(), w])?;
+            self.metrics.kernel_secs += sw.elapsed_secs();
+            self.metrics.kernel_invocations += 1;
+            let [yt, q]: [HostTensor; 2] = out
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("procrustes_pack must return (yt, q)"))?;
+            norm_sq += yt.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+            if keep_q {
+                // slice q [B, I, R_pad] into per-subject I_k × R blocks
+                let ib = batch.i_bucket;
+                for (slot, &k) in batch.subjects.iter().enumerate() {
+                    let i_k = data.i_k(k);
+                    let mut qm = Mat::zeros(i_k, f.h.rows());
+                    for i in 0..i_k {
+                        for t in 0..f.h.rows() {
+                            qm[(i, t)] = q.data[slot * ib * r_pad + i * r_pad + t] as f64;
+                        }
+                    }
+                    q_store[k] = Some(qm);
+                }
+            }
+            yt_batches.push(yt);
+        }
+        // native fallback subjects
+        let mut fallback = Vec::with_capacity(plan.fallback.len());
+        for &k in &plan.fallback {
+            let (packed, q) =
+                procrustes::procrustes_and_pack(data.slice(k), &f.v, &f.h, f.w.row(k), keep_q);
+            norm_sq += packed.norm_sq();
+            if keep_q {
+                q_store[k] = q;
+            }
+            fallback.push((k, packed));
+        }
+        let _ = pool;
+        Ok(YState {
+            yt_batches,
+            fallback,
+            norm_sq,
+            q: if keep_q { Some(q_store) } else { None },
+        })
+    }
+
+    // --- step 2 -----------------------------------------------------------
+
+    fn cp_step(
+        &mut self,
+        data: &IrregularTensor,
+        plan: &PackPlan,
+        y: &YState,
+        f: &mut CpFactors,
+        cfg: &PjrtFitConfig,
+    ) -> Result<f64> {
+        let pool = Pool::new(cfg.workers);
+        // mode 1: H
+        let m1 = self.mttkrp1(data, plan, &y.yt_batches, &y.fallback, f, &pool)?;
+        let g1 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.v));
+        f.h = solve_mode(&m1, &g1, false);
+        normalize_cols_safe(&mut f.h);
+        // mode 2: V
+        let m2 = self.mttkrp2(data, plan, &y.yt_batches, &y.fallback, f)?;
+        let g2 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.h));
+        f.v = solve_mode(&m2, &g2, cfg.nonneg);
+        normalize_cols_safe(&mut f.v);
+        // mode 3: W
+        let m3 = self.mttkrp3(data, plan, &y.yt_batches, &y.fallback, f, &pool)?;
+        let g3 = blas::hadamard(&blas::gram(&f.v), &blas::gram(&f.h));
+        f.w = solve_mode(&m3, &g3, cfg.nonneg);
+        Ok(residual_stats(&m3, f, y.norm_sq).y_residual_sq)
+    }
+
+    fn native_y(&self, fallback: &[(usize, PackedSlice)], j_dim: usize) -> PackedY {
+        PackedY { slices: fallback.iter().map(|(_, p)| p.clone()).collect(), j_dim }
+    }
+
+    fn mttkrp1(
+        &mut self,
+        data: &IrregularTensor,
+        plan: &PackPlan,
+        yt_batches: &[HostTensor],
+        fallback: &[(usize, PackedSlice)],
+        f: &CpFactors,
+        pool: &Pool,
+    ) -> Result<Mat> {
+        let r = f.h.rows();
+        let r_pad = self.reg.rank;
+        let b_size = plan.batch_size;
+        let mut m1 = Mat::zeros(r, r);
+        for (batch, yt) in plan.batches.iter().zip(yt_batches) {
+            let vc = packing::pack_vc(&f.v, batch, &plan.plans, b_size, r_pad);
+            let w = packing::pack_w(&f.w, batch, b_size, r_pad);
+            let kernel = self.reg.kernel(self.ctx, Kind::Mttkrp1, None, batch.c_bucket)?;
+            let sw = Stopwatch::start();
+            let out = kernel.run(&[yt.clone(), vc, w])?;
+            self.metrics.kernel_secs += sw.elapsed_secs();
+            self.metrics.kernel_invocations += 1;
+            let part = &out[0]; // [R_pad, R_pad]
+            for i in 0..r {
+                for j in 0..r {
+                    m1[(i, j)] += part.data[i * r_pad + j] as f64;
+                }
+            }
+        }
+        if !fallback.is_empty() {
+            let ynative = self.native_y(fallback, data.j());
+            let fw = fallback_w(&f.w, fallback);
+            let part = crate::parafac2::mttkrp::mttkrp_mode1(&ynative, &f.v, &fw, pool);
+            m1.axpy(1.0, &part);
+        }
+        Ok(m1)
+    }
+
+    fn mttkrp2(
+        &mut self,
+        data: &IrregularTensor,
+        plan: &PackPlan,
+        yt_batches: &[HostTensor],
+        fallback: &[(usize, PackedSlice)],
+        f: &CpFactors,
+    ) -> Result<Mat> {
+        let r = f.h.rows();
+        let r_pad = self.reg.rank;
+        let b_size = plan.batch_size;
+        let h_t = packing::pack_h(&f.h, r_pad);
+        let mut m2 = Mat::zeros(data.j(), r);
+        for (batch, yt) in plan.batches.iter().zip(yt_batches) {
+            let w = packing::pack_w(&f.w, batch, b_size, r_pad);
+            let kernel = self.reg.kernel(self.ctx, Kind::Mttkrp2, None, batch.c_bucket)?;
+            let sw = Stopwatch::start();
+            let out = kernel.run(&[yt.clone(), h_t.clone(), w])?;
+            self.metrics.kernel_secs += sw.elapsed_secs();
+            self.metrics.kernel_invocations += 1;
+            let rows = &out[0]; // [B, C, R_pad]
+            let cb = batch.c_bucket;
+            for (slot, &k) in batch.subjects.iter().enumerate() {
+                for (c, &j) in plan.plans[k].support.iter().enumerate() {
+                    let src = slot * cb * r_pad + c * r_pad;
+                    let dst = m2.row_mut(j as usize);
+                    for t in 0..r {
+                        dst[t] += rows.data[src + t] as f64;
+                    }
+                }
+            }
+        }
+        if !fallback.is_empty() {
+            let ynative = self.native_y(fallback, data.j());
+            let fw = fallback_w(&f.w, fallback);
+            let part =
+                crate::parafac2::mttkrp::mttkrp_mode2(&ynative, &f.h, &fw, &Pool::serial());
+            m2.axpy(1.0, &part);
+        }
+        Ok(m2)
+    }
+
+    fn mttkrp3(
+        &mut self,
+        data: &IrregularTensor,
+        plan: &PackPlan,
+        yt_batches: &[HostTensor],
+        fallback: &[(usize, PackedSlice)],
+        f: &CpFactors,
+        pool: &Pool,
+    ) -> Result<Mat> {
+        let r = f.h.rows();
+        let r_pad = self.reg.rank;
+        let b_size = plan.batch_size;
+        let h_t = packing::pack_h(&f.h, r_pad);
+        let mut m3 = Mat::zeros(data.k(), r);
+        for (batch, yt) in plan.batches.iter().zip(yt_batches) {
+            let vc = packing::pack_vc(&f.v, batch, &plan.plans, b_size, r_pad);
+            let kernel = self.reg.kernel(self.ctx, Kind::Mttkrp3, None, batch.c_bucket)?;
+            let sw = Stopwatch::start();
+            let out = kernel.run(&[yt.clone(), vc, h_t.clone()])?;
+            self.metrics.kernel_secs += sw.elapsed_secs();
+            self.metrics.kernel_invocations += 1;
+            let rows = &out[0]; // [B, R_pad]
+            for (slot, &k) in batch.subjects.iter().enumerate() {
+                let dst = m3.row_mut(k);
+                for t in 0..r {
+                    dst[t] = rows.data[slot * r_pad + t] as f64;
+                }
+            }
+        }
+        if !fallback.is_empty() {
+            let ynative = self.native_y(fallback, data.j());
+            let part = crate::parafac2::mttkrp::mttkrp_mode3(&ynative, &f.h, &f.v, pool);
+            for (local, &(k, _)) in fallback.iter().enumerate() {
+                m3.row_mut(k).copy_from_slice(part.row(local));
+            }
+        }
+        Ok(m3)
+    }
+}
+
+/// Extract the W rows of the fallback subjects (native kernels expect a
+/// compact K'×R matrix aligned with the fallback slice order).
+fn fallback_w(w: &Mat, fallback: &[(usize, PackedSlice)]) -> Mat {
+    let idx: Vec<usize> = fallback.iter().map(|&(k, _)| k).collect();
+    w.gather_rows(&idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = PjrtFitConfig::default();
+        assert!(c.rank > 0 && c.max_iters > 0 && c.tol > 0.0);
+    }
+
+    // End-to-end driver tests (requiring artifacts + the PJRT client) live
+    // in rust/tests/pjrt_roundtrip.rs.
+}

@@ -1,0 +1,8 @@
+//! The coordinator: shape-bucket batching of irregular sparse slices and
+//! the PJRT-backed ALS driver that executes the AOT artifacts (with native
+//! fallback for out-of-bucket subjects).
+
+pub mod driver;
+pub mod packing;
+
+pub use driver::{PjrtDriver, PjrtFitConfig, PjrtRunMetrics};

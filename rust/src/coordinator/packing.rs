@@ -1,0 +1,249 @@
+//! Bucketing and packing of sparse slices into the fixed-shape dense
+//! batches the AOT artifacts consume.
+//!
+//! PJRT executables are shape-specialized, so the coordinator:
+//! 1. computes each subject's column support `c_k` once,
+//! 2. assigns each subject to the smallest (I, C) bucket that fits
+//!    (subjects larger than every bucket fall back to the native path —
+//!    the hybrid strategy in DESIGN.md §Hardware-Adaptation),
+//! 3. groups bucket members into batches of the manifest batch size B and
+//!    zero-pads the tail batch (zero slices are exact no-ops for every
+//!    kernel; validated by python/tests + pjrt_roundtrip.rs).
+
+use crate::linalg::Mat;
+use crate::runtime::{ArtifactRegistry, HostTensor};
+use crate::sparse::IrregularTensor;
+
+/// Per-subject packing metadata computed once per fit.
+#[derive(Clone, Debug)]
+pub struct SubjectPlan {
+    pub subject: usize,
+    /// Sorted nonzero columns of `X_k`.
+    pub support: Vec<u32>,
+    /// Assigned buckets (None ⇒ native fallback).
+    pub i_bucket: Option<usize>,
+    pub c_bucket: Option<usize>,
+}
+
+impl SubjectPlan {
+    pub fn is_pjrt(&self) -> bool {
+        self.i_bucket.is_some() && self.c_bucket.is_some()
+    }
+}
+
+/// A batch of subjects sharing one (I, C) bucket.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub i_bucket: usize,
+    pub c_bucket: usize,
+    /// Subject ids; length ≤ manifest batch size (padded at pack time).
+    pub subjects: Vec<usize>,
+}
+
+/// The full execution plan for a dataset against a registry.
+#[derive(Debug)]
+pub struct PackPlan {
+    pub plans: Vec<SubjectPlan>,
+    pub batches: Vec<Batch>,
+    /// Subjects handled by the native path.
+    pub fallback: Vec<usize>,
+    pub batch_size: usize,
+}
+
+/// Build the plan: bucket every subject, group into batches.
+pub fn plan(data: &IrregularTensor, reg: &ArtifactRegistry) -> PackPlan {
+    let mut plans = Vec::with_capacity(data.k());
+    for k in 0..data.k() {
+        let xk = data.slice(k);
+        let support = xk.col_support();
+        let i_bucket = reg.i_bucket_for(xk.rows());
+        let c_bucket = reg.c_bucket_for(support.len());
+        plans.push(SubjectPlan { subject: k, support, i_bucket, c_bucket });
+    }
+    // group by bucket pair, preserving subject order within groups
+    let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+        std::collections::BTreeMap::new();
+    let mut fallback = Vec::new();
+    for p in &plans {
+        match (p.i_bucket, p.c_bucket) {
+            (Some(i), Some(c)) => groups.entry((i, c)).or_default().push(p.subject),
+            _ => fallback.push(p.subject),
+        }
+    }
+    let mut batches = Vec::new();
+    for ((i, c), subjects) in groups {
+        for chunk in subjects.chunks(reg.batch) {
+            batches.push(Batch { i_bucket: i, c_bucket: c, subjects: chunk.to_vec() });
+        }
+    }
+    PackPlan { plans, batches, fallback, batch_size: reg.batch }
+}
+
+/// Pack the `X_k` blocks of a batch: f32[B, I, C], support columns only.
+pub fn pack_xc(data: &IrregularTensor, batch: &Batch, plans: &[SubjectPlan], b_size: usize) -> HostTensor {
+    let (ib, cb) = (batch.i_bucket, batch.c_bucket);
+    let mut out = HostTensor::zeros(vec![b_size, ib, cb]);
+    for (slot, &k) in batch.subjects.iter().enumerate() {
+        let xk = data.slice(k);
+        let support = &plans[k].support;
+        // column id → local index
+        let mut local = std::collections::HashMap::with_capacity(support.len());
+        for (c, &j) in support.iter().enumerate() {
+            local.insert(j, c);
+        }
+        let base = slot * ib * cb;
+        for i in 0..xk.rows() {
+            let row_base = base + i * cb;
+            for (j, v) in xk.row_iter(i) {
+                let c = local[&j];
+                out.data[row_base + c] = v as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Gather V rows for a batch: f32[B, C, R_pad] (R padded to the manifest
+/// rank with zero columns).
+pub fn pack_vc(v: &Mat, batch: &Batch, plans: &[SubjectPlan], b_size: usize, r_pad: usize) -> HostTensor {
+    let cb = batch.c_bucket;
+    let r = v.cols();
+    assert!(r <= r_pad);
+    let mut out = HostTensor::zeros(vec![b_size, cb, r_pad]);
+    for (slot, &k) in batch.subjects.iter().enumerate() {
+        let base = slot * cb * r_pad;
+        for (c, &j) in plans[k].support.iter().enumerate() {
+            let src = v.row(j as usize);
+            let dst = base + c * r_pad;
+            for t in 0..r {
+                out.data[dst + t] = src[t] as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Pack W rows for a batch: f32[B, R_pad].
+pub fn pack_w(w: &Mat, batch: &Batch, b_size: usize, r_pad: usize) -> HostTensor {
+    let r = w.cols();
+    let mut out = HostTensor::zeros(vec![b_size, r_pad]);
+    for (slot, &k) in batch.subjects.iter().enumerate() {
+        let src = w.row(k);
+        for t in 0..r {
+            out.data[slot * r_pad + t] = src[t] as f32;
+        }
+    }
+    out
+}
+
+/// Pad H to f32[R_pad, R_pad].
+pub fn pack_h(h: &Mat, r_pad: usize) -> HostTensor {
+    let r = h.rows();
+    assert!(r <= r_pad);
+    let mut out = HostTensor::zeros(vec![r_pad, r_pad]);
+    for i in 0..r {
+        for j in 0..r {
+            out.data[i * r_pad + j] = h[(i, j)] as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn fake_registry(dir: &std::path::Path) -> ArtifactRegistry {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "version": 1, "dtype": "f32", "batch": 2, "rank": 4,
+            "i_buckets": [4, 8], "c_buckets": [2, 4],
+            "entries": [
+                {"name": "x", "kind": "mttkrp_mode1", "path": "x.hlo.txt",
+                 "b": 2, "i": null, "c": 2, "r": 4, "inputs": [], "outputs": []}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        ArtifactRegistry::load(dir).unwrap()
+    }
+
+    fn tiny_data() -> IrregularTensor {
+        // subject 0: 3 rows, support {1, 5}; subject 1: 2 rows, support {0};
+        // subject 2: 6 rows (exceeds no bucket), support {0,1,2,3,4} (c=5 > 4 ⇒ fallback)
+        let x0 = Csr::from_triplets(3, 6, vec![(0, 1, 1.0), (1, 5, 2.0), (2, 1, 3.0)]);
+        let x1 = Csr::from_triplets(2, 6, vec![(0, 0, 4.0), (1, 0, 5.0)]);
+        let x2 = Csr::from_triplets(
+            6,
+            6,
+            vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0), (3, 3, 1.0), (4, 4, 1.0), (5, 0, 1.0)],
+        );
+        IrregularTensor::new(vec![x0, x1, x2])
+    }
+
+    #[test]
+    fn plan_buckets_and_fallback() {
+        let dir = std::env::temp_dir().join("spartan_pack_test");
+        let reg = fake_registry(&dir);
+        let data = tiny_data();
+        let p = plan(&data, &reg);
+        assert_eq!(p.plans[0].i_bucket, Some(4));
+        assert_eq!(p.plans[0].c_bucket, Some(2));
+        assert_eq!(p.plans[1].i_bucket, Some(4));
+        assert_eq!(p.plans[1].c_bucket, Some(2));
+        // subject 2: c_k = 5 > max bucket 4 ⇒ fallback
+        assert_eq!(p.fallback, vec![2]);
+        // subjects 0,1 share bucket (4,2) and batch size 2 ⇒ one batch
+        assert_eq!(p.batches.len(), 1);
+        assert_eq!(p.batches[0].subjects, vec![0, 1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_xc_places_values() {
+        let dir = std::env::temp_dir().join("spartan_pack_test2");
+        let reg = fake_registry(&dir);
+        let data = tiny_data();
+        let p = plan(&data, &reg);
+        let xc = pack_xc(&data, &p.batches[0], &p.plans, 2);
+        assert_eq!(xc.dims, vec![2, 4, 2]);
+        // subject 0: support [1,5]; X(0,1)=1 → xc[0,0,0]; X(1,5)=2 → xc[0,1,1]
+        assert_eq!(xc.data[0], 1.0);
+        assert_eq!(xc.data[1 * 2 + 1], 2.0);
+        assert_eq!(xc.data[2 * 2 + 0], 3.0);
+        // subject 1 in slot 1: support [0]; X(0,0)=4 → xc[1,0,0]
+        let base = 4 * 2;
+        assert_eq!(xc.data[base], 4.0);
+        assert_eq!(xc.data[base + 2], 5.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_vc_and_w_pad_rank() {
+        let dir = std::env::temp_dir().join("spartan_pack_test3");
+        let reg = fake_registry(&dir);
+        let data = tiny_data();
+        let p = plan(&data, &reg);
+        let v = Mat::from_fn(6, 2, |i, j| (i * 10 + j) as f64);
+        let vc = pack_vc(&v, &p.batches[0], &p.plans, 2, 4);
+        assert_eq!(vc.dims, vec![2, 2, 4]);
+        // subject 0 support [1,5] → rows 1 and 5 of V, padded to width 4
+        assert_eq!(vc.data[0], 10.0);
+        assert_eq!(vc.data[1], 11.0);
+        assert_eq!(vc.data[2], 0.0); // rank padding
+        assert_eq!(vc.data[4], 50.0);
+        let w = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        let wt = pack_w(&w, &p.batches[0], 2, 4);
+        assert_eq!(wt.dims, vec![2, 4]);
+        assert_eq!(wt.data[0], 0.0);
+        assert_eq!(wt.data[1], 1.0);
+        assert_eq!(wt.data[4], 1.0); // subject 1, col 0
+        let h = Mat::eye(2);
+        let hp = pack_h(&h, 4);
+        assert_eq!(hp.dims, vec![4, 4]);
+        assert_eq!(hp.data[0], 1.0);
+        assert_eq!(hp.data[5], 1.0);
+        assert_eq!(hp.data[10], 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generators for every dataset in the paper's evaluation:
+//! the §5.2 synthetic sweep (Table 1), the CHOA-like EHR cohort
+//! (Figs 5, 6, 8, Table 4), and the MovieLens-like ratings data
+//! (Figs 5, 7). DESIGN.md §3 documents each substitution.
+
+pub mod ehr;
+pub mod movielens;
+pub mod synthetic;
+pub mod vocab;

@@ -1,0 +1,189 @@
+//! MovieLens-20M-like generator.
+//!
+//! The paper (Table 3) slices MovieLens by year: each user is a subject
+//! whose slice is a years × movies matrix of ratings (K=25,249 users with
+//! ≥2 years of activity, J=26,096 movies, ≤19 yearly observations, 8.9M
+//! nonzeros). The dataset itself is public but this box has no network, so
+//! we generate a surrogate preserving what the Fig. 5/7 experiments probe:
+//! the **J ≫ K regime**, long-tailed movie popularity (strong column
+//! sparsity concentrated on popular titles), users with 2–19 active years,
+//! and genre-structured, temporally drifting preferences.
+
+use crate::sparse::{Csr, IrregularTensor};
+use crate::util::rng::Pcg64;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct MovieLensSpec {
+    /// Number of users K.
+    pub k: usize,
+    /// Number of movies J.
+    pub j: usize,
+    /// Maximum active years per user (paper: 19).
+    pub max_years: usize,
+    /// Latent genres driving preferences.
+    pub n_genres: usize,
+    /// Mean ratings per active user-year.
+    pub ratings_per_year: f64,
+    pub seed: u64,
+}
+
+impl Default for MovieLensSpec {
+    fn default() -> Self {
+        MovieLensSpec {
+            k: 5_000,
+            j: 20_000,
+            max_years: 19,
+            n_genres: 12,
+            ratings_per_year: 35.0,
+            seed: 20_000_000,
+        }
+    }
+}
+
+pub fn generate(spec: &MovieLensSpec) -> IrregularTensor {
+    assert!(spec.k >= 1 && spec.j >= 2 && spec.max_years >= 2);
+    let mut rng = Pcg64::new(spec.seed, 0x31);
+
+    // Movie → genre assignment and Zipf popularity within genre.
+    let genre_of: Vec<usize> = (0..spec.j).map(|_| rng.range(0, spec.n_genres)).collect();
+    // movies per genre, with per-genre cumulative popularity for sampling
+    let mut by_genre: Vec<Vec<usize>> = vec![Vec::new(); spec.n_genres];
+    for (m, &g) in genre_of.iter().enumerate() {
+        by_genre[g].push(m);
+    }
+    let genre_cum: Vec<Vec<f64>> = by_genre
+        .iter()
+        .map(|movies| {
+            let mut cum = Vec::with_capacity(movies.len());
+            let mut acc = 0.0;
+            for (rank0, _) in movies.iter().enumerate() {
+                // Zipf(1.1) popularity by within-genre rank
+                acc += 1.0 / ((rank0 + 1) as f64).powf(1.1);
+                cum.push(acc);
+            }
+            cum
+        })
+        .collect();
+
+    let mut slices = Vec::with_capacity(spec.k);
+    for _ in 0..spec.k {
+        // active years: 2 .. max_years, geometric-ish tail
+        let years = (2.0 + rng.exponential(0.35)).min(spec.max_years as f64) as usize;
+        let years = years.clamp(2, spec.max_years);
+        // genre preferences (Dirichlet-ish via normalized exponentials),
+        // drifting over years (recency effect, the paper's motivation [26])
+        let mut pref: Vec<f64> = (0..spec.n_genres).map(|_| rng.exponential(1.0)).collect();
+        let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+        for y in 0..years {
+            // drift: mix toward a fresh draw
+            for p in pref.iter_mut() {
+                *p = 0.8 * *p + 0.2 * rng.exponential(1.0);
+            }
+            let total: f64 = pref.iter().sum();
+            let n_r = rng.poisson(spec.ratings_per_year).max(1) as usize;
+            for _ in 0..n_r {
+                // pick genre ∝ pref, then movie ∝ popularity
+                let mut x = rng.f64() * total;
+                let mut g = 0;
+                for (gi, &p) in pref.iter().enumerate() {
+                    if x < p {
+                        g = gi;
+                        break;
+                    }
+                    x -= p;
+                }
+                if by_genre[g].is_empty() {
+                    continue;
+                }
+                let idx = rng.discrete_cum(&genre_cum[g]);
+                let movie = by_genre[g][idx];
+                // rating 0.5–5.0 in half-star steps, genre-affinity biased
+                let base = 3.0 + rng.normal() * 0.9;
+                let rating = (base.clamp(0.5, 5.0) * 2.0).round() / 2.0;
+                trips.push((y, movie, rating));
+            }
+        }
+        if trips.is_empty() {
+            trips.push((0, rng.range(0, spec.j), 3.0));
+        }
+        // a user rates a movie once per year: dedup keeps the first rating
+        trips.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        trips.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);
+        slices.push(Csr::from_triplets(spec.max_years, spec.j, trips));
+    }
+    IrregularTensor::new(slices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> MovieLensSpec {
+        MovieLensSpec {
+            k: 80,
+            j: 500,
+            max_years: 10,
+            n_genres: 5,
+            ratings_per_year: 12.0,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn shapes_and_rating_values() {
+        let t = generate(&small_spec());
+        assert_eq!(t.k(), 80);
+        assert_eq!(t.j(), 500);
+        assert!(t.max_i_k() <= 10);
+        for k in 0..t.k() {
+            for &v in t.slice(k).values() {
+                assert!((0.5..=5.0).contains(&v), "rating {v}");
+                assert_eq!((v * 2.0).fract(), 0.0, "half-star steps: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_user_has_at_least_two_years() {
+        // paper: "only the users having at least 2 years of ratings";
+        // generator plants ≥2 active years, one may be filtered only if
+        // empty, which the ≥1-rating-per-year floor prevents
+        let t = generate(&small_spec());
+        let with_2 = (0..t.k()).filter(|&k| t.i_k(k) >= 2).count();
+        assert!(with_2 as f64 > 0.95 * t.k() as f64);
+    }
+
+    #[test]
+    fn popularity_is_long_tailed() {
+        let t = generate(&small_spec());
+        // top-10% movies should hold a disproportionate share of ratings
+        let mut per_movie = vec![0usize; t.j()];
+        for k in 0..t.k() {
+            let s = t.slice(k);
+            for i in 0..s.rows() {
+                for (j, _) in s.row_iter(i) {
+                    per_movie[j as usize] += 1;
+                }
+            }
+        }
+        per_movie.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = per_movie.iter().sum();
+        let top10: usize = per_movie[..t.j() / 10].iter().sum();
+        assert!(
+            top10 as f64 > 0.4 * total as f64,
+            "top-10% share {}",
+            top10 as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&small_spec());
+        let b = generate(&small_spec());
+        assert_eq!(a.nnz(), b.nnz());
+        for k in 0..a.k() {
+            assert_eq!(a.slice(k), b.slice(k));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! CCS-like clinical vocabulary for the EHR generator.
+//!
+//! The paper's CHOA dataset summarizes ICD9 codes to Clinical
+//! Classification Software (CCS) categories plus medication categories
+//! (J = 1,328 total; the MCP cohort uses 1,126). The real vocabulary is
+//! not redistributable, so we ship a seed list of realistic category
+//! names (including every name appearing in the paper's Table 4, so the
+//! case-study output reads like the paper's) and synthesize the rest.
+
+/// Feature kind, mirroring the paper's red (diagnosis) / blue (medication)
+/// color-coding of Table 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureKind {
+    Diagnosis,
+    Medication,
+}
+
+/// A named clinical feature.
+#[derive(Clone, Debug)]
+pub struct Feature {
+    pub name: String,
+    pub kind: FeatureKind,
+}
+
+/// Diagnosis category names seeded from the paper's Table 4 + common CCS
+/// categories.
+const DIAGNOSIS_SEED: &[&str] = &[
+    "Chemotherapy",
+    "Leukemias [39.]",
+    "Immunity disorders [57.]",
+    "Cancer of brain and nervous system [35.]",
+    "Other nervous system symptoms and disorders",
+    "Rehabilitation care; fitting of prostheses; and adjustment of devices [254.]",
+    "Residual codes; unclassified; all E codes [259. and 260.]",
+    "Other connective tissue disease [211.]",
+    "Other and unspecified metabolic; nutritional; and endocrine disorders",
+    "Epilepsy; convulsions [83.]",
+    "Asthma [128.]",
+    "Pneumonia [122.]",
+    "Acute bronchitis [125.]",
+    "Otitis media and related conditions [92.]",
+    "Esophageal disorders [138.]",
+    "Cardiac and circulatory congenital anomalies [213.]",
+    "Developmental disorders [654.]",
+    "Cerebral palsy [82.]",
+    "Sickle cell anemia [61.]",
+    "Diabetes mellitus with complications [50.]",
+    "Nutritional deficiencies [52.]",
+    "Fluid and electrolyte disorders [55.]",
+    "Gastrointestinal hemorrhage [153.]",
+    "Urinary tract infections [159.]",
+    "Fever of unknown origin [246.]",
+    "Nausea and vomiting [250.]",
+    "Abdominal pain [251.]",
+    "Malaise and fatigue [252.]",
+    "Allergic reactions [253.]",
+    "Respiratory failure; insufficiency; arrest [131.]",
+];
+
+/// Medication category names seeded from Table 4 + common classes
+/// (upper-cased, as the paper renders medication features).
+const MEDICATION_SEED: &[&str] = &[
+    "HEPARIN AND RELATED PREPARATIONS",
+    "ANTIEMETIC/ANTIVERTIGO AGENTS",
+    "SODIUM/SALINE PREPARATIONS",
+    "TOPICAL LOCAL ANESTHETICS",
+    "ANTIHISTAMINES - 1ST GENERATION",
+    "ANTINEOPLASTIC - ANTIMETABOLITES",
+    "ANTINEOPLASTIC - ALKYLATING AGENTS",
+    "GLUCOCORTICOSTEROIDS",
+    "ANTICONVULSANTS",
+    "BETA-ADRENERGIC AGENTS",
+    "PENICILLIN ANTIBIOTICS",
+    "CEPHALOSPORIN ANTIBIOTICS",
+    "ANALGESICS - OPIOID",
+    "ANALGESICS - NONSTEROIDAL",
+    "PROTON PUMP INHIBITORS",
+    "LAXATIVES AND CATHARTICS",
+    "IRON PREPARATIONS",
+    "MULTIVITAMIN PREPARATIONS",
+    "ANTIFUNGALS - SYSTEMIC",
+    "DIURETICS - LOOP",
+];
+
+/// Build a J-sized vocabulary: `n_diag` diagnosis + `n_med` medication
+/// features (seed names first, synthesized fillers after).
+pub fn build_vocab(n_diag: usize, n_med: usize) -> Vec<Feature> {
+    let mut out = Vec::with_capacity(n_diag + n_med);
+    for i in 0..n_diag {
+        let name = if i < DIAGNOSIS_SEED.len() {
+            DIAGNOSIS_SEED[i].to_string()
+        } else {
+            format!("Diagnosis category {i} [{i}.]")
+        };
+        out.push(Feature { name, kind: FeatureKind::Diagnosis });
+    }
+    for i in 0..n_med {
+        let name = if i < MEDICATION_SEED.len() {
+            MEDICATION_SEED[i].to_string()
+        } else {
+            format!("MEDICATION CLASS {i}")
+        };
+        out.push(Feature { name, kind: FeatureKind::Medication });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_sizes_and_kinds() {
+        let v = build_vocab(100, 50);
+        assert_eq!(v.len(), 150);
+        assert_eq!(v.iter().filter(|f| f.kind == FeatureKind::Diagnosis).count(), 100);
+        assert_eq!(v.iter().filter(|f| f.kind == FeatureKind::Medication).count(), 50);
+    }
+
+    #[test]
+    fn seed_names_come_first() {
+        let v = build_vocab(5, 3);
+        assert_eq!(v[0].name, "Chemotherapy");
+        assert_eq!(v[5].name, "HEPARIN AND RELATED PREPARATIONS");
+    }
+
+    #[test]
+    fn names_unique() {
+        let v = build_vocab(1000, 328);
+        let mut names: Vec<&str> = v.iter().map(|f| f.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before);
+    }
+}

@@ -1,0 +1,33 @@
+//! # SPARTan — Scalable PARAFAC2 for Large & Sparse Data
+//!
+//! A production-grade reproduction of *SPARTan: Scalable PARAFAC2 for
+//! Large & Sparse Data* (Perros et al., KDD 2017) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: sparse irregular-tensor
+//!   storage, the PARAFAC2-ALS outer loop, SPARTan's specialized MTTKRP
+//!   (paper Algorithm 3) and the Tensor-Toolbox-style baseline it is
+//!   evaluated against, a subject-parallel scheduler, dataset generators,
+//!   phenotyping reports, CLI/config/metrics, and a PJRT runtime that can
+//!   execute the AOT-compiled JAX/Pallas compute path.
+//! * **L2 (`python/compile/model.py`)** — the per-slice-batch compute
+//!   graphs in JAX, lowered once to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — the Pallas kernel for the packed
+//!   per-slice MTTKRP hot-spot.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod linalg;
+pub mod metrics;
+pub mod parafac2;
+pub mod pheno;
+pub mod runtime;
+pub mod sparse;
+pub mod threadpool;
+pub mod util;
+
+pub use parafac2::model::Parafac2Model;
+pub use sparse::{Csr, IrregularTensor};

@@ -1,0 +1,332 @@
+//! Matrix-multiply kernels for row-major [`Mat`].
+//!
+//! The whole native hot path of SPARTan reduces to small/medium GEMMs
+//! (`Y_k V` is `R×c_k · c_k×R` with R ≤ 64), so these kernels matter. The
+//! main loop order is `i-k-j` ("axpy" form): for row-major storage the
+//! inner `j` loop streams both `B.row(k)` and `C.row(i)` contiguously,
+//! which LLVM auto-vectorizes well. A panel-blocked variant kicks in for
+//! larger operands to keep the B panel in L1/L2.
+
+use super::dense::Mat;
+
+/// Tunable blocking parameters (also exercised by the ablation bench).
+const BLOCK_K: usize = 128;
+const BLOCK_J: usize = 256;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_acc(&mut c, a, b, 1.0);
+    c
+}
+
+/// C += alpha · A · B  (C must already have the right shape).
+pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "gemm inner-dim mismatch: {ka} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "gemm output shape mismatch");
+    if m == 0 || n == 0 || ka == 0 {
+        return;
+    }
+    // Small problems: straight i-k-j, no blocking overhead.
+    if ka <= BLOCK_K && n <= BLOCK_J {
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                let s = alpha * aik;
+                if s == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += s * bv;
+                }
+            }
+        }
+        return;
+    }
+    // Blocked: panels of B (BLOCK_K × BLOCK_J) stay cache-resident across
+    // the full sweep over rows of A.
+    let mut k0 = 0;
+    while k0 < ka {
+        let k1 = (k0 + BLOCK_K).min(ka);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + BLOCK_J).min(n);
+            for i in 0..m {
+                let arow = &a.row(i)[k0..k1];
+                let crow = &mut c.row_mut(i)[j0..j1];
+                for (k, &aik) in arow.iter().enumerate() {
+                    let s = alpha * aik;
+                    if s == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(k0 + k)[j0..j1];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += s * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// C = Aᵀ · B without materializing Aᵀ.
+///
+/// For row-major A this is again an `i(k)-j` streaming pattern: row k of A
+/// contributes outer products `A(k,:)ᵀ · B(k,:)`.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    let (ka, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "atb inner-dim mismatch");
+    let mut c = Mat::zeros(m, n);
+    for k in 0..ka {
+        let arow = a.row(k);
+        let brow = b.row(k);
+        for (i, &aki) in arow.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aki * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ without materializing Bᵀ (inner loop is a dot product of two
+/// contiguous rows).
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    let (m, ka) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(ka, kb, "abt inner-dim mismatch");
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// Gram matrix AᵀA (symmetric; computes upper triangle and mirrors).
+pub fn gram(a: &Mat) -> Mat {
+    let (k, n) = a.shape();
+    let mut g = Mat::zeros(n, n);
+    for r in 0..k {
+        let row = a.row(r);
+        for i in 0..n {
+            let ai = row[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(i);
+            for j in i..n {
+                grow[j] += ai * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            g[(i, j)] = g[(j, i)];
+        }
+    }
+    g
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulators: breaks the dependency chain so the
+    // compiler can keep several FMAs in flight.
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y = xᵀ·A for a row vector x (length = A.rows()); returns length A.cols().
+pub fn vec_mat(x: &[f64], a: &Mat) -> Vec<f64> {
+    assert_eq!(x.len(), a.rows());
+    let mut y = vec![0.0; a.cols()];
+    for (k, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        for (yv, &av) in y.iter_mut().zip(a.row(k)) {
+            *yv += xv * av;
+        }
+    }
+    y
+}
+
+/// y = A·x for a column vector x (length = A.cols()); returns length A.rows().
+pub fn mat_vec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), a.cols());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// Hadamard (element-wise) product of two matrices.
+pub fn hadamard(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.shape(), b.shape());
+    let mut c = a.clone();
+    for (cv, &bv) in c.data_mut().iter_mut().zip(b.data()) {
+        *cv *= bv;
+    }
+    c
+}
+
+/// Multiply each row of `a` element-wise by the vector `w` in place
+/// (the `rowhad` epilogue of SPARTan's mode-1 kernel).
+pub fn rowhad_inplace(a: &mut Mat, w: &[f64]) {
+    assert_eq!(a.cols(), w.len());
+    for i in 0..a.rows() {
+        for (av, &wv) in a.row_mut(i).iter_mut().zip(w) {
+            *av *= wv;
+        }
+    }
+}
+
+/// Khatri-Rao product (column-wise Kronecker): A ∈ m×r, B ∈ n×r → mn×r.
+/// Only used by reference implementations and the baseline comparator —
+/// SPARTan's whole point is *not* materializing this.
+pub fn khatri_rao(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "khatri-rao rank mismatch");
+    let (m, r) = a.shape();
+    let n = b.rows();
+    let mut out = Mat::zeros(m * n, r);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let orow = out.row_mut(i * n + j);
+            for c in 0..r {
+                orow[c] = arow[c] * brow[c];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        Mat::from_fn(a.rows(), b.cols(), |i, j| {
+            (0..a.cols()).map(|k| a[(i, k)] * b[(k, j)]).sum()
+        })
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut rng = Pcg64::seed(5);
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (17, 33, 9), (40, 300, 40), (130, 260, 300)] {
+            let a = Mat::rand_normal(m, k, &mut rng);
+            let b = Mat::rand_normal(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-9, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_acc_accumulates_with_alpha() {
+        let mut rng = Pcg64::seed(6);
+        let a = Mat::rand_normal(4, 6, &mut rng);
+        let b = Mat::rand_normal(6, 3, &mut rng);
+        let mut c = Mat::rand_normal(4, 3, &mut rng);
+        let c0 = c.clone();
+        gemm_acc(&mut c, &a, &b, 2.5);
+        let mut want = naive_matmul(&a, &b);
+        want.scale(2.5);
+        want.axpy(1.0, &c0);
+        assert!(c.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn at_b_and_a_bt_match_explicit_transpose() {
+        let mut rng = Pcg64::seed(7);
+        let a = Mat::rand_normal(8, 5, &mut rng);
+        let b = Mat::rand_normal(8, 6, &mut rng);
+        assert!(matmul_at_b(&a, &b).max_abs_diff(&matmul(&a.transpose(), &b)) < 1e-10);
+        let b2 = Mat::rand_normal(6, 5, &mut rng);
+        assert!(matmul_a_bt(&a, &b2).max_abs_diff(&matmul(&a, &b2.transpose())) < 1e-10);
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_correct() {
+        let mut rng = Pcg64::seed(8);
+        let a = Mat::rand_normal(20, 7, &mut rng);
+        let g = gram(&a);
+        let want = matmul(&a.transpose(), &a);
+        assert!(g.max_abs_diff(&want) < 1e-9);
+        for i in 0..7 {
+            for j in 0..7 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in 0..10 {
+            let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let y: Vec<f64> = (0..n).map(|i| (i * 2) as f64).collect();
+            let want: f64 = (0..n).map(|i| (i * i * 2) as f64).sum();
+            assert_eq!(dot(&x, &y), want);
+        }
+    }
+
+    #[test]
+    fn vec_mat_mat_vec() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(vec_mat(&[1.0, 0.0, 2.0], &a), vec![11.0, 14.0]);
+        assert_eq!(mat_vec(&a, &[2.0, 1.0]), vec![4.0, 10.0, 16.0]);
+    }
+
+    #[test]
+    fn hadamard_and_rowhad() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        assert_eq!(hadamard(&a, &b).data(), &[5.0, 12.0, 21.0, 32.0]);
+        let mut c = a.clone();
+        rowhad_inplace(&mut c, &[10.0, 100.0]);
+        assert_eq!(c.data(), &[10.0, 200.0, 30.0, 400.0]);
+    }
+
+    #[test]
+    fn khatri_rao_definition() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]); // 2x2
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0], &[9.0, 10.0]]); // 3x2
+        let kr = khatri_rao(&a, &b); // 6x2
+        assert_eq!(kr.shape(), (6, 2));
+        // first block = a(0,:) scaled rows of b
+        assert_eq!(kr.row(0), &[5.0, 12.0]);
+        assert_eq!(kr.row(2), &[9.0, 20.0]);
+        // second block
+        assert_eq!(kr.row(3), &[15.0, 24.0]);
+        assert_eq!(kr.row(5), &[27.0, 40.0]);
+    }
+}

@@ -1,0 +1,390 @@
+//! Dense row-major `f64` matrix.
+//!
+//! The native compute path stores everything as row-major `f64` (the paper's
+//! Matlab reference is double precision). Row-major is the natural layout
+//! for SPARTan's kernels, which stream *rows*: `Y_k(j,:) · V` partial
+//! products, row-wise Hadamards with `W(k,:)`, and row-gathered `V_c`
+//! packing.
+
+use crate::util::rng::Pcg64;
+
+/// Row-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// From rows of slices (convenience for tests).
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// i.i.d. uniform [0,1) entries.
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.f64())
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn rand_normal(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(v: &[f64]) -> Mat {
+        let n = v.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = v[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two distinct mutable rows at once (for rotations).
+    pub fn two_rows_mut(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(i != j && i < self.rows && j < self.rows);
+        let c = self.cols;
+        if i < j {
+            let (a, b) = self.data.split_at_mut(j * c);
+            (&mut a[i * c..(i + 1) * c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(i * c);
+            let bj = &mut a[j * c..(j + 1) * c];
+            (&mut b[..c], bj)
+        }
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &x) in row.iter().enumerate() {
+                t[(j, i)] = x;
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn fro_dist(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Set everything to zero (reuse allocation).
+    pub fn fill_zero(&mut self) {
+        self.data.fill(0.0);
+    }
+
+    /// Euclidean norm of each column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut norms = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                norms[j] += x * x;
+            }
+        }
+        for n in &mut norms {
+            *n = n.sqrt();
+        }
+        norms
+    }
+
+    /// Divide each column by the given per-column factor (skip zeros).
+    pub fn scale_cols_inv(&mut self, factors: &[f64]) {
+        assert_eq!(factors.len(), self.cols);
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for (j, x) in row.iter_mut().enumerate() {
+                if factors[j] != 0.0 {
+                    *x /= factors[j];
+                }
+            }
+        }
+    }
+
+    /// Normalize columns to unit 2-norm, returning the previous norms.
+    pub fn normalize_cols(&mut self) -> Vec<f64> {
+        let norms = self.col_norms();
+        self.scale_cols_inv(&norms);
+        norms
+    }
+
+    /// Clamp all entries to be >= 0 (projection onto the nonnegative orthant).
+    pub fn clamp_nonneg(&mut self) {
+        for x in &mut self.data {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// Extract a sub-block (row range, col range) as a new matrix.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        Mat::from_fn(r1 - r0, c1 - c0, |i, j| self[(r0 + i, c0 + j)])
+    }
+
+    /// Gather selected rows into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (dst, &src) in idx.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i = Mat::eye(3);
+        assert_eq!(i[(1, 1)], 1.0);
+        assert_eq!(i[(0, 1)], 0.0);
+        let d = Mat::diag(&[2.0, 5.0]);
+        assert_eq!(d[(1, 1)], 5.0);
+        assert_eq!(d[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(1);
+        let m = Mat::rand_normal(4, 7, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(3, 2)], m[(2, 3)]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        let z = Mat::zeros(2, 2);
+        assert!((m.fro_dist(&z) - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs_diff(&z), 4.0);
+    }
+
+    #[test]
+    fn normalize_cols_unit() {
+        let mut m = Mat::from_rows(&[&[3.0, 0.0], &[4.0, 0.0]]);
+        let norms = m.normalize_cols();
+        assert!((norms[0] - 5.0).abs() < 1e-12);
+        assert_eq!(norms[1], 0.0); // zero column untouched
+        assert!((m[(0, 0)] - 0.6).abs() < 1e-12);
+        assert!((m[(1, 0)] - 0.8).abs() < 1e-12);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn two_rows_mut_disjoint() {
+        let mut m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        {
+            let (a, b) = m.two_rows_mut(2, 0);
+            a[0] = 50.0;
+            b[1] = 20.0;
+        }
+        assert_eq!(m[(2, 0)], 50.0);
+        assert_eq!(m[(0, 1)], 20.0);
+        // reversed order too
+        let (a, b) = m.two_rows_mut(0, 2);
+        assert_eq!(a[1], 20.0);
+        assert_eq!(b[0], 50.0);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), &[5.0, 6.0]);
+        assert_eq!(g.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn block_extracts() {
+        let m = Mat::from_fn(4, 5, |i, j| (i * 5 + j) as f64);
+        let b = m.block(1, 3, 2, 5);
+        assert_eq!(b.shape(), (2, 3));
+        assert_eq!(b[(0, 0)], 7.0);
+        assert_eq!(b[(1, 2)], 14.0);
+    }
+
+    #[test]
+    fn clamp_nonneg_projects() {
+        let mut m = Mat::from_rows(&[&[-1.0, 2.0], &[3.0, -4.0]]);
+        m.clamp_nonneg();
+        assert_eq!(m.data(), &[0.0, 2.0, 3.0, 0.0]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK in the offline
+//! crate set, so everything the PARAFAC2 fitting algorithm needs is built
+//! here): row-major matrices, GEMM kernels, Householder QR, Jacobi
+//! SVD/eigendecomposition, the Procrustes polar factor, SPD solvers, and
+//! Bro & de Jong's fast NNLS.
+
+pub mod blas;
+pub mod dense;
+pub mod nnls;
+pub mod norms;
+pub mod qr;
+pub mod solve;
+pub mod svd;
+
+pub use blas::{dot, gram, hadamard, khatri_rao, matmul, matmul_a_bt, matmul_at_b};
+pub use dense::Mat;
+pub use nnls::{fnnls, nnls_gram_system};
+pub use norms::{column_congruence, fms_greedy, fms_joint};
+pub use qr::{qr_thin, random_orthonormal};
+pub use solve::{solve_gram_system, solve_spd};
+pub use svd::{pinv, pinv_psd, polar_orthonormal, svd_thin, sym_eig};

@@ -1,0 +1,246 @@
+//! Fast Non-Negative Least Squares (FNNLS), Bro & de Jong 1997.
+//!
+//! The paper imposes non-negativity on the `{S_k}` and `V` factors of
+//! PARAFAC2 by swapping the unconstrained least-squares solves inside the
+//! CP-ALS iteration for NNLS solves (paper §3.2, citing [8] = Bro & de
+//! Jong). FNNLS is the "fast" variant of Lawson–Hanson that works directly
+//! from the normal-equation quantities `AᵀA` and `Aᵀb` — exactly what
+//! CP-ALS already has in hand (the Hadamard-of-Grams matrix and the MTTKRP
+//! rows), so no extra passes over the data are needed.
+
+use super::dense::Mat;
+
+/// Solve `min ‖A x − b‖₂ s.t. x ≥ 0` given `ata = AᵀA` (n×n, symmetric
+/// PSD) and `atb = Aᵀb` (n). Active-set method; terminates in finitely
+/// many iterations (guarded by `max_iter`).
+pub fn fnnls(ata: &Mat, atb: &[f64]) -> Vec<f64> {
+    let n = atb.len();
+    assert_eq!(ata.shape(), (n, n));
+    let tol = 10.0 * f64::EPSILON * inf_norm(ata) * n as f64;
+    let mut passive = vec![false; n]; // P set
+    let mut x = vec![0.0; n];
+    // w = Aᵀb − AᵀA x  (gradient of ½‖Ax−b‖² negated)
+    let mut w: Vec<f64> = atb.to_vec();
+    let max_iter = 30 * n.max(1);
+    let mut iter = 0;
+    loop {
+        // Find the most violated KKT multiplier among the active set.
+        let mut t_best: Option<usize> = None;
+        let mut w_best = tol;
+        for j in 0..n {
+            if !passive[j] && w[j] > w_best {
+                w_best = w[j];
+                t_best = Some(j);
+            }
+        }
+        let Some(t) = t_best else { break };
+        passive[t] = true;
+
+        loop {
+            iter += 1;
+            if iter > max_iter {
+                break;
+            }
+            // Solve the unconstrained LS on the passive set.
+            let p_idx: Vec<usize> = (0..n).filter(|&j| passive[j]).collect();
+            let s_p = solve_passive(ata, atb, &p_idx);
+            // If the passive solution is feasible, accept it.
+            if s_p.iter().all(|&v| v > tol) {
+                for (xi, &j) in s_p.iter().zip(&p_idx) {
+                    x[j] = *xi;
+                }
+                for j in 0..n {
+                    if !passive[j] {
+                        x[j] = 0.0;
+                    }
+                }
+                break;
+            }
+            // Otherwise step toward it until the first variable hits zero.
+            let mut alpha = f64::INFINITY;
+            for (si, &j) in s_p.iter().zip(&p_idx) {
+                if *si <= tol {
+                    let d = x[j] - si;
+                    if d > 0.0 {
+                        alpha = alpha.min(x[j] / d);
+                    }
+                }
+            }
+            if !alpha.is_finite() {
+                alpha = 0.0;
+            }
+            for (si, &j) in s_p.iter().zip(&p_idx) {
+                x[j] += alpha * (si - x[j]);
+            }
+            // Move variables that reached zero back to the active set.
+            for &j in &p_idx {
+                if x[j] <= tol {
+                    x[j] = 0.0;
+                    passive[j] = false;
+                }
+            }
+        }
+        if iter > max_iter {
+            break;
+        }
+        // Refresh the gradient.
+        for j in 0..n {
+            let mut s = atb[j];
+            for k in 0..n {
+                if x[k] != 0.0 {
+                    s -= ata[(j, k)] * x[k];
+                }
+            }
+            w[j] = s;
+        }
+    }
+    x
+}
+
+/// Solve the LS subproblem restricted to the passive index set via
+/// Cholesky on the principal submatrix (pinv fallback for singularity).
+fn solve_passive(ata: &Mat, atb: &[f64], p_idx: &[usize]) -> Vec<f64> {
+    let np = p_idx.len();
+    let sub = Mat::from_fn(np, np, |i, j| ata[(p_idx[i], p_idx[j])]);
+    let rhs: Vec<f64> = p_idx.iter().map(|&j| atb[j]).collect();
+    match super::solve::solve_spd(&sub, &rhs) {
+        Some(x) => x,
+        None => {
+            let sp = super::svd::pinv_psd(&sub);
+            super::blas::mat_vec(&sp, &rhs)
+        }
+    }
+}
+
+fn inf_norm(a: &Mat) -> f64 {
+    a.data().iter().map(|x| x.abs()).fold(0.0, f64::max)
+}
+
+/// Row-wise NNLS: for each row i of `m`, solve `min_x ‖A x − b_i‖, x ≥ 0`
+/// with `AᵀA = g` and `Aᵀb_i = m(i,:)`. The non-negative counterpart of
+/// [`super::solve::solve_gram_system`], used for the V and W updates.
+///
+/// Fast path (§Perf): factor `g` once and solve every row unconstrained;
+/// only rows whose unconstrained optimum leaves the non-negative orthant
+/// enter the FNNLS active-set machinery. On non-negative data most rows
+/// take the fast path, amortizing one Cholesky across K (or J) rows
+/// instead of re-factoring per row per active-set step.
+pub fn nnls_gram_system(m: &Mat, g: &Mat) -> Mat {
+    let mut out = Mat::zeros(m.rows(), g.rows());
+    let chol = super::solve::cholesky(g);
+    for i in 0..m.rows() {
+        if let Some(l) = &chol {
+            let x = super::solve::backward_sub_t(l, &super::solve::forward_sub(l, m.row(i)));
+            if x.iter().all(|&v| v >= 0.0) {
+                out.row_mut(i).copy_from_slice(&x);
+                continue;
+            }
+        }
+        let x = fnnls(g, m.row(i));
+        out.row_mut(i).copy_from_slice(&x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::rng::Pcg64;
+
+    /// Brute-force reference for tiny n: enumerate all active sets.
+    fn brute_force_nnls(ata: &Mat, atb: &[f64]) -> Vec<f64> {
+        let n = atb.len();
+        let mut best: Option<(f64, Vec<f64>)> = None;
+        for mask in 0..(1u32 << n) {
+            let p_idx: Vec<usize> = (0..n).filter(|&j| mask >> j & 1 == 1).collect();
+            let mut x = vec![0.0; n];
+            if !p_idx.is_empty() {
+                let s = solve_passive(ata, atb, &p_idx);
+                if s.iter().any(|&v| v < -1e-12) {
+                    continue;
+                }
+                for (si, &j) in s.iter().zip(&p_idx) {
+                    x[j] = *si;
+                }
+            }
+            // objective ½ xᵀG x − xᵀb (up to constant)
+            let gx = blas::mat_vec(ata, &x);
+            let obj = 0.5 * blas::dot(&x, &gx) - blas::dot(&x, atb);
+            if best.as_ref().map_or(true, |(b, _)| obj < b - 1e-14) {
+                best = Some((obj, x));
+            }
+        }
+        best.unwrap().1
+    }
+
+    #[test]
+    fn unconstrained_optimum_nonneg_is_returned() {
+        // If the LS solution is already nonnegative, FNNLS must find it.
+        let mut rng = Pcg64::seed(51);
+        let a = Mat::rand_uniform(20, 4, &mut rng); // positive A
+        let x_true = [1.0, 0.5, 2.0, 0.25];
+        let b = blas::mat_vec(&a, &x_true);
+        let ata = blas::gram(&a);
+        let atb = blas::vec_mat(&b, &a);
+        let x = fnnls(&ata, &atb);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn negative_ls_gets_clamped_correctly() {
+        let mut rng = Pcg64::seed(52);
+        for trial in 0..50 {
+            let a = Mat::rand_normal(12, 4, &mut rng);
+            let b: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+            let ata = blas::gram(&a);
+            let atb = blas::vec_mat(&b, &a);
+            let x = fnnls(&ata, &atb);
+            assert!(x.iter().all(|&v| v >= 0.0), "trial {trial}");
+            let want = brute_force_nnls(&ata, &atb);
+            // compare objectives rather than x (ties possible)
+            let obj = |x: &[f64]| {
+                let gx = blas::mat_vec(&ata, x);
+                0.5 * blas::dot(x, &gx) - blas::dot(x, &atb)
+            };
+            assert!(
+                obj(&x) <= obj(&want) + 1e-8,
+                "trial {trial}: {} vs {}",
+                obj(&x),
+                obj(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let ata = Mat::eye(3);
+        let x = fnnls(&ata, &[0.0, 0.0, 0.0]);
+        assert_eq!(x, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn all_negative_gradient_gives_zero() {
+        let ata = Mat::eye(2);
+        let x = fnnls(&ata, &[-1.0, -5.0]);
+        assert_eq!(x, vec![0.0; 2]);
+    }
+
+    #[test]
+    fn nnls_gram_system_rowwise() {
+        let mut rng = Pcg64::seed(53);
+        let a = Mat::rand_uniform(15, 3, &mut rng);
+        let g = blas::gram(&a);
+        let m = Mat::rand_normal(4, 3, &mut rng);
+        let out = nnls_gram_system(&m, &g);
+        assert_eq!(out.shape(), (4, 3));
+        for i in 0..4 {
+            let want = fnnls(&g, m.row(i));
+            for (a, b) in out.row(i).iter().zip(&want) {
+                assert_eq!(a, b);
+            }
+        }
+    }
+}

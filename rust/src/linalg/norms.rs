@@ -1,0 +1,152 @@
+//! Factor-comparison metrics: congruence and the Factor Match Score (FMS)
+//! used to validate model recovery against planted ground truth.
+
+use super::blas;
+use super::dense::Mat;
+
+/// Cosine similarity matrix between columns of `a` and columns of `b`
+/// (both m×r; result r_a × r_b).
+pub fn column_congruence(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows());
+    let an = a.col_norms();
+    let bn = b.col_norms();
+    let mut c = blas::matmul_at_b(a, b);
+    for i in 0..c.rows() {
+        for j in 0..c.cols() {
+            let d = an[i] * bn[j];
+            c[(i, j)] = if d > 0.0 { c[(i, j)] / d } else { 0.0 };
+        }
+    }
+    c
+}
+
+/// Greedy Factor Match Score between two factor sets with the same rank:
+/// match columns greedily by absolute congruence and average the matched
+/// scores. 1.0 = perfect recovery up to permutation/sign/scale.
+pub fn fms_greedy(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.cols(), b.cols());
+    let r = a.cols();
+    if r == 0 {
+        return 1.0;
+    }
+    let c = column_congruence(a, b);
+    let mut used_a = vec![false; r];
+    let mut used_b = vec![false; r];
+    let mut total = 0.0;
+    for _ in 0..r {
+        let mut best = (0usize, 0usize, -1.0f64);
+        for i in 0..r {
+            if used_a[i] {
+                continue;
+            }
+            for j in 0..r {
+                if used_b[j] {
+                    continue;
+                }
+                let v = c[(i, j)].abs();
+                if v > best.2 {
+                    best = (i, j, v);
+                }
+            }
+        }
+        used_a[best.0] = true;
+        used_b[best.1] = true;
+        total += best.2;
+    }
+    total / r as f64
+}
+
+/// Joint FMS over multiple aligned factor matrices (e.g. V and W): the
+/// column matching is chosen on the *product* of congruences so all factors
+/// must agree on the permutation.
+pub fn fms_joint(pairs: &[(&Mat, &Mat)]) -> f64 {
+    assert!(!pairs.is_empty());
+    let r = pairs[0].0.cols();
+    for (a, b) in pairs {
+        assert_eq!(a.cols(), r);
+        assert_eq!(b.cols(), r);
+    }
+    if r == 0 {
+        return 1.0;
+    }
+    // score(i,j) = Π_f |congr_f(i,j)|
+    let mut score = Mat::from_fn(r, r, |_, _| 1.0);
+    for (a, b) in pairs {
+        let c = column_congruence(a, b);
+        for i in 0..r {
+            for j in 0..r {
+                score[(i, j)] *= c[(i, j)].abs();
+            }
+        }
+    }
+    let mut used_a = vec![false; r];
+    let mut used_b = vec![false; r];
+    let mut total = 0.0;
+    for _ in 0..r {
+        let mut best = (0usize, 0usize, -1.0f64);
+        for i in 0..r {
+            if used_a[i] {
+                continue;
+            }
+            for j in 0..r {
+                if !used_b[j] && score[(i, j)] > best.2 {
+                    best = (i, j, score[(i, j)]);
+                }
+            }
+        }
+        used_a[best.0] = true;
+        used_b[best.1] = true;
+        total += best.2;
+    }
+    total / r as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn congruence_identity() {
+        let mut rng = Pcg64::seed(61);
+        let a = Mat::rand_normal(10, 3, &mut rng);
+        let c = column_congruence(&a, &a);
+        for i in 0..3 {
+            assert!((c[(i, i)] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fms_perfect_under_permutation_and_scale() {
+        let mut rng = Pcg64::seed(62);
+        let a = Mat::rand_normal(20, 4, &mut rng);
+        // permute columns [2,0,3,1], scale, flip a sign
+        let perm = [2usize, 0, 3, 1];
+        let scales = [3.0, -0.5, 1.7, 2.2];
+        let b = Mat::from_fn(20, 4, |i, j| a[(i, perm[j])] * scales[j]);
+        assert!(fms_greedy(&a, &b) > 1.0 - 1e-10);
+    }
+
+    #[test]
+    fn fms_low_for_unrelated() {
+        let mut rng = Pcg64::seed(63);
+        let a = Mat::rand_normal(500, 4, &mut rng);
+        let b = Mat::rand_normal(500, 4, &mut rng);
+        assert!(fms_greedy(&a, &b) < 0.3);
+    }
+
+    #[test]
+    fn joint_fms_requires_consistent_permutation() {
+        let mut rng = Pcg64::seed(64);
+        let v = Mat::rand_normal(30, 3, &mut rng);
+        let w = Mat::rand_normal(25, 3, &mut rng);
+        // consistent permutation on both -> near 1
+        let perm = [1usize, 2, 0];
+        let vp = Mat::from_fn(30, 3, |i, j| v[(i, perm[j])]);
+        let wp = Mat::from_fn(25, 3, |i, j| w[(i, perm[j])]);
+        assert!(fms_joint(&[(&v, &vp), (&w, &wp)]) > 1.0 - 1e-9);
+        // inconsistent permutations -> strictly lower
+        let wq = Mat::from_fn(25, 3, |i, j| w[(i, [2usize, 0, 1][j])]);
+        assert!(fms_joint(&[(&v, &vp), (&w, &wq)]) < 0.9);
+    }
+}

@@ -1,0 +1,246 @@
+//! Householder QR factorization (thin Q).
+//!
+//! Used for orthonormal random initialization of the `Q_k` factors and as a
+//! building block in tests (checking `Q_kᵀQ_k = I` invariants against a
+//! trusted construction).
+
+use super::blas;
+use super::dense::Mat;
+
+/// Thin QR of an m×n matrix with m ≥ n: returns (Q m×n with orthonormal
+/// columns, R n×n upper triangular) such that A = Q·R.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects a tall matrix, got {m}x{n}");
+    let mut r = a.clone();
+    // Householder vectors stored column by column; betas on the side.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut betas = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder reflector for column k below the diagonal.
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        let beta;
+        if alpha == 0.0 {
+            beta = 0.0; // column already zero below: identity reflector
+        } else {
+            v[0] -= alpha;
+            let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
+            beta = if vnorm2 == 0.0 { 0.0 } else { 2.0 / vnorm2 };
+        }
+        // Apply reflector to the trailing submatrix of R.
+        if beta != 0.0 {
+            for j in k..n {
+                let mut dotv = 0.0;
+                for (idx, &vi) in v.iter().enumerate() {
+                    dotv += vi * r[(k + idx, j)];
+                }
+                let s = beta * dotv;
+                for (idx, &vi) in v.iter().enumerate() {
+                    r[(k + idx, j)] -= s * vi;
+                }
+            }
+            r[(k, k)] = alpha;
+            for i in (k + 1)..m {
+                r[(i, k)] = 0.0;
+            }
+        }
+        vs.push(v);
+        betas.push(beta);
+    }
+    // Accumulate thin Q by applying reflectors (in reverse) to I(m×n).
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let beta = betas[k];
+        if beta == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dotv = 0.0;
+            for (idx, &vi) in v.iter().enumerate() {
+                dotv += vi * q[(k + idx, j)];
+            }
+            let s = beta * dotv;
+            for (idx, &vi) in v.iter().enumerate() {
+                q[(k + idx, j)] -= s * vi;
+            }
+        }
+    }
+    // Trim R to n×n.
+    let r_thin = r.block(0, n, 0, n);
+    (q, r_thin)
+}
+
+/// Random matrix with orthonormal columns (QR of a Gaussian matrix).
+pub fn random_orthonormal(m: usize, n: usize, rng: &mut crate::util::rng::Pcg64) -> Mat {
+    assert!(m >= n);
+    let g = Mat::rand_normal(m, n, rng);
+    let (q, _) = qr_thin(&g);
+    q
+}
+
+/// Replace (near-)zero columns of `q` with unit vectors orthogonal to all
+/// other columns, so `QᵀQ = I` holds exactly even when the source matrix
+/// was rank-deficient. Deterministic: candidate directions are the
+/// standard basis vectors, orthogonalized by two rounds of modified
+/// Gram-Schmidt. Requires `rows ≥ cols`. Returns the number of columns
+/// completed.
+///
+/// This mirrors what an SVD-based Orthogonal Procrustes solution does for
+/// zero singular values (the reference Matlab implementation returns an
+/// arbitrary orthonormal completion), preserving the PARAFAC2 invariant
+/// `U_kᵀU_k = Φ` for every subject.
+pub fn orthonormal_complete(q: &mut Mat) -> usize {
+    let (m, n) = q.shape();
+    assert!(m >= n, "cannot complete a short-fat matrix to orthonormal columns");
+    let norms = q.col_norms();
+    let deficient: Vec<usize> =
+        (0..n).filter(|&j| norms[j] < 1e-7).collect();
+    if deficient.is_empty() {
+        return 0;
+    }
+    // zero them exactly first
+    for &j in &deficient {
+        for i in 0..m {
+            q[(i, j)] = 0.0;
+        }
+    }
+    let mut completed = 0;
+    let mut next_basis = 0usize;
+    for &j in &deficient {
+        'candidates: while next_basis < m + n {
+            // candidate: standard basis vector e_t
+            let t = next_basis % m;
+            next_basis += 1;
+            let mut v = vec![0.0f64; m];
+            v[t] = 1.0;
+            // two rounds of MGS against every other column
+            for _ in 0..2 {
+                for col in 0..n {
+                    if col == j {
+                        continue;
+                    }
+                    let mut dot = 0.0;
+                    for i in 0..m {
+                        dot += v[i] * q[(i, col)];
+                    }
+                    for i in 0..m {
+                        v[i] -= dot * q[(i, col)];
+                    }
+                }
+            }
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-6 {
+                for i in 0..m {
+                    q[(i, j)] = v[i] / norm;
+                }
+                completed += 1;
+                break 'candidates;
+            }
+        }
+    }
+    completed
+}
+
+/// || QᵀQ - I ||_max — orthonormality defect, used in tests/invariants.
+pub fn orthonormality_defect(q: &Mat) -> f64 {
+    let g = blas::gram(q);
+    let n = q.cols();
+    let mut worst: f64 = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g[(i, j)] - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seed(21);
+        for (m, n) in [(5, 5), (10, 4), (100, 40), (3, 1)] {
+            let a = Mat::rand_normal(m, n, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let qr = blas::matmul(&q, &r);
+            assert!(qr.max_abs_diff(&a) < 1e-10, "({m},{n})");
+            assert!(orthonormality_defect(&q) < 1e-10, "({m},{n})");
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r[(i, j)].abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient_stays_finite() {
+        // two identical columns
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let (q, r) = qr_thin(&a);
+        let qr = blas::matmul(&q, &r);
+        assert!(qr.max_abs_diff(&a) < 1e-10);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Pcg64::seed(22);
+        let q = random_orthonormal(50, 10, &mut rng);
+        assert!(orthonormality_defect(&q) < 1e-10);
+    }
+
+    #[test]
+    fn complete_restores_orthonormality() {
+        let mut rng = Pcg64::seed(23);
+        // orthonormal basis with two columns zeroed
+        let mut q = random_orthonormal(12, 5, &mut rng);
+        for i in 0..12 {
+            q[(i, 1)] = 0.0;
+            q[(i, 4)] = 0.0;
+        }
+        let n = orthonormal_complete(&mut q);
+        assert_eq!(n, 2);
+        assert!(orthonormality_defect(&q) < 1e-9);
+    }
+
+    #[test]
+    fn complete_noop_on_full_rank() {
+        let mut rng = Pcg64::seed(24);
+        let mut q = random_orthonormal(8, 3, &mut rng);
+        let before = q.clone();
+        assert_eq!(orthonormal_complete(&mut q), 0);
+        assert_eq!(q.data(), before.data());
+    }
+
+    #[test]
+    fn complete_all_zero() {
+        let mut q = Mat::zeros(6, 3);
+        assert_eq!(orthonormal_complete(&mut q), 3);
+        assert!(orthonormality_defect(&q) < 1e-10);
+    }
+
+    #[test]
+    fn qr_zero_matrix() {
+        let a = Mat::zeros(4, 2);
+        let (q, r) = qr_thin(&a);
+        assert!(blas::matmul(&q, &r).max_abs_diff(&a) < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! Linear solvers: Cholesky for SPD systems, with pseudo-inverse fallback.
+//!
+//! CP-ALS factor updates solve `M · G⁺` where `G` is a Hadamard product of
+//! Gram matrices — symmetric PSD, usually well-conditioned but exactly
+//! singular when a factor column collapses. We try Cholesky first (fast
+//! path) and fall back to the eigen-based pseudo-inverse.
+
+use super::dense::Mat;
+use super::svd;
+
+/// Cholesky factorization A = L·Lᵀ of an SPD matrix.
+/// Returns `None` if the matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L·y = b (forward substitution), L lower triangular.
+pub fn forward_sub(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y (backward substitution).
+pub fn backward_sub_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve the SPD system A·x = b via Cholesky; `None` if not SPD.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(backward_sub_t(&l, &forward_sub(&l, b)))
+}
+
+/// Solve X·A = M for X, where A is symmetric PSD (the CP-ALS update
+/// `factor ← MTTKRP · G⁺`). Row-wise Cholesky solves with pinv fallback.
+pub fn solve_gram_system(m: &Mat, g: &Mat) -> Mat {
+    let n = g.rows();
+    assert_eq!(m.cols(), n);
+    if let Some(l) = cholesky(g) {
+        // X(i,:) solves G·xᵀ = M(i,:)ᵀ (G symmetric so left/right agree).
+        let mut out = Mat::zeros(m.rows(), n);
+        for i in 0..m.rows() {
+            let x = backward_sub_t(&l, &forward_sub(&l, m.row(i)));
+            out.row_mut(i).copy_from_slice(&x);
+        }
+        out
+    } else {
+        let gp = svd::pinv_psd(g);
+        super::blas::matmul(m, &gp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seed(41);
+        let g0 = Mat::rand_normal(10, 6, &mut rng);
+        let a = blas::gram(&g0);
+        let l = cholesky(&a).expect("SPD");
+        let rec = blas::matmul_a_bt(&l, &l);
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigvals 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_roundtrip() {
+        let mut rng = Pcg64::seed(42);
+        let g0 = Mat::rand_normal(9, 5, &mut rng);
+        let a = blas::gram(&g0);
+        let x_true: Vec<f64> = (0..5).map(|i| i as f64 - 2.0).collect();
+        let b = blas::mat_vec(&a, &x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn solve_gram_system_matches_pinv() {
+        let mut rng = Pcg64::seed(43);
+        let g0 = Mat::rand_normal(12, 4, &mut rng);
+        let g = blas::gram(&g0);
+        let m = Mat::rand_normal(7, 4, &mut rng);
+        let x = solve_gram_system(&m, &g);
+        let want = blas::matmul(&m, &svd::pinv_psd(&g));
+        assert!(x.max_abs_diff(&want) < 1e-7);
+    }
+
+    #[test]
+    fn solve_gram_system_singular_falls_back() {
+        // G singular: one zero row/col.
+        let mut g = Mat::zeros(3, 3);
+        g[(0, 0)] = 2.0;
+        g[(1, 1)] = 3.0;
+        let m = Mat::from_rows(&[&[2.0, 3.0, 0.0]]);
+        let x = solve_gram_system(&m, &g);
+        assert!((x[(0, 0)] - 1.0).abs() < 1e-10);
+        assert!((x[(0, 1)] - 1.0).abs() < 1e-10);
+        assert_eq!(x[(0, 2)], 0.0);
+    }
+}

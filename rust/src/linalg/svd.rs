@@ -1,0 +1,659 @@
+//! SVD, symmetric eigendecomposition, polar factor, pseudo-inverse.
+//!
+//! Two workhorses live here:
+//!
+//! * [`sym_eig`] — cyclic Jacobi eigendecomposition of a symmetric R×R
+//!   matrix. R is the PARAFAC2 target rank (≤ 64 in every experiment), so
+//!   Jacobi's O(R³ · sweeps) with quadratic convergence is the right tool:
+//!   simple, branch-light, and accurate to machine precision.
+//! * [`polar_orthonormal`] — the Orthogonal Procrustes solution. The
+//!   minimizer of ‖X_k − Q H S_k Vᵀ‖_F over QᵀQ = I is the orthonormal
+//!   polar factor of B = X_k V S_k Hᵀ, computed as B·(BᵀB)^(−1/2) via
+//!   [`sym_eig`] on the small Gram matrix — O(I_k R²) instead of a full
+//!   O(I_k R² · sweeps) one-sided-Jacobi SVD of B. This is the per-subject
+//!   step 1 of PARAFAC2-ALS (paper Algorithm 2, lines 3–6).
+//!
+//! A general thin [`svd_thin`] (one-sided Jacobi) is kept for tests,
+//! initialization, and conditioning fallbacks.
+
+use super::blas;
+use super::dense::Mat;
+
+/// Relative spectral cutoff used to declare eigen/singular values zero.
+const RELATIVE_RANK_TOL: f64 = 1e-12;
+
+/// Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Returns `(eigvals, eigvecs)` with `A = V · diag(λ) · Vᵀ`, eigenvalues
+/// sorted descending, eigenvectors as *columns* of `V`.
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "sym_eig expects square");
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius mass; stop when negligible vs diagonal.
+        let mut off = 0.0;
+        let mut diag = 0.0;
+        for i in 0..n {
+            diag += m[(i, i)] * m[(i, i)];
+            for j in (i + 1)..n {
+                off += 2.0 * m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off <= (diag + off) * 1e-28 + f64::MIN_POSITIVE {
+            break;
+        }
+        // Per-sweep skip threshold: pairs already numerically diagonal are
+        // not rotated — later sweeps become nearly free (quadratic
+        // convergence leaves only a few live pairs).
+        let skip_tol = 1e-18;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                if apq * apq <= skip_tol * app.abs().max(1e-300) * aqq.abs().max(1e-300)
+                    && apq * apq <= skip_tol * (diag / n as f64)
+                {
+                    continue;
+                }
+                // Classic stable rotation computation.
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // A ← JᵀAJ. A stays symmetric, so the column updates are
+                // the row updates transposed: rotate rows p and q
+                // (contiguous, vectorizable), then mirror them into the
+                // columns, then fix the 2×2 pivot block analytically.
+                {
+                    let (rp, rq) = m.two_rows_mut(p, q);
+                    for (a, b) in rp.iter_mut().zip(rq.iter_mut()) {
+                        let x = *a;
+                        let y = *b;
+                        *a = c * x - s * y;
+                        *b = s * x + c * y;
+                    }
+                }
+                // mirror rows into columns (strided writes, values ready)
+                for k in 0..n {
+                    if k != p && k != q {
+                        m[(k, p)] = m[(p, k)];
+                        m[(k, q)] = m[(q, k)];
+                    }
+                }
+                // pivot block: standard Jacobi update
+                let new_app = app - t * apq;
+                let new_aqq = aqq + t * apq;
+                m[(p, p)] = new_app;
+                m[(q, q)] = new_aqq;
+                m[(p, q)] = 0.0;
+                m[(q, p)] = 0.0;
+                // Accumulate eigenvectors: rotate V's columns p and q —
+                // done row-wise (contiguous pairs within each row).
+                for k in 0..n {
+                    let row = v.row_mut(k);
+                    let vkp = row[p];
+                    let vkq = row[q];
+                    row[p] = c * vkp - s * vkq;
+                    row[q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let lam: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| lam[j].partial_cmp(&lam[i]).unwrap());
+    let eigvals: Vec<f64> = order.iter().map(|&i| lam[i]).collect();
+    let eigvecs = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
+    (eigvals, eigvecs)
+}
+
+/// Thin SVD `A = U·diag(s)·Vᵀ` with inner dimension `min(m, n)`.
+///
+/// One-sided Jacobi on the tall orientation: rotations orthogonalize the
+/// columns; singular values are the resulting column norms. Zero (or
+/// numerically tiny) singular directions get zero columns in `U`.
+pub fn svd_thin(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = a.shape();
+    if m < n {
+        let (u, s, v) = svd_thin(&a.transpose());
+        return (v, s, u);
+    }
+    let mut w = a.clone(); // m×n, columns get orthogonalized in place
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    let eps = 1e-30;
+    for _ in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Column inner products.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps + 1e-15 * (app * aqq).sqrt() {
+                    continue;
+                }
+                rotated = true;
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+    // Column norms → singular values; normalize U columns.
+    let mut svals: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    let smax = svals.iter().cloned().fold(0.0, f64::max);
+    let cutoff = smax * RELATIVE_RANK_TOL;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| svals[j].partial_cmp(&svals[i]).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut vv = Mat::zeros(n, n);
+    let mut s_sorted = vec![0.0; n];
+    for (dst, &src) in order.iter().enumerate() {
+        let s = svals[src];
+        s_sorted[dst] = if s > cutoff { s } else { 0.0 };
+        if s > cutoff {
+            for i in 0..m {
+                u[(i, dst)] = w[(i, src)] / s;
+            }
+        }
+        for i in 0..n {
+            vv[(i, dst)] = v[(i, src)];
+        }
+    }
+    svals = s_sorted;
+    (u, svals, vv)
+}
+
+/// Orthonormal polar factor `Q = B (BᵀB)^(−1/2)` — the Orthogonal
+/// Procrustes solution (see module docs). For rank-deficient `B`, the
+/// deficient directions contribute zero columns, which leaves the ALS
+/// objective unchanged (their singular values are zero).
+pub fn polar_orthonormal(b: &Mat) -> Mat {
+    let g = blas::gram(b); // R×R
+    let (lam, p) = sym_eig(&g);
+    let lmax = lam.first().cloned().unwrap_or(0.0).max(0.0);
+    // The Gram route squares the condition number: eigenvalues below
+    // ~λmax·1e-9 (singular values below ~3e-5·σmax) are noise-dominated
+    // and would yield badly non-orthonormal columns. Treat them as zero —
+    // callers complete those directions orthonormally if they need exact
+    // QᵀQ = I (see `linalg::qr::orthonormal_complete`).
+    let cutoff = lmax * 1e-9;
+    let r = g.rows();
+    // M = P diag(λ^{-1/2}) Pᵀ on the numerically nonzero spectrum.
+    let mut m = Mat::zeros(r, r);
+    for t in 0..r {
+        let l = lam[t];
+        if l > cutoff && l > 0.0 {
+            let inv_sqrt = 1.0 / l.sqrt();
+            for i in 0..r {
+                let pi = p[(i, t)] * inv_sqrt;
+                if pi == 0.0 {
+                    continue;
+                }
+                for j in 0..r {
+                    m[(i, j)] += pi * p[(j, t)];
+                }
+            }
+        }
+    }
+    blas::matmul(b, &m)
+}
+
+/// Orthogonal-Procrustes solution with **exact** orthonormal columns even
+/// for rank-deficient targets (requires `rows ≥ cols`).
+///
+/// Where [`polar_orthonormal`] leaves the null-space directions at zero
+/// (so `QᵀQ` is a projector, not `I`), this computes the thin left factors
+/// `U_kept = B P diag(λ^{-1/2})` on the numerically nonzero spectrum,
+/// completes them to a full orthonormal set with deterministic
+/// Gram–Schmidt over standard basis vectors, and returns
+/// `Q = [U_kept | U_comp] · Pᵀ` — exactly what the SVD formulation
+/// `Q = Z Pᵀ` produces (up to the arbitrary completion), preserving the
+/// PARAFAC2 invariant `QᵀQ = I` for degenerate slices.
+pub fn polar_orthonormal_completed(b: &Mat) -> Mat {
+    let (m, n) = b.shape();
+    assert!(m >= n, "polar_orthonormal_completed requires rows ≥ cols");
+    let g = blas::gram(b);
+    let (lam, p) = sym_eig(&g);
+    let lmax = lam.first().cloned().unwrap_or(0.0).max(0.0);
+    let cutoff = lmax * 1e-9;
+    let kept: Vec<usize> = (0..n).filter(|&t| lam[t] > cutoff && lam[t] > 0.0).collect();
+    // U columns: kept directions from B, the rest completed.
+    let mut u = Mat::zeros(m, n);
+    for (uc, &t) in kept.iter().enumerate() {
+        let inv_sqrt = 1.0 / lam[t].sqrt();
+        for i in 0..m {
+            let mut s = 0.0;
+            let brow = b.row(i);
+            for jj in 0..n {
+                s += brow[jj] * p[(jj, t)];
+            }
+            u[(i, uc)] = s * inv_sqrt;
+        }
+    }
+    if kept.len() < n {
+        // mark the tail columns as deficient and complete them
+        super::qr::orthonormal_complete(&mut u);
+    }
+    // Q = U · P_orderedᵀ where P_ordered = [P_kept | P_rest]
+    let rest: Vec<usize> = (0..n).filter(|t| !kept.contains(t)).collect();
+    let order: Vec<usize> = kept.iter().chain(rest.iter()).copied().collect();
+    let mut q = Mat::zeros(m, n);
+    for i in 0..m {
+        for jj in 0..n {
+            let mut s = 0.0;
+            for (uc, &t) in order.iter().enumerate() {
+                s += u[(i, uc)] * p[(jj, t)];
+            }
+            q[(i, jj)] = s;
+        }
+    }
+    q
+}
+
+/// Orthogonal-Procrustes solution via **one-sided Jacobi on transposed
+/// storage** — the fast path used by the per-subject step-1 kernel.
+///
+/// Computes `Q = U·Vᵀ` from the thin SVD `B = U Σ Vᵀ` directly, without
+/// forming the Gram matrix or an eigendecomposition: Jacobi rotations
+/// orthogonalize the *columns* of `B`, held transposed (`W = Bᵀ`) so every
+/// rotation touches two contiguous rows — the strided column access that
+/// dominates the eig route (61% of iteration time in the §Perf profile)
+/// disappears. `Vᵀ` accumulates in the same transposed layout.
+///
+/// Rank-deficient targets: zero singular values leave exactly-zero rows of
+/// `W`, which (for tall B) are completed to an orthonormal set before the
+/// final product, so `QᵀQ = I` holds exactly — same semantics as
+/// [`polar_orthonormal_completed`]. Short matrices (rows < cols) keep the
+/// zero directions and return orthonormal *rows*.
+pub fn procrustes_polar_jacobi(b: &Mat) -> Mat {
+    let (m, n) = b.shape();
+    let mut w = b.transpose(); // n rows of length m — B's columns, contiguous
+    let mut vt = Mat::eye(n); // Vᵀ, rotated in the same row layout
+    let max_sweeps = 64;
+    // convergence/skip threshold: |⟨b_p, b_q⟩| ≤ tol·‖b_p‖‖b_q‖.
+    // 1e-8 leaves an orthonormality defect ≤ ~1e-8 — far below anything
+    // the ALS objective can see — and saves 1–2 full sweeps vs 1e-14
+    // (§Perf step 4; quadratic convergence makes the last sweeps pure
+    // verification).
+    let tol = 1e-8;
+    // Cached squared column norms, updated analytically after each
+    // rotation (app' = app − t·apq, aqq' = aqq + t·apq) — only the cross
+    // product ⟨w_p, w_q⟩ needs a fresh dot per pair (§Perf step 3).
+    let mut norm_sq: Vec<f64> = (0..n)
+        .map(|j| w.row(j).iter().map(|x| x * x).sum())
+        .collect();
+    for _ in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let app = norm_sq[p];
+                let aqq = norm_sq[q];
+                let apq = blas::dot(w.row(p), w.row(q));
+                if apq.abs() <= tol * (app * aqq).sqrt() + f64::MIN_POSITIVE {
+                    continue;
+                }
+                rotated = true;
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                norm_sq[p] = app - t * apq;
+                norm_sq[q] = aqq + t * apq;
+                {
+                    let (wp, wq) = w.two_rows_mut(p, q);
+                    for (x, y) in wp.iter_mut().zip(wq.iter_mut()) {
+                        let a = *x;
+                        let b = *y;
+                        *x = c * a - s * b;
+                        *y = s * a + c * b;
+                    }
+                }
+                {
+                    let (vp, vq) = vt.two_rows_mut(p, q);
+                    for (x, y) in vp.iter_mut().zip(vq.iter_mut()) {
+                        let a = *x;
+                        let b = *y;
+                        *x = c * a - s * b;
+                        *y = s * a + c * b;
+                    }
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+    // Normalize the components: row j of W is σ_j·u_jᵀ. (Norms recomputed
+    // exactly — the cached values drift by rounding over many rotations.)
+    let mut norms = vec![0.0f64; n];
+    for j in 0..n {
+        norms[j] = w.row(j).iter().map(|x| x * x).sum::<f64>().sqrt();
+    }
+    let smax = norms.iter().cloned().fold(0.0, f64::max);
+    let cutoff = smax * 3e-5; // matches the eig route's λmax·1e-9
+    for j in 0..n {
+        if norms[j] > cutoff {
+            let inv = 1.0 / norms[j];
+            for x in w.row_mut(j) {
+                *x *= inv;
+            }
+        } else {
+            w.row_mut(j).fill(0.0);
+        }
+    }
+    if m >= n {
+        // complete zero components (deficiency is axis-aligned here)
+        let mut u = w.transpose(); // m×n, orthonormal-or-zero columns
+        super::qr::orthonormal_complete(&mut u);
+        // Q = U·Vᵀ
+        blas::matmul(&u, &vt)
+    } else {
+        // short case: Q = Uᵀ-transposed product, orthonormal rows
+        blas::matmul_at_b(&w, &vt)
+    }
+}
+
+/// Moore-Penrose pseudo-inverse of a symmetric PSD matrix (the Gram
+/// products appearing in CP-ALS normal equations).
+pub fn pinv_psd(a: &Mat) -> Mat {
+    let (lam, p) = sym_eig(a);
+    let lmax = lam.first().cloned().unwrap_or(0.0).max(0.0);
+    let cutoff = lmax * 1e-13;
+    let n = a.rows();
+    let mut out = Mat::zeros(n, n);
+    for t in 0..n {
+        let l = lam[t];
+        if l > cutoff && l > 0.0 {
+            let inv = 1.0 / l;
+            for i in 0..n {
+                let pi = p[(i, t)] * inv;
+                if pi == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += pi * p[(j, t)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// General pseudo-inverse via thin SVD (any shape).
+pub fn pinv(a: &Mat) -> Mat {
+    let (u, s, v) = svd_thin(a);
+    let smax = s.iter().cloned().fold(0.0, f64::max);
+    let cutoff = smax * 1e-13;
+    // A⁺ = V diag(1/s) Uᵀ
+    let r = s.len();
+    let mut vs = Mat::zeros(v.rows(), r);
+    for j in 0..r {
+        if s[j] > cutoff {
+            let inv = 1.0 / s[j];
+            for i in 0..v.rows() {
+                vs[(i, j)] = v[(i, j)] * inv;
+            }
+        }
+    }
+    blas::matmul_a_bt(&vs, &u) // V diag(1/s) · Uᵀ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_defect;
+    use crate::util::rng::Pcg64;
+
+    fn reconstruct_svd(u: &Mat, s: &[f64], v: &Mat) -> Mat {
+        let mut us = u.clone();
+        for i in 0..us.rows() {
+            for (j, x) in us.row_mut(i).iter_mut().enumerate() {
+                *x *= s[j];
+            }
+        }
+        blas::matmul_a_bt(&us, v)
+    }
+
+    #[test]
+    fn sym_eig_reconstructs() {
+        let mut rng = Pcg64::seed(31);
+        for n in [1, 2, 5, 17, 40] {
+            let g0 = Mat::rand_normal(n + 3, n, &mut rng);
+            let a = blas::gram(&g0);
+            let (lam, v) = sym_eig(&a);
+            // V diag(lam) Vᵀ == A
+            let mut vl = v.clone();
+            for i in 0..n {
+                for (j, x) in vl.row_mut(i).iter_mut().enumerate() {
+                    *x *= lam[j];
+                }
+            }
+            let rec = blas::matmul_a_bt(&vl, &v);
+            assert!(rec.max_abs_diff(&a) < 1e-8 * (1.0 + a.fro_norm()), "n={n}");
+            assert!(orthonormality_defect(&v) < 1e-10);
+            // sorted descending
+            for w in lam.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sym_eig_known_values() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (lam, _) = sym_eig(&a);
+        assert!((lam[0] - 3.0).abs() < 1e-12);
+        assert!((lam[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svd_reconstructs_tall_wide_square() {
+        let mut rng = Pcg64::seed(32);
+        for (m, n) in [(8, 3), (3, 8), (5, 5), (40, 10), (1, 4)] {
+            let a = Mat::rand_normal(m, n, &mut rng);
+            let (u, s, v) = svd_thin(&a);
+            let rec = reconstruct_svd(&u, &s, &v);
+            assert!(rec.max_abs_diff(&a) < 1e-9, "({m},{n})");
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(s.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // rank-1 matrix 4x3
+        let mut rng = Pcg64::seed(33);
+        let x = Mat::rand_normal(4, 1, &mut rng);
+        let y = Mat::rand_normal(3, 1, &mut rng);
+        let a = blas::matmul_a_bt(&x, &y);
+        let (u, s, v) = svd_thin(&a);
+        assert!(s[0] > 1e-8);
+        assert!(s[1].abs() < 1e-10 && s[2].abs() < 1e-10);
+        let rec = reconstruct_svd(&u, &s, &v);
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn polar_is_procrustes_optimum() {
+        // For B with full column rank, Q = polar(B) maximizes trace(QᵀB)
+        // over orthonormal Q; check Q beats random orthonormal candidates.
+        let mut rng = Pcg64::seed(34);
+        let b = Mat::rand_normal(30, 6, &mut rng);
+        let q = polar_orthonormal(&b);
+        assert!(orthonormality_defect(&q) < 1e-9);
+        let trace = |q: &Mat| -> f64 {
+            let qtb = blas::matmul_at_b(q, &b);
+            (0..6).map(|i| qtb[(i, i)]).sum()
+        };
+        let t_opt = trace(&q);
+        for _ in 0..20 {
+            let cand = crate::linalg::qr::random_orthonormal(30, 6, &mut rng);
+            assert!(trace(&cand) <= t_opt + 1e-9);
+        }
+    }
+
+    #[test]
+    fn polar_matches_svd_route() {
+        let mut rng = Pcg64::seed(35);
+        let b = Mat::rand_normal(25, 5, &mut rng);
+        let q1 = polar_orthonormal(&b);
+        let (u, _s, v) = svd_thin(&b);
+        let q2 = blas::matmul_a_bt(&u, &v); // U Vᵀ
+        assert!(q1.max_abs_diff(&q2) < 1e-8);
+    }
+
+    #[test]
+    fn polar_short_fat_has_orthonormal_rows() {
+        // I_k < R case: B is 3×5; Q should satisfy Q Qᵀ = I (rows).
+        let mut rng = Pcg64::seed(36);
+        let b = Mat::rand_normal(3, 5, &mut rng);
+        let q = polar_orthonormal(&b);
+        let qqt = blas::matmul_a_bt(&q, &q);
+        assert!(qqt.max_abs_diff(&Mat::eye(3)) < 1e-8);
+    }
+
+    #[test]
+    fn polar_completed_matches_polar_on_full_rank() {
+        let mut rng = Pcg64::seed(39);
+        let b = Mat::rand_normal(20, 5, &mut rng);
+        let q1 = polar_orthonormal(&b);
+        let q2 = polar_orthonormal_completed(&b);
+        assert!(q1.max_abs_diff(&q2) < 1e-7);
+    }
+
+    #[test]
+    fn polar_completed_orthonormal_on_rank_deficient() {
+        let mut rng = Pcg64::seed(40);
+        // rank-2 target in R^5 columns
+        let x = Mat::rand_normal(15, 2, &mut rng);
+        let y = Mat::rand_normal(5, 2, &mut rng);
+        let b = blas::matmul_a_bt(&x, &y);
+        let q = polar_orthonormal_completed(&b);
+        assert!(
+            crate::linalg::qr::orthonormality_defect(&q) < 1e-8,
+            "defect {}",
+            crate::linalg::qr::orthonormality_defect(&q)
+        );
+        // still optimal on the live directions: trace(QᵀB) equals the
+        // nuclear norm of B (sum of singular values)
+        let qtb = blas::matmul_at_b(&q, &b);
+        let trace: f64 = (0..5).map(|i| qtb[(i, i)]).sum();
+        let (_u, s, _v) = svd_thin(&b);
+        let nuclear: f64 = s.iter().sum();
+        assert!((trace - nuclear).abs() < 1e-6 * (1.0 + nuclear));
+    }
+
+    #[test]
+    fn jacobi_polar_matches_eig_route() {
+        let mut rng = Pcg64::seed(44);
+        for (m, n) in [(20usize, 5usize), (7, 7), (64, 16), (3, 6)] {
+            let b = Mat::rand_normal(m, n, &mut rng);
+            let q1 = procrustes_polar_jacobi(&b);
+            let q2 = if m >= n { polar_orthonormal_completed(&b) } else { polar_orthonormal(&b) };
+            assert!(q1.max_abs_diff(&q2) < 1e-7, "({m},{n}): {}", q1.max_abs_diff(&q2));
+        }
+    }
+
+    #[test]
+    fn jacobi_polar_rank_deficient_orthonormal() {
+        let mut rng = Pcg64::seed(45);
+        let x = Mat::rand_normal(15, 2, &mut rng);
+        let y = Mat::rand_normal(6, 2, &mut rng);
+        let b = blas::matmul_a_bt(&x, &y); // rank 2, 15×6
+        let q = procrustes_polar_jacobi(&b);
+        assert!(crate::linalg::qr::orthonormality_defect(&q) < 1e-8);
+        // optimality: trace(QᵀB) = nuclear norm
+        let qtb = blas::matmul_at_b(&q, &b);
+        let trace: f64 = (0..6).map(|i| qtb[(i, i)]).sum();
+        let (_u, s, _v) = svd_thin(&b);
+        let nuclear: f64 = s.iter().sum();
+        assert!((trace - nuclear).abs() < 1e-6 * (1.0 + nuclear));
+    }
+
+    #[test]
+    fn jacobi_polar_short_fat_orthonormal_rows() {
+        let mut rng = Pcg64::seed(46);
+        let b = Mat::rand_normal(3, 8, &mut rng);
+        let q = procrustes_polar_jacobi(&b);
+        let qqt = blas::matmul_a_bt(&q, &q);
+        assert!(qqt.max_abs_diff(&Mat::eye(3)) < 1e-8);
+    }
+
+    #[test]
+    fn polar_completed_zero_matrix_still_orthonormal() {
+        let b = Mat::zeros(6, 3);
+        let q = polar_orthonormal_completed(&b);
+        assert!(crate::linalg::qr::orthonormality_defect(&q) < 1e-10);
+    }
+
+    #[test]
+    fn pinv_psd_properties() {
+        let mut rng = Pcg64::seed(37);
+        let g0 = Mat::rand_normal(12, 6, &mut rng);
+        let a = blas::gram(&g0); // SPD w.h.p.
+        let ap = pinv_psd(&a);
+        let aa = blas::matmul(&a, &ap);
+        assert!(aa.max_abs_diff(&Mat::eye(6)) < 1e-7);
+    }
+
+    #[test]
+    fn pinv_general_minimum_norm() {
+        let mut rng = Pcg64::seed(38);
+        let a = Mat::rand_normal(4, 7, &mut rng); // wide
+        let ap = pinv(&a);
+        // A A⁺ A == A
+        let rec = blas::matmul(&blas::matmul(&a, &ap), &a);
+        assert!(rec.max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn svd_zero_matrix() {
+        let a = Mat::zeros(4, 3);
+        let (u, s, _v) = svd_thin(&a);
+        assert!(s.iter().all(|&x| x == 0.0));
+        assert!(u.fro_norm() == 0.0);
+    }
+}

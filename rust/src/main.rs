@@ -1,0 +1,509 @@
+//! `spartan` — the launcher CLI.
+//!
+//! Subcommands:
+//! * `generate`        synthesize a dataset (synthetic | ehr | movielens)
+//! * `decompose`       fit PARAFAC2 (native SPARTan | baseline | pjrt)
+//! * `phenotype`       fit + emit Table-4/Fig-8 style phenotyping reports
+//! * `inspect`         print dataset summary statistics
+//! * `artifacts-check` validate + smoke-execute the AOT artifacts
+//!
+//! Run `spartan help` for options.
+
+use anyhow::{anyhow, bail, Context, Result};
+use spartan::cli::Args;
+use spartan::config::{schema::Engine, RunConfig};
+use spartan::coordinator::{PjrtDriver, PjrtFitConfig};
+use spartan::datagen::{ehr, movielens, synthetic, vocab::Feature};
+use spartan::parafac2::{fit_parafac2, FitError, Parafac2Model};
+use spartan::runtime::{ArtifactRegistry, PjrtContext};
+use spartan::sparse::{io as tio, IrregularTensor};
+use spartan::util::humansize;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    spartan::util::logger::init_from_env();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(args),
+        Some("decompose") => cmd_decompose(args),
+        Some("compare") => cmd_compare(args),
+        Some("phenotype") => cmd_phenotype(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("artifacts-check") => cmd_artifacts_check(args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}` (see `spartan help`)"),
+    }
+}
+
+const HELP: &str = r#"spartan — Scalable PARAFAC2 for large & sparse data (KDD'17 reproduction)
+
+USAGE: spartan <subcommand> [options]
+
+  generate --kind synthetic|ehr|movielens --out FILE
+           [--subjects K] [--variables J] [--max-obs I] [--nnz N]
+           [--rank R] [--phenotypes P] [--seed S] [--noise X]
+           (ehr also writes FILE.vocab.csv for phenotype reports)
+
+  decompose --input FILE --rank R
+           [--engine native|baseline|pjrt] [--config run.toml]
+           [--max-iters N] [--tol T] [--nonneg] [--unconstrained]
+           [--workers N] [--seed S] [--restarts N] [--mem-budget 4GiB]
+           [--artifacts DIR] [--save-model DIR]
+
+  compare  --input FILE --rank R [--max-iters N] [--workers N] [--seed S]
+           (times one ALS iteration under every engine and prints speedups)
+
+  phenotype --input FILE --rank R [--vocab FILE.vocab.csv]
+           [--out-dir DIR] [--patients N] [--threshold T]
+
+  inspect --input FILE
+
+  artifacts-check [--artifacts DIR]
+
+Environment: SPARTAN_LOG=debug|info|warn|error
+"#;
+
+// ---------------------------------------------------------------------------
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "kind", "out", "subjects", "variables", "max-obs", "nnz", "rank", "phenotypes",
+        "seed", "noise",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let kind = args.get_or("kind", "synthetic");
+    let seed = args.get_u64("seed").map_err(|e| anyhow!(e))?.unwrap_or(2017);
+    match kind {
+        "synthetic" => {
+            let spec = synthetic::SyntheticSpec {
+                k: args.get_usize("subjects").map_err(|e| anyhow!(e))?.unwrap_or(10_000),
+                j: args.get_usize("variables").map_err(|e| anyhow!(e))?.unwrap_or(1_000),
+                max_i_k: args.get_usize("max-obs").map_err(|e| anyhow!(e))?.unwrap_or(100),
+                target_nnz: args.get_usize("nnz").map_err(|e| anyhow!(e))?.unwrap_or(1_000_000),
+                rank: args.get_usize("rank").map_err(|e| anyhow!(e))?.unwrap_or(40),
+                noise: args.get_f64("noise").map_err(|e| anyhow!(e))?.unwrap_or(0.0),
+                seed,
+            };
+            let data = synthetic::generate(&spec);
+            tio::save_binary(&data.tensor, &out)?;
+            println!("wrote {} ({})", out.display(), data.tensor.summary());
+        }
+        "ehr" => {
+            let spec = ehr::EhrSpec {
+                k: args.get_usize("subjects").map_err(|e| anyhow!(e))?.unwrap_or(4_000),
+                n_phenotypes: args.get_usize("phenotypes").map_err(|e| anyhow!(e))?.unwrap_or(8),
+                max_weeks: args.get_usize("max-obs").map_err(|e| anyhow!(e))?.unwrap_or(166),
+                seed,
+                ..Default::default()
+            };
+            let data = ehr::generate(&spec);
+            tio::save_binary(&data.tensor, &out)?;
+            write_vocab_csv(&data.vocab, &vocab_path(&out))?;
+            println!(
+                "wrote {} ({}) + vocab ({} features)",
+                out.display(),
+                data.tensor.summary(),
+                data.vocab.len()
+            );
+        }
+        "movielens" => {
+            let spec = movielens::MovieLensSpec {
+                k: args.get_usize("subjects").map_err(|e| anyhow!(e))?.unwrap_or(5_000),
+                j: args.get_usize("variables").map_err(|e| anyhow!(e))?.unwrap_or(20_000),
+                max_years: args.get_usize("max-obs").map_err(|e| anyhow!(e))?.unwrap_or(19),
+                seed,
+                ..Default::default()
+            };
+            let data = movielens::generate(&spec);
+            tio::save_binary(&data, &out)?;
+            println!("wrote {} ({})", out.display(), data.summary());
+        }
+        other => bail!("unknown --kind `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_decompose(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "input", "rank", "engine", "config", "max-iters", "tol", "nonneg", "unconstrained",
+        "workers", "seed", "restarts", "mem-budget", "artifacts", "save-model",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let input = PathBuf::from(args.get("input").context("--input required")?);
+    let data = load_data(&input)?;
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::from_file(Path::new(p))?,
+        None => RunConfig::default(),
+    };
+    // CLI overrides
+    if let Some(r) = args.get_usize("rank").map_err(|e| anyhow!(e))? {
+        cfg.fit.rank = r;
+    }
+    if let Some(n) = args.get_usize("max-iters").map_err(|e| anyhow!(e))? {
+        cfg.fit.max_iters = n;
+    }
+    if let Some(t) = args.get_f64("tol").map_err(|e| anyhow!(e))? {
+        cfg.fit.tol = t;
+    }
+    if args.has_flag("nonneg") {
+        cfg.fit.nonneg = true;
+    }
+    if args.has_flag("unconstrained") {
+        cfg.fit.nonneg = false;
+    }
+    if let Some(w) = args.get_usize("workers").map_err(|e| anyhow!(e))? {
+        cfg.fit.workers = w;
+    }
+    if let Some(s) = args.get_u64("seed").map_err(|e| anyhow!(e))? {
+        cfg.fit.seed = s;
+    }
+    if let Some(b) = args.get("mem-budget") {
+        cfg.fit.mem_budget = Some(humansize::parse_bytes(b).context("bad --mem-budget")?);
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = Engine::parse(e).context("bad --engine")?;
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    cfg.validate()?;
+
+    println!("data: {}", data.summary());
+    let model = match cfg.engine {
+        Engine::Pjrt => {
+            let ctx = PjrtContext::cpu()?;
+            let reg = ArtifactRegistry::load(Path::new(&cfg.artifacts_dir))?;
+            let mut driver = PjrtDriver::new(&ctx, &reg);
+            let pcfg = PjrtFitConfig {
+                rank: cfg.fit.rank,
+                max_iters: cfg.fit.max_iters,
+                tol: cfg.fit.tol,
+                nonneg: cfg.fit.nonneg,
+                init: cfg.fit.init,
+                seed: cfg.fit.seed,
+                workers: cfg.fit.workers,
+            };
+            let model = driver.fit(&data, &pcfg)?;
+            println!(
+                "pjrt: {} kernel invocations, {:.2}s kernel time, {:.2}s pack time, {} fallback subjects",
+                driver.metrics.kernel_invocations,
+                driver.metrics.kernel_secs,
+                driver.metrics.pack_secs,
+                driver.metrics.native_fallback_subjects,
+            );
+            model
+        }
+        _ => {
+            let mut fit_cfg = cfg.fit.clone();
+            fit_cfg.backend = cfg.native_backend();
+            let restarts = args.get_usize("restarts").map_err(|e| anyhow!(e))?.unwrap_or(1);
+            match spartan::parafac2::fit_parafac2_restarts(&data, &fit_cfg, restarts.max(1)) {
+                Ok(out) => {
+                    if restarts > 1 {
+                        for (i, r) in out.records.iter().enumerate() {
+                            println!(
+                                "restart {i} (seed {}): fit {:.5} ({} iters, {:.2}s){}",
+                                r.seed,
+                                r.final_fit,
+                                r.iterations,
+                                r.secs,
+                                if i == out.best_index { "  ← best" } else { "" }
+                            );
+                        }
+                    }
+                    out.best
+                }
+                Err(FitError::OutOfMemory(e)) => bail!("baseline OoM: {e}"),
+                Err(e) => bail!("{e}"),
+            }
+        }
+    };
+    print_fit_summary(&model);
+    if let Some(dir) = args.get("save-model") {
+        save_model(&model, Path::new(dir))?;
+        println!("model saved to {dir}/");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    args.reject_unknown(&["input", "rank", "max-iters", "workers", "seed", "artifacts"])
+        .map_err(|e| anyhow!(e))?;
+    let input = PathBuf::from(args.get("input").context("--input required")?);
+    let data = load_data(&input)?;
+    let rank = args.get_usize("rank").map_err(|e| anyhow!(e))?.unwrap_or(10);
+    println!("data: {}", data.summary());
+    println!("timing one ALS iteration per engine (mean of 3 after warmup)...\n");
+
+    use spartan::bench::als_runner::{speedup, time_als, CellResult};
+    use spartan::parafac2::Backend;
+    let s = time_als(&data, rank, Backend::Spartan, None);
+    let b = time_als(&data, rank, Backend::Baseline, None);
+    let mut rows = vec![
+        vec!["spartan (native)".to_string(), s.render(), "1.0×".to_string()],
+        vec!["baseline (sparse PARAFAC2)".to_string(), b.render(), speedup(&s, &b)],
+    ];
+    // PJRT engine if artifacts are available
+    let art_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    if art_dir.join("manifest.json").exists() {
+        let reg = ArtifactRegistry::load(&art_dir)?;
+        if rank <= reg.rank {
+            let ctx = PjrtContext::cpu()?;
+            let mut driver = PjrtDriver::new(&ctx, &reg);
+            let sw = spartan::util::timer::Stopwatch::start();
+            let iters = 4;
+            driver.fit(
+                &data,
+                &PjrtFitConfig {
+                    rank,
+                    max_iters: iters,
+                    tol: 0.0,
+                    workers: args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(0),
+                    ..Default::default()
+                },
+            )?;
+            let per_iter = sw.elapsed_secs() / iters as f64;
+            let p = CellResult::Time { secs_per_iter: per_iter, iters };
+            rows.push(vec!["pjrt (AOT artifacts)".to_string(), p.render(), speedup(&s, &p)]);
+        } else {
+            println!("(pjrt skipped: rank {rank} > manifest rank {})", reg.rank);
+        }
+    } else {
+        println!("(pjrt skipped: no artifacts — run `make artifacts`)");
+    }
+    println!(
+        "{}",
+        spartan::bench::table::render(&["engine", "s/iter", "vs spartan"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_phenotype(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "input", "rank", "vocab", "out-dir", "patients", "threshold", "max-iters", "seed",
+        "workers",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let input = PathBuf::from(args.get("input").context("--input required")?);
+    let data = load_data(&input)?;
+    let rank = args.get_usize("rank").map_err(|e| anyhow!(e))?.unwrap_or(5);
+    let out_dir = PathBuf::from(args.get_or("out-dir", "pheno_reports"));
+    std::fs::create_dir_all(&out_dir)?;
+    let vocab_file = args
+        .get("vocab")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| vocab_path(&input));
+    let vocab = read_vocab_csv(&vocab_file).with_context(|| {
+        format!("reading vocab {} (generate with --kind ehr)", vocab_file.display())
+    })?;
+    if vocab.len() != data.j() {
+        bail!("vocab has {} features but data has J={}", vocab.len(), data.j());
+    }
+
+    let cfg = spartan::parafac2::Parafac2Config {
+        rank,
+        max_iters: args.get_usize("max-iters").map_err(|e| anyhow!(e))?.unwrap_or(100),
+        nonneg: true,
+        seed: args.get_u64("seed").map_err(|e| anyhow!(e))?.unwrap_or(42),
+        workers: args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(0),
+        ..Default::default()
+    };
+    let model = fit_parafac2(&data, &cfg).map_err(|e| anyhow!("{e}"))?;
+    print_fit_summary(&model);
+
+    let threshold = args.get_f64("threshold").map_err(|e| anyhow!(e))?.unwrap_or(0.15);
+    let names: Vec<String> = (0..rank).map(|r| format!("Phenotype {}", r + 1)).collect();
+    let table =
+        spartan::pheno::report::render_definitions_table(&model, &vocab, &names, threshold);
+    let table_path = out_dir.join("phenotype_definitions.txt");
+    std::fs::write(&table_path, &table)?;
+    println!("{table}");
+    println!("definitions → {}", table_path.display());
+
+    let n_patients = args.get_usize("patients").map_err(|e| anyhow!(e))?.unwrap_or(3);
+    for k in 0..n_patients.min(data.k()) {
+        let ev = out_dir.join(format!("patient{k}_events.csv"));
+        let sig = out_dir.join(format!("patient{k}_signature.csv"));
+        spartan::pheno::report::write_patient_events_csv(&data, k, &vocab, 5.0, &ev)?;
+        spartan::pheno::report::write_patient_signature_csv(&model, k, &names, 2, &sig)?;
+        println!("patient {k}: events → {}, signature → {}", ev.display(), sig.display());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.reject_unknown(&["input"]).map_err(|e| anyhow!(e))?;
+    let input = PathBuf::from(args.get("input").context("--input required")?);
+    let data = load_data(&input)?;
+    println!("{}", data.summary());
+    let supports = spartan::metrics::flops::support_sizes(&data);
+    let mean_ck = supports.iter().sum::<usize>() as f64 / data.k() as f64;
+    let max_ck = supports.iter().max().copied().unwrap_or(0);
+    println!(
+        "column support: mean c_k = {mean_ck:.1}, max c_k = {max_ck} (of J = {})",
+        data.j()
+    );
+    println!("memory: {}", humansize::bytes(data.heap_bytes()));
+    for rank in [10usize, 40] {
+        let s = spartan::metrics::spartan_iteration_flops(&data, rank);
+        let b = spartan::metrics::baseline_iteration_flops(&data, rank);
+        println!(
+            "R={rank}: est. step-2 flops — spartan {:.2e}, baseline {:.2e} ({:.1}×)",
+            s.mttkrp,
+            b.mttkrp,
+            b.mttkrp / s.mttkrp
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    args.reject_unknown(&["artifacts"]).map_err(|e| anyhow!(e))?;
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let reg = ArtifactRegistry::load(&dir)?;
+    println!(
+        "manifest: batch={} rank={} i_buckets={:?} c_buckets={:?} ({} entries)",
+        reg.batch,
+        reg.rank,
+        reg.i_buckets,
+        reg.c_buckets,
+        reg.entries().len()
+    );
+    let ctx = PjrtContext::cpu()?;
+    println!("pjrt: platform = {}", ctx.platform_name());
+    for entry in reg.entries() {
+        let kernel = reg.kernel(&ctx, entry.kind, entry.i, entry.c)?;
+        // smoke-execute with zeros
+        use spartan::runtime::{HostTensor, Kind};
+        let r = reg.rank;
+        let b = reg.batch;
+        let inputs = match entry.kind {
+            Kind::ProcrustesPack => vec![
+                HostTensor::zeros(vec![b, entry.i.unwrap(), entry.c]),
+                HostTensor::zeros(vec![b, entry.c, r]),
+                HostTensor::zeros(vec![r, r]),
+                HostTensor::zeros(vec![b, r]),
+            ],
+            Kind::Mttkrp1 => vec![
+                HostTensor::zeros(vec![b, entry.c, r]),
+                HostTensor::zeros(vec![b, entry.c, r]),
+                HostTensor::zeros(vec![b, r]),
+            ],
+            Kind::Mttkrp2 => vec![
+                HostTensor::zeros(vec![b, entry.c, r]),
+                HostTensor::zeros(vec![r, r]),
+                HostTensor::zeros(vec![b, r]),
+            ],
+            Kind::Mttkrp3 => vec![
+                HostTensor::zeros(vec![b, entry.c, r]),
+                HostTensor::zeros(vec![b, entry.c, r]),
+                HostTensor::zeros(vec![r, r]),
+            ],
+        };
+        let out = kernel.run(&inputs)?;
+        println!("  ok: {} → {} outputs", entry.name, out.len());
+    }
+    println!("all artifacts compile and execute");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+
+fn load_data(path: &Path) -> Result<IrregularTensor> {
+    if path.extension().map_or(false, |e| e == "txt") {
+        tio::load_triplets_text(path)
+    } else {
+        tio::load_binary(path)
+    }
+}
+
+fn vocab_path(data_path: &Path) -> PathBuf {
+    let mut p = data_path.as_os_str().to_owned();
+    p.push(".vocab.csv");
+    PathBuf::from(p)
+}
+
+fn write_vocab_csv(vocab: &[Feature], path: &Path) -> Result<()> {
+    use spartan::datagen::vocab::FeatureKind;
+    let mut out = String::from("id,kind,name\n");
+    for (i, f) in vocab.iter().enumerate() {
+        let kind = match f.kind {
+            FeatureKind::Diagnosis => "diagnosis",
+            FeatureKind::Medication => "medication",
+        };
+        out.push_str(&format!("{i},{kind},\"{}\"\n", f.name.replace('"', "'")));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+fn read_vocab_csv(path: &Path) -> Result<Vec<Feature>> {
+    use spartan::datagen::vocab::FeatureKind;
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.trim().is_empty() {
+            continue; // header
+        }
+        let mut parts = line.splitn(3, ',');
+        let _id = parts.next().context("bad vocab line")?;
+        let kind = match parts.next().context("bad vocab line")? {
+            "diagnosis" => FeatureKind::Diagnosis,
+            "medication" => FeatureKind::Medication,
+            other => bail!("unknown feature kind `{other}`"),
+        };
+        let name = parts.next().unwrap_or("").trim().trim_matches('"').to_string();
+        out.push(Feature { name, kind });
+    }
+    Ok(out)
+}
+
+fn print_fit_summary(model: &Parafac2Model) {
+    let s = &model.stats;
+    println!(
+        "fit: {:.4} (SSE {:.4e}) after {} iterations — {:.2}s total ({:.2}s/iter; procrustes {:.2}s, cp {:.2}s)",
+        s.final_fit, s.final_sse, s.iterations, s.total_secs, s.secs_per_iter, s.procrustes_secs, s.cp_secs
+    );
+}
+
+fn save_model(model: &Parafac2Model, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let write_mat = |name: &str, m: &spartan::linalg::Mat| -> Result<()> {
+        let mut out = String::new();
+        for i in 0..m.rows() {
+            let row: Vec<String> = m.row(i).iter().map(|x| format!("{x:.9e}")).collect();
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(dir.join(name), out)?;
+        Ok(())
+    };
+    write_mat("H.csv", &model.h)?;
+    write_mat("V.csv", &model.v)?;
+    write_mat("W.csv", &model.w)?;
+    for (k, q) in model.q.iter().enumerate().take(16) {
+        write_mat(&format!("U{k}.csv"), &spartan::linalg::matmul(q, &model.h))?;
+    }
+    Ok(())
+}

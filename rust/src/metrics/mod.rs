@@ -1,0 +1,6 @@
+//! Operation-count models and phase accounting used by the benches and the
+//! §Perf analysis.
+
+pub mod flops;
+
+pub use flops::{baseline_iteration_flops, spartan_iteration_flops, FlopBreakdown};

@@ -1,0 +1,400 @@
+//! The PARAFAC2-ALS outer loop (paper Algorithm 2) with pluggable step-2
+//! backend: SPARTan's packed kernels or the Tensor-Toolbox-style baseline.
+//!
+//! Per iteration:
+//! 1. **Procrustes** — recompute `{Q_k}` and the packed `{Y_k}`
+//!    (parallel over subjects),
+//! 2. **CP step** — one CP-ALS iteration on `Y` to update `H, V, W`
+//!    (`S_k = diag(W(k,:))`).
+//!
+//! The SSE tracked for convergence uses the decomposition
+//! `‖X_k − Q_k M_k‖² = ‖X_k‖² − ‖Y_k‖² + ‖Y_k − M_k‖²` (exact whenever
+//! `Q_kᵀQ_k = I`, i.e. all `I_k ≥ R`; slices shorter than the rank make it
+//! an upper-bound approximation, which is also what the reference Matlab
+//! implementation tracks).
+
+use super::baseline::{cp_iteration_baseline, BaselinePhases};
+use super::cp_als::{cp_iteration, CpFactors, CpOptions};
+use super::init::{initialize, InitMethod};
+use super::model::{FitStats, Parafac2Model};
+use super::procrustes::procrustes_all;
+use crate::sparse::IrregularTensor;
+use crate::threadpool::Pool;
+use crate::util::membudget::{BudgetExceeded, MemBudget};
+use crate::util::timer::Stopwatch;
+use std::sync::Arc;
+
+/// Which step-2 engine to use.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// SPARTan (paper Algorithm 3): packed slices, no tensor
+    /// materialization, no Khatri-Rao products.
+    #[default]
+    Spartan,
+    /// "Sparse PARAFAC2" baseline: explicit COO tensor + TTB-style MTTKRP.
+    Baseline,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "spartan" => Some(Backend::Spartan),
+            "baseline" | "sparse-parafac2" => Some(Backend::Baseline),
+            _ => None,
+        }
+    }
+}
+
+/// Fitting configuration.
+#[derive(Clone, Debug)]
+pub struct Parafac2Config {
+    /// Target rank R.
+    pub rank: usize,
+    /// Maximum outer iterations.
+    pub max_iters: usize,
+    /// Convergence: stop when |ΔSSE|/SSE < tol.
+    pub tol: f64,
+    /// Non-negativity on V and `{S_k}` (paper §3.2).
+    pub nonneg: bool,
+    /// V initialization.
+    pub init: InitMethod,
+    /// Worker threads (0 = all cores).
+    pub workers: usize,
+    /// RNG seed for initialization.
+    pub seed: u64,
+    /// Step-2 engine.
+    pub backend: Backend,
+    /// Memory budget for the baseline's intermediates (None = unlimited).
+    pub mem_budget: Option<u64>,
+}
+
+impl Default for Parafac2Config {
+    fn default() -> Self {
+        Parafac2Config {
+            rank: 10,
+            max_iters: 100,
+            tol: 1e-6,
+            nonneg: true,
+            init: InitMethod::Random,
+            workers: 0,
+            seed: 42,
+            backend: Backend::Spartan,
+            mem_budget: None,
+        }
+    }
+}
+
+/// Fitting failure modes.
+#[derive(Debug)]
+pub enum FitError {
+    /// The baseline exhausted its memory budget (the paper's "OoM").
+    OutOfMemory(BudgetExceeded),
+    /// Invalid configuration.
+    Config(String),
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::OutOfMemory(e) => write!(f, "out of memory: {e}"),
+            FitError::Config(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
+
+/// Per-iteration progress (also exposed to benches for time-per-iteration
+/// tables).
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub iter: usize,
+    pub sse: f64,
+    pub fit: f64,
+    pub procrustes_secs: f64,
+    pub cp_secs: f64,
+}
+
+/// Fit a PARAFAC2 model.
+pub fn fit_parafac2(data: &IrregularTensor, cfg: &Parafac2Config) -> Result<Parafac2Model, FitError> {
+    let mut records = Vec::new();
+    fit_parafac2_traced(data, cfg, &mut |r| records.push(r))
+}
+
+/// Fit with a per-iteration callback (bench instrumentation).
+pub fn fit_parafac2_traced(
+    data: &IrregularTensor,
+    cfg: &Parafac2Config,
+    on_iter: &mut dyn FnMut(IterationRecord),
+) -> Result<Parafac2Model, FitError> {
+    if cfg.rank == 0 {
+        return Err(FitError::Config("rank must be ≥ 1".into()));
+    }
+    if cfg.rank > data.j() {
+        return Err(FitError::Config(format!(
+            "rank {} exceeds variable count J={}",
+            cfg.rank,
+            data.j()
+        )));
+    }
+    let pool = Pool::new(cfg.workers);
+    let budget: Arc<MemBudget> = match cfg.mem_budget {
+        Some(b) => MemBudget::limited(b),
+        None => MemBudget::unlimited(),
+    };
+    let total_sw = Stopwatch::start();
+    let x_norm_sq = data.fro_norm_sq();
+    let x_norm = x_norm_sq.sqrt();
+
+    let init = initialize(data, cfg.rank, cfg.init, cfg.seed, &pool);
+    let mut factors = CpFactors { h: init.h, v: init.v, w: init.w };
+    let opts = CpOptions { nonneg: cfg.nonneg };
+
+    let mut stats = FitStats::default();
+    let mut baseline_phases = BaselinePhases::default();
+    let mut prev_sse = f64::INFINITY;
+    let mut iters_done = 0;
+
+    for iter in 0..cfg.max_iters {
+        // --- step 1: Procrustes + packing --------------------------------
+        let sw = Stopwatch::start();
+        let (y, _) = procrustes_all(data, &factors.v, &factors.h, &factors.w, &pool, false);
+        let procrustes_secs = sw.elapsed_secs();
+        stats.procrustes_secs += procrustes_secs;
+
+        // --- step 2: one CP-ALS iteration on Y ---------------------------
+        let sw = Stopwatch::start();
+        let cp_stats = match cfg.backend {
+            Backend::Spartan => cp_iteration(&y, &mut factors, opts, &pool),
+            Backend::Baseline => {
+                cp_iteration_baseline(&y, &mut factors, opts, &budget, &mut baseline_phases)
+                    .map_err(FitError::OutOfMemory)?
+            }
+        };
+        let cp_secs = sw.elapsed_secs();
+        stats.cp_secs += cp_secs;
+
+        let sse = (x_norm_sq - y.norm_sq() + cp_stats.y_residual_sq).max(0.0);
+        let fit = 1.0 - sse.sqrt() / x_norm;
+        stats.fit_history.push(fit);
+        iters_done = iter + 1;
+        on_iter(IterationRecord { iter, sse, fit, procrustes_secs, cp_secs });
+        crate::debug!("iter {iter}: sse={sse:.6e} fit={fit:.6}");
+
+        // --- convergence --------------------------------------------------
+        if prev_sse.is_finite() {
+            let denom = prev_sse.max(f64::MIN_POSITIVE);
+            if (prev_sse - sse).abs() / denom < cfg.tol {
+                prev_sse = sse;
+                break;
+            }
+        }
+        prev_sse = sse;
+    }
+
+    // Final pass: materialize Q_k for the fitted factors (kept out of the
+    // loop so the loop's footprint stays at the packed-Y size), and
+    // recompute the SSE against the refreshed Q_k so the reported fit is
+    // exactly the returned model's (the refresh strictly improves on the
+    // last tracked SSE).
+    let (y_final, qs) = procrustes_all(data, &factors.v, &factors.h, &factors.w, &pool, true);
+    let m3 = super::mttkrp::mttkrp_mode3(&y_final, &factors.h, &factors.v, &pool);
+    let final_res = super::cp_als::residual_stats(&m3, &factors, y_final.norm_sq());
+    let final_sse = (x_norm_sq - y_final.norm_sq() + final_res.y_residual_sq).max(0.0);
+    drop(y_final);
+
+    stats.iterations = iters_done;
+    stats.final_sse = final_sse;
+    stats.final_fit = 1.0 - final_sse.sqrt() / x_norm;
+    let _ = prev_sse;
+    stats.total_secs = total_sw.elapsed_secs();
+    stats.secs_per_iter = if iters_done > 0 {
+        (stats.procrustes_secs + stats.cp_secs) / iters_done as f64
+    } else {
+        0.0
+    };
+
+    Ok(Parafac2Model {
+        rank: cfg.rank,
+        h: factors.h,
+        v: factors.v,
+        w: factors.w,
+        q: qs.expect("keep_q requested"),
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, random_orthonormal, Mat};
+    use crate::sparse::Csr;
+    use crate::util::rng::Pcg64;
+
+    /// Generate data exactly following a planted PARAFAC2 model.
+    fn planted(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> (IrregularTensor, Mat, Mat) {
+        let h = Mat::rand_normal(r, r, rng);
+        let v = Mat::rand_uniform(j, r, rng);
+        let w = Mat::from_fn(k, r, |_, _| rng.uniform(0.5, 2.0));
+        let slices: Vec<Csr> = (0..k)
+            .map(|kk| {
+                let ik = r + rng.range(3, 9);
+                let q = random_orthonormal(ik, r, rng);
+                let u = blas::matmul(&q, &h);
+                let mut us = u;
+                for i in 0..us.rows() {
+                    for (c, x) in us.row_mut(i).iter_mut().enumerate() {
+                        *x *= w[(kk, c)];
+                    }
+                }
+                Csr::from_dense(&blas::matmul_a_bt(&us, &v))
+            })
+            .collect();
+        (IrregularTensor::new(slices), v, w)
+    }
+
+    #[test]
+    fn fits_planted_model_to_high_fit() {
+        let mut rng = Pcg64::seed(171);
+        let (data, _, _) = planted(&mut rng, 12, 10, 3);
+        let cfg = Parafac2Config {
+            rank: 3,
+            max_iters: 200,
+            tol: 1e-9,
+            nonneg: false,
+            seed: 5,
+            workers: 1,
+            ..Default::default()
+        };
+        let model = fit_parafac2(&data, &cfg).unwrap();
+        assert!(model.stats.final_fit > 0.95, "fit {}", model.stats.final_fit);
+        // internal fit estimate must agree with the exact one
+        let exact = model.fit(&data);
+        assert!(
+            (model.stats.final_fit - exact).abs() < 1e-6,
+            "{} vs {exact}",
+            model.stats.final_fit
+        );
+    }
+
+    #[test]
+    fn recovers_planted_factors() {
+        let mut rng = Pcg64::seed(172);
+        let (data, v_true, w_true) = planted(&mut rng, 15, 8, 2);
+        let cfg = Parafac2Config {
+            rank: 2,
+            max_iters: 300,
+            tol: 1e-10,
+            nonneg: false,
+            seed: 11,
+            workers: 1,
+            init: InitMethod::SvdWarm,
+            ..Default::default()
+        };
+        let model = fit_parafac2(&data, &cfg).unwrap();
+        let fms = crate::linalg::fms_joint(&[(&model.v, &v_true), (&model.w, &w_true)]);
+        assert!(fms > 0.98, "joint FMS {fms}");
+    }
+
+    #[test]
+    fn sse_monotonically_decreases() {
+        let mut rng = Pcg64::seed(173);
+        let (data, _, _) = planted(&mut rng, 8, 9, 3);
+        let cfg = Parafac2Config {
+            rank: 3,
+            max_iters: 25,
+            tol: 0.0, // run all iterations
+            nonneg: true,
+            workers: 1,
+            ..Default::default()
+        };
+        let mut sses = Vec::new();
+        let _ = fit_parafac2_traced(&data, &cfg, &mut |r| sses.push(r.sse)).unwrap();
+        for win in sses.windows(2) {
+            assert!(
+                win[1] <= win[0] * (1.0 + 1e-7) + 1e-9,
+                "SSE increased: {} -> {}",
+                win[0],
+                win[1]
+            );
+        }
+    }
+
+    #[test]
+    fn backends_agree() {
+        let mut rng = Pcg64::seed(174);
+        let (data, _, _) = planted(&mut rng, 6, 7, 2);
+        let mk = |backend| Parafac2Config {
+            rank: 2,
+            max_iters: 12,
+            tol: 0.0,
+            nonneg: true,
+            seed: 3,
+            workers: 1,
+            backend,
+            ..Default::default()
+        };
+        let a = fit_parafac2(&data, &mk(Backend::Spartan)).unwrap();
+        let b = fit_parafac2(&data, &mk(Backend::Baseline)).unwrap();
+        assert!(a.v.max_abs_diff(&b.v) < 1e-6, "V diverged");
+        assert!(a.w.max_abs_diff(&b.w) < 1e-6, "W diverged");
+        assert!((a.stats.final_sse - b.stats.final_sse).abs() < 1e-6 * (1.0 + a.stats.final_sse));
+    }
+
+    #[test]
+    fn baseline_oom_is_reported() {
+        let mut rng = Pcg64::seed(175);
+        let (data, _, _) = planted(&mut rng, 6, 7, 2);
+        let cfg = Parafac2Config {
+            rank: 2,
+            max_iters: 3,
+            backend: Backend::Baseline,
+            mem_budget: Some(32),
+            workers: 1,
+            ..Default::default()
+        };
+        match fit_parafac2(&data, &cfg) {
+            Err(FitError::OutOfMemory(_)) => {}
+            other => panic!("expected OoM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut rng = Pcg64::seed(176);
+        let (data, _, _) = planted(&mut rng, 3, 5, 2);
+        let cfg = Parafac2Config { rank: 0, ..Default::default() };
+        assert!(matches!(fit_parafac2(&data, &cfg), Err(FitError::Config(_))));
+        let cfg = Parafac2Config { rank: 99, ..Default::default() };
+        assert!(matches!(fit_parafac2(&data, &cfg), Err(FitError::Config(_))));
+    }
+
+    #[test]
+    fn nonneg_constraints_respected() {
+        let mut rng = Pcg64::seed(177);
+        let (data, _, _) = planted(&mut rng, 6, 8, 2);
+        let cfg = Parafac2Config { rank: 2, max_iters: 10, nonneg: true, workers: 1, ..Default::default() };
+        let model = fit_parafac2(&data, &cfg).unwrap();
+        assert!(model.v.data().iter().all(|&x| x >= 0.0));
+        assert!(model.w.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn parallel_and_serial_same_result() {
+        let mut rng = Pcg64::seed(178);
+        let (data, _, _) = planted(&mut rng, 9, 8, 2);
+        let mk = |workers| Parafac2Config {
+            rank: 2,
+            max_iters: 8,
+            tol: 0.0,
+            workers,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = fit_parafac2(&data, &mk(1)).unwrap();
+        let b = fit_parafac2(&data, &mk(4)).unwrap();
+        // deterministic chunk-ordered reductions ⇒ identical results
+        assert_eq!(a.v.data(), b.v.data());
+        assert_eq!(a.w.data(), b.w.data());
+    }
+}

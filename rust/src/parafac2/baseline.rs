@@ -1,0 +1,211 @@
+//! The comparison baseline: "Sparse PARAFAC2" — the standard fitting
+//! algorithm [Kiers et al.] adjusted for sparse tensors as in Chew et
+//! al. [12], with the CP-ALS iteration running on an **explicitly
+//! materialized** sparse intermediate tensor via Tensor-Toolbox-style
+//! MTTKRP (paper §5.1 "Implementation details").
+//!
+//! Per outer iteration the baseline:
+//! 1. runs the same Procrustes step as SPARTan (the paper parallelizes
+//!    both equally — the methods differ in step 2),
+//! 2. **constructs** the COO sparse tensor `Y ∈ R^{R×J×K}` from the
+//!    `{Y_k}` slices — `R·Σc_k` entries at 20 bytes each, charged against
+//!    the memory budget (this is where the paper's 1 TB server ran OoM),
+//! 3. runs one CP-ALS iteration with [`crate::sparse::CooTensor3::mttkrp`]
+//!    per mode (each re-sorts the nonzeros — TTB's matricization cost —
+//!    and materializes TTB's nnz-length per-column temporary).
+
+use super::cp_als::{normalize_cols_safe, residual_stats, solve_mode, CpFactors, CpIterStats, CpOptions};
+use super::intermediate::PackedY;
+use crate::linalg::blas;
+use crate::sparse::CooTensor3;
+use crate::util::membudget::{BudgetExceeded, MemBudget};
+use crate::util::timer::Stopwatch;
+
+/// Phase timing of one baseline CP iteration (for the bench breakdown).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BaselinePhases {
+    pub construct_secs: f64,
+    pub mttkrp_secs: f64,
+    pub solve_secs: f64,
+}
+
+/// Materialize the COO tensor `Y` from the packed slices (the step SPARTan
+/// skips entirely). Charges `budget` for the full COO storage.
+pub fn materialize_coo(y: &PackedY, budget: &MemBudget) -> Result<CooTensor3, BudgetExceeded> {
+    let r = y.slices.first().map(|s| s.rank()).unwrap_or(0);
+    let mut coo = CooTensor3::new([r, y.j_dim, y.k()]);
+    coo.reserve(y.nnz(), budget)?;
+    for (kk, slice) in y.slices.iter().enumerate() {
+        for (c, &j) in slice.support.iter().enumerate() {
+            let yrow = slice.yt.row(c); // Y_k(:, j)ᵀ
+            for (i, &v) in yrow.iter().enumerate() {
+                if v != 0.0 {
+                    coo.push(i as u32, j, kk as u32, v);
+                }
+            }
+        }
+    }
+    Ok(coo)
+}
+
+/// One CP-ALS iteration on the explicit COO tensor (baseline path).
+/// Mirrors [`super::cp_als::cp_iteration`] but with TTB-style MTTKRPs;
+/// returns `Err` when the memory budget is exhausted — the paper's "OoM".
+pub fn cp_iteration_baseline(
+    y: &PackedY,
+    f: &mut CpFactors,
+    opts: CpOptions,
+    budget: &MemBudget,
+    phases: &mut BaselinePhases,
+) -> Result<CpIterStats, BudgetExceeded> {
+    // Snapshot so every charge made below (COO storage, MTTKRP outputs and
+    // temporaries) is released on exit, including early-error paths. The
+    // baseline runs single-threaded w.r.t. the budget, so this is exact.
+    let used_at_entry = budget.used();
+    let sw = Stopwatch::start();
+    let coo = materialize_coo(y, budget);
+    let mut coo = match coo {
+        Ok(c) => c,
+        Err(e) => {
+            budget.release(budget.used() - used_at_entry);
+            return Err(e);
+        }
+    };
+    phases.construct_secs += sw.elapsed_secs();
+
+    let result = (|| {
+        // --- mode 1: H ----------------------------------------------------
+        let sw = Stopwatch::start();
+        let m1 = coo.mttkrp(0, [&f.h, &f.v, &f.w], budget)?;
+        phases.mttkrp_secs += sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let g1 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.v));
+        f.h = solve_mode(&m1, &g1, false);
+        normalize_cols_safe(&mut f.h);
+        phases.solve_secs += sw.elapsed_secs();
+        budget.release((m1.rows() * m1.cols() * 8) as u64);
+
+        // --- mode 2: V ----------------------------------------------------
+        let sw = Stopwatch::start();
+        let m2 = coo.mttkrp(1, [&f.h, &f.v, &f.w], budget)?;
+        phases.mttkrp_secs += sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let g2 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.h));
+        f.v = solve_mode(&m2, &g2, opts.nonneg);
+        normalize_cols_safe(&mut f.v);
+        phases.solve_secs += sw.elapsed_secs();
+        budget.release((m2.rows() * m2.cols() * 8) as u64);
+
+        // --- mode 3: W ------------------------------------------------------
+        let sw = Stopwatch::start();
+        let m3 = coo.mttkrp(2, [&f.h, &f.v, &f.w], budget)?;
+        phases.mttkrp_secs += sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let g3 = blas::hadamard(&blas::gram(&f.v), &blas::gram(&f.h));
+        f.w = solve_mode(&m3, &g3, opts.nonneg);
+        let stats = residual_stats(&m3, f, y.norm_sq());
+        phases.solve_secs += sw.elapsed_secs();
+        budget.release((m3.rows() * m3.cols() * 8) as u64);
+        Ok(stats)
+    })();
+
+    drop(coo);
+    budget.release(budget.used() - used_at_entry);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::parafac2::cp_als::cp_iteration;
+    use crate::parafac2::intermediate::PackedSlice;
+    use crate::sparse::Csr;
+    use crate::threadpool::Pool;
+    use crate::util::rng::Pcg64;
+
+    fn random_y(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> PackedY {
+        let slices = (0..k)
+            .map(|_| {
+                let rows = r + rng.range(2, 6);
+                let mut trips = vec![(0usize, rng.range(0, j), 1.0)];
+                for i in 0..rows {
+                    for jj in 0..j {
+                        if rng.chance(0.25) {
+                            trips.push((i, jj, rng.uniform(0.1, 1.5)));
+                        }
+                    }
+                }
+                let xk = Csr::from_triplets(rows, j, trips);
+                let qk = crate::linalg::random_orthonormal(rows, r, rng);
+                PackedSlice::pack(&xk, &qk)
+            })
+            .collect();
+        PackedY { slices, j_dim: j }
+    }
+
+    #[test]
+    fn baseline_matches_spartan_iteration_exactly() {
+        // Same Y, same starting factors ⇒ identical updated factors and
+        // residual (both compute the same math, differently).
+        let mut rng = Pcg64::seed(141);
+        for &(k, j, r) in &[(4usize, 7usize, 2usize), (8, 10, 3)] {
+            let y = random_y(&mut rng, k, j, r);
+            let f0 = CpFactors {
+                h: Mat::rand_normal(r, r, &mut rng),
+                v: Mat::rand_normal(j, r, &mut rng),
+                w: Mat::rand_uniform(k, r, &mut rng),
+            };
+            for nonneg in [false, true] {
+                let opts = CpOptions { nonneg };
+                let mut fa = f0.clone();
+                let mut fb = f0.clone();
+                let sa = cp_iteration(&y, &mut fa, opts, &Pool::serial());
+                let budget = MemBudget::unlimited();
+                let mut phases = BaselinePhases::default();
+                let sb =
+                    cp_iteration_baseline(&y, &mut fb, opts, &budget, &mut phases).unwrap();
+                assert!(fa.h.max_abs_diff(&fb.h) < 1e-8, "H nonneg={nonneg}");
+                assert!(fa.v.max_abs_diff(&fb.v) < 1e-8, "V nonneg={nonneg}");
+                assert!(fa.w.max_abs_diff(&fb.w) < 1e-8, "W nonneg={nonneg}");
+                assert!(
+                    (sa.y_residual_sq - sb.y_residual_sq).abs()
+                        < 1e-8 * (1.0 + sa.y_residual_sq)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_oom() {
+        let mut rng = Pcg64::seed(142);
+        let y = random_y(&mut rng, 6, 9, 3);
+        let mut f = CpFactors {
+            h: Mat::rand_normal(3, 3, &mut rng),
+            v: Mat::rand_normal(9, 3, &mut rng),
+            w: Mat::rand_uniform(6, 3, &mut rng),
+        };
+        let budget = MemBudget::limited(64); // absurdly small
+        let mut phases = BaselinePhases::default();
+        let err = cp_iteration_baseline(&y, &mut f, CpOptions::default(), &budget, &mut phases);
+        assert!(err.is_err());
+        // budget rolls back so a subsequent unlimited-ish run still works
+        assert_eq!(budget.used(), 0);
+    }
+
+    #[test]
+    fn budget_released_after_success() {
+        let mut rng = Pcg64::seed(143);
+        let y = random_y(&mut rng, 4, 6, 2);
+        let mut f = CpFactors {
+            h: Mat::rand_normal(2, 2, &mut rng),
+            v: Mat::rand_normal(6, 2, &mut rng),
+            w: Mat::rand_uniform(4, 2, &mut rng),
+        };
+        let budget = MemBudget::limited(10 << 20);
+        let mut phases = BaselinePhases::default();
+        cp_iteration_baseline(&y, &mut f, CpOptions::default(), &budget, &mut phases).unwrap();
+        assert_eq!(budget.used(), 0, "all charges released");
+        assert!(budget.peak() > 0, "peak recorded");
+    }
+}

@@ -1,0 +1,226 @@
+//! The single CP-ALS iteration executed on the intermediate tensor `Y`
+//! inside each PARAFAC2-ALS sweep (paper Algorithm 2, line 10).
+//!
+//! Kiers et al. showed one CP-ALS iteration per outer sweep suffices to
+//! decrease the objective. The iteration updates, in order:
+//!
+//! 1. `H ← M¹ (WᵀW ∗ VᵀV)⁺`, columns normalized,
+//! 2. `V ← M² (WᵀW ∗ HᵀH)⁺` (optionally NNLS), columns normalized,
+//! 3. `W ← M³ (VᵀV ∗ HᵀH)⁺` (optionally NNLS) — W keeps the scale
+//!    (`S_k = diag(W(k,:))`).
+//!
+//! The residual `‖Y − ⟦H,V,W⟧‖²` falls out for free after the mode-3
+//! update via the classic identity `⟨Y, rec⟩ = ⟨M³, W⟩`, giving the
+//! PARAFAC2 SSE as `‖X‖² − ‖Y‖² + ‖Y − rec‖²` without touching the data.
+
+use super::intermediate::PackedY;
+use super::mttkrp;
+use crate::linalg::{blas, nnls, solve, Mat};
+use crate::threadpool::Pool;
+
+/// The CP factor triple of the intermediate tensor.
+#[derive(Clone, Debug)]
+pub struct CpFactors {
+    /// R×R (replaces CP's U for mode 1 of Y).
+    pub h: Mat,
+    /// J×R, shared variable loadings — the phenotype definitions.
+    pub v: Mat,
+    /// K×R, subject weights — row k is `diag(S_k)`.
+    pub w: Mat,
+}
+
+/// Options controlling the iteration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpOptions {
+    /// Impose non-negativity on V and W (hence `{S_k}`), per paper §3.2.
+    pub nonneg: bool,
+}
+
+/// Result statistics of one CP iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct CpIterStats {
+    /// `‖Y − ⟦H,V,W⟧‖²_F` after the update.
+    pub y_residual_sq: f64,
+    /// `⟨Y, rec⟩` (kept for diagnostics).
+    pub inner: f64,
+    /// `‖rec‖²`.
+    pub rec_norm_sq: f64,
+}
+
+/// One CP-ALS iteration on the packed intermediate tensor (SPARTan path).
+pub fn cp_iteration(
+    y: &PackedY,
+    f: &mut CpFactors,
+    opts: CpOptions,
+    pool: &Pool,
+) -> CpIterStats {
+    // --- mode 1: H ------------------------------------------------------
+    let m1 = mttkrp::mttkrp_mode1(y, &f.v, &f.w, pool);
+    let g1 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.v));
+    f.h = solve::solve_gram_system(&m1, &g1);
+    normalize_cols_safe(&mut f.h);
+
+    // --- mode 2: V ------------------------------------------------------
+    let m2 = mttkrp::mttkrp_mode2(y, &f.h, &f.w, pool);
+    let g2 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.h));
+    f.v = solve_mode(&m2, &g2, opts.nonneg);
+    normalize_cols_safe(&mut f.v);
+
+    // --- mode 3: W (carries the scale) -----------------------------------
+    let m3 = mttkrp::mttkrp_mode3(y, &f.h, &f.v, pool);
+    let g3 = blas::hadamard(&blas::gram(&f.v), &blas::gram(&f.h));
+    f.w = solve_mode(&m3, &g3, opts.nonneg);
+
+    // --- residual via the MTTKRP identity --------------------------------
+    // ⟨Y, rec⟩ = ⟨M³, W⟩ (M³ computed with the FINAL H, V; W final too).
+    residual_stats(&m3, f, y.norm_sq())
+}
+
+/// Normalize columns to unit norm, leaving exact-zero columns alone
+/// (a collapsed component must not become NaN; the solver may revive it).
+pub(crate) fn normalize_cols_safe(m: &mut Mat) {
+    m.normalize_cols();
+}
+
+/// Shared factor solve: `M · G⁺`, optionally non-negative (row-wise FNNLS).
+pub(crate) fn solve_mode(m: &Mat, g: &Mat, nonneg: bool) -> Mat {
+    if nonneg {
+        nnls::nnls_gram_system(m, g)
+    } else {
+        solve::solve_gram_system(m, g)
+    }
+}
+
+/// Residual statistics shared by the SPARTan and baseline iterations:
+/// given the final `M³`, factors, and `‖Y‖²`.
+pub(crate) fn residual_stats(m3: &Mat, f: &CpFactors, y_norm_sq: f64) -> CpIterStats {
+    let inner: f64 = m3.data().iter().zip(f.w.data()).map(|(a, b)| a * b).sum();
+    let g_all = blas::hadamard(
+        &blas::hadamard(&blas::gram(&f.h), &blas::gram(&f.v)),
+        &blas::gram(&f.w),
+    );
+    let rec_norm_sq: f64 = g_all.data().iter().sum();
+    let y_residual_sq = (y_norm_sq - 2.0 * inner + rec_norm_sq).max(0.0);
+    CpIterStats { y_residual_sq, inner, rec_norm_sq }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parafac2::intermediate::PackedSlice;
+    use crate::sparse::Csr;
+    use crate::util::rng::Pcg64;
+
+    fn random_y(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> PackedY {
+        let slices = (0..k)
+            .map(|_| {
+                let rows = r + rng.range(2, 6);
+                let mut trips = vec![(0usize, rng.range(0, j), 1.0)];
+                for i in 0..rows {
+                    for jj in 0..j {
+                        if rng.chance(0.3) {
+                            trips.push((i, jj, rng.uniform(0.1, 1.5)));
+                        }
+                    }
+                }
+                let xk = Csr::from_triplets(rows, j, trips);
+                let qk = crate::linalg::random_orthonormal(rows, r, rng);
+                PackedSlice::pack(&xk, &qk)
+            })
+            .collect();
+        PackedY { slices, j_dim: j }
+    }
+
+    fn residual_explicit(y: &PackedY, f: &CpFactors) -> f64 {
+        // ‖Y − ⟦H,V,W⟧‖² by dense materialization
+        let mut sse = 0.0;
+        for (kk, s) in y.slices.iter().enumerate() {
+            let yk = s.to_dense(y.j_dim);
+            // rec_k = H diag(W(k,:)) Vᵀ
+            let hw = Mat::from_fn(f.h.rows(), f.h.cols(), |i, c| f.h[(i, c)] * f.w[(kk, c)]);
+            let rec = blas::matmul_a_bt(&hw, &f.v);
+            sse += yk.fro_dist(&rec).powi(2);
+        }
+        sse
+    }
+
+    #[test]
+    fn residual_identity_matches_explicit() {
+        let mut rng = Pcg64::seed(131);
+        let (k, j, r) = (5, 8, 3);
+        let y = random_y(&mut rng, k, j, r);
+        let mut f = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_normal(k, r, &mut rng),
+        };
+        let stats = cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial());
+        let explicit = residual_explicit(&y, &f);
+        assert!(
+            (stats.y_residual_sq - explicit).abs() < 1e-8 * (1.0 + explicit),
+            "{} vs {explicit}",
+            stats.y_residual_sq
+        );
+    }
+
+    #[test]
+    fn iteration_monotonically_decreases_residual() {
+        let mut rng = Pcg64::seed(132);
+        let (k, j, r) = (6, 10, 3);
+        let y = random_y(&mut rng, k, j, r);
+        let mut f = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_uniform(k, r, &mut rng),
+        };
+        let mut last = f64::INFINITY;
+        for it in 0..8 {
+            let stats = cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial());
+            assert!(
+                stats.y_residual_sq <= last * (1.0 + 1e-9) + 1e-12,
+                "iter {it}: {} > {last}",
+                stats.y_residual_sq
+            );
+            last = stats.y_residual_sq;
+        }
+    }
+
+    #[test]
+    fn nonneg_keeps_v_w_nonnegative_and_decreases() {
+        let mut rng = Pcg64::seed(133);
+        let (k, j, r) = (5, 9, 3);
+        let y = random_y(&mut rng, k, j, r);
+        let mut f = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_uniform(j, r, &mut rng),
+            w: Mat::rand_uniform(k, r, &mut rng),
+        };
+        let opts = CpOptions { nonneg: true };
+        let mut last = f64::INFINITY;
+        for _ in 0..6 {
+            let stats = cp_iteration(&y, &mut f, opts, &Pool::serial());
+            assert!(f.v.data().iter().all(|&x| x >= 0.0));
+            assert!(f.w.data().iter().all(|&x| x >= 0.0));
+            assert!(stats.y_residual_sq <= last * (1.0 + 1e-9) + 1e-12);
+            last = stats.y_residual_sq;
+        }
+    }
+
+    #[test]
+    fn normalized_factor_columns() {
+        let mut rng = Pcg64::seed(134);
+        let (k, j, r) = (4, 7, 2);
+        let y = random_y(&mut rng, k, j, r);
+        let mut f = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_uniform(k, r, &mut rng),
+        };
+        cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial());
+        for norms in [f.h.col_norms(), f.v.col_norms()] {
+            for n in norms {
+                assert!(n == 0.0 || (n - 1.0).abs() < 1e-10, "col norm {n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Packed representation of the intermediate tensor `Y`.
+//!
+//! SPARTan "never forms the tensor Y explicitly and directly utilizes the
+//! available collection of matrices {Y_k} instead" (paper §4.1). Moreover
+//! `Y_k = Q_kᵀ X_k` inherits the **column sparsity** of `X_k`: only the
+//! `c_k` columns of `X_k` that contain a nonzero are nonzero in `Y_k`, and
+//! those columns are fully dense (R values each).
+//!
+//! So the natural storage is: the sorted list of nonzero columns
+//! (`support`) plus a dense `c_k × R` block holding `Y_kᵀ` restricted to
+//! the support (transposed so that the hot loops — row AXPYs during
+//! packing, row streams during MTTKRP — touch contiguous memory).
+
+use crate::linalg::{blas, Mat};
+use crate::sparse::Csr;
+
+/// One packed frontal slice `Y_k` of the intermediate tensor.
+#[derive(Clone, Debug)]
+pub struct PackedSlice {
+    /// Sorted original column ids with at least one nonzero in `X_k`.
+    pub support: Vec<u32>,
+    /// `Y_kᵀ` restricted to the support: shape `c_k × R`, row `c` holds
+    /// `Y_k(:, support[c])ᵀ`.
+    pub yt: Mat,
+}
+
+impl PackedSlice {
+    /// Pack `Y_k = Q_kᵀ X_k` directly from the CSR slice and `Q_k`,
+    /// touching each nonzero of `X_k` exactly once (cost `nnz_k · R`).
+    pub fn pack(xk: &Csr, qk: &Mat) -> PackedSlice {
+        let r = qk.cols();
+        assert_eq!(qk.rows(), xk.rows(), "Q_k rows must equal I_k");
+        let support = xk.col_support();
+        // column id → local index
+        let mut local = vec![u32::MAX; xk.cols()];
+        for (c, &j) in support.iter().enumerate() {
+            local[j as usize] = c as u32;
+        }
+        let mut yt = Mat::zeros(support.len(), r);
+        for i in 0..xk.rows() {
+            let qrow = qk.row(i);
+            for (j, v) in xk.row_iter(i) {
+                let dst = yt.row_mut(local[j as usize] as usize);
+                for (d, &q) in dst.iter_mut().zip(qrow) {
+                    *d += v * q;
+                }
+            }
+        }
+        PackedSlice { support, yt }
+    }
+
+    /// Number of nonzero columns `c_k`.
+    #[inline]
+    pub fn c_k(&self) -> usize {
+        self.support.len()
+    }
+
+    /// Rank (width of the packed block).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.yt.cols()
+    }
+
+    /// ‖Y_k‖²_F (used by the fit computation).
+    pub fn norm_sq(&self) -> f64 {
+        self.yt.data().iter().map(|x| x * x).sum()
+    }
+
+    /// Gather the support rows of a J×R factor (`V_c` in the paper's
+    /// Fig. 2: "only the rows of V corresponding to non-zero columns").
+    pub fn gather_rows(&self, v: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.support.len(), v.cols());
+        for (c, &j) in self.support.iter().enumerate() {
+            out.row_mut(c).copy_from_slice(v.row(j as usize));
+        }
+        out
+    }
+
+    /// `Y_k · V_c` as an R×R product using only support rows of `v`
+    /// (shared by the mode-1 and mode-3 kernels).
+    pub fn yk_times_v(&self, v: &Mat) -> Mat {
+        // Ytᵀ · V_c, streamed without materializing V_c: accumulate
+        // rank-1 contributions row by row.
+        let r = self.rank();
+        let mut out = Mat::zeros(r, v.cols());
+        for (c, &j) in self.support.iter().enumerate() {
+            let yrow = self.yt.row(c);
+            let vrow = v.row(j as usize);
+            for (i, &yv) in yrow.iter().enumerate() {
+                if yv == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += yv * vv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense `R × J` materialization (tests only).
+    pub fn to_dense(&self, j_dim: usize) -> Mat {
+        let r = self.rank();
+        let mut m = Mat::zeros(r, j_dim);
+        for (c, &j) in self.support.iter().enumerate() {
+            for i in 0..r {
+                m[(i, j as usize)] = self.yt[(c, i)];
+            }
+        }
+        m
+    }
+
+    /// Heap bytes (budget accounting / memory reports).
+    pub fn heap_bytes(&self) -> u64 {
+        (self.support.capacity() * 4 + self.yt.data().len() * 8) as u64
+    }
+}
+
+/// The packed intermediate tensor: one [`PackedSlice`] per subject.
+#[derive(Clone, Debug)]
+pub struct PackedY {
+    pub slices: Vec<PackedSlice>,
+    /// Shared J dimension (column ids in `support` are < j_dim).
+    pub j_dim: usize,
+}
+
+impl PackedY {
+    pub fn k(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Total packed nonzeros `R · Σ c_k` — the paper's `nnz(Y)`.
+    pub fn nnz(&self) -> usize {
+        self.slices.iter().map(|s| s.c_k() * s.rank()).sum()
+    }
+
+    /// Σ_k ‖Y_k‖²_F.
+    pub fn norm_sq(&self) -> f64 {
+        self.slices.iter().map(|s| s.norm_sq()).sum()
+    }
+
+    pub fn heap_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.heap_bytes()).sum()
+    }
+}
+
+/// Verification helper: dense `Y_k` computed the obvious way.
+pub fn dense_yk(xk: &Csr, qk: &Mat) -> Mat {
+    blas::matmul(&qk.transpose(), &xk.to_dense())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::random_orthonormal;
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.chance(density) {
+                    trips.push((i, j, rng.normal()));
+                }
+            }
+        }
+        if trips.is_empty() {
+            trips.push((0, 0, 1.0));
+        }
+        Csr::from_triplets(rows, cols, trips)
+    }
+
+    #[test]
+    fn pack_matches_dense_computation() {
+        let mut rng = Pcg64::seed(101);
+        for _ in 0..10 {
+            let xk = random_sparse(&mut rng, 12, 15, 0.15);
+            let qk = random_orthonormal(12, 4, &mut rng);
+            let packed = PackedSlice::pack(&xk, &qk);
+            let want = dense_yk(&xk, &qk);
+            let got = packed.to_dense(15);
+            assert!(got.max_abs_diff(&want) < 1e-10);
+            // support matches X_k's column support exactly (paper §4.1)
+            assert_eq!(packed.support, xk.col_support());
+        }
+    }
+
+    #[test]
+    fn packed_nonzeros_are_r_times_ck() {
+        let mut rng = Pcg64::seed(102);
+        let xk = random_sparse(&mut rng, 10, 20, 0.1);
+        let qk = random_orthonormal(10, 3, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        assert_eq!(p.yt.shape(), (p.c_k(), 3));
+        assert_eq!(p.c_k(), xk.col_support_size());
+    }
+
+    #[test]
+    fn yk_times_v_matches_dense() {
+        let mut rng = Pcg64::seed(103);
+        let xk = random_sparse(&mut rng, 9, 14, 0.2);
+        let qk = random_orthonormal(9, 5, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        let v = Mat::rand_normal(14, 5, &mut rng);
+        let got = p.yk_times_v(&v);
+        let want = blas::matmul(&dense_yk(&xk, &qk), &v);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn gather_rows_support_order() {
+        let mut rng = Pcg64::seed(104);
+        let xk = Csr::from_triplets(2, 6, vec![(0, 5, 1.0), (1, 2, 2.0)]);
+        let qk = random_orthonormal(2, 2, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        let v = Mat::from_fn(6, 2, |i, j| (i * 2 + j) as f64);
+        let g = p.gather_rows(&v);
+        assert_eq!(p.support, vec![2, 5]);
+        assert_eq!(g.row(0), v.row(2));
+        assert_eq!(g.row(1), v.row(5));
+    }
+
+    #[test]
+    fn norm_sq_consistent() {
+        let mut rng = Pcg64::seed(105);
+        let xk = random_sparse(&mut rng, 8, 10, 0.3);
+        let qk = random_orthonormal(8, 3, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        let dense = p.to_dense(10);
+        assert!((p.norm_sq() - dense.fro_norm().powi(2)).abs() < 1e-9);
+    }
+}

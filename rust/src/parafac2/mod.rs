@@ -1,0 +1,17 @@
+//! PARAFAC2 fitting: the model, the classical ALS algorithm, SPARTan's
+//! specialized MTTKRP kernels (the paper's contribution), and the
+//! Tensor-Toolbox-style baseline it is evaluated against.
+
+pub mod als;
+pub mod baseline;
+pub mod cp_als;
+pub mod init;
+pub mod intermediate;
+pub mod model;
+pub mod mttkrp;
+pub mod procrustes;
+pub mod restarts;
+
+pub use als::{fit_parafac2, Backend, FitError, Parafac2Config};
+pub use model::{FitStats, Parafac2Model};
+pub use restarts::fit_parafac2_restarts;

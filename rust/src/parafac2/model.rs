@@ -1,0 +1,174 @@
+//! The fitted PARAFAC2 model `X_k ≈ U_k S_k Vᵀ` with `U_k = Q_k H`.
+
+use crate::linalg::{blas, Mat};
+use crate::sparse::IrregularTensor;
+
+/// A fitted PARAFAC2 decomposition.
+#[derive(Clone, Debug)]
+pub struct Parafac2Model {
+    /// Target rank R.
+    pub rank: usize,
+    /// R×R common cross-product factor (`U_k = Q_k H`).
+    pub h: Mat,
+    /// J×R shared variable loadings (phenotype definitions).
+    pub v: Mat,
+    /// K×R subject weights; `S_k = diag(W(k,:))`.
+    pub w: Mat,
+    /// Per-subject orthonormal bases `Q_k` (I_k×R).
+    pub q: Vec<Mat>,
+    /// Fitting statistics.
+    pub stats: FitStats,
+}
+
+/// Statistics recorded by the ALS driver.
+#[derive(Clone, Debug, Default)]
+pub struct FitStats {
+    /// Outer ALS iterations executed.
+    pub iterations: usize,
+    /// Final sum of squared errors Σ_k‖X_k − U_k S_k Vᵀ‖².
+    pub final_sse: f64,
+    /// Final fit = 1 − √(SSE)/‖X‖_F (1 = perfect).
+    pub final_fit: f64,
+    /// Fit after each iteration.
+    pub fit_history: Vec<f64>,
+    /// Wall-clock seconds in total and per phase.
+    pub total_secs: f64,
+    pub procrustes_secs: f64,
+    pub cp_secs: f64,
+    /// Mean seconds per outer iteration.
+    pub secs_per_iter: f64,
+}
+
+impl Parafac2Model {
+    /// Number of subjects.
+    pub fn k(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Number of variables.
+    pub fn j(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// `U_k = Q_k H` — the temporal signature matrix of subject k
+    /// (I_k × R; paper §5.3: each column is the evolution of one
+    /// phenotype's expression over the subject's observations).
+    pub fn u_k(&self, k: usize) -> Mat {
+        blas::matmul(&self.q[k], &self.h)
+    }
+
+    /// `diag(S_k)` — the subject's importance weights per component.
+    pub fn s_k(&self, k: usize) -> &[f64] {
+        self.w.row(k)
+    }
+
+    /// Reconstruct slice k: `U_k S_k Vᵀ` (dense; small-scale use).
+    pub fn reconstruct_slice(&self, k: usize) -> Mat {
+        let uk = self.u_k(k);
+        // scale columns by S_k then multiply by Vᵀ
+        let mut us = uk;
+        let sk = self.w.row(k).to_vec();
+        for i in 0..us.rows() {
+            for (c, x) in us.row_mut(i).iter_mut().enumerate() {
+                *x *= sk[c];
+            }
+        }
+        blas::matmul_a_bt(&us, &self.v)
+    }
+
+    /// Exact SSE against the data (O(Σ nnz_k + Σ I_k·J·R) — verification
+    /// and small-scale reporting; the ALS loop itself uses the cheap
+    /// residual identity).
+    pub fn sse(&self, data: &IrregularTensor) -> f64 {
+        let mut total = 0.0;
+        for k in 0..data.k() {
+            let rec = self.reconstruct_slice(k);
+            let xk = data.slice(k);
+            // ‖X_k − rec‖² = ‖rec‖² − 2⟨X_k, rec⟩ + ‖X_k‖² streamed over nnz
+            let mut cross = 0.0;
+            for i in 0..xk.rows() {
+                for (j, v) in xk.row_iter(i) {
+                    cross += v * rec[(i, j as usize)];
+                }
+            }
+            total += rec.fro_norm().powi(2) - 2.0 * cross + xk.fro_norm_sq();
+        }
+        total.max(0.0)
+    }
+
+    /// Fit = 1 − √SSE/‖X‖ against the data (exact, see [`Self::sse`]).
+    pub fn fit(&self, data: &IrregularTensor) -> f64 {
+        1.0 - (self.sse(data) / data.fro_norm_sq()).sqrt()
+    }
+
+    /// The model constraint Φ = HᵀH that makes `U_kᵀU_k` invariant over k.
+    pub fn phi(&self) -> Mat {
+        blas::gram(&self.h)
+    }
+
+    /// Verify the PARAFAC2 invariant `U_kᵀU_k = Φ ∀k` (max deviation).
+    pub fn cross_product_invariance_defect(&self) -> f64 {
+        let phi = self.phi();
+        let mut worst: f64 = 0.0;
+        for k in 0..self.q.len() {
+            // U_kᵀU_k = Hᵀ Q_kᵀ Q_k H; only exact when Q_k has orthonormal
+            // columns (I_k ≥ R slices).
+            if self.q[k].rows() < self.rank {
+                continue;
+            }
+            let uk = self.u_k(k);
+            let g = blas::gram(&uk);
+            worst = worst.max(g.max_abs_diff(&phi));
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthonormal;
+    use crate::sparse::Csr;
+    use crate::util::rng::Pcg64;
+
+    fn toy_model(rng: &mut Pcg64, k: usize, j: usize, r: usize, iks: &[usize]) -> Parafac2Model {
+        Parafac2Model {
+            rank: r,
+            h: Mat::rand_normal(r, r, rng),
+            v: Mat::rand_uniform(j, r, rng),
+            w: Mat::rand_uniform(k, r, rng),
+            q: iks.iter().map(|&ik| random_orthonormal(ik, r, rng)).collect(),
+            stats: FitStats::default(),
+        }
+    }
+
+    #[test]
+    fn uk_shape_and_invariance() {
+        let mut rng = Pcg64::seed(151);
+        let m = toy_model(&mut rng, 3, 6, 2, &[5, 7, 4]);
+        assert_eq!(m.u_k(1).shape(), (7, 2));
+        assert!(m.cross_product_invariance_defect() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_model_has_fit_one() {
+        let mut rng = Pcg64::seed(152);
+        let m = toy_model(&mut rng, 3, 6, 2, &[5, 7, 4]);
+        // generate data exactly from the model
+        let slices: Vec<Csr> = (0..3).map(|k| Csr::from_dense(&m.reconstruct_slice(k))).collect();
+        let data = IrregularTensor::new_unchecked(slices);
+        assert!(m.sse(&data) < 1e-16 * data.fro_norm_sq().max(1.0) + 1e-12);
+        assert!(m.fit(&data) > 1.0 - 1e-7);
+    }
+
+    #[test]
+    fn sse_detects_perturbation() {
+        let mut rng = Pcg64::seed(153);
+        let m = toy_model(&mut rng, 2, 5, 2, &[4, 6]);
+        let mut slices: Vec<Mat> = (0..2).map(|k| m.reconstruct_slice(k)).collect();
+        slices[0][(0, 0)] += 3.0; // inject error
+        let data =
+            IrregularTensor::new_unchecked(slices.iter().map(Csr::from_dense).collect());
+        assert!((m.sse(&data) - 9.0).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,314 @@
+//! SPARTan's specialized MTTKRP — the paper's core contribution
+//! (Algorithm 3, Figures 2–4).
+//!
+//! All three modes operate directly on the packed frontal slices
+//! `{Y_k}` — the tensor `Y` is never materialized, no Khatri-Rao product
+//! is ever formed, and each mode is parallelized over the K subjects:
+//!
+//! * **mode 1** (Eq. 10):  `M¹ = Σ_k rowhad(Y_k V, W(k,:))`
+//! * **mode 2** (Eq. 13):  `M²(j,:) += (Y_k(:,j)ᵀ H) ∗ W(k,:)` for each
+//!   nonzero column j of `Y_k`
+//! * **mode 3** (Eq. 16):  `M³(k,:) = dot(H, Y_k V)` (column-wise inner
+//!   products of two R×R matrices)
+//!
+//! Everything uses only the support rows of `V` ("we use only the rows of
+//! V factor matrix corresponding to the non-zero columns of Y_k",
+//! Fig. 2), so per-subject cost is `O(R·(R + c_k))` independent of J.
+
+use super::intermediate::PackedY;
+use crate::linalg::{blas, Mat};
+use crate::threadpool::{partition::SUBJECT_CHUNK, Pool};
+
+/// Mode-1 MTTKRP: `M¹ = Y_(1) (W ⊙ V) ∈ R^{R×R}`.
+///
+/// Per subject: `temp = Y_k V_c` (R×R), then Hadamard each row of `temp`
+/// with `W(k,:)` and accumulate. Partial sums are merged in chunk order
+/// (deterministic).
+pub fn mttkrp_mode1(y: &PackedY, v: &Mat, w: &Mat, pool: &Pool) -> Mat {
+    let k = y.k();
+    let r = w.cols();
+    assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
+    assert_eq!(w.rows(), k, "W rows must equal K");
+    let chunk = SUBJECT_CHUNK;
+    pool.par_fold(
+        k,
+        chunk,
+        |range| {
+            let mut acc = Mat::zeros(r, r);
+            for kk in range {
+                let slice = &y.slices[kk];
+                let mut temp = slice.yk_times_v(v); // R×R, support rows only
+                let wk = w.row(kk);
+                blas::rowhad_inplace(&mut temp, wk); // temp(r,:) *= W(k,:)
+                acc.axpy(1.0, &temp);
+            }
+            acc
+        },
+        |mut a, b| {
+            a.axpy(1.0, &b);
+            a
+        },
+    )
+    .unwrap_or_else(|| Mat::zeros(r, r))
+}
+
+/// Mode-2 MTTKRP: `M² = Y_(2) (W ⊙ H) ∈ R^{J×R}`.
+///
+/// Per subject, only the `c_k` nonzero columns of `Y_k` produce nonzero
+/// rows of the partial result; each is `(Y_k(:,j)ᵀ H) ∗ W(k,:)` scattered
+/// to row j. Each chunk accumulates into a transient dense J×R buffer and
+/// hands back only the *touched rows* (the union of its subjects' column
+/// supports), so held memory stays proportional to `nnz(Y)` and the merge
+/// — done in chunk order — is deterministic across worker counts.
+pub fn mttkrp_mode2(y: &PackedY, h: &Mat, w: &Mat, pool: &Pool) -> Mat {
+    let k = y.k();
+    let r = w.cols();
+    let j_dim = y.j_dim;
+    assert_eq!(h.rows(), r, "H must be R×R");
+    assert_eq!(w.rows(), k, "W rows must equal K");
+    let chunk = SUBJECT_CHUNK;
+    // Per chunk: (touched column ids, their accumulated rows, row-major r).
+    let partials = pool.par_chunk_results(k, chunk, |range| {
+        let mut acc = Mat::zeros(j_dim, r);
+        let mut touched = vec![false; j_dim];
+        let mut row_buf = vec![0.0f64; r];
+        for kk in range {
+            let slice = &y.slices[kk];
+            let wk = w.row(kk);
+            for (c, &j) in slice.support.iter().enumerate() {
+                // row = (Y_k(:, j)ᵀ · H) ∗ W(k,:)
+                let yrow = slice.yt.row(c); // = Y_k(:, j)ᵀ, length R
+                row_buf.fill(0.0);
+                for (i, &yv) in yrow.iter().enumerate() {
+                    if yv == 0.0 {
+                        continue;
+                    }
+                    let hrow = h.row(i);
+                    for (b, &hv) in row_buf.iter_mut().zip(hrow) {
+                        *b += yv * hv;
+                    }
+                }
+                touched[j as usize] = true;
+                let arow = acc.row_mut(j as usize);
+                for ((a, &b), &wv) in arow.iter_mut().zip(&row_buf).zip(wk) {
+                    *a += b * wv;
+                }
+            }
+        }
+        // compact: only touched rows survive the chunk
+        let ids: Vec<u32> = (0..j_dim as u32).filter(|&j| touched[j as usize]).collect();
+        let mut vals = Vec::with_capacity(ids.len() * r);
+        for &j in &ids {
+            vals.extend_from_slice(acc.row(j as usize));
+        }
+        (ids, vals)
+    });
+    let mut m = Mat::zeros(j_dim, r);
+    for (ids, vals) in partials {
+        for (t, &j) in ids.iter().enumerate() {
+            let mrow = m.row_mut(j as usize);
+            for (mv, &pv) in mrow.iter_mut().zip(&vals[t * r..(t + 1) * r]) {
+                *mv += pv;
+            }
+        }
+    }
+    m
+}
+
+/// Mode-3 MTTKRP: `M³ = Y_(3) (V ⊙ H) ∈ R^{K×R}`.
+///
+/// Row k of the result is computed independently as the column-wise inner
+/// products of `H` and `Y_k V` (both R×R): "it is efficient to delay any
+/// computations on H until the R-by-R product of Y_k V is formed"
+/// (paper Fig. 4).
+pub fn mttkrp_mode3(y: &PackedY, h: &Mat, v: &Mat, pool: &Pool) -> Mat {
+    let k = y.k();
+    let r = h.cols();
+    assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
+    let chunk = SUBJECT_CHUNK;
+    let rows = pool.par_chunk_results(k, chunk, |range| {
+        let mut out = Mat::zeros(range.len(), r);
+        for (local, kk) in range.enumerate() {
+            let slice = &y.slices[kk];
+            let p = slice.yk_times_v(v); // R×R
+            let orow = out.row_mut(local);
+            for i in 0..r {
+                let hrow = h.row(i);
+                let prow = p.row(i);
+                for ((o, &hv), &pv) in orow.iter_mut().zip(hrow).zip(prow) {
+                    *o += hv * pv; // Σ_i H(i,r)·P(i,r) accumulated per column r
+                }
+            }
+        }
+        out
+    });
+    let mut m = Mat::zeros(k, r);
+    let mut at = 0usize;
+    for block in rows {
+        for i in 0..block.rows() {
+            m.row_mut(at).copy_from_slice(block.row(i));
+            at += 1;
+        }
+    }
+    m
+}
+
+/// Reference MTTKRP by explicit matricization + Khatri-Rao materialization
+/// (Eqs. 7/11/14 verbatim). Exponential memory in J·K — tests only.
+pub mod reference {
+    use super::*;
+
+    /// Dense frontal slices of Y from the packed representation.
+    fn dense_slices(y: &PackedY) -> Vec<Mat> {
+        y.slices.iter().map(|s| s.to_dense(y.j_dim)).collect()
+    }
+
+    pub fn mttkrp_dense(y: &PackedY, mode: usize, h: &Mat, v: &Mat, w: &Mat) -> Mat {
+        let slices = dense_slices(y);
+        let k = slices.len();
+        let r = h.cols();
+        let j = y.j_dim;
+        match mode {
+            0 => {
+                // Y_(1) (W ⊙ V): Y_(1) = [Y_1 | Y_2 | ... ] (R × KJ)
+                let krp = blas::khatri_rao(w, v); // KJ × R
+                let mut m = Mat::zeros(r, r);
+                for (kk, yk) in slices.iter().enumerate() {
+                    let tkv = krp.block(kk * j, (kk + 1) * j, 0, r);
+                    m.axpy(1.0, &blas::matmul(yk, &tkv));
+                }
+                m
+            }
+            1 => {
+                // Y_(2) (W ⊙ H): Y_(2) = [Y_1ᵀ | Y_2ᵀ | ...] (J × RK)
+                let krp = blas::khatri_rao(w, h); // KR × R
+                let mut m = Mat::zeros(j, r);
+                for (kk, yk) in slices.iter().enumerate() {
+                    let tkh = krp.block(kk * r, (kk + 1) * r, 0, r);
+                    m.axpy(1.0, &blas::matmul(&yk.transpose(), &tkh));
+                }
+                m
+            }
+            2 => {
+                // M³(k, r) = H(:,r)ᵀ Y_k V(:,r)  (Eq. 15)
+                let mut m = Mat::zeros(k, r);
+                for (kk, yk) in slices.iter().enumerate() {
+                    let p = blas::matmul(yk, v); // R × R
+                    for c in 0..r {
+                        let mut s = 0.0;
+                        for i in 0..r {
+                            s += h[(i, c)] * p[(i, c)];
+                        }
+                        m[(kk, c)] = s;
+                    }
+                }
+                m
+            }
+            _ => panic!("mode must be 0..3"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parafac2::intermediate::PackedSlice;
+    use crate::sparse::Csr;
+    use crate::util::rng::Pcg64;
+
+    fn random_packed(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> PackedY {
+        let slices = (0..k)
+            .map(|_| {
+                let rows = rng.range(r.max(2), r.max(2) + 6);
+                let mut trips = vec![(0usize, rng.range(0, j), 1.0)];
+                for i in 0..rows {
+                    for jj in 0..j {
+                        if rng.chance(0.15) {
+                            trips.push((i, jj, rng.normal()));
+                        }
+                    }
+                }
+                let xk = Csr::from_triplets(rows, j, trips);
+                let qk = crate::linalg::random_orthonormal(rows, r, rng);
+                PackedSlice::pack(&xk, &qk)
+            })
+            .collect();
+        PackedY { slices, j_dim: j }
+    }
+
+    #[test]
+    fn all_modes_match_reference() {
+        let mut rng = Pcg64::seed(121);
+        for &(k, j, r) in &[(1usize, 5usize, 2usize), (6, 10, 3), (12, 7, 4)] {
+            let y = random_packed(&mut rng, k, j, r);
+            let h = Mat::rand_normal(r, r, &mut rng);
+            let v = Mat::rand_normal(j, r, &mut rng);
+            let w = Mat::rand_normal(k, r, &mut rng);
+            let pool = Pool::new(3);
+
+            let m1 = mttkrp_mode1(&y, &v, &w, &pool);
+            let m2 = mttkrp_mode2(&y, &h, &w, &pool);
+            let m3 = mttkrp_mode3(&y, &h, &v, &pool);
+
+            let r1 = reference::mttkrp_dense(&y, 0, &h, &v, &w);
+            let r2 = reference::mttkrp_dense(&y, 1, &h, &v, &w);
+            let r3 = reference::mttkrp_dense(&y, 2, &h, &v, &w);
+
+            assert!(m1.max_abs_diff(&r1) < 1e-9, "mode1 ({k},{j},{r})");
+            assert!(m2.max_abs_diff(&r2) < 1e-9, "mode2 ({k},{j},{r})");
+            assert!(m3.max_abs_diff(&r3) < 1e-9, "mode3 ({k},{j},{r})");
+        }
+    }
+
+    #[test]
+    fn serial_equals_parallel_bitwise() {
+        let mut rng = Pcg64::seed(122);
+        let y = random_packed(&mut rng, 9, 8, 3);
+        let h = Mat::rand_normal(3, 3, &mut rng);
+        let v = Mat::rand_normal(8, 3, &mut rng);
+        let w = Mat::rand_normal(9, 3, &mut rng);
+        let ser = Pool::serial();
+        let par = Pool::new(4);
+        // chunk-ordered reduction ⇒ identical floating point results
+        assert_eq!(
+            mttkrp_mode1(&y, &v, &w, &ser).data(),
+            mttkrp_mode1(&y, &v, &w, &par).data()
+        );
+        assert_eq!(
+            mttkrp_mode3(&y, &h, &v, &ser).data(),
+            mttkrp_mode3(&y, &h, &v, &par).data()
+        );
+    }
+
+    #[test]
+    fn mode2_rows_outside_support_are_zero() {
+        let mut rng = Pcg64::seed(123);
+        let r = 3;
+        let j = 20;
+        // single slice touching only columns {4, 9}
+        let xk = Csr::from_triplets(5, j, vec![(0, 4, 1.0), (3, 9, 2.0), (4, 4, -1.0)]);
+        let qk = crate::linalg::random_orthonormal(5, r, &mut rng);
+        let y = PackedY { slices: vec![PackedSlice::pack(&xk, &qk)], j_dim: j };
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let w = Mat::rand_normal(1, r, &mut rng);
+        let m2 = mttkrp_mode2(&y, &h, &w, &Pool::serial());
+        for jj in 0..j {
+            let nz = m2.row(jj).iter().any(|&x| x != 0.0);
+            assert_eq!(nz, jj == 4 || jj == 9, "row {jj}");
+        }
+    }
+
+    #[test]
+    fn zero_rank_edge() {
+        // smallest sane case R=1
+        let mut rng = Pcg64::seed(124);
+        let y = random_packed(&mut rng, 3, 4, 1);
+        let h = Mat::rand_normal(1, 1, &mut rng);
+        let v = Mat::rand_normal(4, 1, &mut rng);
+        let w = Mat::rand_normal(3, 1, &mut rng);
+        let pool = Pool::serial();
+        let m1 = mttkrp_mode1(&y, &v, &w, &pool);
+        let want = reference::mttkrp_dense(&y, 0, &h, &v, &w);
+        assert!(m1.max_abs_diff(&want) < 1e-10);
+    }
+}

@@ -1,0 +1,194 @@
+//! Step 1 of PARAFAC2-ALS: the per-subject Orthogonal Procrustes update
+//! (paper Algorithm 2, lines 3–6), fused with the construction of the
+//! packed intermediate slices `Y_k = Q_kᵀ X_k` (lines 7–9).
+//!
+//! The textbook step is: SVD of `H S_k Vᵀ X_kᵀ = P_k Σ_k Z_kᵀ`, then
+//! `Q_k ← Z_k P_kᵀ`. That is exactly the orthonormal polar factor of
+//! `B_k = X_k V S_k Hᵀ`, which we compute via the R×R eigen route
+//! ([`crate::linalg::svd::polar_orthonormal`]) — O(nnz_k·R + I_k·R²)
+//! per subject instead of an SVD of an R×I_k matrix.
+//!
+//! This step is embarrassingly parallel over the K subjects, and SPARTan
+//! (like the paper) runs it chunked on the worker pool.
+
+use super::intermediate::{PackedSlice, PackedY};
+use crate::linalg::{blas, Mat};
+use crate::sparse::IrregularTensor;
+use crate::threadpool::{partition::SUBJECT_CHUNK, Pool};
+
+/// Compute `B_k = X_k V S_k Hᵀ` for one subject.
+///
+/// Two-stage to exploit the column sparsity of `X_k`: first
+/// `C_k = X_k · V` (touches only support rows of V, cost `nnz_k · R`),
+/// then `B_k = C_k · (S_k Hᵀ)` (cost `I_k · R²`).
+pub fn procrustes_target(
+    xk: &crate::sparse::Csr,
+    v: &Mat,
+    h: &Mat,
+    s_k: &[f64],
+) -> Mat {
+    let ck = xk.matmul_dense(v); // I_k × R
+    // D = S_k Hᵀ: row r of Hᵀ is column r of H scaled by s_k[r]
+    let r = h.rows();
+    let d = Mat::from_fn(r, r, |i, j| s_k[i] * h[(j, i)]);
+    blas::matmul(&ck, &d)
+}
+
+/// Per-subject Procrustes + pack. Returns the packed `Y_k` slice, and the
+/// orthonormal `Q_k` if `keep_q` (memory: keeping every `Q_k` costs
+/// `Σ I_k · R` floats, so the ALS loop only materializes them on the final
+/// iteration).
+pub fn procrustes_and_pack(
+    xk: &crate::sparse::Csr,
+    v: &Mat,
+    h: &Mat,
+    s_k: &[f64],
+    keep_q: bool,
+) -> (PackedSlice, Option<Mat>) {
+    let b = procrustes_target(xk, v, h, s_k);
+    // One-sided Jacobi polar (§Perf step 2): for tall targets (I_k ≥ R)
+    // rank-deficient directions are completed so Q_kᵀQ_k = I holds exactly
+    // (matching the SVD formulation's arbitrary orthonormal completion,
+    // same objective); short slices (I_k < R) get orthonormal rows.
+    let qk = crate::linalg::svd::procrustes_polar_jacobi(&b);
+    let packed = PackedSlice::pack(xk, &qk);
+    (packed, if keep_q { Some(qk) } else { None })
+}
+
+/// Run step 1 for all subjects on the pool. Returns the packed
+/// intermediate tensor and (optionally) all `Q_k`.
+pub fn procrustes_all(
+    data: &IrregularTensor,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    keep_q: bool,
+) -> (PackedY, Option<Vec<Mat>>) {
+    let k = data.k();
+    let chunk = SUBJECT_CHUNK;
+    let per_chunk = pool.par_chunk_results(k, chunk, |range| {
+        range
+            .map(|kk| procrustes_and_pack(data.slice(kk), v, h, w.row(kk), keep_q))
+            .collect::<Vec<_>>()
+    });
+    let mut slices = Vec::with_capacity(k);
+    let mut qs = if keep_q { Some(Vec::with_capacity(k)) } else { None };
+    for chunk_res in per_chunk {
+        for (p, q) in chunk_res {
+            slices.push(p);
+            if let (Some(qs), Some(q)) = (qs.as_mut(), q) {
+                qs.push(q);
+            }
+        }
+    }
+    (PackedY { slices, j_dim: data.j() }, qs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_defect;
+    use crate::linalg::svd::svd_thin;
+    use crate::sparse::Csr;
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut trips = vec![(0, 0, 1.0)]; // guarantee nonzero
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.chance(density) {
+                    trips.push((i, j, rng.uniform(0.1, 2.0)));
+                }
+            }
+        }
+        Csr::from_triplets(rows, cols, trips)
+    }
+
+    #[test]
+    fn qk_is_orthonormal_and_optimal() {
+        let mut rng = Pcg64::seed(111);
+        let r = 4;
+        let xk = random_sparse(&mut rng, 15, 12, 0.2);
+        let v = Mat::rand_normal(12, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let s_k: Vec<f64> = (0..r).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let (_, q) = procrustes_and_pack(&xk, &v, &h, &s_k, true);
+        let q = q.unwrap();
+        assert!(orthonormality_defect(&q) < 1e-8);
+
+        // Optimality: Q_k minimizes ‖X_k − Q H S_k Vᵀ‖² over orthonormal Q.
+        let target = {
+            // H S_k Vᵀ  (R × J)
+            let hs = Mat::from_fn(r, r, |i, j| h[(i, j)] * s_k[j]);
+            blas::matmul_a_bt(&hs, &v)
+        };
+        let xd = xk.to_dense();
+        let obj = |q: &Mat| blas::matmul(q, &target).fro_dist(&xd);
+        let opt = obj(&q);
+        for _ in 0..10 {
+            let cand = crate::linalg::random_orthonormal(15, r, &mut rng);
+            assert!(obj(&cand) >= opt - 1e-8);
+        }
+    }
+
+    #[test]
+    fn matches_svd_formulation() {
+        // Q_k from the paper's SVD of H S_k Vᵀ X_kᵀ = P Σ Zᵀ, Q_k = Z Pᵀ.
+        let mut rng = Pcg64::seed(112);
+        let r = 3;
+        let xk = random_sparse(&mut rng, 10, 8, 0.3);
+        let v = Mat::rand_normal(8, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let s_k: Vec<f64> = (0..r).map(|_| rng.uniform(0.5, 2.0)).collect();
+
+        let (_, q_polar) = procrustes_and_pack(&xk, &v, &h, &s_k, true);
+        let q_polar = q_polar.unwrap();
+
+        let hs = Mat::from_fn(r, r, |i, j| h[(i, j)] * s_k[j]);
+        let hsvt = blas::matmul_a_bt(&hs, &v); // R × J
+        let f = blas::matmul_a_bt(&hsvt, &xk.to_dense()); // R × I_k
+        let (p, _s, z) = svd_thin(&f);
+        let q_svd = blas::matmul_a_bt(&z, &p); // Z Pᵀ: I_k × R
+        assert!(q_polar.max_abs_diff(&q_svd) < 1e-7);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Pcg64::seed(113);
+        let r = 3;
+        let slices: Vec<Csr> = (0..7)
+            .map(|_| {
+                let rows = 6 + rng.range(0, 5);
+                random_sparse(&mut rng, rows, 9, 0.25)
+            })
+            .collect();
+        let data = IrregularTensor::new(slices);
+        let v = Mat::rand_normal(9, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let w = Mat::rand_uniform(7, r, &mut rng);
+
+        let (y_ser, q_ser) = procrustes_all(&data, &v, &h, &w, &Pool::serial(), true);
+        let (y_par, q_par) = procrustes_all(&data, &v, &h, &w, &Pool::new(4), true);
+        assert_eq!(y_ser.k(), y_par.k());
+        for k in 0..data.k() {
+            assert!(y_ser.slices[k].yt.max_abs_diff(&y_par.slices[k].yt) < 1e-14);
+            assert!(q_ser.as_ref().unwrap()[k].max_abs_diff(&q_par.as_ref().unwrap()[k]) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn short_slice_ik_below_rank() {
+        // I_k < R must not panic and must give orthonormal *rows*.
+        let mut rng = Pcg64::seed(114);
+        let r = 5;
+        let xk = random_sparse(&mut rng, 3, 10, 0.5);
+        let v = Mat::rand_normal(10, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let s_k = vec![1.0; r];
+        let (_, q) = procrustes_and_pack(&xk, &v, &h, &s_k, true);
+        let q = q.unwrap();
+        let qqt = blas::matmul_a_bt(&q, &q);
+        assert!(qqt.max_abs_diff(&Mat::eye(3)) < 1e-7);
+    }
+}

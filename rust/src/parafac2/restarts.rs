@@ -1,0 +1,124 @@
+//! Multi-restart fitting.
+//!
+//! ALS converges to a local optimum of a non-convex objective; the
+//! standard remedy (and what practitioners do with the reference Matlab
+//! implementation) is several fits from independent random
+//! initializations, keeping the best final SSE. Restarts reuse the same
+//! config with per-restart derived seeds, so a run is reproducible from
+//! the base seed.
+
+use super::als::{fit_parafac2, FitError, Parafac2Config};
+use super::model::Parafac2Model;
+use crate::sparse::IrregularTensor;
+
+/// Summary of one restart.
+#[derive(Clone, Debug)]
+pub struct RestartRecord {
+    pub seed: u64,
+    pub final_fit: f64,
+    pub final_sse: f64,
+    pub iterations: usize,
+    pub secs: f64,
+}
+
+/// Outcome of a multi-restart fit.
+pub struct RestartOutcome {
+    /// The best model (highest fit / lowest SSE).
+    pub best: Parafac2Model,
+    /// Index into `records` of the winner.
+    pub best_index: usize,
+    /// Per-restart summaries, in execution order.
+    pub records: Vec<RestartRecord>,
+}
+
+/// Run `n_restarts` independent fits (seeds `base_seed + i`), keep the
+/// best. `n_restarts = 1` is exactly [`fit_parafac2`].
+pub fn fit_parafac2_restarts(
+    data: &IrregularTensor,
+    cfg: &Parafac2Config,
+    n_restarts: usize,
+) -> Result<RestartOutcome, FitError> {
+    assert!(n_restarts >= 1, "need at least one restart");
+    let mut best: Option<(usize, Parafac2Model)> = None;
+    let mut records = Vec::with_capacity(n_restarts);
+    for i in 0..n_restarts {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(i as u64);
+        let model = fit_parafac2(data, &c)?;
+        crate::info!(
+            "restart {i} (seed {}): fit {:.5} after {} iters",
+            c.seed,
+            model.stats.final_fit,
+            model.stats.iterations
+        );
+        records.push(RestartRecord {
+            seed: c.seed,
+            final_fit: model.stats.final_fit,
+            final_sse: model.stats.final_sse,
+            iterations: model.stats.iterations,
+            secs: model.stats.total_secs,
+        });
+        let better = best
+            .as_ref()
+            .map_or(true, |(_, b)| model.stats.final_sse < b.stats.final_sse);
+        if better {
+            best = Some((i, model));
+        }
+    }
+    let (best_index, best) = best.expect("n_restarts >= 1");
+    Ok(RestartOutcome { best, best_index, records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::synthetic::{generate, SyntheticSpec};
+
+    fn data() -> IrregularTensor {
+        generate(&SyntheticSpec {
+            k: 40,
+            j: 20,
+            max_i_k: 8,
+            target_nnz: 5_000,
+            rank: 3,
+            noise: 0.05,
+            seed: 4,
+        })
+        .tensor
+    }
+
+    #[test]
+    fn best_of_restarts_is_no_worse_than_any() {
+        let d = data();
+        let cfg = Parafac2Config { rank: 3, max_iters: 15, workers: 1, ..Default::default() };
+        let out = fit_parafac2_restarts(&d, &cfg, 3).unwrap();
+        assert_eq!(out.records.len(), 3);
+        for r in &out.records {
+            assert!(out.best.stats.final_sse <= r.final_sse + 1e-12);
+        }
+        assert_eq!(
+            out.records[out.best_index].final_sse,
+            out.best.stats.final_sse
+        );
+    }
+
+    #[test]
+    fn single_restart_equals_plain_fit() {
+        let d = data();
+        let cfg = Parafac2Config { rank: 2, max_iters: 10, workers: 1, seed: 9, ..Default::default() };
+        let out = fit_parafac2_restarts(&d, &cfg, 1).unwrap();
+        let plain = fit_parafac2(&d, &cfg).unwrap();
+        assert_eq!(out.best.stats.final_sse, plain.stats.final_sse);
+        assert_eq!(out.best.v.data(), plain.v.data());
+    }
+
+    #[test]
+    fn restart_seeds_differ() {
+        let d = data();
+        let cfg = Parafac2Config { rank: 2, max_iters: 5, workers: 1, ..Default::default() };
+        let out = fit_parafac2_restarts(&d, &cfg, 3).unwrap();
+        assert_eq!(out.records[0].seed + 1, out.records[1].seed);
+        // different inits ⇒ (almost surely) different trajectories
+        assert_ne!(out.records[0].final_sse, out.records[1].final_sse);
+    }
+}

@@ -1,0 +1,137 @@
+//! Model interpretation for temporal phenotyping (paper §5.3).
+//!
+//! * `V` columns → **phenotype definitions**: the nonzero weights mark
+//!   member features (Table 4),
+//! * `diag(S_k)` → the patient's **importance memberships**, used to rank
+//!   phenotypes per patient,
+//! * `U_k` columns → the patient's **temporal signatures**: expression of
+//!   each phenotype across their I_k weeks (Fig. 8; only non-negative
+//!   elements are interpreted).
+
+use crate::datagen::vocab::Feature;
+use crate::linalg::Mat;
+use crate::parafac2::Parafac2Model;
+
+/// One phenotype definition extracted from V.
+#[derive(Clone, Debug)]
+pub struct PhenotypeDefinition {
+    pub index: usize,
+    /// (feature id, weight), weight-descending, thresholded.
+    pub features: Vec<(usize, f64)>,
+}
+
+/// Extract definitions: per column of V, features with weight above
+/// `threshold × max_column_weight`, sorted descending.
+pub fn phenotype_definitions(model: &Parafac2Model, threshold: f64) -> Vec<PhenotypeDefinition> {
+    let v = &model.v;
+    (0..model.rank)
+        .map(|r| {
+            let col_max = (0..v.rows()).map(|j| v[(j, r)]).fold(0.0, f64::max);
+            let cut = col_max * threshold;
+            let mut features: Vec<(usize, f64)> = (0..v.rows())
+                .filter(|&j| v[(j, r)] > cut && v[(j, r)] > 0.0)
+                .map(|j| (j, v[(j, r)]))
+                .collect();
+            features.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            PhenotypeDefinition { index: r, features }
+        })
+        .collect()
+}
+
+/// Rank the phenotypes for patient k by `diag(S_k)` descending; returns
+/// (phenotype index, importance).
+pub fn top_phenotypes(model: &Parafac2Model, k: usize) -> Vec<(usize, f64)> {
+    let sk = model.s_k(k);
+    let mut ranked: Vec<(usize, f64)> = sk.iter().cloned().enumerate().collect();
+    ranked.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    ranked
+}
+
+/// Temporal signature of patient k: `U_k` with negative entries clamped to
+/// zero ("we only consider the non-negative elements of the temporal
+/// signatures in our interpretation", §5.3).
+pub fn temporal_signature(model: &Parafac2Model, k: usize) -> Mat {
+    let mut u = model.u_k(k);
+    u.clamp_nonneg();
+    u
+}
+
+/// Scale each phenotype's signature column by the patient's importance
+/// (`U_k S_k`) — what Fig. 8 plots for the top-2 phenotypes.
+pub fn weighted_signature(model: &Parafac2Model, k: usize) -> Mat {
+    let mut u = temporal_signature(model, k);
+    let sk: Vec<f64> = model.s_k(k).to_vec();
+    for i in 0..u.rows() {
+        for (c, x) in u.row_mut(i).iter_mut().enumerate() {
+            *x *= sk[c];
+        }
+    }
+    u
+}
+
+/// Resolve feature names for a definition.
+pub fn named_features<'a>(
+    def: &PhenotypeDefinition,
+    vocab: &'a [Feature],
+) -> Vec<(&'a Feature, f64)> {
+    def.features.iter().map(|&(id, w)| (&vocab[id], w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthonormal;
+    use crate::parafac2::model::FitStats;
+    use crate::util::rng::Pcg64;
+
+    fn toy_model(rng: &mut Pcg64) -> Parafac2Model {
+        // V: phenotype 0 loads features {0:0.9, 1:0.4}; phenotype 1 loads
+        // {3:0.8, 4:0.05 (below threshold)}
+        let mut v = Mat::zeros(5, 2);
+        v[(0, 0)] = 0.9;
+        v[(1, 0)] = 0.4;
+        v[(3, 1)] = 0.8;
+        v[(4, 1)] = 0.05;
+        let w = Mat::from_rows(&[&[2.0, 0.5], &[0.1, 3.0]]);
+        Parafac2Model {
+            rank: 2,
+            h: Mat::eye(2),
+            v,
+            w,
+            q: vec![random_orthonormal(6, 2, rng), random_orthonormal(4, 2, rng)],
+            stats: FitStats::default(),
+        }
+    }
+
+    #[test]
+    fn definitions_thresholded_and_sorted() {
+        let mut rng = Pcg64::seed(191);
+        let m = toy_model(&mut rng);
+        let defs = phenotype_definitions(&m, 0.1);
+        assert_eq!(defs[0].features, vec![(0, 0.9), (1, 0.4)]);
+        assert_eq!(defs[1].features.len(), 1); // 0.05 < 0.1×0.8
+        assert_eq!(defs[1].features[0].0, 3);
+    }
+
+    #[test]
+    fn top_phenotypes_ranked_by_sk() {
+        let mut rng = Pcg64::seed(192);
+        let m = toy_model(&mut rng);
+        let top0 = top_phenotypes(&m, 0);
+        assert_eq!(top0[0].0, 0);
+        let top1 = top_phenotypes(&m, 1);
+        assert_eq!(top1[0].0, 1);
+        assert!((top1[0].1 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signature_nonneg_and_shaped() {
+        let mut rng = Pcg64::seed(193);
+        let m = toy_model(&mut rng);
+        let sig = temporal_signature(&m, 0);
+        assert_eq!(sig.shape(), (6, 2));
+        assert!(sig.data().iter().all(|&x| x >= 0.0));
+        let wsig = weighted_signature(&m, 1);
+        assert_eq!(wsig.shape(), (4, 2));
+    }
+}

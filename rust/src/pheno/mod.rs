@@ -1,0 +1,11 @@
+//! Temporal phenotyping on top of fitted PARAFAC2 models (paper §5.3):
+//! phenotype definitions from V, per-patient importance from `{S_k}`, and
+//! temporal signatures from `{U_k}`, plus Table-4/Fig-8-style reports.
+
+pub mod interpret;
+pub mod report;
+
+pub use interpret::{
+    phenotype_definitions, temporal_signature, top_phenotypes, weighted_signature,
+    PhenotypeDefinition,
+};

@@ -1,0 +1,220 @@
+//! Artifact manifest loading and executable caching.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every lowered HLO module: kind (`procrustes_pack`, `mttkrp_mode{1,2,3}`),
+//! shape bucket (B, I, C, R) and file path. The registry indexes entries,
+//! selects the smallest bucket that fits a request, and lazily
+//! compiles+caches executables.
+
+use super::pjrt::{CompiledKernel, PjrtContext};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Kinds of AOT kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    ProcrustesPack,
+    Mttkrp1,
+    Mttkrp2,
+    Mttkrp3,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "procrustes_pack" => Some(Kind::ProcrustesPack),
+            "mttkrp_mode1" => Some(Kind::Mttkrp1),
+            "mttkrp_mode2" => Some(Kind::Mttkrp2),
+            "mttkrp_mode3" => Some(Kind::Mttkrp3),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: Kind,
+    pub path: PathBuf,
+    pub b: usize,
+    /// Observation bucket (procrustes only).
+    pub i: Option<usize>,
+    pub c: usize,
+    pub r: usize,
+}
+
+/// Parsed manifest + lazily compiled executables.
+pub struct ArtifactRegistry {
+    pub batch: usize,
+    pub rank: usize,
+    pub i_buckets: Vec<usize>,
+    pub c_buckets: Vec<usize>,
+    entries: Vec<ArtifactEntry>,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let get_usize = |key: &str| -> Result<usize> {
+            root.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let version = get_usize("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let batch = get_usize("batch")?;
+        let rank = get_usize("rank")?;
+        let buckets = |key: &str| -> Result<Vec<usize>> {
+            Ok(root
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest missing {key}"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let mut i_buckets = buckets("i_buckets")?;
+        let mut c_buckets = buckets("c_buckets")?;
+        i_buckets.sort_unstable();
+        c_buckets.sort_unstable();
+
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let kind_s = e.get("kind").and_then(Json::as_str).unwrap_or("");
+            let kind = Kind::parse(kind_s).ok_or_else(|| anyhow!("unknown kind {kind_s}"))?;
+            entries.push(ArtifactEntry {
+                name: e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                kind,
+                path: dir.join(e.get("path").and_then(Json::as_str).unwrap_or("")),
+                b: e.get("b").and_then(Json::as_usize).unwrap_or(0),
+                i: e.get("i").and_then(Json::as_usize),
+                c: e.get("c").and_then(Json::as_usize).unwrap_or(0),
+                r: e.get("r").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(ArtifactRegistry {
+            batch,
+            rank,
+            i_buckets,
+            c_buckets,
+            entries,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Smallest C bucket ≥ `c`, if any.
+    pub fn c_bucket_for(&self, c: usize) -> Option<usize> {
+        self.c_buckets.iter().copied().find(|&b| b >= c)
+    }
+
+    /// Smallest I bucket ≥ `i`, if any.
+    pub fn i_bucket_for(&self, i: usize) -> Option<usize> {
+        self.i_buckets.iter().copied().find(|&b| b >= i)
+    }
+
+    /// Find the entry for a kind at an exact bucket.
+    pub fn find(&self, kind: Kind, i: Option<usize>, c: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.c == c && (kind != Kind::ProcrustesPack || e.i == i))
+    }
+
+    /// Get (compile-on-first-use) the executable for an entry.
+    pub fn kernel(
+        &self,
+        ctx: &PjrtContext,
+        kind: Kind,
+        i: Option<usize>,
+        c: usize,
+    ) -> Result<std::sync::Arc<CompiledKernel>> {
+        let entry = self
+            .find(kind, i, c)
+            .ok_or_else(|| anyhow!("no artifact for {kind:?} i={i:?} c={c}"))?;
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(k) = cache.get(&entry.name) {
+            return Ok(k.clone());
+        }
+        crate::info!("compiling artifact {}", entry.name);
+        let k = std::sync::Arc::new(ctx.load_hlo_text(&entry.path)?);
+        cache.insert(entry.name.clone(), k.clone());
+        Ok(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "version": 1, "dtype": "f32", "batch": 4, "rank": 3,
+            "i_buckets": [8, 32], "c_buckets": [4, 16],
+            "polar_iters": 18,
+            "entries": [
+                {"name": "mttkrp_mode1_b4_c4_r3", "kind": "mttkrp_mode1",
+                 "path": "m1.hlo.txt", "b": 4, "i": null, "c": 4, "r": 3,
+                 "inputs": [[4,4,3],[4,4,3],[4,3]], "outputs": [[3,3]]},
+                {"name": "procrustes_pack_b4_i8_c4_r3", "kind": "procrustes_pack",
+                 "path": "pp.hlo.txt", "b": 4, "i": 8, "c": 4, "r": 3,
+                 "inputs": [[4,8,4],[4,4,3],[3,3],[4,3]], "outputs": [[4,4,3],[4,8,3]]}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn manifest_parses_and_indexes() {
+        let dir = std::env::temp_dir().join("spartan_manifest_test");
+        write_fake_manifest(&dir);
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.batch, 4);
+        assert_eq!(reg.rank, 3);
+        assert_eq!(reg.c_bucket_for(3), Some(4));
+        assert_eq!(reg.c_bucket_for(5), Some(16));
+        assert_eq!(reg.c_bucket_for(17), None);
+        assert_eq!(reg.i_bucket_for(9), Some(32));
+        assert!(reg.find(Kind::Mttkrp1, None, 4).is_some());
+        assert!(reg.find(Kind::Mttkrp1, None, 16).is_none());
+        assert!(reg.find(Kind::ProcrustesPack, Some(8), 4).is_some());
+        assert!(reg.find(Kind::ProcrustesPack, Some(32), 4).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = match ArtifactRegistry::load(Path::new("/nonexistent")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them on the XLA CPU client. Python never runs at decomposition time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactRegistry, Kind};
+pub use pjrt::{CompiledKernel, HostTensor, PjrtContext};

@@ -1,0 +1,134 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT C-API bindings: create a
+//! CPU client, load AOT artifacts from **HLO text** (the interchange
+//! format — see python/compile/aot.py), compile, and execute with
+//! f32 tensors.
+//!
+//! Adapted from the smoke-verified reference at /opt/xla-example.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU). One per process is plenty; executables borrow it.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        crate::debug!(
+            "pjrt: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtContext { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<CompiledKernel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(CompiledKernel { exe, name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default() })
+    }
+}
+
+/// A host-side f32 tensor with shape, converted to/from PJRT literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> HostTensor {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims_i64)
+            .map_err(|e| anyhow!("literal reshape: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        Ok(HostTensor::new(dims, data))
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl CompiledKernel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; returns the tuple elements (the AOT
+    /// path lowers with `return_tuple=True`, so outputs arrive as one
+    /// tuple literal).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let lit = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: empty result", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+        let z = HostTensor::zeros(vec![4, 5]);
+        assert_eq!(z.data.len(), 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_mismatch() {
+        HostTensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    // Client-dependent tests live in rust/tests/pjrt_roundtrip.rs, which
+    // require the artifacts to be built (`make artifacts`).
+}

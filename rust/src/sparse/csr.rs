@@ -1,0 +1,350 @@
+//! Compressed Sparse Row matrix — the storage format for the input slices
+//! `X_k` and (in the baseline) anything derived from them.
+//!
+//! Column indices are `u32` (the variable mode J tops out in the tens of
+//! thousands here and in the paper), values are `f64` to match the Matlab
+//! double-precision reference.
+
+use crate::linalg::Mat;
+
+/// Immutable CSR sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, `rows + 1` entries.
+    indptr: Vec<usize>,
+    /// Column index per nonzero, sorted within each row.
+    indices: Vec<u32>,
+    /// Value per nonzero.
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO triplets (duplicates are summed, zeros dropped).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Csr {
+        let mut items: Vec<(usize, u32, f64)> = triplets
+            .into_iter()
+            .inspect(|&(r, c, _)| {
+                assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds {rows}x{cols}")
+            })
+            .map(|(r, c, v)| (r, c as u32, v))
+            .collect();
+        items.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(items.len());
+        let mut values: Vec<f64> = Vec::with_capacity(items.len());
+        let mut prev: Option<(usize, u32)> = None;
+        for (r, c, v) in items {
+            if prev == Some((r, c)) {
+                // duplicate coordinate: accumulate
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r + 1] += 1;
+                prev = Some((r, c));
+            }
+        }
+        // prefix-sum the per-row counts
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        // drop explicit zeros
+        let mut out = Csr { rows, cols, indptr, indices, values };
+        out.prune_zeros();
+        out
+    }
+
+    fn prune_zeros(&mut self) {
+        if self.values.iter().all(|&v| v != 0.0) {
+            return;
+        }
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.indices.len());
+        let mut values = Vec::with_capacity(self.values.len());
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                if self.values[k] != 0.0 {
+                    indices.push(self.indices[k]);
+                    values.push(self.values[k]);
+                }
+            }
+            indptr[r + 1] = indices.len();
+        }
+        self.indptr = indptr;
+        self.indices = indices;
+        self.values = values;
+    }
+
+    /// Build directly from raw CSR arrays (validated).
+    pub fn from_raw(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f64>) -> Csr {
+        assert_eq!(indptr.len(), rows + 1);
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
+        assert_eq!(indices.len(), values.len());
+        for r in 0..rows {
+            assert!(indptr[r] <= indptr[r + 1], "indptr not monotone at row {r}");
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "columns not strictly sorted in row {r}");
+            }
+            if let Some(&last) = row.last() {
+                assert!((last as usize) < cols, "col out of bounds in row {r}");
+            }
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Dense → CSR (tests and small examples).
+    pub fn from_dense(m: &Mat) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        Csr::from_triplets(m.rows(), m.cols(), trips)
+    }
+
+    /// CSR → dense (tests and small examples).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (c, v) in self.row_iter(r) {
+                m[(r, c as usize)] = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of nonzeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Iterate `(col, value)` over row `r`.
+    #[inline]
+    pub fn row_iter(&self, r: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Raw slices of row `r`: (column indices, values).
+    #[inline]
+    pub fn row_parts(&self, r: usize) -> (&[u32], &[f64]) {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Sorted list of columns that contain at least one nonzero — the
+    /// "column support" whose exploitation is SPARTan's core trick.
+    pub fn col_support(&self) -> Vec<u32> {
+        let mut seen = vec![false; self.cols];
+        for &c in &self.indices {
+            seen[c as usize] = true;
+        }
+        (0..self.cols as u32).filter(|&c| seen[c as usize]).collect()
+    }
+
+    /// Count of nonzero columns without materializing the support.
+    pub fn col_support_size(&self) -> usize {
+        let mut seen = vec![false; self.cols];
+        let mut n = 0;
+        for &c in &self.indices {
+            if !seen[c as usize] {
+                seen[c as usize] = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Drop all-zero rows (the paper filters them: every retained
+    /// observation has at least one recorded event). Returns the new
+    /// matrix and the kept original row ids.
+    pub fn filter_zero_rows(&self) -> (Csr, Vec<usize>) {
+        let kept: Vec<usize> = (0..self.rows).filter(|&r| self.row_nnz(r) > 0).collect();
+        let mut indptr = Vec::with_capacity(kept.len() + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        for &r in &kept {
+            let (cs, vs) = self.row_parts(r);
+            indices.extend_from_slice(cs);
+            values.extend_from_slice(vs);
+            indptr.push(indices.len());
+        }
+        (
+            Csr { rows: kept.len(), cols: self.cols, indptr, indices, values },
+            kept,
+        )
+    }
+
+    /// `self · dense` → dense (rows × dense.cols()); streams CSR rows.
+    pub fn matmul_dense(&self, dense: &Mat) -> Mat {
+        assert_eq!(self.cols, dense.rows(), "spmm dim mismatch");
+        let mut out = Mat::zeros(self.rows, dense.cols());
+        for r in 0..self.rows {
+            let orow = out.row_mut(r);
+            for (c, v) in self.row_iter(r) {
+                let drow = dense.row(c as usize);
+                for (o, &d) in orow.iter_mut().zip(drow) {
+                    *o += v * d;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · dense` → dense (cols × dense.cols()); scatter over rows.
+    pub fn t_matmul_dense(&self, dense: &Mat) -> Mat {
+        assert_eq!(self.rows, dense.rows(), "spmm^T dim mismatch");
+        let mut out = Mat::zeros(self.cols, dense.cols());
+        for r in 0..self.rows {
+            let drow = dense.row(r);
+            for (c, v) in self.row_iter(r) {
+                let orow = out.row_mut(c as usize);
+                for (o, &d) in orow.iter_mut().zip(drow) {
+                    *o += v * d;
+                }
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Heap bytes used (for the memory-budget accounting).
+    pub fn heap_bytes(&self) -> u64 {
+        (self.indptr.capacity() * std::mem::size_of::<usize>()
+            + self.indices.capacity() * std::mem::size_of::<u32>()
+            + self.values.capacity() * std::mem::size_of::<f64>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_triplets_basic() {
+        let m = Csr::from_triplets(3, 4, vec![(0, 1, 2.0), (2, 3, 5.0), (0, 0, 1.0)]);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        let d = m.to_dense();
+        assert_eq!(d[(0, 0)], 1.0);
+        assert_eq!(d[(0, 1)], 2.0);
+        assert_eq!(d[(2, 3)], 5.0);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let m = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5), (1, 1, -1.0), (1, 1, 1.0)]);
+        assert_eq!(m.to_dense()[(0, 0)], 3.5);
+        // (1,1) summed to zero → pruned
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = Mat::from_rows(&[&[0.0, 1.5, 0.0], &[2.0, 0.0, 0.0]]);
+        let s = Csr::from_dense(&d);
+        assert_eq!(s.to_dense(), d);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn col_support_detects() {
+        let m = Csr::from_triplets(3, 5, vec![(0, 4, 1.0), (1, 1, 1.0), (2, 4, 2.0)]);
+        assert_eq!(m.col_support(), vec![1, 4]);
+        assert_eq!(m.col_support_size(), 2);
+    }
+
+    #[test]
+    fn filter_zero_rows_keeps_ids() {
+        let m = Csr::from_triplets(4, 2, vec![(1, 0, 1.0), (3, 1, 2.0)]);
+        let (f, kept) = m.filter_zero_rows();
+        assert_eq!(kept, vec![1, 3]);
+        assert_eq!(f.rows(), 2);
+        assert_eq!(f.to_dense()[(0, 0)], 1.0);
+        assert_eq!(f.to_dense()[(1, 1)], 2.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seed(71);
+        let dense_a = Mat::from_fn(6, 8, |_, _| {
+            if rng.chance(0.3) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let a = Csr::from_dense(&dense_a);
+        let b = Mat::rand_normal(8, 5, &mut rng);
+        let want = crate::linalg::matmul(&dense_a, &b);
+        assert!(a.matmul_dense(&b).max_abs_diff(&want) < 1e-12);
+        let c = Mat::rand_normal(6, 4, &mut rng);
+        let want_t = crate::linalg::matmul(&dense_a.transpose(), &c);
+        assert!(a.t_matmul_dense(&c).max_abs_diff(&want_t) < 1e-12);
+    }
+
+    #[test]
+    fn from_raw_validates() {
+        let m = Csr::from_raw(2, 3, vec![0, 1, 2], vec![2, 0], vec![1.0, 2.0]);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_raw_rejects_unsorted() {
+        Csr::from_raw(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn fro_norm_sq() {
+        let m = Csr::from_triplets(2, 2, vec![(0, 0, 3.0), (1, 1, 4.0)]);
+        assert_eq!(m.fro_norm_sq(), 25.0);
+    }
+}

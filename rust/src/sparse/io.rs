@@ -1,0 +1,244 @@
+//! Binary + text serialization for irregular tensors.
+//!
+//! Format `SPT1` (little-endian):
+//! ```text
+//! magic   b"SPT1"
+//! u64     K (number of subjects)
+//! u64     J (shared variable count)
+//! per subject k:
+//!   u64   I_k (rows)
+//!   u64   nnz_k
+//!   u64 × (I_k + 1)  indptr
+//!   u32 × nnz_k      column indices
+//!   f64 × nnz_k      values
+//! ```
+//! Plus a simple text loader for triplet files
+//! (`k i j value` per line, whitespace-separated, `#` comments) so users
+//! can bring their own data without writing the binary format.
+
+use super::csr::Csr;
+use super::irregular::IrregularTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SPT1";
+
+/// Write an irregular tensor in SPT1 binary format.
+pub fn save_binary(t: &IrregularTensor, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(t.k() as u64).to_le_bytes())?;
+    w.write_all(&(t.j() as u64).to_le_bytes())?;
+    for k in 0..t.k() {
+        let s = t.slice(k);
+        w.write_all(&(s.rows() as u64).to_le_bytes())?;
+        w.write_all(&(s.nnz() as u64).to_le_bytes())?;
+        for &p in s.indptr() {
+            w.write_all(&(p as u64).to_le_bytes())?;
+        }
+        for &c in s.indices() {
+            w.write_all(&c.to_le_bytes())?;
+        }
+        for &v in s.values() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an irregular tensor in SPT1 binary format.
+pub fn load_binary(path: &Path) -> Result<IrregularTensor> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an SPT1 file (bad magic)", path.display());
+    }
+    let k = read_u64(&mut r)? as usize;
+    let j = read_u64(&mut r)? as usize;
+    if k == 0 {
+        bail!("{}: zero subjects", path.display());
+    }
+    let mut slices = Vec::with_capacity(k);
+    for idx in 0..k {
+        let rows = read_u64(&mut r)? as usize;
+        let nnz = read_u64(&mut r)? as usize;
+        let mut indptr = Vec::with_capacity(rows + 1);
+        for _ in 0..=rows {
+            indptr.push(read_u64(&mut r)? as usize);
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        let mut buf4 = [0u8; 4];
+        for _ in 0..nnz {
+            r.read_exact(&mut buf4)?;
+            indices.push(u32::from_le_bytes(buf4));
+        }
+        let mut values = Vec::with_capacity(nnz);
+        let mut buf8 = [0u8; 8];
+        for _ in 0..nnz {
+            r.read_exact(&mut buf8)?;
+            values.push(f64::from_le_bytes(buf8));
+        }
+        if *indptr.last().unwrap_or(&0) != nnz {
+            bail!("{}: slice {idx} indptr/nnz mismatch", path.display());
+        }
+        slices.push(Csr::from_raw(rows, j, indptr, indices, values));
+    }
+    Ok(IrregularTensor::new_unchecked(slices))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+/// Load a whitespace-separated triplet file: `k i j value` per line
+/// (0-based indices). Lines starting with `#` are comments. Dimensions are
+/// inferred; subjects are compacted to the observed max index + 1.
+pub fn load_triplets_text(path: &Path) -> Result<IrregularTensor> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut per_subject: Vec<Vec<(usize, usize, f64)>> = Vec::new();
+    let mut max_j = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let parse = |tok: Option<&str>, what: &str| -> Result<f64> {
+            tok.with_context(|| format!("line {}: missing {what}", lineno + 1))?
+                .parse::<f64>()
+                .with_context(|| format!("line {}: bad {what}", lineno + 1))
+        };
+        let k = parse(it.next(), "subject")? as usize;
+        let i = parse(it.next(), "row")? as usize;
+        let j = parse(it.next(), "col")? as usize;
+        let v = parse(it.next(), "value")?;
+        if k >= per_subject.len() {
+            per_subject.resize_with(k + 1, Vec::new);
+        }
+        max_j = max_j.max(j);
+        per_subject[k].push((i, j, v));
+    }
+    if per_subject.is_empty() {
+        bail!("{}: no triplets found", path.display());
+    }
+    let j_dim = max_j + 1;
+    let slices: Vec<Csr> = per_subject
+        .into_iter()
+        .map(|trips| {
+            let rows = trips.iter().map(|&(i, _, _)| i + 1).max().unwrap_or(0);
+            Csr::from_triplets(rows.max(1), j_dim, trips)
+        })
+        .collect();
+    Ok(IrregularTensor::new(slices))
+}
+
+/// Write an irregular tensor as a triplet text file (inverse of
+/// [`load_triplets_text`]).
+pub fn save_triplets_text(t: &IrregularTensor, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# SPARTan irregular tensor: k i j value ({} subjects, J={})", t.k(), t.j())?;
+    for k in 0..t.k() {
+        let s = t.slice(k);
+        for i in 0..s.rows() {
+            for (j, v) in s.row_iter(i) {
+                writeln!(w, "{k} {i} {j} {v}")?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_irregular(seed: u64) -> IrregularTensor {
+        let mut rng = Pcg64::seed(seed);
+        let j = 12;
+        let slices: Vec<Csr> = (0..5)
+            .map(|_| {
+                let rows = rng.range(1, 8);
+                let nnz = rng.range(1, rows * 3 + 1);
+                let trips: Vec<(usize, usize, f64)> = (0..nnz)
+                    .map(|_| (rng.range(0, rows), rng.range(0, j), rng.normal()))
+                    .collect();
+                Csr::from_triplets(rows, j, trips)
+            })
+            .collect();
+        IrregularTensor::new(slices)
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let t = random_irregular(91);
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_test.spt");
+        save_binary(&t, &path).unwrap();
+        let t2 = load_binary(&path).unwrap();
+        assert_eq!(t.k(), t2.k());
+        assert_eq!(t.j(), t2.j());
+        assert_eq!(t.nnz(), t2.nnz());
+        for k in 0..t.k() {
+            assert_eq!(t.slice(k), t2.slice(k));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let t = random_irregular(92);
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_test.txt");
+        save_triplets_text(&t, &path).unwrap();
+        let t2 = load_triplets_text(&path).unwrap();
+        assert_eq!(t.k(), t2.k());
+        assert_eq!(t.nnz(), t2.nnz());
+        for k in 0..t.k() {
+            // dense compare handles any J-dim inference differences
+            let a = t.slice(k).to_dense();
+            let b = t2.slice(k).to_dense();
+            for i in 0..a.rows() {
+                for j in 0..a.cols().min(b.cols()) {
+                    assert!((a[(i, j)] - b[(i, j)]).abs() < 1e-12);
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_bad.spt");
+        std::fs::write(&path, b"NOPE123456").unwrap();
+        assert!(load_binary(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn text_comments_and_blank_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_comments.txt");
+        std::fs::write(&path, "# header\n\n0 0 2 1.5\n0 1 0 2.0\n1 0 1 3.0\n").unwrap();
+        let t = load_triplets_text(&path).unwrap();
+        assert_eq!(t.k(), 2);
+        assert_eq!(t.j(), 3);
+        assert_eq!(t.nnz(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+}

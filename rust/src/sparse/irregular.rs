@@ -1,0 +1,201 @@
+//! The "irregular tensor": a collection of K sparse slices
+//! `{X_k ∈ R^{I_k × J}}` sharing the variable mode J but with unaligned
+//! observation counts `I_k` — the input object of PARAFAC2 (paper Fig. 1).
+
+use super::csr::Csr;
+use crate::linalg::Mat;
+
+/// Collection of CSR slices with a shared column (variable) dimension.
+#[derive(Clone, Debug)]
+pub struct IrregularTensor {
+    j: usize,
+    slices: Vec<Csr>,
+}
+
+impl IrregularTensor {
+    /// Build from slices; validates the shared J and filters all-zero rows
+    /// (the paper: "all their I_k rows will contain at least one non-zero
+    /// element; if this is not the case, we can simply filter").
+    pub fn new(slices: Vec<Csr>) -> IrregularTensor {
+        assert!(!slices.is_empty(), "need at least one slice");
+        let j = slices[0].cols();
+        let filtered: Vec<Csr> = slices
+            .into_iter()
+            .enumerate()
+            .map(|(k, s)| {
+                assert_eq!(s.cols(), j, "slice {k} has J={} expected {j}", s.cols());
+                let (f, _) = s.filter_zero_rows();
+                f
+            })
+            .collect();
+        IrregularTensor { j, slices: filtered }
+    }
+
+    /// Build without filtering (when the caller guarantees no zero rows).
+    pub fn new_unchecked(slices: Vec<Csr>) -> IrregularTensor {
+        let j = slices.first().map(|s| s.cols()).unwrap_or(0);
+        IrregularTensor { j, slices }
+    }
+
+    /// Number of subjects K.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Shared variable count J.
+    #[inline]
+    pub fn j(&self) -> usize {
+        self.j
+    }
+
+    /// Observation count I_k of subject `k`.
+    #[inline]
+    pub fn i_k(&self, k: usize) -> usize {
+        self.slices[k].rows()
+    }
+
+    #[inline]
+    pub fn slice(&self, k: usize) -> &Csr {
+        &self.slices[k]
+    }
+
+    pub fn slices(&self) -> &[Csr] {
+        &self.slices
+    }
+
+    /// Total nonzeros across all slices.
+    pub fn nnz(&self) -> usize {
+        self.slices.iter().map(|s| s.nnz()).sum()
+    }
+
+    /// Largest observation count.
+    pub fn max_i_k(&self) -> usize {
+        self.slices.iter().map(|s| s.rows()).max().unwrap_or(0)
+    }
+
+    /// Mean observation count.
+    pub fn mean_i_k(&self) -> f64 {
+        if self.slices.is_empty() {
+            return 0.0;
+        }
+        self.slices.iter().map(|s| s.rows()).sum::<usize>() as f64 / self.k() as f64
+    }
+
+    /// Σ_k ‖X_k‖²_F — the constant term of the ALS objective.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.slices.iter().map(|s| s.fro_norm_sq()).sum()
+    }
+
+    /// Restrict to the first `k` subjects (subject-sweep experiments).
+    pub fn take_subjects(&self, k: usize) -> IrregularTensor {
+        assert!(k >= 1 && k <= self.k());
+        IrregularTensor { j: self.j, slices: self.slices[..k].to_vec() }
+    }
+
+    /// Restrict to the first `j` variables, dropping out-of-range nonzeros
+    /// and then re-filtering empty rows (variable-sweep experiments,
+    /// paper Fig. 7).
+    pub fn take_variables(&self, j: usize) -> IrregularTensor {
+        assert!(j >= 1 && j <= self.j);
+        let slices: Vec<Csr> = self
+            .slices
+            .iter()
+            .map(|s| {
+                let trips: Vec<(usize, usize, f64)> = (0..s.rows())
+                    .flat_map(|r| {
+                        s.row_iter(r)
+                            .filter(|&(c, _)| (c as usize) < j)
+                            .map(move |(c, v)| (r, c as usize, v))
+                            .collect::<Vec<_>>()
+                    })
+                    .collect();
+                Csr::from_triplets(s.rows(), j, trips)
+            })
+            .collect();
+        // keep only subjects that still have nonzeros, filter zero rows
+        let nonempty: Vec<Csr> = slices.into_iter().filter(|s| s.nnz() > 0).collect();
+        assert!(!nonempty.is_empty(), "variable restriction removed all data");
+        IrregularTensor::new(nonempty)
+    }
+
+    /// Dense materialization of slice k (tests only).
+    pub fn slice_dense(&self, k: usize) -> Mat {
+        self.slices[k].to_dense()
+    }
+
+    /// Heap footprint of the whole collection.
+    pub fn heap_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.heap_bytes()).sum()
+    }
+
+    /// Summary line for logs (matches the paper's Table 3 fields).
+    pub fn summary(&self) -> String {
+        format!(
+            "K={} J={} max(I_k)={} mean(I_k)={:.1} nnz={}",
+            self.k(),
+            self.j(),
+            self.max_i_k(),
+            self.mean_i_k(),
+            crate::util::humansize::count(self.nnz() as u64)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> IrregularTensor {
+        let x0 = Csr::from_triplets(3, 4, vec![(0, 0, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
+        let x1 = Csr::from_triplets(2, 4, vec![(0, 1, 4.0), (1, 1, 5.0)]);
+        IrregularTensor::new(vec![x0, x1])
+    }
+
+    #[test]
+    fn basic_stats() {
+        let t = tiny();
+        assert_eq!(t.k(), 2);
+        assert_eq!(t.j(), 4);
+        assert_eq!(t.i_k(0), 3);
+        assert_eq!(t.i_k(1), 2);
+        assert_eq!(t.nnz(), 5);
+        assert_eq!(t.max_i_k(), 3);
+        assert!((t.mean_i_k() - 2.5).abs() < 1e-12);
+        assert!((t.fro_norm_sq() - (1.0 + 4.0 + 9.0 + 16.0 + 25.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_rows_filtered_on_construction() {
+        let x = Csr::from_triplets(5, 3, vec![(1, 0, 1.0), (4, 2, 1.0)]);
+        let t = IrregularTensor::new(vec![x]);
+        assert_eq!(t.i_k(0), 2);
+    }
+
+    #[test]
+    fn take_subjects_prefix() {
+        let t = tiny();
+        let t1 = t.take_subjects(1);
+        assert_eq!(t1.k(), 1);
+        assert_eq!(t1.nnz(), 3);
+    }
+
+    #[test]
+    fn take_variables_drops_and_refilters() {
+        let t = tiny();
+        let tv = t.take_variables(2);
+        // slice 0 keeps only (0,0); slice 1 keeps both (col 1)
+        assert_eq!(tv.k(), 2);
+        assert_eq!(tv.j(), 2);
+        assert_eq!(tv.i_k(0), 1); // rows 1,2 of slice 0 became empty
+        assert_eq!(tv.nnz(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_j_rejected() {
+        let x0 = Csr::from_triplets(1, 3, vec![(0, 0, 1.0)]);
+        let x1 = Csr::from_triplets(1, 4, vec![(0, 0, 1.0)]);
+        IrregularTensor::new(vec![x0, x1]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Sparse data structures for PARAFAC2's "irregular tensors": CSR slices,
+//! the K-slice collection, the COO tensor the baseline materializes, and
+//! file I/O.
+
+pub mod coo;
+pub mod csr;
+pub mod io;
+pub mod irregular;
+
+pub use coo::CooTensor3;
+pub use csr::Csr;
+pub use irregular::IrregularTensor;

@@ -1,0 +1,205 @@
+//! Scoped data-parallel execution over the K subjects.
+//!
+//! The paper's kernels are "fully parallelizable w.r.t. the K subjects"
+//! (§4.1) and the reference implementation leans on Matlab's parallel
+//! pool. The offline crate set has no rayon, so this is a small scoped
+//! pool built on `std::thread::scope`:
+//!
+//! * work is split into contiguous chunks of subjects,
+//! * workers pull chunk ids from an atomic counter (dynamic load balance —
+//!   subjects have wildly different nnz, so static splits would skew),
+//! * per-chunk results are returned **in chunk order**, so reductions are
+//!   bit-for-bit deterministic regardless of thread scheduling.
+
+pub mod partition;
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A lightweight handle describing how much parallelism to use.
+/// (Threads are spawned per call via `std::thread::scope`; at the chunk
+/// sizes used by the kernels, spawn cost is noise.)
+#[derive(Clone, Debug)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// `workers = 0` resolves to the machine's available parallelism.
+    pub fn new(workers: usize) -> Pool {
+        let resolved = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        Pool { workers: resolved.max(1) }
+    }
+
+    /// Single-threaded pool (useful to measure parallel overhead).
+    pub fn serial() -> Pool {
+        Pool { workers: 1 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to chunk index ranges covering `0..n`, returning per-chunk
+    /// results **ordered by chunk id**.
+    pub fn par_chunk_results<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        // Serial fast path: no synchronization, no spawns.
+        if self.workers == 1 || n_chunks == 1 {
+            return (0..n_chunks)
+                .map(|c| f(c * chunk..((c + 1) * chunk).min(n)))
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<R>>> =
+            Mutex::new((0..n_chunks).map(|_| None).collect());
+        let threads = self.workers.min(n_chunks);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let c = next.fetch_add(1, Ordering::Relaxed);
+                    if c >= n_chunks {
+                        break;
+                    }
+                    let r = f(c * chunk..((c + 1) * chunk).min(n));
+                    slots.lock().unwrap()[c] = Some(r);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("chunk result missing"))
+            .collect()
+    }
+
+    /// Parallel fold: per-chunk partial results merged in chunk order
+    /// (deterministic).
+    pub fn par_fold<R, F, M>(&self, n: usize, chunk: usize, f: F, mut merge: M) -> Option<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+        M: FnMut(R, R) -> R,
+    {
+        let mut parts = self.par_chunk_results(n, chunk, f).into_iter();
+        let first = parts.next()?;
+        Some(parts.fold(first, |acc, x| merge(acc, x)))
+    }
+
+    /// Parallel for-each over indices.
+    pub fn par_for<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.par_chunk_results(n, chunk, |range| {
+            for i in range {
+                f(i);
+            }
+        });
+    }
+
+    /// Parallel map preserving order.
+    pub fn par_map<T, F>(&self, n: usize, chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let nested =
+            self.par_chunk_results(n, chunk, |range| range.map(&f).collect::<Vec<T>>());
+        let mut out = Vec::with_capacity(n);
+        for v in nested {
+            out.extend(v);
+        }
+        out
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunk_results_cover_everything_in_order() {
+        let pool = Pool::new(4);
+        let res = pool.par_chunk_results(10, 3, |r| r.collect::<Vec<usize>>());
+        assert_eq!(res.len(), 4);
+        assert_eq!(res[0], vec![0, 1, 2]);
+        assert_eq!(res[3], vec![9]);
+    }
+
+    #[test]
+    fn par_fold_deterministic_sum() {
+        let pool = Pool::new(8);
+        let want: u64 = (0..1000u64).sum();
+        for _ in 0..5 {
+            let got = pool
+                .par_fold(1000, 7, |r| r.map(|i| i as u64).sum::<u64>(), |a, b| a + b)
+                .unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn par_fold_empty_is_none() {
+        let pool = Pool::new(2);
+        assert_eq!(pool.par_fold(0, 4, |_| 1u32, |a, b| a + b), None);
+    }
+
+    #[test]
+    fn par_for_touches_each_once() {
+        let pool = Pool::new(4);
+        let counter = AtomicU64::new(0);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.par_for(100, 9, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_order_preserved() {
+        let pool = Pool::new(4);
+        let out = pool.par_map(57, 5, |i| i * i);
+        assert_eq!(out, (0..57).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_matches_parallel() {
+        let serial = Pool::serial();
+        let par = Pool::new(4);
+        let f = |r: Range<usize>| r.map(|i| (i as f64).sqrt()).sum::<f64>();
+        let a = serial.par_fold(500, 13, f, |x, y| x + y).unwrap();
+        let b = par.par_fold(500, 13, f, |x, y| x + y).unwrap();
+        assert_eq!(a, b); // bitwise equal because merge order is fixed
+    }
+
+    #[test]
+    fn workers_resolved() {
+        assert!(Pool::new(0).workers() >= 1);
+        assert_eq!(Pool::new(3).workers(), 3);
+        assert_eq!(Pool::serial().workers(), 1);
+    }
+}

@@ -1,0 +1,81 @@
+//! Human-readable byte and count formatting for logs and bench tables.
+
+/// Format a byte count: `1.5GiB`, `320.0MiB`, `47B`, ...
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n}B");
+    }
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    format!("{x:.1}{}", UNITS[u])
+}
+
+/// Format a count with SI-ish suffixes: `12.3M`, `500K`, `42`.
+pub fn count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 10_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Parse a human size like "512MiB", "1.5GB", "300M", "1024" into bytes.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let x: f64 = num.parse().ok()?;
+    if x < 0.0 {
+        return None;
+    }
+    let mult: u64 = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" | "" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1u64 << 40,
+        _ => return None,
+    };
+    Some((x * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2.0KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0MiB");
+        assert_eq!(bytes(5 * 1024 * 1024 * 1024), "5.0GiB");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(count(42), "42");
+        assert_eq!(count(63_000_000), "63.00M");
+        assert_eq!(count(12_300), "12.3K");
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        assert_eq!(parse_bytes("1024"), Some(1024));
+        assert_eq!(parse_bytes("512MiB"), Some(512 << 20));
+        assert_eq!(parse_bytes("1.5GB"), Some((1.5 * (1u64 << 30) as f64) as u64));
+        assert_eq!(parse_bytes("2K"), Some(2048));
+        assert_eq!(parse_bytes("nonsense"), None);
+        assert_eq!(parse_bytes("-5MB"), None);
+    }
+}

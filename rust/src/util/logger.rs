@@ -1,0 +1,132 @@
+//! Tiny leveled logger (the offline crate set has no `tracing`, and the
+//! coordinator wants structured, timestamped progress lines).
+//!
+//! Global level is process-wide and cheap to read (atomic). Use the
+//! [`crate::info!`] / [`crate::debug!`] / [`crate::warn!`] macros.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            "off" | "none" => Some(Level::Off),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+            Level::Off => "OFF  ",
+        }
+    }
+}
+
+/// Set the global level (also honors `SPARTAN_LOG` env at first use).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        3 => Level::Error,
+        _ => Level::Off,
+    }
+}
+
+/// Initialize from the `SPARTAN_LOG` environment variable if present.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SPARTAN_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+fn start_instant() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Core emit function used by the macros. `module` is `module_path!()`.
+pub fn emit(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl < level() {
+        return;
+    }
+    let t = start_instant().elapsed().as_secs_f64();
+    let short = module.rsplit("::").next().unwrap_or(module);
+    eprintln!("[{t:9.3}s {} {short}] {msg}", lvl.tag());
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("INFO"), Some(Level::Info));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Warn < Level::Error);
+        assert!(Level::Error < Level::Off);
+    }
+}

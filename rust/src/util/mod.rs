@@ -1,0 +1,14 @@
+//! Cross-cutting utilities: RNG, timing, logging, JSON, sizes, memory
+//! accounting. Everything here is dependency-free substrate the rest of
+//! the crate builds on.
+
+pub mod humansize;
+pub mod json;
+pub mod logger;
+pub mod membudget;
+pub mod rng;
+pub mod timer;
+
+pub use membudget::MemBudget;
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

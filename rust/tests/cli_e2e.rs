@@ -1,0 +1,229 @@
+//! End-to-end CLI tests: spawn the real `spartan` binary (cargo exposes it
+//! via `CARGO_BIN_EXE_spartan`) and drive the generate → inspect →
+//! decompose → phenotype flow a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn spartan() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_spartan"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spartan_cli_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = spartan().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["generate", "decompose", "phenotype", "inspect", "artifacts-check"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_cleanly() {
+    let out = spartan().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_option_fails_with_hint() {
+    let out = spartan().args(["inspect", "--nope", "x"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--nope"), "stderr: {err}");
+}
+
+#[test]
+fn generate_inspect_decompose_flow() {
+    let dir = tmpdir("flow");
+    let data = dir.join("data.spt");
+    let out = spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", "80", "--variables", "30", "--max-obs", "10",
+            "--nnz", "6000", "--rank", "3", "--seed", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = spartan().args(["inspect", "--input", data.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("K=80"), "{text}");
+    assert!(text.contains("column support"));
+
+    let model_dir = dir.join("model");
+    let out = spartan()
+        .args([
+            "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--max-iters", "8", "--workers", "1",
+            "--save-model", model_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fit:"), "{text}");
+    for f in ["H.csv", "V.csv", "W.csv", "U0.csv"] {
+        assert!(model_dir.join(f).exists(), "missing {f}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn decompose_baseline_with_budget_reports_oom() {
+    let dir = tmpdir("oom");
+    let data = dir.join("data.spt");
+    spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", "60", "--variables", "40", "--max-obs", "10",
+            "--nnz", "8000", "--rank", "4",
+        ])
+        .output()
+        .unwrap();
+    let out = spartan()
+        .args([
+            "decompose", "--input", data.to_str().unwrap(), "--rank", "4",
+            "--engine", "baseline", "--mem-budget", "1KB", "--max-iters", "3",
+            "--workers", "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("OoM")
+            || String::from_utf8_lossy(&out.stderr).contains("memory budget"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ehr_generate_and_phenotype_reports() {
+    let dir = tmpdir("pheno");
+    let data = dir.join("ehr.spt");
+    let out = spartan()
+        .args([
+            "generate", "--kind", "ehr", "--out", data.to_str().unwrap(),
+            "--subjects", "120", "--phenotypes", "3", "--max-obs", "25",
+            "--seed", "11",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("ehr.spt.vocab.csv").exists());
+
+    let reports = dir.join("reports");
+    let out = spartan()
+        .args([
+            "phenotype", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--out-dir", reports.to_str().unwrap(), "--patients", "2",
+            "--max-iters", "20", "--workers", "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(reports.join("phenotype_definitions.txt").exists());
+    assert!(reports.join("patient0_signature.csv").exists());
+    assert!(reports.join("patient1_events.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restarts_pick_best_and_report() {
+    let dir = tmpdir("restarts");
+    let data = dir.join("data.spt");
+    spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", "40", "--variables", "20", "--max-obs", "8",
+            "--nnz", "3000", "--rank", "3", "--seed", "6",
+        ])
+        .output()
+        .unwrap();
+    let out = spartan()
+        .args([
+            "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--max-iters", "8", "--workers", "1", "--restarts", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(text.matches("restart ").count(), 3, "{text}");
+    assert!(text.contains("← best"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compare_times_both_engines() {
+    let dir = tmpdir("compare");
+    let data = dir.join("data.spt");
+    spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", "40", "--variables", "20", "--max-obs", "8",
+            "--nnz", "3000", "--rank", "3", "--seed", "6",
+        ])
+        .output()
+        .unwrap();
+    let out = spartan()
+        .args([
+            "compare", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--workers", "1", "--artifacts", "/nonexistent",
+        ])
+        .env("SPARTAN_BENCH_FAST", "1")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("spartan (native)"), "{text}");
+    assert!(text.contains("baseline"), "{text}");
+    assert!(text.contains("pjrt skipped"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engines_agree_via_cli() {
+    let dir = tmpdir("engines");
+    let data = dir.join("data.spt");
+    spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", "50", "--variables", "25", "--max-obs", "8",
+            "--nnz", "4000", "--rank", "3", "--seed", "8",
+        ])
+        .output()
+        .unwrap();
+    let fit_of = |engine: &str| -> String {
+        let out = spartan()
+            .args([
+                "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+                "--engine", engine, "--max-iters", "6", "--seed", "2",
+                "--workers", "1",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{engine}: {}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        text.lines().find(|l| l.starts_with("fit:")).unwrap().to_string()
+    };
+    let native = fit_of("native");
+    let baseline = fit_of("baseline");
+    // identical math ⇒ identical printed fit line
+    assert_eq!(
+        native.split_whitespace().nth(1),
+        baseline.split_whitespace().nth(1)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,268 @@
+//! Cross-layer integration: rust loads and executes the AOT-compiled
+//! JAX/Pallas artifacts and must agree numerically with the native f64
+//! kernels. Requires `make artifacts`; tests skip (with a loud message)
+//! when the artifact directory is absent so `cargo test` works standalone.
+
+use spartan::coordinator::packing;
+use spartan::coordinator::{PjrtDriver, PjrtFitConfig};
+use spartan::datagen::synthetic::{generate, SyntheticSpec};
+use spartan::linalg::Mat;
+use spartan::parafac2::{fit_parafac2, Parafac2Config};
+use spartan::runtime::{ArtifactRegistry, HostTensor, Kind, PjrtContext};
+use spartan::util::rng::Pcg64;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("SPARTAN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", p.display());
+        None
+    }
+}
+
+fn rand_tensor(rng: &mut Pcg64, dims: Vec<usize>) -> HostTensor {
+    let n = dims.iter().product();
+    HostTensor::new(dims, (0..n).map(|_| rng.normal() as f32).collect())
+}
+
+#[test]
+fn mttkrp_kernels_match_native_math() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let (b, r) = (reg.batch, reg.rank);
+    let c = reg.c_buckets[0];
+    let mut rng = Pcg64::seed(71);
+
+    let yt = rand_tensor(&mut rng, vec![b, c, r]);
+    let vc = rand_tensor(&mut rng, vec![b, c, r]);
+    let w = rand_tensor(&mut rng, vec![b, r]);
+    let h = rand_tensor(&mut rng, vec![r, r]);
+
+    // native f64 reference of the packed math
+    let mut m1_want = Mat::zeros(r, r);
+    for t in 0..b {
+        // temp = ytᵀ·vc, rowhad w
+        for i in 0..r {
+            for jj in 0..r {
+                let mut s = 0.0f64;
+                for cc in 0..c {
+                    s += yt.data[t * c * r + cc * r + i] as f64
+                        * vc.data[t * c * r + cc * r + jj] as f64;
+                }
+                m1_want[(i, jj)] += s * w.data[t * r + jj] as f64;
+            }
+        }
+    }
+    let k1 = reg.kernel(&ctx, Kind::Mttkrp1, None, c).unwrap();
+    let out = k1.run(&[yt.clone(), vc.clone(), w.clone()]).unwrap();
+    let m1 = &out[0];
+    assert_eq!(m1.dims, vec![r, r]);
+    for i in 0..r {
+        for jj in 0..r {
+            let got = m1.data[i * r + jj] as f64;
+            let want = m1_want[(i, jj)];
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "m1[{i},{jj}] {got} vs {want}"
+            );
+        }
+    }
+
+    // mode 2: rows = (yt·h) * w
+    let k2 = reg.kernel(&ctx, Kind::Mttkrp2, None, c).unwrap();
+    let out = k2.run(&[yt.clone(), h.clone(), w.clone()]).unwrap();
+    let m2 = &out[0];
+    assert_eq!(m2.dims, vec![b, c, r]);
+    for t in 0..b.min(2) {
+        for cc in 0..c.min(4) {
+            for jj in 0..r {
+                let mut s = 0.0f64;
+                for i in 0..r {
+                    s += yt.data[t * c * r + cc * r + i] as f64 * h.data[i * r + jj] as f64;
+                }
+                let want = s * w.data[t * r + jj] as f64;
+                let got = m2.data[t * c * r + cc * r + jj] as f64;
+                assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()));
+            }
+        }
+    }
+
+    // mode 3: rows = Σ_i h(i,:) ∘ (ytᵀ·vc)(i,:)
+    let k3 = reg.kernel(&ctx, Kind::Mttkrp3, None, c).unwrap();
+    let out = k3.run(&[yt.clone(), vc.clone(), h.clone()]).unwrap();
+    let m3 = &out[0];
+    assert_eq!(m3.dims, vec![b, r]);
+    for t in 0..b.min(3) {
+        for jj in 0..r {
+            let mut want = 0.0f64;
+            for i in 0..r {
+                let mut p = 0.0f64;
+                for cc in 0..c {
+                    p += yt.data[t * c * r + cc * r + i] as f64
+                        * vc.data[t * c * r + cc * r + jj] as f64;
+                }
+                want += h.data[i * r + jj] as f64 * p;
+            }
+            let got = m3.data[t * r + jj] as f64;
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()));
+        }
+    }
+}
+
+#[test]
+fn procrustes_artifact_gives_orthonormal_q_and_consistent_yt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let (b, r) = (reg.batch, reg.rank);
+    let ib = reg.i_buckets[0];
+    let cb = reg.c_buckets[0];
+    let mut rng = Pcg64::seed(73);
+
+    let xc = rand_tensor(&mut rng, vec![b, ib, cb]);
+    let vc = rand_tensor(&mut rng, vec![b, cb, r]);
+    let h = rand_tensor(&mut rng, vec![r, r]);
+    // positive weights like diag(S_k)
+    let w = HostTensor::new(
+        vec![b, r],
+        (0..b * r).map(|_| rng.uniform(0.3, 1.5) as f32).collect(),
+    );
+
+    let k = reg.kernel(&ctx, Kind::ProcrustesPack, Some(ib), cb).unwrap();
+    let out = k.run(&[xc.clone(), vc, h, w]).unwrap();
+    let (yt, q) = (&out[0], &out[1]);
+    assert_eq!(yt.dims, vec![b, cb, r]);
+    assert_eq!(q.dims, vec![b, ib, r]);
+
+    for t in 0..b {
+        // QᵀQ ≈ I (Newton–Schulz converged)
+        for a in 0..r {
+            for bb in 0..r {
+                let mut s = 0.0f64;
+                for i in 0..ib {
+                    s += q.data[t * ib * r + i * r + a] as f64
+                        * q.data[t * ib * r + i * r + bb] as f64;
+                }
+                let want = if a == bb { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 5e-3, "batch {t}: QᵀQ[{a},{bb}] = {s}");
+            }
+        }
+        // yt == xcᵀ·q
+        for cc in 0..cb.min(3) {
+            for a in 0..r {
+                let mut want = 0.0f64;
+                for i in 0..ib {
+                    want += xc.data[t * ib * cb + i * cb + cc] as f64
+                        * q.data[t * ib * r + i * r + a] as f64;
+                }
+                let got = yt.data[t * cb * r + cc * r + a] as f64;
+                assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()));
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_driver_parity_with_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let data = generate(&SyntheticSpec {
+        k: 150,
+        j: 50,
+        max_i_k: 20,
+        target_nnz: 15_000,
+        rank: 4,
+        noise: 0.0,
+        seed: 17,
+    })
+    .tensor;
+    let rank = 4.min(reg.rank);
+    let iters = 10;
+
+    let mut driver = PjrtDriver::new(&ctx, &reg);
+    let pm = driver
+        .fit(
+            &data,
+            &PjrtFitConfig { rank, max_iters: iters, tol: 0.0, nonneg: true, seed: 9, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+    let nm = fit_parafac2(
+        &data,
+        &Parafac2Config { rank, max_iters: iters, tol: 0.0, nonneg: true, seed: 9, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let dfit = (pm.stats.final_fit - nm.stats.final_fit).abs();
+    assert!(dfit < 5e-3, "fit parity {dfit}");
+    // Q shapes intact
+    for k in 0..data.k() {
+        assert_eq!(pm.q[k].rows(), data.i_k(k));
+    }
+}
+
+#[test]
+fn oversized_slices_fall_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    // J big enough that some subjects exceed the largest C bucket
+    let max_c = *reg.c_buckets.last().unwrap();
+    let data = generate(&SyntheticSpec {
+        k: 40,
+        j: max_c * 4,
+        max_i_k: 12,
+        target_nnz: 40 * max_c * 8, // mean nnz per subject ≫ max_c
+        rank: 3,
+        noise: 0.0,
+        seed: 23,
+    })
+    .tensor;
+    let plan = packing::plan(&data, &reg);
+    assert!(
+        !plan.fallback.is_empty(),
+        "expected some subjects above the {} bucket",
+        max_c
+    );
+    let mut driver = PjrtDriver::new(&ctx, &reg);
+    let rank = 3.min(reg.rank);
+    let pm = driver
+        .fit(
+            &data,
+            &PjrtFitConfig { rank, max_iters: 6, tol: 0.0, nonneg: true, seed: 2, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+    let nm = fit_parafac2(
+        &data,
+        &Parafac2Config { rank, max_iters: 6, tol: 0.0, nonneg: true, seed: 2, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let dfit = (pm.stats.final_fit - nm.stats.final_fit).abs();
+    assert!(dfit < 5e-3, "hybrid parity {dfit}");
+}
+
+#[test]
+fn rank_above_manifest_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let data = generate(&SyntheticSpec {
+        k: 10,
+        j: 30,
+        max_i_k: 8,
+        target_nnz: 500,
+        rank: 2,
+        noise: 0.0,
+        seed: 1,
+    })
+    .tensor;
+    let mut driver = PjrtDriver::new(&ctx, &reg);
+    let err = driver
+        .fit(&data, &PjrtFitConfig { rank: reg.rank + 1, ..Default::default() })
+        .unwrap_err();
+    assert!(err.to_string().contains("manifest rank"));
+    let _ = Path::new("unused");
+}

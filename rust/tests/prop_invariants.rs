@@ -1,0 +1,212 @@
+//! Property-based tests (randomized, seeded — the offline crate set has no
+//! proptest, so this is a small fixed-iteration harness over `Pcg64`).
+//! Each property runs against many random instances; failures print the
+//! offending seed for reproduction.
+
+use spartan::linalg::{self, Mat};
+use spartan::parafac2::intermediate::{PackedSlice, PackedY};
+use spartan::parafac2::mttkrp;
+use spartan::sparse::{Csr, IrregularTensor};
+use spartan::threadpool::Pool;
+use spartan::util::rng::Pcg64;
+
+const CASES: u64 = 30;
+
+fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut trips = vec![(rng.range(0, rows), rng.range(0, cols), 1.0)];
+    for i in 0..rows {
+        for j in 0..cols {
+            if rng.chance(density) {
+                trips.push((i, j, rng.normal()));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, trips)
+}
+
+fn random_packed(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> PackedY {
+    let slices = (0..k)
+        .map(|_| {
+            let rows = r + rng.range(1, 6);
+            let xk = random_sparse(rng, rows, j, 0.2);
+            let qk = linalg::random_orthonormal(rows, r, rng);
+            PackedSlice::pack(&xk, &qk)
+        })
+        .collect();
+    PackedY { slices, j_dim: j }
+}
+
+/// Property: MTTKRP results are invariant to permuting the subject order
+/// (up to float tolerance), with W rows permuted consistently — mode-1 is
+/// a sum over subjects, mode-2 scatters disjointly-by-column sums, and
+/// mode-3 rows follow their subject.
+#[test]
+fn prop_subject_permutation_equivariance() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(1000 + seed);
+        let (k, j, r) = (rng.range(2, 10), rng.range(3, 12), rng.range(1, 5));
+        let y = random_packed(&mut rng, k, j, r);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::rand_normal(k, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let pool = Pool::serial();
+
+        let mut perm: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut perm);
+        let yp = PackedY {
+            slices: perm.iter().map(|&p| y.slices[p].clone()).collect(),
+            j_dim: j,
+        };
+        let wp = w.gather_rows(&perm);
+
+        let m1a = mttkrp::mttkrp_mode1(&y, &v, &w, &pool);
+        let m1b = mttkrp::mttkrp_mode1(&yp, &v, &wp, &pool);
+        assert!(m1a.max_abs_diff(&m1b) < 1e-9, "seed {seed} mode1");
+
+        let m2a = mttkrp::mttkrp_mode2(&y, &h, &w, &pool);
+        let m2b = mttkrp::mttkrp_mode2(&yp, &h, &wp, &pool);
+        assert!(m2a.max_abs_diff(&m2b) < 1e-9, "seed {seed} mode2");
+
+        let m3a = mttkrp::mttkrp_mode3(&y, &h, &v, &pool);
+        let m3b = mttkrp::mttkrp_mode3(&yp, &h, &v, &pool);
+        for (dst, &src) in perm.iter().enumerate() {
+            for t in 0..r {
+                assert!(
+                    (m3a[(src, t)] - m3b[(dst, t)]).abs() < 1e-9,
+                    "seed {seed} mode3 row"
+                );
+            }
+        }
+    }
+}
+
+/// Property: appending all-zero-valued subjects (W row = 0) leaves mode-1
+/// and mode-2 unchanged — padding safety of the reductions.
+#[test]
+fn prop_zero_subject_padding_invariance() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(2000 + seed);
+        let (k, j, r) = (rng.range(1, 8), rng.range(3, 10), rng.range(1, 4));
+        let y = random_packed(&mut rng, k, j, r);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::rand_normal(k, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let pool = Pool::serial();
+
+        // pad: a subject with zero yt and zero w row
+        let mut slices = y.slices.clone();
+        slices.push(PackedSlice {
+            support: vec![0, 1.min(j as u32 - 1)],
+            yt: Mat::zeros(2, r),
+        });
+        let yp = PackedY { slices, j_dim: j };
+        let mut wp = Mat::zeros(k + 1, r);
+        for i in 0..k {
+            wp.row_mut(i).copy_from_slice(w.row(i));
+        }
+
+        let m1a = mttkrp::mttkrp_mode1(&y, &v, &w, &pool);
+        let m1b = mttkrp::mttkrp_mode1(&yp, &v, &wp, &pool);
+        assert!(m1a.max_abs_diff(&m1b) < 1e-12, "seed {seed} mode1");
+
+        let m2a = mttkrp::mttkrp_mode2(&y, &h, &w, &pool);
+        let m2b = mttkrp::mttkrp_mode2(&yp, &h, &wp, &pool);
+        assert!(m2a.max_abs_diff(&m2b) < 1e-12, "seed {seed} mode2");
+    }
+}
+
+/// Property: worker count never changes any kernel result (bitwise), by
+/// the fixed-chunk deterministic reduction design.
+#[test]
+fn prop_worker_count_determinism() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(3000 + seed);
+        let (k, j, r) = (rng.range(2, 200), rng.range(3, 10), rng.range(1, 4));
+        let y = random_packed(&mut rng, k, j, r);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::rand_normal(k, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let pools = [Pool::serial(), Pool::new(2), Pool::new(7)];
+        let m1: Vec<Mat> = pools.iter().map(|p| mttkrp::mttkrp_mode1(&y, &v, &w, p)).collect();
+        let m2: Vec<Mat> = pools.iter().map(|p| mttkrp::mttkrp_mode2(&y, &h, &w, p)).collect();
+        assert_eq!(m1[0].data(), m1[1].data(), "seed {seed}");
+        assert_eq!(m1[0].data(), m1[2].data(), "seed {seed}");
+        assert_eq!(m2[0].data(), m2[1].data(), "seed {seed}");
+        assert_eq!(m2[0].data(), m2[2].data(), "seed {seed}");
+    }
+}
+
+/// Property: filtering zero rows never changes the column support, nnz, or
+/// Frobenius norm of a slice collection.
+#[test]
+fn prop_zero_row_filtering_preserves_content() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(4000 + seed);
+        let rows = rng.range(2, 20);
+        let cols = rng.range(2, 15);
+        let xk = random_sparse(&mut rng, rows, cols, 0.1);
+        let t = IrregularTensor::new(vec![xk.clone()]);
+        assert_eq!(t.nnz(), xk.nnz(), "seed {seed}");
+        assert_eq!(t.slice(0).col_support(), xk.col_support(), "seed {seed}");
+        assert!(
+            (t.fro_norm_sq() - xk.fro_norm_sq()).abs() < 1e-12,
+            "seed {seed}"
+        );
+        // and every remaining row is nonempty
+        for i in 0..t.i_k(0) {
+            assert!(t.slice(0).row_nnz(i) > 0, "seed {seed}");
+        }
+    }
+}
+
+/// Property: binary IO round-trips arbitrary irregular tensors exactly.
+#[test]
+fn prop_io_roundtrip_fuzz() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(5000 + seed);
+        let k = rng.range(1, 8);
+        let j = rng.range(1, 20);
+        let slices: Vec<Csr> = (0..k)
+            .map(|_| {
+                let rows = rng.range(1, 12);
+                random_sparse(&mut rng, rows, j, 0.15)
+            })
+            .collect();
+        let t = IrregularTensor::new(slices);
+        let path = std::env::temp_dir().join(format!("spartan_prop_io_{seed}.spt"));
+        spartan::sparse::io::save_binary(&t, &path).unwrap();
+        let t2 = spartan::sparse::io::load_binary(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t.k(), t2.k(), "seed {seed}");
+        for kk in 0..t.k() {
+            assert_eq!(t.slice(kk), t2.slice(kk), "seed {seed} slice {kk}");
+        }
+    }
+}
+
+/// Property: the Procrustes polar factor never increases the objective
+/// versus keeping the previous orthonormal basis (ALS step-1 optimality,
+/// checked against a random candidate).
+#[test]
+fn prop_procrustes_optimality() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(6000 + seed);
+        let r = rng.range(1, 4);
+        let ik = r + rng.range(1, 8);
+        let j = rng.range(r, r + 10);
+        let xk = random_sparse(&mut rng, ik, j, 0.4);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let s: Vec<f64> = (0..r).map(|_| rng.uniform(0.2, 2.0)).collect();
+        let (_, q) =
+            spartan::parafac2::procrustes::procrustes_and_pack(&xk, &v, &h, &s, true);
+        let q = q.unwrap();
+        // objective ‖X_k − Q H S Vᵀ‖²
+        let hs = Mat::from_fn(r, r, |a, b| h[(a, b)] * s[b]);
+        let target = linalg::matmul_a_bt(&hs, &v);
+        let xd = xk.to_dense();
+        let obj = |q: &Mat| linalg::matmul(q, &target).fro_dist(&xd);
+        let cand = linalg::random_orthonormal(ik, r, &mut rng);
+        assert!(obj(&q) <= obj(&cand) + 1e-8, "seed {seed}");
+    }
+}
