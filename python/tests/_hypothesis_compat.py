@@ -1,0 +1,73 @@
+"""Deterministic fallback for the `hypothesis` API subset the tests use.
+
+The offline test image may not ship `hypothesis`; rather than erroring at
+collection time, the test modules fall back to this shim, which replays a
+fixed number of seeded pseudo-random examples through the same test
+bodies. It intentionally implements only what the suite needs:
+``given``, ``settings(max_examples=..., deadline=...)``, ``assume`` and
+``strategies.integers`` / ``strategies.tuples``.
+"""
+
+import random
+import types
+
+
+class _Assumption(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # sample(rng) -> value
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+
+strategies = types.SimpleNamespace(integers=_integers, tuples=_tuples)
+
+
+def assume(condition):
+    if not condition:
+        raise _Assumption()
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._hyp_max_examples = kwargs.get("max_examples", 20)
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: deliberately not functools.wraps — pytest would introspect
+        # the wrapped signature and treat the generated parameters as
+        # fixtures. The wrapper itself takes no test arguments.
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0xC0FFEE)
+            target = getattr(wrapper, "_hyp_max_examples", 20)
+            ran = 0
+            attempts = 0
+            while ran < target and attempts < target * 50:
+                attempts += 1
+                drawn = [s.sample(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except _Assumption:
+                    continue
+                ran += 1
+            assert ran > 0, "every generated example was rejected by assume()"
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._hyp_max_examples = getattr(fn, "_hyp_max_examples", 20)
+        return wrapper
+
+    return deco

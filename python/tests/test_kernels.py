@@ -3,7 +3,10 @@ hypothesis sweeping shapes and against the dense Khatri-Rao reference."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline image: seeded fallback sweep
+    from _hypothesis_compat import given, settings, strategies as st
 
 import jax.numpy as jnp
 

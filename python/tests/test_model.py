@@ -2,7 +2,10 @@
 Newton–Schulz polar convergence, and the padding contracts."""
 
 import numpy as np
-from hypothesis import assume, given, settings, strategies as st
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ModuleNotFoundError:  # offline image: seeded fallback sweep
+    from _hypothesis_compat import assume, given, settings, strategies as st
 
 import jax.numpy as jnp
 

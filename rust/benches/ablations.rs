@@ -76,7 +76,7 @@ fn main() {
                     for (c, &j) in s.support.iter().enumerate() {
                         yt.row_mut(j as usize).copy_from_slice(s.yt.row(c));
                     }
-                    PackedSlice { support: (0..y.j_dim as u32).collect(), yt }
+                    PackedSlice::from_parts((0..y.j_dim as u32).collect(), Vec::new(), yt)
                 })
                 .collect(),
         };

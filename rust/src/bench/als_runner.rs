@@ -80,6 +80,33 @@ pub fn time_als(
     }
 }
 
+/// Per-iteration (SSE, fit) trajectory of a fit — used to check that the
+/// fused sweep's convergence path is deterministic: bitwise identical
+/// across worker counts (chunk-ordered reductions guarantee it).
+pub fn fit_trajectory(
+    data: &IrregularTensor,
+    rank: usize,
+    backend: Backend,
+    workers: usize,
+    iters: usize,
+) -> Vec<(f64, f64)> {
+    let cfg = Parafac2Config {
+        rank,
+        max_iters: iters,
+        tol: 0.0,
+        nonneg: true,
+        workers,
+        seed: 42,
+        backend,
+        mem_budget: None,
+        ..Default::default()
+    };
+    let mut traj = Vec::with_capacity(iters);
+    fit_parafac2_traced(data, &cfg, &mut |rec| traj.push((rec.sse, rec.fit)))
+        .expect("trajectory fit failed");
+    traj
+}
+
 /// Speedup string "N.N×" for a (spartan, baseline) pair.
 pub fn speedup(spartan: &CellResult, baseline: &CellResult) -> String {
     match (spartan.secs(), baseline.secs()) {
@@ -115,6 +142,33 @@ mod tests {
             _ => panic!("expected time"),
         }
         assert!(!r.render().is_empty());
+    }
+
+    #[test]
+    fn table1_config_trajectory_bitwise_deterministic_across_workers() {
+        // A scaled-down instance of the Table-1 synthetic config (same
+        // generator, same density profile as benches/table1_synthetic.rs):
+        // the fused sweep must produce the exact same SSE/fit trajectory
+        // at every worker count — bitwise, not approximately.
+        let data = generate(&SyntheticSpec {
+            k: 126,
+            j: 50,
+            max_i_k: 10,
+            target_nnz: 12_000,
+            rank: 4,
+            noise: 0.01,
+            seed: 42,
+        })
+        .tensor;
+        let reference = fit_trajectory(&data, 4, Backend::Spartan, 1, 6);
+        assert_eq!(reference.len(), 6);
+        for workers in [2usize, 4, 7] {
+            let traj = fit_trajectory(&data, 4, Backend::Spartan, workers, 6);
+            for (i, (a, b)) in reference.iter().zip(&traj).enumerate() {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "SSE iter {i}, {workers} workers");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "fit iter {i}, {workers} workers");
+            }
+        }
     }
 
     #[test]

@@ -123,7 +123,7 @@ impl<'a> PjrtDriver<'a> {
             stats.procrustes_secs += sw.elapsed_secs();
 
             let sw = Stopwatch::start();
-            let cp_res = self.cp_step(data, &plan, &y, &mut factors, cfg)?;
+            let cp_res = self.cp_step(data, &plan, &y, &mut factors, cfg, &pool)?;
             stats.cp_secs += sw.elapsed_secs();
 
             let sse = (x_norm_sq - y.norm_sq + cp_res).max(0.0);
@@ -254,10 +254,10 @@ impl<'a> PjrtDriver<'a> {
         y: &YState,
         f: &mut CpFactors,
         cfg: &PjrtFitConfig,
+        pool: &Pool,
     ) -> Result<f64> {
-        let pool = Pool::new(cfg.workers);
         // mode 1: H
-        let m1 = self.mttkrp1(data, plan, &y.yt_batches, &y.fallback, f, &pool)?;
+        let m1 = self.mttkrp1(data, plan, &y.yt_batches, &y.fallback, f, pool)?;
         let g1 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.v));
         f.h = solve_mode(&m1, &g1, false);
         normalize_cols_safe(&mut f.h);
@@ -267,7 +267,7 @@ impl<'a> PjrtDriver<'a> {
         f.v = solve_mode(&m2, &g2, cfg.nonneg);
         normalize_cols_safe(&mut f.v);
         // mode 3: W
-        let m3 = self.mttkrp3(data, plan, &y.yt_batches, &y.fallback, f, &pool)?;
+        let m3 = self.mttkrp3(data, plan, &y.yt_batches, &y.fallback, f, pool)?;
         let g3 = blas::hadamard(&blas::gram(&f.v), &blas::gram(&f.h));
         f.w = solve_mode(&m3, &g3, cfg.nonneg);
         Ok(residual_stats(&m3, f, y.norm_sq).y_residual_sq)

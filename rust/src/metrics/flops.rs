@@ -1,7 +1,10 @@
 //! Analytic FLOP models for one PARAFAC2-ALS iteration — used to report
 //! achieved GFLOP/s in the benches and to sanity-check the §3.3 complexity
 //! claims (SPARTan's step-2 cost is `O(R·Σ(R + c_k))`, the baseline's is
-//! `3R·nnz(Y)` *plus* construction and per-mode sorts).
+//! `3R·nnz(Y)` *plus* construction and per-mode sorts) — and home of the
+//! fused-sweep FLOP-count assertion: **one `Y_k·V` per subject per CP
+//! iteration**, measured by the per-slice tallies behind
+//! [`crate::parafac2::intermediate::PackedY::yv_products`].
 
 use crate::sparse::IrregularTensor;
 
@@ -35,9 +38,12 @@ pub fn spartan_iteration_flops(data: &IrregularTensor, rank: usize) -> FlopBreak
     // Procrustes: C_k = X_k V (2·nnz·R), B_k = C_k·SkHᵀ (2·I_k·R²),
     // Gram (I_k·R²), eig O(R³), Q = B·M (2·I_k·R²), pack Y (2·nnz·R).
     let procrustes = 2.0 * nnz * r + 5.0 * sum_ik * r * r + 30.0 * k * r * r * r;
-    // MTTKRP modes 1–3: mode1/3 share Y_k·V_c (2·R·c_k·R each) + epilogues,
-    // mode2 is 2·c_k·R² + c_k·R.
-    let mttkrp = 3.0 * (2.0 * sum_ck * r * r) + 2.0 * k * r * r + sum_ck * r;
+    // Fused MTTKRP sweep: two traversals of the packed slices —
+    //   mode 1: Y_k·V (2·c_k·R²) + rowhad/accumulate epilogue (2·K·R²),
+    //   mode 2: Z_k = Y_kᵀ·H (2·c_k·R²) + scatter (2·c_k·R) —
+    // and the mode-3 epilogue over the cached Z_k (3·c_k·R, no traversal).
+    // Pre-fusion this term was 3·(2·Σc_k·R²): three slice sweeps.
+    let mttkrp = 2.0 * (2.0 * sum_ck * r * r) + 2.0 * k * r * r + 5.0 * sum_ck * r;
     // Solves: three Gram Hadamards (3R²) + Cholesky (R³/3 each) + row solves
     let solves = 2.0 * (k + j + r) * r * r + 3.0 * (r * r * r / 3.0 + 3.0 * r * r);
     FlopBreakdown { procrustes, mttkrp, solves }
@@ -86,6 +92,42 @@ mod tests {
         assert!(b.mttkrp > s.mttkrp, "{} vs {}", b.mttkrp, s.mttkrp);
         // both share step 1
         assert_eq!(s.procrustes, b.procrustes);
+    }
+
+    #[test]
+    fn fused_sweep_does_one_yv_product_per_subject_per_iteration() {
+        // The acceptance invariant of the fused sweep: a CP iteration on
+        // K subjects performs exactly K `Y_k·V` products — mode 1 does
+        // one per subject, and the mode-3 epilogue does none (it feeds
+        // off the cached Z_k). The count is tallied inside the kernel
+        // itself (per slice, read via PackedY::yv_products on this
+        // test-private tensor, so concurrent tests can't pollute it):
+        // any regression that reintroduces a second `Y_k·V` traversal —
+        // wherever it's called from — breaks the exact equality below.
+        use crate::linalg::Mat;
+        use crate::parafac2::cp_als::{cp_iteration, CpFactors, CpOptions};
+        use crate::parafac2::procrustes::procrustes_all;
+        use crate::threadpool::Pool;
+        use crate::util::rng::Pcg64;
+
+        let d = data();
+        let k = d.k();
+        let r = 4;
+        let mut rng = Pcg64::seed(9);
+        let pool = Pool::new(3);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let v = Mat::rand_uniform(d.j(), r, &mut rng);
+        let w = Mat::rand_uniform(k, r, &mut rng);
+        let (y, _) = procrustes_all(&d, &v, &h, &w, &pool, false);
+        let mut f = CpFactors { h, v, w };
+        let before = y.yv_products();
+        for iter in 1..=3u64 {
+            let stats = cp_iteration(&y, &mut f, CpOptions::default(), &pool);
+            assert_eq!(stats.yv_products, k as u64);
+            // exact: K products per iteration across the WHOLE iteration,
+            // not just mode 1 — the teeth of this assertion
+            assert_eq!(y.yv_products() - before, iter * k as u64);
+        }
     }
 
     #[test]

@@ -3,9 +3,15 @@
 //!
 //! Per iteration:
 //! 1. **Procrustes** — recompute `{Q_k}` and the packed `{Y_k}`
-//!    (parallel over subjects),
-//! 2. **CP step** — one CP-ALS iteration on `Y` to update `H, V, W`
-//!    (`S_k = diag(W(k,:))`).
+//!    (parallel over subjects, repacked **in place** into a persistent
+//!    slice arena — zero steady-state allocations),
+//! 2. **CP step** — one fused CP-ALS iteration on `Y` to update `H, V, W`
+//!    (`S_k = diag(W(k,:))`); the SPARTan backend reuses the mode-2
+//!    intermediate for mode 3 so `Y_k·V` runs exactly once per subject.
+//!
+//! All per-subject work runs on one persistent [`Pool`] created per fit —
+//! workers live for the whole fit instead of being respawned per kernel
+//! call.
 //!
 //! The SSE tracked for convergence uses the decomposition
 //! `‖X_k − Q_k M_k‖² = ‖X_k‖² − ‖Y_k‖² + ‖Y_k − M_k‖²` (exact whenever
@@ -14,10 +20,12 @@
 //! implementation tracks).
 
 use super::baseline::{cp_iteration_baseline, BaselinePhases};
-use super::cp_als::{cp_iteration, CpFactors, CpOptions};
+use super::cp_als::{cp_iteration_with_scratch, CpFactors, CpOptions};
 use super::init::{initialize, InitMethod};
+use super::intermediate::PackedY;
 use super::model::{FitStats, Parafac2Model};
-use super::procrustes::procrustes_all;
+use super::mttkrp::FusedScratch;
+use super::procrustes::procrustes_all_into;
 use crate::sparse::IrregularTensor;
 use crate::threadpool::Pool;
 use crate::util::membudget::{BudgetExceeded, MemBudget};
@@ -155,17 +163,25 @@ pub fn fit_parafac2_traced(
     let mut prev_sse = f64::INFINITY;
     let mut iters_done = 0;
 
+    // Persistent per-fit arenas: the packed-Y slice buffers and the fused
+    // sweep's Z_k cache are allocated on the first iteration and reused
+    // (refilled in place) by every later one.
+    let mut y = PackedY::empty(data.j());
+    let mut scratch = FusedScratch::new();
+
     for iter in 0..cfg.max_iters {
-        // --- step 1: Procrustes + packing --------------------------------
+        // --- step 1: Procrustes + packing (into the arena) ---------------
         let sw = Stopwatch::start();
-        let (y, _) = procrustes_all(data, &factors.v, &factors.h, &factors.w, &pool, false);
+        let _ = procrustes_all_into(data, &factors.v, &factors.h, &factors.w, &pool, false, &mut y);
         let procrustes_secs = sw.elapsed_secs();
         stats.procrustes_secs += procrustes_secs;
 
         // --- step 2: one CP-ALS iteration on Y ---------------------------
         let sw = Stopwatch::start();
         let cp_stats = match cfg.backend {
-            Backend::Spartan => cp_iteration(&y, &mut factors, opts, &pool),
+            Backend::Spartan => {
+                cp_iteration_with_scratch(&y, &mut factors, opts, &pool, &mut scratch)
+            }
             Backend::Baseline => {
                 cp_iteration_baseline(&y, &mut factors, opts, &budget, &mut baseline_phases)
                     .map_err(FitError::OutOfMemory)?
@@ -173,6 +189,14 @@ pub fn fit_parafac2_traced(
         };
         let cp_secs = sw.elapsed_secs();
         stats.cp_secs += cp_secs;
+
+        if iter == 0 {
+            crate::debug!(
+                "arena: packed Y {} B, fused scratch {} B",
+                y.heap_bytes(),
+                scratch.heap_bytes()
+            );
+        }
 
         let sse = (x_norm_sq - y.norm_sq() + cp_stats.y_residual_sq).max(0.0);
         let fit = 1.0 - sse.sqrt() / x_norm;
@@ -196,12 +220,12 @@ pub fn fit_parafac2_traced(
     // loop so the loop's footprint stays at the packed-Y size), and
     // recompute the SSE against the refreshed Q_k so the reported fit is
     // exactly the returned model's (the refresh strictly improves on the
-    // last tracked SSE).
-    let (y_final, qs) = procrustes_all(data, &factors.v, &factors.h, &factors.w, &pool, true);
-    let m3 = super::mttkrp::mttkrp_mode3(&y_final, &factors.h, &factors.v, &pool);
-    let final_res = super::cp_als::residual_stats(&m3, &factors, y_final.norm_sq());
-    let final_sse = (x_norm_sq - y_final.norm_sq() + final_res.y_residual_sq).max(0.0);
-    drop(y_final);
+    // last tracked SSE). Reuses the same arena.
+    let qs = procrustes_all_into(data, &factors.v, &factors.h, &factors.w, &pool, true, &mut y);
+    let m3 = super::mttkrp::mttkrp_mode3(&y, &factors.h, &factors.v, &pool);
+    let final_res = super::cp_als::residual_stats(&m3, &factors, y.norm_sq());
+    let final_sse = (x_norm_sq - y.norm_sq() + final_res.y_residual_sq).max(0.0);
+    drop(y);
 
     stats.iterations = iters_done;
     stats.final_sse = final_sse;

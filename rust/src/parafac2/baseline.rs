@@ -13,6 +13,13 @@
 //! 3. runs one CP-ALS iteration with [`crate::sparse::CooTensor3::mttkrp`]
 //!    per mode (each re-sorts the nonzeros — TTB's matricization cost —
 //!    and materializes TTB's nnz-length per-column temporary).
+//!
+//! Note on the fused SPARTan sweep: the baseline deliberately does **not**
+//! share its intermediates — it models the comparison method as published.
+//! It consumes the same packed `{Y_k}` (produced by the same in-place
+//! Procrustes arena), and since the arena repack is bitwise identical to a
+//! fresh pack, this path's numbers are byte-compatible with the
+//! pre-fusion implementation.
 
 use super::cp_als::{normalize_cols_safe, residual_stats, solve_mode, CpFactors, CpIterStats, CpOptions};
 use super::intermediate::PackedY;

@@ -12,6 +12,12 @@
 //! The residual `‖Y − ⟦H,V,W⟧‖²` falls out for free after the mode-3
 //! update via the classic identity `⟨Y, rec⟩ = ⟨M³, W⟩`, giving the
 //! PARAFAC2 SSE as `‖X‖² − ‖Y‖² + ‖Y − rec‖²` without touching the data.
+//!
+//! The iteration is **fused** (see [`super::mttkrp`]): mode 2 caches
+//! `Z_k = Y_kᵀ H` per subject and mode 3 becomes a cheap epilogue over
+//! that cache, so the packed slices are traversed twice per iteration
+//! instead of three times and `Y_k·V` is computed exactly once per
+//! subject.
 
 use super::intermediate::PackedY;
 use super::mttkrp;
@@ -45,35 +51,61 @@ pub struct CpIterStats {
     pub inner: f64,
     /// `‖rec‖²`.
     pub rec_norm_sq: f64,
+    /// Number of `Y_k·V` products performed (the hottest kernel). The
+    /// fused sweep does exactly one per subject — K in total — which
+    /// `metrics::flops` asserts.
+    pub yv_products: u64,
 }
 
-/// One CP-ALS iteration on the packed intermediate tensor (SPARTan path).
+/// One CP-ALS iteration on the packed intermediate tensor (SPARTan path),
+/// allocating its own scratch. The ALS loop uses
+/// [`cp_iteration_with_scratch`] to reuse the `Z_k` buffers across
+/// iterations.
 pub fn cp_iteration(
     y: &PackedY,
     f: &mut CpFactors,
     opts: CpOptions,
     pool: &Pool,
 ) -> CpIterStats {
-    // --- mode 1: H ------------------------------------------------------
-    let m1 = mttkrp::mttkrp_mode1(y, &f.v, &f.w, pool);
+    let mut scratch = mttkrp::FusedScratch::new();
+    cp_iteration_with_scratch(y, f, opts, pool, &mut scratch)
+}
+
+/// One fused CP-ALS iteration: two traversals of the packed slices
+/// (mode 1, then mode 2 which caches `Z_k = Y_kᵀ H`) plus an `O(c_k·R)`
+/// mode-3 epilogue fed from the cache — `Y_k·V` is computed exactly once
+/// per subject. The update order (H, then V, then W) and the residual
+/// identity `⟨Y, rec⟩ = ⟨M³, W⟩` (M³ with the final H and V) are
+/// unchanged from the unfused iteration.
+pub fn cp_iteration_with_scratch(
+    y: &PackedY,
+    f: &mut CpFactors,
+    opts: CpOptions,
+    pool: &Pool,
+    scratch: &mut mttkrp::FusedScratch,
+) -> CpIterStats {
+    // --- mode 1: H (the single Y_k·V sweep) ------------------------------
+    let (m1, yv_products) = mttkrp::mttkrp_mode1_counted(y, &f.v, &f.w, pool);
     let g1 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.v));
     f.h = solve::solve_gram_system(&m1, &g1);
     normalize_cols_safe(&mut f.h);
 
-    // --- mode 2: V ------------------------------------------------------
-    let m2 = mttkrp::mttkrp_mode2(y, &f.h, &f.w, pool);
+    // --- mode 2: V (sweep caches Z_k = Y_kᵀ H for mode 3) ----------------
+    let m2 = mttkrp::mttkrp_mode2_cached(y, &f.h, &f.w, pool, scratch);
     let g2 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.h));
     f.v = solve_mode(&m2, &g2, opts.nonneg);
     normalize_cols_safe(&mut f.v);
 
-    // --- mode 3: W (carries the scale) -----------------------------------
-    let m3 = mttkrp::mttkrp_mode3(y, &f.h, &f.v, pool);
+    // --- mode 3: W (carries the scale) — epilogue over cached Z_k --------
+    let m3 = mttkrp::mttkrp_mode3_from_cache(y, &f.v, scratch, pool);
     let g3 = blas::hadamard(&blas::gram(&f.v), &blas::gram(&f.h));
     f.w = solve_mode(&m3, &g3, opts.nonneg);
 
     // --- residual via the MTTKRP identity --------------------------------
     // ⟨Y, rec⟩ = ⟨M³, W⟩ (M³ computed with the FINAL H, V; W final too).
-    residual_stats(&m3, f, y.norm_sq())
+    let mut stats = residual_stats(&m3, f, y.norm_sq());
+    stats.yv_products = yv_products;
+    stats
 }
 
 /// Normalize columns to unit norm, leaving exact-zero columns alone
@@ -101,7 +133,7 @@ pub(crate) fn residual_stats(m3: &Mat, f: &CpFactors, y_norm_sq: f64) -> CpIterS
     );
     let rec_norm_sq: f64 = g_all.data().iter().sum();
     let y_residual_sq = (y_norm_sq - 2.0 * inner + rec_norm_sq).max(0.0);
-    CpIterStats { y_residual_sq, inner, rec_norm_sq }
+    CpIterStats { y_residual_sq, inner, rec_norm_sq, yv_products: 0 }
 }
 
 #[cfg(test)]
@@ -203,6 +235,41 @@ mod tests {
             assert!(f.w.data().iter().all(|&x| x >= 0.0));
             assert!(stats.y_residual_sq <= last * (1.0 + 1e-9) + 1e-12);
             last = stats.y_residual_sq;
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_iterations_is_bitwise_stable() {
+        // Reusing one FusedScratch across iterations (the ALS loop's
+        // arena pattern) must give bitwise the same trajectory as a fresh
+        // scratch per iteration, serial or parallel.
+        let mut rng = Pcg64::seed(135);
+        let (k, j, r) = (9, 11, 3);
+        let y = random_y(&mut rng, k, j, r);
+        let f0 = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_uniform(k, r, &mut rng),
+        };
+        for pool in [Pool::serial(), Pool::new(4)] {
+            let mut fa = f0.clone();
+            let mut fb = f0.clone();
+            let mut shared = super::super::mttkrp::FusedScratch::new();
+            for _ in 0..5 {
+                let sa = cp_iteration_with_scratch(
+                    &y,
+                    &mut fa,
+                    CpOptions::default(),
+                    &pool,
+                    &mut shared,
+                );
+                let sb = cp_iteration(&y, &mut fb, CpOptions::default(), &pool);
+                assert_eq!(fa.h.data(), fb.h.data());
+                assert_eq!(fa.v.data(), fb.v.data());
+                assert_eq!(fa.w.data(), fb.w.data());
+                assert_eq!(sa.y_residual_sq.to_bits(), sb.y_residual_sq.to_bits());
+                assert_eq!(sa.yv_products, k as u64);
+            }
         }
     }
 

@@ -13,40 +13,119 @@
 
 use crate::linalg::{blas, Mat};
 use crate::sparse::Csr;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// One packed frontal slice `Y_k` of the intermediate tensor.
-#[derive(Clone, Debug)]
+///
+/// Beyond the paper's `(support, Y_kᵀ)` pair this also carries
+/// `local_cols` — for each stored nonzero of `X_k` (in CSR order) the
+/// local support index of its column. The support and `local_cols` depend
+/// only on the *sparsity pattern* of `X_k`, which is constant across ALS
+/// iterations, so [`PackedSlice::repack_from`] can refresh `yt` in place
+/// every Procrustes pass without re-deriving the support or allocating:
+/// the slice doubles as its own arena slot.
+#[derive(Debug)]
 pub struct PackedSlice {
     /// Sorted original column ids with at least one nonzero in `X_k`.
     pub support: Vec<u32>,
+    /// Per-nonzero local column index (`local_cols[p]` is the support
+    /// index of `X_k`'s `p`-th stored entry). Length `nnz(X_k)`.
+    pub local_cols: Vec<u32>,
     /// `Y_kᵀ` restricted to the support: shape `c_k × R`, row `c` holds
     /// `Y_k(:, support[c])ᵀ`.
     pub yt: Mat,
+    /// Lifetime tally of `Y_k·V` products ([`PackedSlice::yk_times_v`])
+    /// performed on this slice. Per-slice (not a global) so each worker
+    /// bumps a counter it already owns in cache — no cross-core
+    /// contention — and so tests can measure a private tensor's count
+    /// race-free: the fused sweep does exactly one per subject per CP
+    /// iteration (asserted in `metrics::flops`).
+    yv_count: AtomicU64,
+}
+
+impl Clone for PackedSlice {
+    fn clone(&self) -> PackedSlice {
+        PackedSlice {
+            support: self.support.clone(),
+            local_cols: self.local_cols.clone(),
+            yt: self.yt.clone(),
+            yv_count: AtomicU64::new(self.yv_count.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl PackedSlice {
+    /// An uninitialized arena slot (filled by the first
+    /// [`PackedSlice::repack_from`]).
+    pub fn empty() -> PackedSlice {
+        PackedSlice::from_parts(Vec::new(), Vec::new(), Mat::zeros(0, 0))
+    }
+
+    /// Assemble from raw parts (tests/benches building synthetic slices;
+    /// `local_cols` may be empty if the slice will never be repacked).
+    pub fn from_parts(support: Vec<u32>, local_cols: Vec<u32>, yt: Mat) -> PackedSlice {
+        PackedSlice { support, local_cols, yt, yv_count: AtomicU64::new(0) }
+    }
+
     /// Pack `Y_k = Q_kᵀ X_k` directly from the CSR slice and `Q_k`,
     /// touching each nonzero of `X_k` exactly once (cost `nnz_k · R`).
     pub fn pack(xk: &Csr, qk: &Mat) -> PackedSlice {
         let r = qk.cols();
         assert_eq!(qk.rows(), xk.rows(), "Q_k rows must equal I_k");
         let support = xk.col_support();
-        // column id → local index
+        // column id → local index (scratch; only needed on first pack)
         let mut local = vec![u32::MAX; xk.cols()];
         for (c, &j) in support.iter().enumerate() {
             local[j as usize] = c as u32;
         }
-        let mut yt = Mat::zeros(support.len(), r);
+        let local_cols: Vec<u32> =
+            xk.indices().iter().map(|&j| local[j as usize]).collect();
+        let mut slice = PackedSlice::from_parts(support, local_cols, Mat::zeros(0, 0));
+        slice.yt = Mat::zeros(slice.support.len(), r);
+        slice.fill_yt(xk, qk);
+        slice
+    }
+
+    /// Refresh `Y_k = Q_kᵀ X_k` reusing this slot's buffers. `xk` must be
+    /// the same slice (same sparsity pattern) the slot was packed from; a
+    /// shape mismatch (first use, or a rank change) falls back to a fresh
+    /// [`PackedSlice::pack`]. Accumulation order is identical to `pack`,
+    /// so the result is bitwise identical.
+    pub fn repack_from(&mut self, xk: &Csr, qk: &Mat) {
+        let r = qk.cols();
+        if self.local_cols.len() != xk.nnz() || self.yt.shape() != (self.support.len(), r) {
+            *self = PackedSlice::pack(xk, qk);
+            return;
+        }
+        debug_assert_eq!(qk.rows(), xk.rows(), "Q_k rows must equal I_k");
+        // The cheap shape guards above cannot distinguish two *different*
+        // sparsity patterns with equal nnz and c_k; reusing a slot across
+        // tensors is a caller bug that would silently scatter values into
+        // wrong columns, so pin it down in debug builds.
+        debug_assert_eq!(
+            self.support,
+            xk.col_support(),
+            "repack_from requires the same sparsity pattern the slot was packed from"
+        );
+        self.yt.fill_zero();
+        self.fill_yt(xk, qk);
+    }
+
+    /// Accumulate `Y_kᵀ` rows from the CSR entries via `local_cols`
+    /// (shared by `pack` and `repack_from`; one pass over the nonzeros).
+    fn fill_yt(&mut self, xk: &Csr, qk: &Mat) {
+        let mut at = 0usize;
         for i in 0..xk.rows() {
             let qrow = qk.row(i);
-            for (j, v) in xk.row_iter(i) {
-                let dst = yt.row_mut(local[j as usize] as usize);
+            let (_cols, vals) = xk.row_parts(i);
+            for &v in vals {
+                let dst = self.yt.row_mut(self.local_cols[at] as usize);
+                at += 1;
                 for (d, &q) in dst.iter_mut().zip(qrow) {
                     *d += v * q;
                 }
             }
         }
-        PackedSlice { support, yt }
     }
 
     /// Number of nonzero columns `c_k`.
@@ -76,9 +155,13 @@ impl PackedSlice {
         out
     }
 
-    /// `Y_k · V_c` as an R×R product using only support rows of `v`
-    /// (shared by the mode-1 and mode-3 kernels).
+    /// `Y_k · V_c` as an R×R product using only support rows of `v` —
+    /// the hottest kernel of the CP step. The fused sweep performs this
+    /// exactly once per subject per CP iteration (mode 1); each call is
+    /// tallied on the slice so that invariant is assertable
+    /// ([`PackedY::yv_products`], checked in `metrics::flops` tests).
     pub fn yk_times_v(&self, v: &Mat) -> Mat {
+        self.yv_count.fetch_add(1, Ordering::Relaxed);
         // Ytᵀ · V_c, streamed without materializing V_c: accumulate
         // rank-1 contributions row by row.
         let r = self.rank();
@@ -113,7 +196,8 @@ impl PackedSlice {
 
     /// Heap bytes (budget accounting / memory reports).
     pub fn heap_bytes(&self) -> u64 {
-        (self.support.capacity() * 4 + self.yt.data().len() * 8) as u64
+        (self.support.capacity() * 4 + self.local_cols.capacity() * 4 + self.yt.data().len() * 8)
+            as u64
     }
 }
 
@@ -126,6 +210,21 @@ pub struct PackedY {
 }
 
 impl PackedY {
+    /// An empty arena ready to be filled by
+    /// [`crate::parafac2::procrustes::procrustes_all_into`].
+    pub fn empty(j_dim: usize) -> PackedY {
+        PackedY { slices: Vec::new(), j_dim }
+    }
+
+    /// Ensure exactly `k` slice slots, preserving existing slots (whose
+    /// buffers get reused on repack) and filling new ones with
+    /// [`PackedSlice::empty`].
+    pub fn resize_slots(&mut self, k: usize) {
+        if self.slices.len() != k {
+            self.slices.resize_with(k, PackedSlice::empty);
+        }
+    }
+
     pub fn k(&self) -> usize {
         self.slices.len()
     }
@@ -138,6 +237,14 @@ impl PackedY {
     /// Σ_k ‖Y_k‖²_F.
     pub fn norm_sq(&self) -> f64 {
         self.slices.iter().map(|s| s.norm_sq()).sum()
+    }
+
+    /// Total `Y_k·V` products ever performed on this tensor's slices.
+    /// Per-tensor and race-free to read: any code path that sneaks an
+    /// extra `yk_times_v` into the CP step shows up here regardless of
+    /// where it was called from.
+    pub fn yv_products(&self) -> u64 {
+        self.slices.iter().map(|s| s.yv_count.load(Ordering::Relaxed)).sum()
     }
 
     pub fn heap_bytes(&self) -> u64 {
@@ -219,6 +326,41 @@ mod tests {
         assert_eq!(p.support, vec![2, 5]);
         assert_eq!(g.row(0), v.row(2));
         assert_eq!(g.row(1), v.row(5));
+    }
+
+    #[test]
+    fn repack_reuses_buffers_and_matches_pack_bitwise() {
+        let mut rng = Pcg64::seed(106);
+        let xk = random_sparse(&mut rng, 11, 16, 0.2);
+        let q0 = random_orthonormal(11, 4, &mut rng);
+        let mut slot = PackedSlice::empty();
+        slot.repack_from(&xk, &q0); // first use: falls back to pack
+        assert_eq!(slot.yt.data(), PackedSlice::pack(&xk, &q0).yt.data());
+        let support_ptr = slot.support.as_ptr();
+        let yt_before = slot.yt.data().as_ptr();
+        for round in 0..3 {
+            let qk = random_orthonormal(11, 4, &mut rng);
+            slot.repack_from(&xk, &qk);
+            let fresh = PackedSlice::pack(&xk, &qk);
+            assert_eq!(slot.yt.data(), fresh.yt.data(), "round {round}");
+            assert_eq!(slot.support, fresh.support);
+            assert_eq!(slot.local_cols, fresh.local_cols);
+        }
+        // buffers were reused, not reallocated
+        assert_eq!(slot.support.as_ptr(), support_ptr);
+        assert_eq!(slot.yt.data().as_ptr(), yt_before);
+    }
+
+    #[test]
+    fn local_cols_map_entries_to_support() {
+        let mut rng = Pcg64::seed(107);
+        let xk = random_sparse(&mut rng, 6, 9, 0.3);
+        let qk = random_orthonormal(6, 2, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        assert_eq!(p.local_cols.len(), xk.nnz());
+        for (pos, &j) in xk.indices().iter().enumerate() {
+            assert_eq!(p.support[p.local_cols[pos] as usize], j);
+        }
     }
 
     #[test]

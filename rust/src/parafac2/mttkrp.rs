@@ -1,5 +1,7 @@
 //! SPARTan's specialized MTTKRP — the paper's core contribution
-//! (Algorithm 3, Figures 2–4).
+//! (Algorithm 3, Figures 2–4) — restructured as a **fused per-subject
+//! sweep** so each CP iteration traverses the packed slices the minimum
+//! number of times.
 //!
 //! All three modes operate directly on the packed frontal slices
 //! `{Y_k}` — the tensor `Y` is never materialized, no Khatri-Rao product
@@ -8,101 +10,213 @@
 //! * **mode 1** (Eq. 10):  `M¹ = Σ_k rowhad(Y_k V, W(k,:))`
 //! * **mode 2** (Eq. 13):  `M²(j,:) += (Y_k(:,j)ᵀ H) ∗ W(k,:)` for each
 //!   nonzero column j of `Y_k`
-//! * **mode 3** (Eq. 16):  `M³(k,:) = dot(H, Y_k V)` (column-wise inner
-//!   products of two R×R matrices)
+//! * **mode 3** (Eq. 16):  `M³(k,:) = dot(H, Y_k V)` — algebraically
+//!   equal to `Σ_{j ∈ supp_k} Z_k(j,:) ∗ V(j,:)` with `Z_k = Y_kᵀ H`,
+//!   which is the form used here (see below)
+//!
+//! ## The fused sweep
+//!
+//! A CP iteration updates `H` (needs mode 1 with the *old* `V`), then `V`
+//! (needs mode 2 with the *new* `H`), then `W` (needs mode 3 with the
+//! *new* `H` **and** `V`). Because mode 3 must see the post-update `V`,
+//! its `Y_k V` product cannot share mode 1's `P_k = Y_k V_old` without
+//! breaking the residual identity `⟨Y, rec⟩ = ⟨M³, W⟩` the convergence
+//! tracking relies on. Instead the sweep reuses the **mode-2**
+//! intermediate: the rows `(Y_k(:,j)ᵀ H)` that mode 2 scatters are
+//! exactly the rows of `Z_k = Y_kᵀ H`, and
+//! `M³(k,:) = Σ_{j ∈ supp_k} Z_k(j,:) ∗ V(j,:)`. Caching `Z_k` per
+//! subject (in [`FusedScratch`], `nnz(Y)`-proportional, buffers reused
+//! across iterations) turns mode 3 into an `O(c_k·R)` epilogue with **no
+//! traversal of `Y` at all**, so per CP iteration each subject is swept
+//! exactly twice (mode 1, mode 2) instead of three times, and the hottest
+//! kernel `Y_k·V` ([`PackedSlice::yk_times_v`]) runs **exactly once per
+//! subject** — an invariant counted per iteration and asserted in
+//! `metrics::flops`.
 //!
 //! Everything uses only the support rows of `V` ("we use only the rows of
 //! V factor matrix corresponding to the non-zero columns of Y_k",
 //! Fig. 2), so per-subject cost is `O(R·(R + c_k))` independent of J.
+//!
+//! ## Empty inputs
+//!
+//! All three modes share one convention: shapes derive from the factor
+//! arguments, never from the slices, so `K = 0` (and slices with empty
+//! support) are well-defined and return all-zero results of the
+//! documented shape — mode 1: `R×R` with `R = v.cols()`; mode 2: `J×R`
+//! with `R = h.cols()`; mode 3: `K×R` with `R = h.cols()`.
+//!
+//! ## Determinism
+//!
+//! Per-chunk partials are merged in chunk order with fixed
+//! [`SUBJECT_CHUNK`] boundaries, so every result is bitwise identical
+//! across worker counts, and the cached (fused) and standalone kernels
+//! share their inner loops, so they are bitwise identical to each other.
 
 use super::intermediate::PackedY;
 use crate::linalg::{blas, Mat};
 use crate::threadpool::{partition::SUBJECT_CHUNK, Pool};
+use std::ops::Range;
+
+/// Per-subject intermediates cached across the fused sweep (and across
+/// iterations — buffers are reused when shapes are unchanged).
+/// `z[k] = Y_kᵀ H` restricted to the support: shape `c_k × R`. Holding it
+/// costs exactly one extra copy of the packed `nnz(Y)`, keeping the
+/// module's memory proportional to `nnz(Y)`.
+#[derive(Debug, Default)]
+pub struct FusedScratch {
+    z: Vec<Mat>,
+}
+
+impl FusedScratch {
+    pub fn new() -> FusedScratch {
+        FusedScratch { z: Vec::new() }
+    }
+
+    /// Size `z` for `y` at rank `r`, reusing buffers whose shape already
+    /// matches.
+    fn ensure(&mut self, y: &PackedY, r: usize) {
+        if self.z.len() != y.k() {
+            self.z = y.slices.iter().map(|s| Mat::zeros(s.c_k(), r)).collect();
+            return;
+        }
+        for (z, s) in self.z.iter_mut().zip(&y.slices) {
+            if z.shape() != (s.c_k(), r) {
+                *z = Mat::zeros(s.c_k(), r);
+            }
+        }
+    }
+
+    /// Heap bytes held by the cache (memory reports).
+    pub fn heap_bytes(&self) -> u64 {
+        self.z.iter().map(|m| (m.data().len() * 8) as u64).sum()
+    }
+}
+
+/// `out = yrow · H` where `yrow = Y_k(:, j)ᵀ` (length R). Skips exact
+/// zeros, matching the packed-row sparsity the pre-fusion kernel
+/// exploited; the inner loop order fixes the floating-point sequence
+/// shared by the standalone and fused paths.
+#[inline]
+fn yt_row_times_h(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+    out.fill(0.0);
+    for (i, &yv) in yrow.iter().enumerate() {
+        if yv == 0.0 {
+            continue;
+        }
+        let hrow = h.row(i);
+        for (o, &hv) in out.iter_mut().zip(hrow) {
+            *o += yv * hv;
+        }
+    }
+}
+
+/// `out = Σ_{c} z(c,:) ∗ v(support[c],:)` — the mode-3 row epilogue.
+#[inline]
+fn mode3_row_from_z(z: &Mat, support: &[u32], v: &Mat, out: &mut [f64]) {
+    out.fill(0.0);
+    for (c, &j) in support.iter().enumerate() {
+        let zrow = z.row(c);
+        let vrow = v.row(j as usize);
+        for ((o, &zv), &vv) in out.iter_mut().zip(zrow).zip(vrow) {
+            *o += zv * vv;
+        }
+    }
+}
 
 /// Mode-1 MTTKRP: `M¹ = Y_(1) (W ⊙ V) ∈ R^{R×R}`.
 ///
-/// Per subject: `temp = Y_k V_c` (R×R), then Hadamard each row of `temp`
-/// with `W(k,:)` and accumulate. Partial sums are merged in chunk order
-/// (deterministic).
+/// Per subject: `P_k = Y_k V_c` (R×R — **the** `Y_k·V` product of the CP
+/// iteration), then Hadamard each row with `W(k,:)` and accumulate.
+/// Partial sums merge in chunk order (deterministic).
 pub fn mttkrp_mode1(y: &PackedY, v: &Mat, w: &Mat, pool: &Pool) -> Mat {
+    mttkrp_mode1_counted(y, v, w, pool).0
+}
+
+/// [`mttkrp_mode1`] also reporting how many `Y_k·V` products it performed
+/// (one per subject — the count the fused-sweep FLOP assertion checks).
+pub fn mttkrp_mode1_counted(y: &PackedY, v: &Mat, w: &Mat, pool: &Pool) -> (Mat, u64) {
     let k = y.k();
-    let r = w.cols();
+    let r = v.cols();
     assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
     assert_eq!(w.rows(), k, "W rows must equal K");
+    assert_eq!(w.cols(), r, "W/V rank mismatch");
     let chunk = SUBJECT_CHUNK;
     pool.par_fold(
         k,
         chunk,
         |range| {
             let mut acc = Mat::zeros(r, r);
+            let mut yv_products = 0u64;
             for kk in range {
                 let slice = &y.slices[kk];
                 let mut temp = slice.yk_times_v(v); // R×R, support rows only
+                yv_products += 1;
                 let wk = w.row(kk);
                 blas::rowhad_inplace(&mut temp, wk); // temp(r,:) *= W(k,:)
                 acc.axpy(1.0, &temp);
             }
-            acc
+            (acc, yv_products)
         },
-        |mut a, b| {
+        |(mut a, na), (b, nb)| {
             a.axpy(1.0, &b);
-            a
+            (a, na + nb)
         },
     )
-    .unwrap_or_else(|| Mat::zeros(r, r))
+    .unwrap_or_else(|| (Mat::zeros(r, r), 0))
 }
 
-/// Mode-2 MTTKRP: `M² = Y_(2) (W ⊙ H) ∈ R^{J×R}`.
-///
-/// Per subject, only the `c_k` nonzero columns of `Y_k` produce nonzero
-/// rows of the partial result; each is `(Y_k(:,j)ᵀ H) ∗ W(k,:)` scattered
-/// to row j. Each chunk accumulates into a transient dense J×R buffer and
-/// hands back only the *touched rows* (the union of its subjects' column
-/// supports), so held memory stays proportional to `nnz(Y)` and the merge
-/// — done in chunk order — is deterministic across worker counts.
-pub fn mttkrp_mode2(y: &PackedY, h: &Mat, w: &Mat, pool: &Pool) -> Mat {
-    let k = y.k();
-    let r = w.cols();
-    let j_dim = y.j_dim;
-    assert_eq!(h.rows(), r, "H must be R×R");
-    assert_eq!(w.rows(), k, "W rows must equal K");
-    let chunk = SUBJECT_CHUNK;
-    // Per chunk: (touched column ids, their accumulated rows, row-major r).
-    let partials = pool.par_chunk_results(k, chunk, |range| {
-        let mut acc = Mat::zeros(j_dim, r);
-        let mut touched = vec![false; j_dim];
-        let mut row_buf = vec![0.0f64; r];
-        for kk in range {
-            let slice = &y.slices[kk];
-            let wk = w.row(kk);
-            for (c, &j) in slice.support.iter().enumerate() {
-                // row = (Y_k(:, j)ᵀ · H) ∗ W(k,:)
-                let yrow = slice.yt.row(c); // = Y_k(:, j)ᵀ, length R
-                row_buf.fill(0.0);
-                for (i, &yv) in yrow.iter().enumerate() {
-                    if yv == 0.0 {
-                        continue;
-                    }
-                    let hrow = h.row(i);
-                    for (b, &hv) in row_buf.iter_mut().zip(hrow) {
-                        *b += yv * hv;
-                    }
-                }
-                touched[j as usize] = true;
-                let arow = acc.row_mut(j as usize);
-                for ((a, &b), &wv) in arow.iter_mut().zip(&row_buf).zip(wk) {
-                    *a += b * wv;
-                }
+/// One chunk of the mode-2 sweep: accumulate into rows indexed by the
+/// sorted **union of the chunk's column supports** (never a dense `J×R`
+/// buffer — held memory stays proportional to the chunk's `nnz(Y)` even
+/// for very large J). When `z_chunk` is given (fused path), the per-row
+/// products `Z_k(c,:) = Y_k(:,j_c)ᵀ H` are written into the cache for the
+/// mode-3 epilogue; the arithmetic sequence is identical either way.
+fn mode2_chunk(
+    y: &PackedY,
+    h: &Mat,
+    w: &Mat,
+    range: Range<usize>,
+    mut z_chunk: Option<&mut [Mat]>,
+) -> (Vec<u32>, Vec<f64>) {
+    let r = h.cols();
+    let mut ids: Vec<u32> = Vec::new();
+    for kk in range.clone() {
+        ids.extend_from_slice(&y.slices[kk].support);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    let mut acc = Mat::zeros(ids.len(), r);
+    let mut row_buf = vec![0.0f64; r];
+    for (local_k, kk) in range.enumerate() {
+        let slice = &y.slices[kk];
+        let wk = w.row(kk);
+        let mut z = z_chunk.as_deref_mut().map(|zs| &mut zs[local_k]);
+        debug_assert!(z.as_ref().map_or(true, |zm| zm.shape() == (slice.c_k(), r)));
+        for (c, &j) in slice.support.iter().enumerate() {
+            // One loop for both paths: the only difference is whether the
+            // Z row lands in the cache (fused) or a transient buffer —
+            // keeping a single copy of the scatter preserves the
+            // documented bitwise identity between the two by construction.
+            let row: &mut [f64] = match z.as_deref_mut() {
+                Some(zm) => zm.row_mut(c),
+                None => &mut row_buf,
+            };
+            yt_row_times_h(slice.yt.row(c), h, row);
+            let local = ids.binary_search(&j).expect("support id in union");
+            let arow = acc.row_mut(local);
+            for ((a, &b), &wv) in arow.iter_mut().zip(&*row).zip(wk) {
+                *a += b * wv;
             }
         }
-        // compact: only touched rows survive the chunk
-        let ids: Vec<u32> = (0..j_dim as u32).filter(|&j| touched[j as usize]).collect();
-        let mut vals = Vec::with_capacity(ids.len() * r);
-        for &j in &ids {
-            vals.extend_from_slice(acc.row(j as usize));
-        }
-        (ids, vals)
-    });
+    }
+    let mut vals = Vec::with_capacity(ids.len() * r);
+    for t in 0..ids.len() {
+        vals.extend_from_slice(acc.row(t));
+    }
+    (ids, vals)
+}
+
+fn mode2_merge(j_dim: usize, r: usize, partials: Vec<(Vec<u32>, Vec<f64>)>) -> Mat {
     let mut m = Mat::zeros(j_dim, r);
     for (ids, vals) in partials {
         for (t, &j) in ids.iter().enumerate() {
@@ -115,36 +229,106 @@ pub fn mttkrp_mode2(y: &PackedY, h: &Mat, w: &Mat, pool: &Pool) -> Mat {
     m
 }
 
+/// Mode-2 MTTKRP: `M² = Y_(2) (W ⊙ H) ∈ R^{J×R}`.
+///
+/// Per subject, only the `c_k` nonzero columns of `Y_k` produce nonzero
+/// rows of the partial result; each chunk accumulates over the union of
+/// its subjects' supports and the chunk partials merge in chunk order
+/// (deterministic across worker counts).
+pub fn mttkrp_mode2(y: &PackedY, h: &Mat, w: &Mat, pool: &Pool) -> Mat {
+    let r = check_mode2_shapes(y, h, w);
+    let partials =
+        pool.par_chunk_results(y.k(), SUBJECT_CHUNK, |range| mode2_chunk(y, h, w, range, None));
+    mode2_merge(y.j_dim, r, partials)
+}
+
+/// Fused-sweep mode 2: identical result to [`mttkrp_mode2`] (bitwise),
+/// additionally filling `scratch` with `Z_k = Y_kᵀ H` for
+/// [`mttkrp_mode3_from_cache`].
+pub fn mttkrp_mode2_cached(
+    y: &PackedY,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    scratch: &mut FusedScratch,
+) -> Mat {
+    let r = check_mode2_shapes(y, h, w);
+    scratch.ensure(y, r);
+    let partials = pool.par_chunks_mut(&mut scratch.z, SUBJECT_CHUNK, |start, sub| {
+        mode2_chunk(y, h, w, start..start + sub.len(), Some(sub))
+    });
+    mode2_merge(y.j_dim, r, partials)
+}
+
+fn check_mode2_shapes(y: &PackedY, h: &Mat, w: &Mat) -> usize {
+    let r = h.cols();
+    assert_eq!(h.rows(), r, "H must be R×R");
+    assert_eq!(w.rows(), y.k(), "W rows must equal K");
+    assert_eq!(w.cols(), r, "W/H rank mismatch");
+    r
+}
+
 /// Mode-3 MTTKRP: `M³ = Y_(3) (V ⊙ H) ∈ R^{K×R}`.
 ///
-/// Row k of the result is computed independently as the column-wise inner
-/// products of `H` and `Y_k V` (both R×R): "it is efficient to delay any
-/// computations on H until the R-by-R product of Y_k V is formed"
-/// (paper Fig. 4).
+/// Row k is `Σ_{j ∈ supp_k} (Y_k(:,j)ᵀ H) ∗ V(j,:)` — the same
+/// "delay computations on H until an R-by-R-sized product exists" trick
+/// as the paper's Fig. 4, expressed through `Z_k = Y_kᵀ H` so the fused
+/// path can reuse mode 2's intermediate. Bitwise identical to
+/// [`mttkrp_mode3_from_cache`] on the same inputs.
 pub fn mttkrp_mode3(y: &PackedY, h: &Mat, v: &Mat, pool: &Pool) -> Mat {
     let k = y.k();
     let r = h.cols();
+    assert_eq!(h.rows(), r, "H must be R×R");
     assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
-    let chunk = SUBJECT_CHUNK;
-    let rows = pool.par_chunk_results(k, chunk, |range| {
+    assert_eq!(v.cols(), r, "V/H rank mismatch");
+    let rows = pool.par_chunk_results(k, SUBJECT_CHUNK, |range| {
         let mut out = Mat::zeros(range.len(), r);
+        let mut row_buf = vec![0.0f64; r];
         for (local, kk) in range.enumerate() {
             let slice = &y.slices[kk];
-            let p = slice.yk_times_v(v); // R×R
             let orow = out.row_mut(local);
-            for i in 0..r {
-                let hrow = h.row(i);
-                let prow = p.row(i);
-                for ((o, &hv), &pv) in orow.iter_mut().zip(hrow).zip(prow) {
-                    *o += hv * pv; // Σ_i H(i,r)·P(i,r) accumulated per column r
+            // Interleaved: compute each Z_k row into a reused R-length
+            // buffer and accumulate immediately — same c-then-column
+            // floating-point order as the cached epilogue (bitwise
+            // identical), without materializing a c_k×R temporary.
+            for (c, &j) in slice.support.iter().enumerate() {
+                yt_row_times_h(slice.yt.row(c), h, &mut row_buf);
+                let vrow = v.row(j as usize);
+                for ((o, &zv), &vv) in orow.iter_mut().zip(&row_buf).zip(vrow) {
+                    *o += zv * vv;
                 }
             }
         }
         out
     });
+    assemble_rows(k, r, rows)
+}
+
+/// Fused-sweep mode 3: the epilogue over the cached `Z_k = Y_kᵀ H` from
+/// [`mttkrp_mode2_cached`]. `O(c_k·R)` per subject, no traversal of `Y`,
+/// no `Y_k·V` product. `v` must be the (post-update) `V` factor.
+pub fn mttkrp_mode3_from_cache(y: &PackedY, v: &Mat, scratch: &FusedScratch, pool: &Pool) -> Mat {
+    let k = y.k();
+    let r = v.cols();
+    assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
+    assert_eq!(scratch.z.len(), k, "scratch must be filled by mttkrp_mode2_cached");
+    let rows = pool.par_chunk_results(k, SUBJECT_CHUNK, |range| {
+        let mut out = Mat::zeros(range.len(), r);
+        for (local, kk) in range.enumerate() {
+            let slice = &y.slices[kk];
+            let z = &scratch.z[kk];
+            debug_assert_eq!(z.shape(), (slice.c_k(), r));
+            mode3_row_from_z(z, &slice.support, v, out.row_mut(local));
+        }
+        out
+    });
+    assemble_rows(k, r, rows)
+}
+
+fn assemble_rows(k: usize, r: usize, blocks: Vec<Mat>) -> Mat {
     let mut m = Mat::zeros(k, r);
     let mut at = 0usize;
-    for block in rows {
+    for block in blocks {
         for i in 0..block.rows() {
             m.row_mut(at).copy_from_slice(block.row(i));
             at += 1;
@@ -263,21 +447,85 @@ mod tests {
     #[test]
     fn serial_equals_parallel_bitwise() {
         let mut rng = Pcg64::seed(122);
-        let y = random_packed(&mut rng, 9, 8, 3);
+        // K = 70 > SUBJECT_CHUNK so the parallel pool really runs the
+        // multi-chunk path (a single chunk would take the inline fast
+        // path and the test would compare serial against itself).
+        let k = SUBJECT_CHUNK + 6;
+        let y = random_packed(&mut rng, k, 8, 3);
         let h = Mat::rand_normal(3, 3, &mut rng);
         let v = Mat::rand_normal(8, 3, &mut rng);
-        let w = Mat::rand_normal(9, 3, &mut rng);
+        let w = Mat::rand_normal(k, 3, &mut rng);
         let ser = Pool::serial();
         let par = Pool::new(4);
-        // chunk-ordered reduction ⇒ identical floating point results
+        // chunk-ordered reduction ⇒ identical floating point results,
+        // for every mode and for the fused (cached) sweep
         assert_eq!(
             mttkrp_mode1(&y, &v, &w, &ser).data(),
             mttkrp_mode1(&y, &v, &w, &par).data()
         );
         assert_eq!(
+            mttkrp_mode2(&y, &h, &w, &ser).data(),
+            mttkrp_mode2(&y, &h, &w, &par).data()
+        );
+        assert_eq!(
             mttkrp_mode3(&y, &h, &v, &ser).data(),
             mttkrp_mode3(&y, &h, &v, &par).data()
         );
+        let mut scr_s = FusedScratch::new();
+        let mut scr_p = FusedScratch::new();
+        assert_eq!(
+            mttkrp_mode2_cached(&y, &h, &w, &ser, &mut scr_s).data(),
+            mttkrp_mode2_cached(&y, &h, &w, &par, &mut scr_p).data()
+        );
+        assert_eq!(
+            mttkrp_mode3_from_cache(&y, &v, &scr_s, &ser).data(),
+            mttkrp_mode3_from_cache(&y, &v, &scr_p, &par).data()
+        );
+    }
+
+    #[test]
+    fn fused_sweep_matches_separate_kernels_bitwise() {
+        // Regression guard for the fused path: the cached mode-2 and the
+        // cache-fed mode-3 must agree **bitwise** with the standalone
+        // kernels on the same inputs, on both serial and parallel pools,
+        // and across repeated reuse of the same scratch.
+        let mut rng = Pcg64::seed(125);
+        // K crosses the SUBJECT_CHUNK boundary so the fused z_chunk
+        // indexing and the chunk-ordered merge are exercised for real.
+        let k = SUBJECT_CHUNK + 5;
+        let y = random_packed(&mut rng, k, 11, 3);
+        let mut scratch = FusedScratch::new();
+        for round in 0..3 {
+            let h = Mat::rand_normal(3, 3, &mut rng);
+            let v = Mat::rand_normal(11, 3, &mut rng);
+            let w = Mat::rand_normal(k, 3, &mut rng);
+            for pool in [Pool::serial(), Pool::new(4)] {
+                let m2_fused = mttkrp_mode2_cached(&y, &h, &w, &pool, &mut scratch);
+                let m3_fused = mttkrp_mode3_from_cache(&y, &v, &scratch, &pool);
+                assert_eq!(
+                    m2_fused.data(),
+                    mttkrp_mode2(&y, &h, &w, &pool).data(),
+                    "round {round} mode2"
+                );
+                assert_eq!(
+                    m3_fused.data(),
+                    mttkrp_mode3(&y, &h, &v, &pool).data(),
+                    "round {round} mode3"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mode1_counts_one_yv_product_per_subject() {
+        let mut rng = Pcg64::seed(126);
+        let y = random_packed(&mut rng, 7, 6, 2);
+        let v = Mat::rand_normal(6, 2, &mut rng);
+        let w = Mat::rand_normal(7, 2, &mut rng);
+        for pool in [Pool::serial(), Pool::new(3)] {
+            let (_, n) = mttkrp_mode1_counted(&y, &v, &w, &pool);
+            assert_eq!(n, 7);
+        }
     }
 
     #[test]
@@ -296,6 +544,58 @@ mod tests {
             let nz = m2.row(jj).iter().any(|&x| x != 0.0);
             assert_eq!(nz, jj == 4 || jj == 9, "row {jj}");
         }
+    }
+
+    #[test]
+    fn empty_inputs_consistent_across_modes() {
+        // One K = 0 / empty-support convention for all three modes:
+        // zero-filled results with shapes derived from the factors.
+        let r = 3;
+        let j = 7;
+        let y = PackedY { slices: vec![], j_dim: j };
+        let mut rng = Pcg64::seed(127);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::zeros(0, r);
+        let pool = Pool::new(2);
+        let m1 = mttkrp_mode1(&y, &v, &w, &pool);
+        assert_eq!(m1.shape(), (r, r));
+        assert!(m1.data().iter().all(|&x| x == 0.0));
+        let m2 = mttkrp_mode2(&y, &h, &w, &pool);
+        assert_eq!(m2.shape(), (j, r));
+        assert!(m2.data().iter().all(|&x| x == 0.0));
+        let m3 = mttkrp_mode3(&y, &h, &v, &pool);
+        assert_eq!(m3.shape(), (0, r));
+        let mut scratch = FusedScratch::new();
+        let m2c = mttkrp_mode2_cached(&y, &h, &w, &pool, &mut scratch);
+        assert_eq!(m2c.shape(), (j, r));
+        assert_eq!(mttkrp_mode3_from_cache(&y, &v, &scratch, &pool).shape(), (0, r));
+    }
+
+    #[test]
+    fn empty_support_slice_contributes_nothing() {
+        let mut rng = Pcg64::seed(128);
+        let (k, j, r) = (4usize, 6usize, 2usize);
+        let y = random_packed(&mut rng, k, j, r);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::rand_normal(k + 1, r, &mut rng);
+        let mut padded = y.slices.clone();
+        padded.push(PackedSlice::from_parts(Vec::new(), Vec::new(), Mat::zeros(0, r)));
+        let yp = PackedY { slices: padded, j_dim: j };
+        let wk = w.block(0, k, 0, r);
+        let pool = Pool::serial();
+        assert_eq!(
+            mttkrp_mode1(&y, &v, &wk, &pool).data(),
+            mttkrp_mode1(&yp, &v, &w, &pool).data()
+        );
+        assert_eq!(
+            mttkrp_mode2(&y, &h, &wk, &pool).data(),
+            mttkrp_mode2(&yp, &h, &w, &pool).data()
+        );
+        // mode 3 gains one row for the padded subject, and it is zero
+        let m3p = mttkrp_mode3(&yp, &h, &v, &pool);
+        assert!(m3p.row(k).iter().all(|&x| x == 0.0));
     }
 
     #[test]

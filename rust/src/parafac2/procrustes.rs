@@ -55,8 +55,51 @@ pub fn procrustes_and_pack(
     (packed, if keep_q { Some(qk) } else { None })
 }
 
-/// Run step 1 for all subjects on the pool. Returns the packed
-/// intermediate tensor and (optionally) all `Q_k`.
+/// Run step 1 for all subjects on the pool, writing the packed slices
+/// **in place** into `y` (the slice arena): the support/`local_cols`/`yt`
+/// buffers of an already-filled arena are reused, so steady-state
+/// iterations perform zero per-subject allocations in this phase.
+/// Returns all `Q_k` when `keep_q`.
+pub fn procrustes_all_into(
+    data: &IrregularTensor,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    keep_q: bool,
+    y: &mut PackedY,
+) -> Option<Vec<Mat>> {
+    let k = data.k();
+    y.j_dim = data.j();
+    y.resize_slots(k);
+    let chunk = SUBJECT_CHUNK;
+    let per_chunk: Vec<Vec<Mat>> = pool.par_chunks_mut(&mut y.slices, chunk, |start, sub| {
+        let mut qs = Vec::with_capacity(if keep_q { sub.len() } else { 0 });
+        for (i, slot) in sub.iter_mut().enumerate() {
+            let xk = data.slice(start + i);
+            let b = procrustes_target(xk, v, h, w.row(start + i));
+            let qk = crate::linalg::svd::procrustes_polar_jacobi(&b);
+            slot.repack_from(xk, &qk);
+            if keep_q {
+                qs.push(qk);
+            }
+        }
+        qs
+    });
+    if keep_q {
+        let mut qs = Vec::with_capacity(k);
+        for chunk_qs in per_chunk {
+            qs.extend(chunk_qs);
+        }
+        Some(qs)
+    } else {
+        None
+    }
+}
+
+/// Run step 1 for all subjects on the pool into a fresh [`PackedY`].
+/// (Convenience wrapper over [`procrustes_all_into`]; the ALS loop holds
+/// a persistent arena instead.)
 pub fn procrustes_all(
     data: &IrregularTensor,
     v: &Mat,
@@ -65,24 +108,9 @@ pub fn procrustes_all(
     pool: &Pool,
     keep_q: bool,
 ) -> (PackedY, Option<Vec<Mat>>) {
-    let k = data.k();
-    let chunk = SUBJECT_CHUNK;
-    let per_chunk = pool.par_chunk_results(k, chunk, |range| {
-        range
-            .map(|kk| procrustes_and_pack(data.slice(kk), v, h, w.row(kk), keep_q))
-            .collect::<Vec<_>>()
-    });
-    let mut slices = Vec::with_capacity(k);
-    let mut qs = if keep_q { Some(Vec::with_capacity(k)) } else { None };
-    for chunk_res in per_chunk {
-        for (p, q) in chunk_res {
-            slices.push(p);
-            if let (Some(qs), Some(q)) = (qs.as_mut(), q) {
-                qs.push(q);
-            }
-        }
-    }
-    (PackedY { slices, j_dim: data.j() }, qs)
+    let mut y = PackedY::empty(data.j());
+    let qs = procrustes_all_into(data, v, h, w, pool, keep_q, &mut y);
+    (y, qs)
 }
 
 #[cfg(test)]
@@ -174,6 +202,35 @@ mod tests {
         for k in 0..data.k() {
             assert!(y_ser.slices[k].yt.max_abs_diff(&y_par.slices[k].yt) < 1e-14);
             assert!(q_ser.as_ref().unwrap()[k].max_abs_diff(&q_par.as_ref().unwrap()[k]) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn arena_repack_matches_fresh_pack_bitwise() {
+        let mut rng = Pcg64::seed(115);
+        let r = 3;
+        let slices: Vec<Csr> = (0..5)
+            .map(|_| {
+                let rows = 5 + rng.range(0, 4);
+                random_sparse(&mut rng, rows, 8, 0.3)
+            })
+            .collect();
+        let data = IrregularTensor::new(slices);
+        let mut y = crate::parafac2::intermediate::PackedY::empty(data.j());
+        let pool = Pool::new(3);
+        for round in 0..4 {
+            let v = Mat::rand_normal(8, r, &mut rng);
+            let h = Mat::rand_normal(r, r, &mut rng);
+            let w = Mat::rand_uniform(5, r, &mut rng);
+            let _ = procrustes_all_into(&data, &v, &h, &w, &pool, false, &mut y);
+            let (fresh, _) = procrustes_all(&data, &v, &h, &w, &Pool::serial(), false);
+            for k in 0..data.k() {
+                assert_eq!(
+                    y.slices[k].yt.data(),
+                    fresh.slices[k].yt.data(),
+                    "round {round} subject {k}"
+                );
+            }
         }
     }
 

@@ -1,48 +1,269 @@
-//! Scoped data-parallel execution over the K subjects.
+//! Persistent data-parallel worker pool for the per-subject kernels.
 //!
 //! The paper's kernels are "fully parallelizable w.r.t. the K subjects"
 //! (§4.1) and the reference implementation leans on Matlab's parallel
-//! pool. The offline crate set has no rayon, so this is a small scoped
-//! pool built on `std::thread::scope`:
+//! pool. The offline crate set has no rayon, so this is a small
+//! hand-rolled pool. Earlier revisions spawned threads per call via
+//! `std::thread::scope`; an ALS iteration makes several pool calls
+//! (Procrustes, then each CP kernel), so the spawn/join cost was paid 4+
+//! times per iteration. The pool is now **persistent**:
 //!
-//! * work is split into contiguous chunks of subjects,
-//! * workers pull chunk ids from an atomic counter (dynamic load balance —
-//!   subjects have wildly different nnz, so static splits would skew),
-//! * per-chunk results are returned **in chunk order**, so reductions are
-//!   bit-for-bit deterministic regardless of thread scheduling.
+//! ## Threading model
+//!
+//! * [`Pool::new`] spawns `workers - 1` long-lived threads (the caller of
+//!   each parallel operation acts as the remaining worker, so
+//!   `Pool::serial()` spawns nothing and runs inline with zero
+//!   synchronization).
+//! * Each parallel call publishes **one job** — an erased chunk executor
+//!   plus an atomic chunk cursor — into a shared slot guarded by a
+//!   `Mutex`/`Condvar`; idle workers wake, pull chunk ids from the cursor
+//!   until it is exhausted, and go back to sleep. Work is therefore
+//!   dynamically load-balanced (subjects have wildly different nnz, so
+//!   static splits would skew).
+//! * The caller participates in the chunk loop, then blocks on a
+//!   completion latch counting finished chunks. Only after every chunk
+//!   has finished does the call return, which is what makes lending the
+//!   caller's stack closure to `'static` worker threads sound: no worker
+//!   can touch the closure after the latch releases (late workers only
+//!   observe an exhausted cursor and never dereference the task again).
+//! * Per-chunk results are stored **by chunk id** and merged in chunk
+//!   order, so every reduction is bit-for-bit deterministic regardless of
+//!   thread scheduling or worker count (chunk boundaries depend only on
+//!   the data — see [`partition::SUBJECT_CHUNK`]).
+//! * A panic inside a chunk is caught, the latch still advances (no
+//!   deadlock), and the payload is re-thrown on the calling thread after
+//!   the job drains.
+//! * Jobs do not nest: a parallel call issued while a job is already
+//!   active (e.g. from inside a worker) runs inline serially — same
+//!   results, no deadlock.
+//!
+//! Cloning a [`Pool`] shares the same workers; the threads shut down when
+//! the last handle drops.
 
 pub mod partition;
 
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// A lightweight handle describing how much parallelism to use.
-/// (Threads are spawned per call via `std::thread::scope`; at the chunk
-/// sizes used by the kernels, spawn cost is noise.)
-#[derive(Clone, Debug)]
-pub struct Pool {
+/// Type-erased pointer to a caller-stack chunk executor (`Fn(chunk_id)`).
+/// Sound to send across threads because the publishing call blocks until
+/// every chunk has completed before its referent goes out of scope.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// Raw base pointer used by [`Pool::par_chunks_mut`] to hand disjoint
+/// `&mut` sub-slices to workers.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Completion latch + first-panic slot for one job.
+struct JobStatus {
+    /// Chunks not yet finished; guarded so the caller can sleep on it.
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+#[derive(Clone)]
+struct Job {
+    task: TaskRef,
+    n_chunks: usize,
+    next: Arc<AtomicUsize>,
+    status: Arc<JobStatus>,
+}
+
+/// The slot workers watch. `epoch` distinguishes successive jobs so a
+/// worker that finishes early does not re-enter the same job.
+struct JobSlot {
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    work_cv: Condvar,
+}
+
+struct PoolCore {
     workers: usize,
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim chunks from the cursor until exhausted. Shared by workers and the
+/// publishing caller.
+fn run_chunks(job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.n_chunks {
+            break;
+        }
+        // SAFETY: the task outlives the job — the publishing call blocks
+        // until `remaining` hits 0, and this deref happens strictly before
+        // this chunk's decrement below.
+        let task = unsafe { &*job.task.0 };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(c))) {
+            let mut slot = job.status.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut remaining = job.status.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            job.status.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.job.is_some() && slot.epoch != last_epoch {
+                    last_epoch = slot.epoch;
+                    break slot.job.clone().unwrap();
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        run_chunks(&job);
+    }
+}
+
+/// A persistent worker pool. Cheap to clone (handles share workers).
+#[derive(Clone)]
+pub struct Pool {
+    core: Arc<PoolCore>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("workers", &self.core.workers).finish()
+    }
 }
 
 impl Pool {
     /// `workers = 0` resolves to the machine's available parallelism.
+    /// Spawns `workers - 1` persistent threads (the caller is worker 0).
     pub fn new(workers: usize) -> Pool {
         let resolved = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             workers
         };
-        Pool { workers: resolved.max(1) }
+        let workers = resolved.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot { epoch: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers.saturating_sub(1));
+        for i in 1..workers {
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("spartan-worker-{i}"))
+                .spawn(move || worker_loop(sh));
+            if let Ok(h) = spawned {
+                handles.push(h);
+            }
+        }
+        // If any spawn failed, the pool still works with fewer threads —
+        // correctness never depends on the worker count.
+        Pool {
+            core: Arc::new(PoolCore {
+                workers: handles.len() + 1,
+                shared,
+                handles: Mutex::new(handles),
+            }),
+        }
     }
 
-    /// Single-threaded pool (useful to measure parallel overhead).
+    /// Single-threaded pool (useful to measure parallel overhead). Runs
+    /// everything inline; no threads are spawned.
     pub fn serial() -> Pool {
-        Pool { workers: 1 }
+        Pool::new(1)
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.core.workers
+    }
+
+    /// Execute `task(c)` for every `c in 0..n_chunks`, either inline
+    /// (serial pool, single chunk, or a job already active) or on the
+    /// persistent workers with the caller participating.
+    fn run_job(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if self.core.workers == 1 || n_chunks <= 1 {
+            for c in 0..n_chunks {
+                task(c);
+            }
+            return;
+        }
+        let job = Job {
+            task: TaskRef(task as *const (dyn Fn(usize) + Sync)),
+            n_chunks,
+            next: Arc::new(AtomicUsize::new(0)),
+            status: Arc::new(JobStatus {
+                remaining: Mutex::new(n_chunks),
+                done_cv: Condvar::new(),
+                panic: Mutex::new(None),
+            }),
+        };
+        {
+            let mut slot = self.core.shared.slot.lock().unwrap();
+            if slot.job.is_some() {
+                // Nested parallel call (issued from inside a running job):
+                // run inline — identical chunk order, no deadlock.
+                drop(slot);
+                for c in 0..n_chunks {
+                    task(c);
+                }
+                return;
+            }
+            slot.epoch = slot.epoch.wrapping_add(1);
+            slot.job = Some(job.clone());
+        }
+        self.core.shared.work_cv.notify_all();
+        run_chunks(&job);
+        {
+            let mut remaining = job.status.remaining.lock().unwrap();
+            while *remaining != 0 {
+                remaining = job.status.done_cv.wait(remaining).unwrap();
+            }
+        }
+        {
+            let mut slot = self.core.shared.slot.lock().unwrap();
+            slot.job = None;
+        }
+        if let Some(payload) = job.status.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
     }
 
     /// Apply `f` to chunk index ranges covering `0..n`, returning per-chunk
@@ -57,28 +278,63 @@ impl Pool {
         if n_chunks == 0 {
             return Vec::new();
         }
-        // Serial fast path: no synchronization, no spawns.
-        if self.workers == 1 || n_chunks == 1 {
+        // Serial fast path: no synchronization.
+        if self.core.workers == 1 || n_chunks == 1 {
             return (0..n_chunks)
                 .map(|c| f(c * chunk..((c + 1) * chunk).min(n)))
                 .collect();
         }
-        let next = AtomicUsize::new(0);
-        let slots: Mutex<Vec<Option<R>>> =
-            Mutex::new((0..n_chunks).map(|_| None).collect());
-        let threads = self.workers.min(n_chunks);
-        std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let c = next.fetch_add(1, Ordering::Relaxed);
-                    if c >= n_chunks {
-                        break;
-                    }
-                    let r = f(c * chunk..((c + 1) * chunk).min(n));
-                    slots.lock().unwrap()[c] = Some(r);
-                });
-            }
-        });
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_chunks).map(|_| None).collect());
+        let task = |c: usize| {
+            let r = f(c * chunk..((c + 1) * chunk).min(n));
+            slots.lock().unwrap()[c] = Some(r);
+        };
+        self.run_job(n_chunks, &task);
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("chunk result missing"))
+            .collect()
+    }
+
+    /// Chunked parallel mutation: split `items` into contiguous chunks and
+    /// apply `f(start_index, chunk_slice)` to each, returning per-chunk
+    /// results ordered by chunk id. The arena-reuse path (repacking `Y_k`
+    /// slices in place, refreshing per-subject scratch) needs disjoint
+    /// `&mut` access from workers; chunk ranges never overlap, so handing
+    /// out raw-pointer-derived sub-slices is sound.
+    pub fn par_chunks_mut<T, R, F>(&self, items: &mut [T], chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut [T]) -> R + Sync,
+    {
+        let n = items.len();
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        if self.core.workers == 1 || n_chunks == 1 {
+            return items
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(c, sub)| f(c * chunk, sub))
+                .collect();
+        }
+        let base = SendPtr(items.as_mut_ptr());
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_chunks).map(|_| None).collect());
+        let task = |c: usize| {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(n);
+            // SAFETY: chunks are disjoint sub-ranges of `items`, which the
+            // caller exclusively borrows for the duration of the job.
+            let sub = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            let r = f(start, sub);
+            slots.lock().unwrap()[c] = Some(r);
+        };
+        self.run_job(n_chunks, &task);
         slots
             .into_inner()
             .unwrap()
@@ -201,5 +457,84 @@ mod tests {
         assert!(Pool::new(0).workers() >= 1);
         assert_eq!(Pool::new(3).workers(), 3);
         assert_eq!(Pool::serial().workers(), 1);
+    }
+
+    #[test]
+    fn persistent_workers_survive_many_jobs() {
+        // The same pool handles a long sequence of parallel calls — the
+        // regression this guards: per-call spawn pools leak no state, a
+        // persistent pool must not deadlock or cross-talk between jobs.
+        let pool = Pool::new(3);
+        for round in 0..200usize {
+            let got = pool
+                .par_fold(97, 5, |r| r.map(|i| i + round).sum::<usize>(), |a, b| a + b)
+                .unwrap();
+            let want: usize = (0..97).map(|i| i + round).sum();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn clones_share_workers() {
+        let pool = Pool::new(4);
+        let clone = pool.clone();
+        assert_eq!(pool.workers(), clone.workers());
+        let a = pool.par_map(40, 3, |i| i * 2);
+        let b = clone.par_map(40, 3, |i| i * 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn par_chunks_mut_disjoint_updates() {
+        let pool = Pool::new(4);
+        let mut data: Vec<u64> = (0..103).collect();
+        let starts = pool.par_chunks_mut(&mut data, 10, |start, sub| {
+            for (i, x) in sub.iter_mut().enumerate() {
+                *x = (start + i) as u64 * 3;
+            }
+            start
+        });
+        assert_eq!(starts, (0..11).map(|c| c * 10).collect::<Vec<_>>());
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64 * 3));
+    }
+
+    #[test]
+    fn par_chunks_mut_serial_matches_parallel() {
+        let run = |pool: &Pool| {
+            let mut data = vec![1.0f64; 64];
+            pool.par_chunks_mut(&mut data, 7, |start, sub| {
+                for (i, x) in sub.iter_mut().enumerate() {
+                    *x = ((start + i) as f64).sin();
+                }
+            });
+            data
+        };
+        assert_eq!(run(&Pool::serial()), run(&Pool::new(5)));
+    }
+
+    #[test]
+    fn nested_calls_run_inline() {
+        let pool = Pool::new(3);
+        let outer = pool.par_chunk_results(6, 2, |r| {
+            // nested call from inside a running job must not deadlock
+            pool.par_fold(10, 3, |q| q.sum::<usize>(), |a, b| a + b).unwrap() + r.len()
+        });
+        assert_eq!(outer, vec![47, 47, 47]);
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_without_deadlock() {
+        let pool = Pool::new(3);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.par_for(20, 2, |i| {
+                if i == 11 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // pool still usable afterwards
+        let ok = pool.par_fold(30, 4, |r| r.sum::<usize>(), |a, b| a + b).unwrap();
+        assert_eq!(ok, (0..30).sum::<usize>());
     }
 }

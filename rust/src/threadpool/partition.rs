@@ -42,7 +42,10 @@ pub fn balanced_chunks(weights: &[u64], target_chunks: usize) -> Vec<Range<usize
 /// boundaries — and therefore floating-point summation order — depend only
 /// on the data, never on the machine. 64 subjects per chunk keeps
 /// scheduling overhead < 1% at the workloads in the paper's sweeps while
-/// still load-balancing heavy-tailed subjects.
+/// still load-balancing heavy-tailed subjects. The persistent pool's
+/// dynamic chunk cursor (see [`crate::threadpool::Pool`]) hands these
+/// fixed chunks to whichever worker is free, so load balance is dynamic
+/// while the reduction order stays fixed.
 pub const SUBJECT_CHUNK: usize = 64;
 
 /// Heuristic chunk size for a uniform split of `n` items across `workers`,

@@ -95,10 +95,11 @@ fn prop_zero_subject_padding_invariance() {
 
         // pad: a subject with zero yt and zero w row
         let mut slices = y.slices.clone();
-        slices.push(PackedSlice {
-            support: vec![0, 1.min(j as u32 - 1)],
-            yt: Mat::zeros(2, r),
-        });
+        slices.push(PackedSlice::from_parts(
+            vec![0, 1.min(j as u32 - 1)],
+            Vec::new(),
+            Mat::zeros(2, r),
+        ));
         let yp = PackedY { slices, j_dim: j };
         let mut wp = Mat::zeros(k + 1, r);
         for i in 0..k {

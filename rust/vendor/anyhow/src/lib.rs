@@ -1,0 +1,186 @@
+//! Vendored minimal subset of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository is fully offline, so instead
+//! of pulling `anyhow` from crates.io we vendor the small surface the
+//! crate actually uses as a path dependency with the same crate name:
+//!
+//! * [`Error`] — an opaque error value holding a context chain,
+//! * [`Result`] — `std::result::Result` with `Error` as the default error,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction macros,
+//! * `From<E: std::error::Error>` so `?` lifts std errors automatically.
+//!
+//! Semantics match `anyhow` where it matters to callers: `{}` displays the
+//! outermost message, `{:#}` displays the full chain joined by `": "`, and
+//! `{:?}` displays the chain as a "Caused by" list. Like `anyhow::Error`,
+//! [`Error`] deliberately does **not** implement `std::error::Error`
+//! (that keeps the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// `std::result::Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost message; each later entry is one cause
+    /// deeper. Always non-empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if f.alternate() {
+            for cause in &self.chain[1..] {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to the error arm of a `Result` or to a `None`.
+pub trait Context<T> {
+    /// Wrap the error with `context` as the new outermost message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Error::from(io_err()).context("opening data");
+        assert_eq!(format!("{e}"), "opening data");
+        assert_eq!(format!("{e:#}"), "opening data: missing");
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().chain().next(), Some("missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("layer").unwrap_err();
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["layer", "missing"]);
+        let n: Option<u32> = None;
+        assert_eq!(format!("{}", n.context("absent").unwrap_err()), "absent");
+        let chained: Result<()> = Err(Error::msg("inner"));
+        assert_eq!(format!("{:#}", chained.context("outer").unwrap_err()), "outer: inner");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        let v = 7;
+        let e = anyhow!("inline {v}");
+        assert_eq!(format!("{e}"), "inline 7");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+        fn f() -> Result<()> {
+            bail!("nope: {}", 1)
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope: 1");
+    }
+}
