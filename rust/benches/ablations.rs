@@ -7,8 +7,12 @@
 //!    `rowhad(Y_k V_c, W(k,:))` vs Eq. 8's explicit per-slice `T^(k)`
 //!    block of (W ⊙ V).
 //! 3. **scheduler chunk size** — fixed-chunk parallel reduction at
-//!    {1, 8, 64, 512} subjects per chunk.
-//! 4. **native vs PJRT backend** at equal workload (skipped when the AOT
+//!    {1, 8, 64, 512} subjects per chunk, plus fixed vs nnz-balanced
+//!    chunk plans.
+//! 4. **pack-fusion** — the DPar2-style Procrustes→mode-1 fused sweep vs
+//!    the separate "repack, then standalone mode-1" structure (the
+//!    before/after of the traversal-fusion work).
+//! 5. **native vs PJRT backend** at equal workload (skipped when the AOT
 //!    artifacts are absent).
 //!
 //! Run: `cargo bench --bench ablations [-- --filter NAME]`
@@ -18,7 +22,7 @@ use spartan::datagen::ehr::{self, EhrSpec};
 use spartan::linalg::{blas, Mat};
 use spartan::parafac2::intermediate::{PackedSlice, PackedY};
 use spartan::parafac2::{mttkrp, procrustes};
-use spartan::threadpool::Pool;
+use spartan::threadpool::{ChunkPlan, Pool};
 use spartan::util::json::Json;
 use spartan::util::rng::Pcg64;
 
@@ -55,12 +59,13 @@ fn main() {
     let v = Mat::rand_uniform(data.j(), rank, &mut rng);
     let w = Mat::rand_uniform(data.k(), rank, &mut rng);
     let (y, _) = procrustes::procrustes_all(&data, &v, &h, &w, &pool, false);
+    let plan = procrustes::subject_plan(&data);
     println!("workload: {} (rank {rank}, packed nnz(Y) = {})", data.summary(), y.nnz());
 
     // ---- 1. sparsity exploitation --------------------------------------
     if run("sparsity") {
         let m = bench("mode1_packed_support", &cfg, || {
-            std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool));
+            std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool, &plan));
         });
         println!("{}", m.summary());
         measurements.push(m);
@@ -81,7 +86,7 @@ fn main() {
                 .collect(),
         };
         let m = bench("mode1_densified_support", &cfg, || {
-            std::hint::black_box(mttkrp::mttkrp_mode1(&dense_y, &v, &w, &pool));
+            std::hint::black_box(mttkrp::mttkrp_mode1(&dense_y, &v, &w, &pool, &plan));
         });
         println!("{}", m.summary());
         measurements.push(m);
@@ -90,7 +95,7 @@ fn main() {
     // ---- 2. per-mode rewrite vs materialized KRP blocks ------------------
     if run("krp") {
         let m = bench("mode1_eq10_no_krp", &cfg, || {
-            std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool));
+            std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool, &plan));
         });
         println!("{}", m.summary());
         measurements.push(m);
@@ -140,9 +145,40 @@ fn main() {
             println!("{}", m.summary());
             measurements.push(m);
         }
+        for (name, p) in
+            [("mode1_plan_fixed", ChunkPlan::fixed(y.k())), ("mode1_plan_balanced", plan.clone())]
+        {
+            let m = bench(name, &cfg, || {
+                std::hint::black_box(mttkrp::mttkrp_mode1(&y, &v, &w, &pool, &p));
+            });
+            println!("{}", m.summary());
+            measurements.push(m);
+        }
     }
 
-    // ---- 4. native vs PJRT backend ----------------------------------------
+    // ---- 4. pack fusion ---------------------------------------------------
+    if run("fusion") {
+        let mut arena = PackedY::empty(data.j());
+        let m = bench("procrustes_then_standalone_mode1", &cfg, || {
+            let _ = procrustes::procrustes_all_into(
+                &data, &v, &h, &w, &pool, &plan, false, &mut arena,
+            );
+            std::hint::black_box(mttkrp::mttkrp_mode1(&arena, &v, &w, &pool, &plan));
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+
+        let mut arena = PackedY::empty(data.j());
+        let m = bench("procrustes_pack_mode1_fused", &cfg, || {
+            let sweep =
+                procrustes::procrustes_pack_mode1(&data, &v, &h, &w, &pool, &plan, &mut arena);
+            std::hint::black_box(sweep.m1);
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+    }
+
+    // ---- 5. native vs PJRT backend ----------------------------------------
     if run("backend") {
         use spartan::coordinator::{PjrtDriver, PjrtFitConfig};
         use spartan::parafac2::{fit_parafac2, Parafac2Config};
@@ -194,7 +230,18 @@ fn main() {
         }
     }
 
-    let ctx = Json::obj(vec![("bench", Json::str("ablations"))]);
+    let ctx = Json::obj(vec![
+        ("bench", Json::str("ablations")),
+        (
+            "config",
+            Json::obj(vec![
+                ("fast", Json::Bool(fast)),
+                ("rank", Json::num(rank as f64)),
+                ("k", Json::num(data.k() as f64)),
+                ("j", Json::num(data.j() as f64)),
+            ]),
+        ),
+    ]);
     let path = write_results("ablations", ctx, &measurements);
     println!("json → {}", path.display());
 }

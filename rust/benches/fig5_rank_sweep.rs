@@ -8,8 +8,8 @@
 //!
 //! Run: `cargo bench --bench fig5_rank_sweep`
 
-use spartan::bench::als_runner::{speedup, time_als};
-use spartan::bench::{summarize, table, write_results, Measurement};
+use spartan::bench::als_runner::{speedup, time_als_detailed};
+use spartan::bench::{table, write_results, Measurement};
 use spartan::datagen::ehr::{self, EhrSpec};
 use spartan::datagen::movielens::{self, MovieLensSpec};
 use spartan::parafac2::Backend;
@@ -44,21 +44,17 @@ fn main() {
         println!("{}", data.summary());
         let mut rows: Vec<Vec<String>> = Vec::new();
         for &rank in &ranks {
-            let s = time_als(data, rank, Backend::Spartan, None);
-            let b = time_als(data, rank, Backend::Baseline, None);
+            let s = time_als_detailed(data, rank, Backend::Spartan, None);
+            let b = time_als_detailed(data, rank, Backend::Baseline, None);
             let row = vec![
                 rank.to_string(),
-                s.render(),
-                b.render(),
-                speedup(&s, &b),
+                s.cell.render(),
+                b.cell.render(),
+                speedup(&s.cell, &b.cell),
             ];
             println!("R={}: spartan {} baseline {} ({})", row[0], row[1], row[2], row[3]);
-            if let Some(x) = s.secs() {
-                measurements.push(summarize(&format!("{name}_spartan_r{rank}"), &[x]));
-            }
-            if let Some(x) = b.secs() {
-                measurements.push(summarize(&format!("{name}_baseline_r{rank}"), &[x]));
-            }
+            measurements.extend(s.measurement(&format!("{name}_spartan_r{rank}")));
+            measurements.extend(b.measurement(&format!("{name}_baseline_r{rank}")));
             rows.push(row);
         }
         println!(
@@ -66,7 +62,16 @@ fn main() {
             table::render(&["R", "SPARTan (s/iter)", "baseline (s/iter)", "speedup"], &rows)
         );
     }
-    let ctx = Json::obj(vec![("paper_figure", Json::str("Figure 5"))]);
+    let ctx = Json::obj(vec![
+        ("paper_figure", Json::str("Figure 5")),
+        (
+            "config",
+            Json::obj(vec![
+                ("fast", Json::Bool(fast)),
+                ("ranks", Json::arr(ranks.iter().map(|&r| Json::num(r as f64)))),
+            ]),
+        ),
+    ]);
     let path = write_results("fig5_rank_sweep", ctx, &measurements);
     println!("json → {}", path.display());
 }

@@ -6,8 +6,8 @@
 //!
 //! Run: `cargo bench --bench fig6_subject_sweep`
 
-use spartan::bench::als_runner::{speedup, time_als};
-use spartan::bench::{summarize, table, write_results, Measurement};
+use spartan::bench::als_runner::{speedup, time_als_detailed};
+use spartan::bench::{table, write_results, Measurement};
 use spartan::datagen::ehr::{self, EhrSpec};
 use spartan::parafac2::Backend;
 use spartan::util::json::Json;
@@ -40,25 +40,21 @@ fn main() {
     for &rank in &[10usize, 40] {
         for &k in &k_points {
             let data = full.tensor.take_subjects(k);
-            let s = time_als(&data, rank, Backend::Spartan, None);
-            let b = time_als(&data, rank, Backend::Baseline, None);
+            let s = time_als_detailed(&data, rank, Backend::Spartan, None);
+            let b = time_als_detailed(&data, rank, Backend::Baseline, None);
             let row = vec![
                 rank.to_string(),
                 k.to_string(),
-                s.render(),
-                b.render(),
-                speedup(&s, &b),
+                s.cell.render(),
+                b.cell.render(),
+                speedup(&s.cell, &b.cell),
             ];
             println!(
                 "R={} K={}: spartan {} baseline {} ({})",
                 row[0], row[1], row[2], row[3], row[4]
             );
-            if let Some(x) = s.secs() {
-                measurements.push(summarize(&format!("spartan_r{rank}_k{k}"), &[x]));
-            }
-            if let Some(x) = b.secs() {
-                measurements.push(summarize(&format!("baseline_r{rank}_k{k}"), &[x]));
-            }
+            measurements.extend(s.measurement(&format!("spartan_r{rank}_k{k}")));
+            measurements.extend(b.measurement(&format!("baseline_r{rank}_k{k}")));
             rows.push(row);
         }
     }
@@ -66,7 +62,16 @@ fn main() {
         "\n{}",
         table::render(&["R", "K", "SPARTan (s/iter)", "baseline (s/iter)", "speedup"], &rows)
     );
-    let ctx = Json::obj(vec![("paper_figure", Json::str("Figure 6"))]);
+    let ctx = Json::obj(vec![
+        ("paper_figure", Json::str("Figure 6")),
+        (
+            "config",
+            Json::obj(vec![
+                ("fast", Json::Bool(fast)),
+                ("k_points", Json::arr(k_points.iter().map(|&k| Json::num(k as f64)))),
+            ]),
+        ),
+    ]);
     let path = write_results("fig6_subject_sweep", ctx, &measurements);
     println!("json → {}", path.display());
 }

@@ -7,8 +7,8 @@
 //!
 //! Run: `cargo bench --bench fig7_variable_sweep`
 
-use spartan::bench::als_runner::{speedup, time_als};
-use spartan::bench::{summarize, table, write_results, Measurement};
+use spartan::bench::als_runner::{speedup, time_als_detailed};
+use spartan::bench::{table, write_results, Measurement};
 use spartan::datagen::movielens::{self, MovieLensSpec};
 use spartan::parafac2::Backend;
 use spartan::util::json::Json;
@@ -38,25 +38,21 @@ fn main() {
         for &j in &j_points {
             // paper: "increasing subsets of variables considered"
             let data = full.take_variables(j);
-            let s = time_als(&data, rank, Backend::Spartan, None);
-            let b = time_als(&data, rank, Backend::Baseline, None);
+            let s = time_als_detailed(&data, rank, Backend::Spartan, None);
+            let b = time_als_detailed(&data, rank, Backend::Baseline, None);
             let row = vec![
                 rank.to_string(),
                 j.to_string(),
-                s.render(),
-                b.render(),
-                speedup(&s, &b),
+                s.cell.render(),
+                b.cell.render(),
+                speedup(&s.cell, &b.cell),
             ];
             println!(
                 "R={} J={}: spartan {} baseline {} ({})",
                 row[0], row[1], row[2], row[3], row[4]
             );
-            if let Some(x) = s.secs() {
-                measurements.push(summarize(&format!("spartan_r{rank}_j{j}"), &[x]));
-            }
-            if let Some(x) = b.secs() {
-                measurements.push(summarize(&format!("baseline_r{rank}_j{j}"), &[x]));
-            }
+            measurements.extend(s.measurement(&format!("spartan_r{rank}_j{j}")));
+            measurements.extend(b.measurement(&format!("baseline_r{rank}_j{j}")));
             rows.push(row);
         }
     }
@@ -64,7 +60,16 @@ fn main() {
         "\n{}",
         table::render(&["R", "J", "SPARTan (s/iter)", "baseline (s/iter)", "speedup"], &rows)
     );
-    let ctx = Json::obj(vec![("paper_figure", Json::str("Figure 7"))]);
+    let ctx = Json::obj(vec![
+        ("paper_figure", Json::str("Figure 7")),
+        (
+            "config",
+            Json::obj(vec![
+                ("fast", Json::Bool(fast)),
+                ("j_points", Json::arr(j_points.iter().map(|&j| Json::num(j as f64)))),
+            ]),
+        ),
+    ]);
     let path = write_results("fig7_variable_sweep", ctx, &measurements);
     println!("json → {}", path.display());
 }

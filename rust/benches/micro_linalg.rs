@@ -113,7 +113,16 @@ fn main() {
         measurements.push(m);
     }
 
-    let ctx = Json::obj(vec![("bench", Json::str("micro_linalg"))]);
+    let ctx = Json::obj(vec![
+        ("bench", Json::str("micro_linalg")),
+        (
+            "config",
+            Json::obj(vec![(
+                "fast",
+                Json::Bool(std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1")),
+            )]),
+        ),
+    ]);
     let path = write_results("micro_linalg", ctx, &measurements);
     println!("json → {}", path.display());
 }

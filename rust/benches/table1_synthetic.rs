@@ -16,8 +16,8 @@
 //! Run: `cargo bench --bench table1_synthetic`
 //! (set SPARTAN_BENCH_FAST=1 for a smoke-sized run)
 
-use spartan::bench::als_runner::{speedup, time_als};
-use spartan::bench::{table, write_results, summarize, Measurement};
+use spartan::bench::als_runner::{speedup, time_als_detailed};
+use spartan::bench::{table, write_results, Measurement};
 use spartan::datagen::synthetic::{generate, SyntheticSpec};
 use spartan::parafac2::Backend;
 use spartan::util::json::Json;
@@ -59,26 +59,22 @@ fn main() {
                 seed: 1717,
             })
             .tensor;
-            let spartan_res = time_als(&data, rank, Backend::Spartan, None);
+            let spartan_res = time_als_detailed(&data, rank, Backend::Spartan, None);
             let baseline_res =
-                time_als(&data, rank, Backend::Baseline, Some(budget_bytes));
+                time_als_detailed(&data, rank, Backend::Baseline, Some(budget_bytes));
             let row = vec![
                 rank.to_string(),
                 spartan::util::humansize::count(data.nnz() as u64),
-                spartan_res.render(),
-                baseline_res.render(),
-                speedup(&spartan_res, &baseline_res),
+                spartan_res.cell.render(),
+                baseline_res.cell.render(),
+                speedup(&spartan_res.cell, &baseline_res.cell),
             ];
             println!(
                 "R={} nnz={}: spartan {} baseline {} ({})",
                 row[0], row[1], row[2], row[3], row[4]
             );
-            if let Some(s) = spartan_res.secs() {
-                measurements.push(summarize(&format!("spartan_r{rank}_nnz{nnz}"), &[s]));
-            }
-            if let Some(s) = baseline_res.secs() {
-                measurements.push(summarize(&format!("baseline_r{rank}_nnz{nnz}"), &[s]));
-            }
+            measurements.extend(spartan_res.measurement(&format!("spartan_r{rank}_nnz{nnz}")));
+            measurements.extend(baseline_res.measurement(&format!("baseline_r{rank}_nnz{nnz}")));
             rows.push(row);
         }
     }
@@ -89,10 +85,15 @@ fn main() {
     println!("\n{rendered}");
     let ctx = Json::obj(vec![
         ("paper_table", Json::str("Table 1")),
-        ("k", Json::num(k as f64)),
-        ("j", Json::num(j as f64)),
-        ("scale_divisor", Json::num(scale as f64)),
-        ("budget_bytes", Json::num(budget_bytes as f64)),
+        (
+            "config",
+            Json::obj(vec![
+                ("k", Json::num(k as f64)),
+                ("j", Json::num(j as f64)),
+                ("scale_divisor", Json::num(scale as f64)),
+                ("budget_bytes", Json::num(budget_bytes as f64)),
+            ]),
+        ),
     ]);
     let path = write_results("table1_synthetic", ctx, &measurements);
     println!("json → {}", path.display());

@@ -3,6 +3,7 @@
 //! iteration", Tables 1 / Figs 5–7), with warmup-iteration discard and an
 //! OoM-aware result type for the baseline columns.
 
+use crate::bench::Measurement;
 use crate::parafac2::als::{fit_parafac2_traced, Backend, Parafac2Config};
 use crate::sparse::IrregularTensor;
 
@@ -46,6 +47,45 @@ pub fn bench_iters() -> (usize, usize) {
     }
 }
 
+/// One timed ALS run with its raw per-iteration wall times and the exact
+/// kernel-work counters of the whole fit — everything the
+/// `bench_results/*.json` schema publishes per cell.
+#[derive(Clone, Debug)]
+pub struct AlsRun {
+    pub cell: CellResult,
+    /// Wall time of every measured iteration (warmup discarded).
+    pub iter_secs: Vec<f64>,
+    /// Total ALS iterations the fit executed — warmup included, so this
+    /// is the normalizer for the fit-wide counters below, NOT
+    /// `iter_secs.len()`.
+    pub fit_iters: u64,
+    /// `Y_k·V` products over the whole fit (see `FitStats::yv_products`).
+    pub yv_products: u64,
+    /// Cold packed-slice traversals over the whole fit
+    /// (see `FitStats::traversals`).
+    pub traversals: u64,
+}
+
+impl AlsRun {
+    /// Fold this run into a named [`Measurement`] carrying the raw
+    /// per-iteration samples and the exact work counters (`None` for OoM
+    /// cells — there is nothing to summarize). The counters are
+    /// **fit-wide** (warmup iterations included), so `fit_iters` rides
+    /// along as their normalizer — `yv_products / (K · fit_iters) == 1`
+    /// for the SPARTan engine, even though `iters`/`iter_secs` count only
+    /// the measured (post-warmup) iterations.
+    pub fn measurement(&self, name: &str) -> Option<Measurement> {
+        if self.iter_secs.is_empty() {
+            return None;
+        }
+        Some(crate::bench::summarize(name, &self.iter_secs).with_counters(vec![
+            ("fit_iters".to_string(), self.fit_iters),
+            ("yv_products".to_string(), self.yv_products),
+            ("traversals".to_string(), self.traversals),
+        ]))
+    }
+}
+
 /// Time one engine on one dataset: returns mean secs/iter or OoM.
 pub fn time_als(
     data: &IrregularTensor,
@@ -53,6 +93,17 @@ pub fn time_als(
     backend: Backend,
     mem_budget: Option<u64>,
 ) -> CellResult {
+    time_als_detailed(data, rank, backend, mem_budget).cell
+}
+
+/// [`time_als`] also capturing the per-iteration wall times and the
+/// fit-wide `yv_products` / `traversals` counters for the JSON export.
+pub fn time_als_detailed(
+    data: &IrregularTensor,
+    rank: usize,
+    backend: Backend,
+    mem_budget: Option<u64>,
+) -> AlsRun {
     let (warmup, measure) = bench_iters();
     let cfg = Parafac2Config {
         rank,
@@ -70,12 +121,26 @@ pub fn time_als(
         iter_secs.push(rec.procrustes_secs + rec.cp_secs);
     });
     match res {
-        Ok(_) => {
-            let measured = &iter_secs[warmup.min(iter_secs.len().saturating_sub(1))..];
+        Ok(model) => {
+            let fit_iters = iter_secs.len() as u64;
+            let measured =
+                iter_secs[warmup.min(iter_secs.len().saturating_sub(1))..].to_vec();
             let mean = measured.iter().sum::<f64>() / measured.len().max(1) as f64;
-            CellResult::Time { secs_per_iter: mean, iters: measured.len() }
+            AlsRun {
+                cell: CellResult::Time { secs_per_iter: mean, iters: measured.len() },
+                iter_secs: measured,
+                fit_iters,
+                yv_products: model.stats.yv_products,
+                traversals: model.stats.traversals,
+            }
         }
-        Err(crate::parafac2::FitError::OutOfMemory(_)) => CellResult::OutOfMemory,
+        Err(crate::parafac2::FitError::OutOfMemory(_)) => AlsRun {
+            cell: CellResult::OutOfMemory,
+            iter_secs: Vec::new(),
+            fit_iters: 0,
+            yv_products: 0,
+            traversals: 0,
+        },
         Err(e) => panic!("bench fit failed: {e}"),
     }
 }
@@ -133,15 +198,33 @@ mod tests {
             seed: 1,
         })
         .tensor;
-        let r = time_als(&data, 2, Backend::Spartan, None);
-        match r {
+        let run = time_als_detailed(&data, 2, Backend::Spartan, None);
+        match run.cell {
             CellResult::Time { secs_per_iter, iters } => {
                 assert!(secs_per_iter >= 0.0);
                 assert!(iters >= 1);
+                assert_eq!(run.iter_secs.len(), iters);
             }
             _ => panic!("expected time"),
         }
-        assert!(!r.render().is_empty());
+        assert!(!run.cell.render().is_empty());
+        // the SPARTan engine's exact work counters ride along for the
+        // JSON export: one Y·V per subject per iteration, one traversal
+        // per subject per iteration (+ the final-report mode-3 pass)
+        let k = data.k() as u64;
+        assert!(run.fit_iters >= 1);
+        // the fit-wide counters normalize by fit_iters (warmup included):
+        // one Y·V per subject per iteration, one traversal per subject
+        // per iteration plus the final-report mode-3 pass
+        assert_eq!(run.yv_products, run.fit_iters * k);
+        assert_eq!(run.traversals, (run.fit_iters + 1) * k);
+        let m = run.measurement("cell").expect("timed run summarizes");
+        assert_eq!(m.counters.len(), 3);
+
+        // OoM cells summarize to None
+        let oom = time_als_detailed(&data, 2, Backend::Baseline, Some(64));
+        assert!(matches!(oom.cell, CellResult::OutOfMemory));
+        assert!(oom.measurement("oom").is_none());
     }
 
     #[test]

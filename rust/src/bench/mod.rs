@@ -2,6 +2,35 @@
 //! no criterion). Provides warmup + timed iterations, mean/σ/min, table
 //! rendering that mirrors the paper's tables, and JSON export so
 //! EXPERIMENTS.md numbers are regenerable.
+//!
+//! ## The `bench_results/*.json` schema
+//!
+//! Every bench binary writes one JSON file per run via [`write_results`]
+//! (the directory is created on demand; CI uploads it as an artifact):
+//!
+//! ```json
+//! {
+//!   "bench": "<file stem>",
+//!   "context": { "config": { ... free-form bench configuration ... } },
+//!   "measurements": [
+//!     {
+//!       "name": "...", "iters": N,
+//!       "mean_secs": ..., "std_secs": ..., "min_secs": ..., "max_secs": ...,
+//!       "iter_secs": [ ...wall-time of every measured iteration... ],
+//!       "counters": { "fit_iters": ..., "yv_products": ..., "traversals": ... }
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `iter_secs` holds the raw per-iteration wall times behind the summary
+//! statistics. `counters` (present where the bench measures an ALS fit)
+//! holds the exact kernel-work tallies over the **whole fit, warmup
+//! included** — normalize by `fit_iters`, not `iters`:
+//! `yv_products / (K·fit_iters) == 1` and
+//! `traversals / (K·fit_iters) ≈ 1` (one extra K from the final report
+//! pass) for the SPARTan engine — see `metrics::flops`. That makes the
+//! perf trajectory across PRs machine-checkable, not eyeballed.
 
 pub mod als_runner;
 pub mod table;
@@ -18,18 +47,43 @@ pub struct Measurement {
     pub std_secs: f64,
     pub min_secs: f64,
     pub max_secs: f64,
+    /// Raw wall time of every measured iteration (the samples behind the
+    /// summary statistics), exported as `iter_secs`.
+    pub samples: Vec<f64>,
+    /// Exact work counters (e.g. `yv_products`, `traversals`) exported as
+    /// the `counters` object; empty for pure wall-time measurements.
+    pub counters: Vec<(String, u64)>,
 }
 
 impl Measurement {
+    /// Attach exact work counters (builder-style).
+    pub fn with_counters(mut self, counters: Vec<(String, u64)>) -> Measurement {
+        self.counters = counters;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(self.name.clone())),
             ("iters", Json::num(self.iters as f64)),
             ("mean_secs", Json::num(self.mean_secs)),
             ("std_secs", Json::num(self.std_secs)),
             ("min_secs", Json::num(self.min_secs)),
             ("max_secs", Json::num(self.max_secs)),
-        ])
+            ("iter_secs", Json::arr(self.samples.iter().map(|&s| Json::num(s)))),
+        ];
+        if !self.counters.is_empty() {
+            fields.push((
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn summary(&self) -> String {
@@ -96,6 +150,8 @@ pub fn summarize(name: &str, samples: &[f64]) -> Measurement {
         std_secs: var.sqrt(),
         min_secs: samples.iter().cloned().fold(f64::INFINITY, f64::min),
         max_secs: samples.iter().cloned().fold(0.0, f64::max),
+        samples: samples.to_vec(),
+        counters: Vec::new(),
     }
 }
 
@@ -149,5 +205,32 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("name").unwrap().as_str().unwrap(), "x");
         assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 1);
+        let secs = j.get("iter_secs").unwrap().as_arr().unwrap();
+        assert_eq!(secs.len(), 1);
+        assert_eq!(secs[0].as_f64().unwrap(), 0.5);
+        assert!(j.get("counters").is_none(), "no counters unless attached");
+    }
+
+    #[test]
+    fn json_counters_round_trip() {
+        let m = summarize("fit", &[0.25, 0.75])
+            .with_counters(vec![("yv_products".into(), 120), ("traversals".into(), 60)]);
+        let j = m.to_json();
+        let c = j.get("counters").unwrap();
+        assert_eq!(c.get("yv_products").unwrap().as_usize().unwrap(), 120);
+        assert_eq!(c.get("traversals").unwrap().as_usize().unwrap(), 60);
+        assert_eq!(j.get("iter_secs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn write_results_creates_dir_and_file() {
+        // The CI bench lane depends on this contract: the directory is
+        // created on demand and one JSON lands per run.
+        let m = summarize("x", &[0.1]);
+        let path = write_results("selftest_bench_io", Json::obj(vec![]), &[m]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("selftest_bench_io"));
+        assert!(text.contains("iter_secs"));
+        std::fs::remove_file(&path).ok();
     }
 }

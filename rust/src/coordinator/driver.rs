@@ -308,7 +308,8 @@ impl<'a> PjrtDriver<'a> {
         if !fallback.is_empty() {
             let ynative = self.native_y(fallback, data.j());
             let fw = fallback_w(&f.w, fallback);
-            let part = crate::parafac2::mttkrp::mttkrp_mode1(&ynative, &f.v, &fw, pool);
+            let plan = crate::threadpool::ChunkPlan::fixed(ynative.k());
+            let part = crate::parafac2::mttkrp::mttkrp_mode1(&ynative, &f.v, &fw, pool, &plan);
             m1.axpy(1.0, &part);
         }
         Ok(m1)
@@ -349,8 +350,13 @@ impl<'a> PjrtDriver<'a> {
         if !fallback.is_empty() {
             let ynative = self.native_y(fallback, data.j());
             let fw = fallback_w(&f.w, fallback);
-            let part =
-                crate::parafac2::mttkrp::mttkrp_mode2(&ynative, &f.h, &fw, &Pool::serial());
+            let part = crate::parafac2::mttkrp::mttkrp_mode2(
+                &ynative,
+                &f.h,
+                &fw,
+                &Pool::serial(),
+                &crate::threadpool::ChunkPlan::fixed(ynative.k()),
+            );
             m2.axpy(1.0, &part);
         }
         Ok(m2)
@@ -387,7 +393,8 @@ impl<'a> PjrtDriver<'a> {
         }
         if !fallback.is_empty() {
             let ynative = self.native_y(fallback, data.j());
-            let part = crate::parafac2::mttkrp::mttkrp_mode3(&ynative, &f.h, &f.v, pool);
+            let plan = crate::threadpool::ChunkPlan::fixed(ynative.k());
+            let part = crate::parafac2::mttkrp::mttkrp_mode3(&ynative, &f.h, &f.v, pool, &plan);
             for (local, &(k, _)) in fallback.iter().enumerate() {
                 m3.row_mut(k).copy_from_slice(part.row(local));
             }

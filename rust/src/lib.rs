@@ -14,6 +14,30 @@
 //!   graphs in JAX, lowered once to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/`)** — the Pallas kernel for the packed
 //!   per-slice MTTKRP hot-spot.
+//!
+//! ## Benchmarks
+//!
+//! The paper-reproduction benches live under `rust/benches/` and run with
+//! `cargo bench` (individually: `cargo bench --bench table1_synthetic`,
+//! `fig5_rank_sweep`, `fig6_subject_sweep`, `fig7_variable_sweep`,
+//! `micro_linalg`, `ablations`). Two knobs matter:
+//!
+//! * **`SPARTAN_BENCH_FAST=1`** shrinks every workload to smoke size
+//!   (seconds, not minutes) — what CI's `bench-smoke` lane runs on every
+//!   PR, so a bench that panics or regresses structurally fails the build.
+//! * **`bench_results/*.json`** — every bench binary creates the directory
+//!   on demand and writes one JSON file per run:
+//!   `{"bench", "context": {"config": ...}, "measurements": [...]}`, where
+//!   each measurement carries summary stats, the raw `iter_secs` wall time
+//!   of every measured iteration, and (for ALS fits) exact fit-wide work
+//!   `counters` normalized by their `fit_iters` entry — `yv_products`
+//!   (one `Y_k·V` per subject per fit iteration) and `traversals` (one
+//!   cold packed-slice sweep per subject per fit iteration, down from two
+//!   before the pack-fused Procrustes→mode-1 sweep, plus one final
+//!   report pass). CI uploads the directory as the `bench-results-<sha>`
+//!   artifact, so the repo accumulates a machine-readable perf trajectory
+//!   instead of hand-written claims. See [`bench`] for the schema and
+//!   `metrics::flops` for the counter invariants.
 
 pub mod bench;
 pub mod cli;

@@ -2,9 +2,12 @@
 //! achieved GFLOP/s in the benches and to sanity-check the §3.3 complexity
 //! claims (SPARTan's step-2 cost is `O(R·Σ(R + c_k))`, the baseline's is
 //! `3R·nnz(Y)` *plus* construction and per-mode sorts) — and home of the
-//! fused-sweep FLOP-count assertion: **one `Y_k·V` per subject per CP
-//! iteration**, measured by the per-slice tallies behind
-//! [`crate::parafac2::intermediate::PackedY::yv_products`].
+//! fused-sweep count assertions: **one `Y_k·V` per subject per CP
+//! iteration** and, with the pack-fused Procrustes→mode-1 sweep, **one
+//! cold packed-slice traversal per subject per ALS iteration** (down from
+//! two), measured by the per-slice tallies behind
+//! [`crate::parafac2::intermediate::PackedY::yv_products`] /
+//! [`crate::parafac2::intermediate::PackedY::traversals`].
 
 use crate::sparse::IrregularTensor;
 
@@ -38,7 +41,8 @@ pub fn spartan_iteration_flops(data: &IrregularTensor, rank: usize) -> FlopBreak
     // Procrustes: C_k = X_k V (2·nnz·R), B_k = C_k·SkHᵀ (2·I_k·R²),
     // Gram (I_k·R²), eig O(R³), Q = B·M (2·I_k·R²), pack Y (2·nnz·R).
     let procrustes = 2.0 * nnz * r + 5.0 * sum_ik * r * r + 30.0 * k * r * r * r;
-    // Fused MTTKRP sweep: two traversals of the packed slices —
+    // Fused MTTKRP sweep (flops unchanged by the pack fusion — mode 1 now
+    // runs inside the pack, so only ONE of these is a cold traversal):
     //   mode 1: Y_k·V (2·c_k·R²) + rowhad/accumulate epilogue (2·K·R²),
     //   mode 2: Z_k = Y_kᵀ·H (2·c_k·R²) + scatter (2·c_k·R) —
     // and the mode-3 epilogue over the cached Z_k (3·c_k·R, no traversal).
@@ -106,7 +110,7 @@ mod tests {
         // wherever it's called from — breaks the exact equality below.
         use crate::linalg::Mat;
         use crate::parafac2::cp_als::{cp_iteration, CpFactors, CpOptions};
-        use crate::parafac2::procrustes::procrustes_all;
+        use crate::parafac2::procrustes::{procrustes_all, subject_plan};
         use crate::threadpool::Pool;
         use crate::util::rng::Pcg64;
 
@@ -115,6 +119,7 @@ mod tests {
         let r = 4;
         let mut rng = Pcg64::seed(9);
         let pool = Pool::new(3);
+        let plan = subject_plan(&d);
         let h = Mat::rand_normal(r, r, &mut rng);
         let v = Mat::rand_uniform(d.j(), r, &mut rng);
         let w = Mat::rand_uniform(k, r, &mut rng);
@@ -122,11 +127,85 @@ mod tests {
         let mut f = CpFactors { h, v, w };
         let before = y.yv_products();
         for iter in 1..=3u64 {
-            let stats = cp_iteration(&y, &mut f, CpOptions::default(), &pool);
+            let stats = cp_iteration(&y, &mut f, CpOptions::default(), &pool, &plan);
             assert_eq!(stats.yv_products, k as u64);
             // exact: K products per iteration across the WHOLE iteration,
             // not just mode 1 — the teeth of this assertion
             assert_eq!(y.yv_products() - before, iter * k as u64);
+        }
+    }
+
+    #[test]
+    fn pack_fused_iteration_traverses_each_slice_once_not_twice() {
+        // THE acceptance invariant of the pack-fused Procrustes→mode-1
+        // sweep: a full ALS iteration (pack-fused sweep + CP step) on K
+        // subjects performs exactly K cold traversals of the packed
+        // slices — the mode-2 sweep and nothing else. Mode 1 reads the
+        // slices *during the pack* (cache-hot, not a traversal) and
+        // mode 3 feeds off the cached Z_k. The pre-fusion structure
+        // (standalone pack, then a CP iteration computing its own mode 1)
+        // performs exactly 2K — both counted below, so the 2→1 drop is
+        // pinned, not just the new count.
+        use crate::linalg::Mat;
+        use crate::parafac2::cp_als::{
+            cp_iteration_from_m1, cp_iteration_with_scratch, CpFactors, CpOptions,
+        };
+        use crate::parafac2::intermediate::PackedY;
+        use crate::parafac2::mttkrp::FusedScratch;
+        use crate::parafac2::procrustes::{
+            procrustes_all_into, procrustes_pack_mode1, subject_plan,
+        };
+        use crate::threadpool::Pool;
+        use crate::util::rng::Pcg64;
+
+        let d = data();
+        let k = d.k() as u64;
+        let r = 4;
+        let mut rng = Pcg64::seed(10);
+        let pool = Pool::new(3);
+        let plan = subject_plan(&d);
+        let f0 = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_uniform(d.j(), r, &mut rng),
+            w: Mat::rand_uniform(d.k(), r, &mut rng),
+        };
+
+        // fused path: 1 traversal (and 1 Y·V) per subject per iteration
+        let mut f = f0.clone();
+        let mut y = PackedY::empty(d.j());
+        let mut scratch = FusedScratch::new();
+        for iter in 1..=3u64 {
+            let sweep = procrustes_pack_mode1(&d, &f.v, &f.h, &f.w, &pool, &plan, &mut y);
+            let _ = cp_iteration_from_m1(
+                &y,
+                sweep.m1,
+                sweep.yv_products,
+                &mut f,
+                CpOptions::default(),
+                &pool,
+                &plan,
+                &mut scratch,
+            );
+            assert_eq!(y.traversals(), iter * k, "fused traversals, iter {iter}");
+            assert_eq!(y.yv_products(), iter * k, "fused Y·V, iter {iter}");
+        }
+
+        // unfused reference: the same iteration with a standalone mode 1
+        // costs 2 traversals per subject
+        let mut f = f0.clone();
+        let mut y = PackedY::empty(d.j());
+        let mut scratch = FusedScratch::new();
+        for iter in 1..=2u64 {
+            let _ = procrustes_all_into(&d, &f.v, &f.h, &f.w, &pool, &plan, false, &mut y);
+            let _ = cp_iteration_with_scratch(
+                &y,
+                &mut f,
+                CpOptions::default(),
+                &pool,
+                &plan,
+                &mut scratch,
+            );
+            assert_eq!(y.traversals(), iter * 2 * k, "unfused traversals, iter {iter}");
         }
     }
 

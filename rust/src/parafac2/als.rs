@@ -1,17 +1,24 @@
 //! The PARAFAC2-ALS outer loop (paper Algorithm 2) with pluggable step-2
 //! backend: SPARTan's packed kernels or the Tensor-Toolbox-style baseline.
 //!
-//! Per iteration:
-//! 1. **Procrustes** — recompute `{Q_k}` and the packed `{Y_k}`
-//!    (parallel over subjects, repacked **in place** into a persistent
-//!    slice arena — zero steady-state allocations),
-//! 2. **CP step** — one fused CP-ALS iteration on `Y` to update `H, V, W`
-//!    (`S_k = diag(W(k,:))`); the SPARTan backend reuses the mode-2
-//!    intermediate for mode 3 so `Y_k·V` runs exactly once per subject.
+//! Per iteration (SPARTan backend):
+//! 1. **Pack-fused sweep** — recompute `{Q_k}`, repack `{Y_k}` **in
+//!    place** into a persistent slice arena, and emit the mode-1 MTTKRP
+//!    `M¹` while each freshly packed slice is still cache-hot
+//!    (DPar2-style; [`procrustes_pack_mode1`]),
+//! 2. **CP step** — the rest of one fused CP-ALS iteration
+//!    ([`cp_iteration_from_m1`]): H from the pre-computed `M¹`, then the
+//!    mode-2 sweep (the iteration's **only** cold traversal of the packed
+//!    slices, caching `Z_k = Y_kᵀ H`), then the mode-3 epilogue — so
+//!    `Y_k·V` runs exactly once per subject and the packed slices are
+//!    streamed cold exactly once per iteration (both asserted in
+//!    `metrics::flops`).
 //!
-//! All per-subject work runs on one persistent [`Pool`] created per fit —
-//! workers live for the whole fit instead of being respawned per kernel
-//! call.
+//! All per-subject work runs on one persistent [`Pool`] created per fit,
+//! chunked by one per-fit [`ChunkPlan`] balanced on per-subject nnz
+//! (heavy-tailed cohorts can't strand a sweep behind one overloaded
+//! chunk; boundaries depend only on the data, so trajectories stay
+//! bitwise identical across worker counts).
 //!
 //! The SSE tracked for convergence uses the decomposition
 //! `‖X_k − Q_k M_k‖² = ‖X_k‖² − ‖Y_k‖² + ‖Y_k − M_k‖²` (exact whenever
@@ -20,12 +27,12 @@
 //! implementation tracks).
 
 use super::baseline::{cp_iteration_baseline, BaselinePhases};
-use super::cp_als::{cp_iteration_with_scratch, CpFactors, CpOptions};
+use super::cp_als::{cp_iteration_from_m1, CpFactors, CpOptions};
 use super::init::{initialize, InitMethod};
 use super::intermediate::PackedY;
 use super::model::{FitStats, Parafac2Model};
 use super::mttkrp::FusedScratch;
-use super::procrustes::procrustes_all_into;
+use super::procrustes::{procrustes_all_into, procrustes_pack_mode1, subject_plan};
 use crate::sparse::IrregularTensor;
 use crate::threadpool::Pool;
 use crate::util::membudget::{BudgetExceeded, MemBudget};
@@ -119,7 +126,10 @@ pub struct IterationRecord {
     pub iter: usize,
     pub sse: f64,
     pub fit: f64,
+    /// Seconds in the pack-fused sweep (Procrustes + repack + the mode-1
+    /// MTTKRP it emits; the baseline backend's plain pack).
     pub procrustes_secs: f64,
+    /// Seconds in the rest of the CP step (modes 2–3 + solves).
     pub cp_secs: f64,
 }
 
@@ -163,29 +173,46 @@ pub fn fit_parafac2_traced(
     let mut prev_sse = f64::INFINITY;
     let mut iters_done = 0;
 
-    // Persistent per-fit arenas: the packed-Y slice buffers and the fused
-    // sweep's Z_k cache are allocated on the first iteration and reused
-    // (refilled in place) by every later one.
+    // Persistent per-fit arenas and schedule: the packed-Y slice buffers,
+    // the fused sweep's Z_k cache, and the nnz-balanced chunk plan are
+    // built once and reused (refilled in place) by every iteration.
     let mut y = PackedY::empty(data.j());
     let mut scratch = FusedScratch::new();
+    let plan = subject_plan(data);
 
     for iter in 0..cfg.max_iters {
-        // --- step 1: Procrustes + packing (into the arena) ---------------
+        // --- step 1: Procrustes + packing (into the arena); the SPARTan
+        // backend also emits M¹ while each slice is cache-hot ------------
         let sw = Stopwatch::start();
-        let _ = procrustes_all_into(data, &factors.v, &factors.h, &factors.w, &pool, false, &mut y);
+        let fused = match cfg.backend {
+            Backend::Spartan => Some(procrustes_pack_mode1(
+                data, &factors.v, &factors.h, &factors.w, &pool, &plan, &mut y,
+            )),
+            Backend::Baseline => {
+                let _ = procrustes_all_into(
+                    data, &factors.v, &factors.h, &factors.w, &pool, &plan, false, &mut y,
+                );
+                None
+            }
+        };
         let procrustes_secs = sw.elapsed_secs();
         stats.procrustes_secs += procrustes_secs;
 
-        // --- step 2: one CP-ALS iteration on Y ---------------------------
+        // --- step 2: the rest of one CP-ALS iteration on Y ---------------
         let sw = Stopwatch::start();
-        let cp_stats = match cfg.backend {
-            Backend::Spartan => {
-                cp_iteration_with_scratch(&y, &mut factors, opts, &pool, &mut scratch)
-            }
-            Backend::Baseline => {
-                cp_iteration_baseline(&y, &mut factors, opts, &budget, &mut baseline_phases)
-                    .map_err(FitError::OutOfMemory)?
-            }
+        let cp_stats = match fused {
+            Some(sweep) => cp_iteration_from_m1(
+                &y,
+                sweep.m1,
+                sweep.yv_products,
+                &mut factors,
+                opts,
+                &pool,
+                &plan,
+                &mut scratch,
+            ),
+            None => cp_iteration_baseline(&y, &mut factors, opts, &budget, &mut baseline_phases)
+                .map_err(FitError::OutOfMemory)?,
         };
         let cp_secs = sw.elapsed_secs();
         stats.cp_secs += cp_secs;
@@ -221,10 +248,13 @@ pub fn fit_parafac2_traced(
     // recompute the SSE against the refreshed Q_k so the reported fit is
     // exactly the returned model's (the refresh strictly improves on the
     // last tracked SSE). Reuses the same arena.
-    let qs = procrustes_all_into(data, &factors.v, &factors.h, &factors.w, &pool, true, &mut y);
-    let m3 = super::mttkrp::mttkrp_mode3(&y, &factors.h, &factors.v, &pool);
+    let qs =
+        procrustes_all_into(data, &factors.v, &factors.h, &factors.w, &pool, &plan, true, &mut y);
+    let m3 = super::mttkrp::mttkrp_mode3(&y, &factors.h, &factors.v, &pool, &plan);
     let final_res = super::cp_als::residual_stats(&m3, &factors, y.norm_sq());
     let final_sse = (x_norm_sq - y.norm_sq() + final_res.y_residual_sq).max(0.0);
+    stats.yv_products = y.yv_products();
+    stats.traversals = y.traversals();
     drop(y);
 
     stats.iterations = iters_done;
@@ -401,6 +431,28 @@ mod tests {
         let model = fit_parafac2(&data, &cfg).unwrap();
         assert!(model.v.data().iter().all(|&x| x >= 0.0));
         assert!(model.w.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn fit_counts_one_yv_and_one_traversal_per_subject_per_iteration() {
+        // End-to-end teeth for the pack-fusion: a Spartan fit of N
+        // iterations on K subjects performs exactly N·K `Y_k·V` products
+        // (all emitted during the pack) and N·K cold slice traversals
+        // (mode 2 only), plus the final-report pass's K-standalone mode 3.
+        let mut rng = Pcg64::seed(179);
+        let (data, _, _) = planted(&mut rng, 9, 8, 2);
+        let iters = 7usize;
+        let cfg = Parafac2Config {
+            rank: 2,
+            max_iters: iters,
+            tol: 0.0,
+            workers: 2,
+            ..Default::default()
+        };
+        let model = fit_parafac2(&data, &cfg).unwrap();
+        let k = data.k() as u64;
+        assert_eq!(model.stats.yv_products, iters as u64 * k);
+        assert_eq!(model.stats.traversals, (iters as u64 + 1) * k);
     }
 
     #[test]

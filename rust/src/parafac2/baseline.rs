@@ -43,6 +43,7 @@ pub fn materialize_coo(y: &PackedY, budget: &MemBudget) -> Result<CooTensor3, Bu
     let mut coo = CooTensor3::new([r, y.j_dim, y.k()]);
     coo.reserve(y.nnz(), budget)?;
     for (kk, slice) in y.slices.iter().enumerate() {
+        slice.note_traversal(); // the COO build streams every packed slice
         for (c, &j) in slice.support.iter().enumerate() {
             let yrow = slice.yt.row(c); // Y_k(:, j)ᵀ
             for (i, &v) in yrow.iter().enumerate() {
@@ -167,7 +168,13 @@ mod tests {
                 let opts = CpOptions { nonneg };
                 let mut fa = f0.clone();
                 let mut fb = f0.clone();
-                let sa = cp_iteration(&y, &mut fa, opts, &Pool::serial());
+                let sa = cp_iteration(
+                    &y,
+                    &mut fa,
+                    opts,
+                    &Pool::serial(),
+                    &crate::threadpool::ChunkPlan::fixed(k),
+                );
                 let budget = MemBudget::unlimited();
                 let mut phases = BaselinePhases::default();
                 let sb =

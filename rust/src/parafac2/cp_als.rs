@@ -13,16 +13,18 @@
 //! update via the classic identity `⟨Y, rec⟩ = ⟨M³, W⟩`, giving the
 //! PARAFAC2 SSE as `‖X‖² − ‖Y‖² + ‖Y − rec‖²` without touching the data.
 //!
-//! The iteration is **fused** (see [`super::mttkrp`]): mode 2 caches
-//! `Z_k = Y_kᵀ H` per subject and mode 3 becomes a cheap epilogue over
-//! that cache, so the packed slices are traversed twice per iteration
-//! instead of three times and `Y_k·V` is computed exactly once per
-//! subject.
+//! The iteration is **fused** twice over (see [`super::mttkrp`] and
+//! [`super::procrustes::procrustes_pack_mode1`]): the ALS driver computes
+//! `M¹` during the Procrustes pack itself and hands it to
+//! [`cp_iteration_from_m1`], mode 2 caches `Z_k = Y_kᵀ H` per subject,
+//! and mode 3 becomes a cheap epilogue over that cache — so each ALS
+//! iteration performs exactly **one** cold traversal of the packed slices
+//! (mode 2) and `Y_k·V` is computed exactly once per subject.
 
 use super::intermediate::PackedY;
 use super::mttkrp;
 use crate::linalg::{blas, nnls, solve, Mat};
-use crate::threadpool::Pool;
+use crate::threadpool::{ChunkPlan, Pool};
 
 /// The CP factor triple of the intermediate tensor.
 #[derive(Clone, Debug)]
@@ -59,45 +61,68 @@ pub struct CpIterStats {
 
 /// One CP-ALS iteration on the packed intermediate tensor (SPARTan path),
 /// allocating its own scratch. The ALS loop uses
-/// [`cp_iteration_with_scratch`] to reuse the `Z_k` buffers across
-/// iterations.
+/// [`cp_iteration_from_m1`] (with the pack-fused `M¹`) and a persistent
+/// scratch to reuse the `Z_k` buffers across iterations.
 pub fn cp_iteration(
     y: &PackedY,
     f: &mut CpFactors,
     opts: CpOptions,
     pool: &Pool,
+    plan: &ChunkPlan,
 ) -> CpIterStats {
     let mut scratch = mttkrp::FusedScratch::new();
-    cp_iteration_with_scratch(y, f, opts, pool, &mut scratch)
+    cp_iteration_with_scratch(y, f, opts, pool, plan, &mut scratch)
 }
 
-/// One fused CP-ALS iteration: two traversals of the packed slices
-/// (mode 1, then mode 2 which caches `Z_k = Y_kᵀ H`) plus an `O(c_k·R)`
-/// mode-3 epilogue fed from the cache — `Y_k·V` is computed exactly once
-/// per subject. The update order (H, then V, then W) and the residual
-/// identity `⟨Y, rec⟩ = ⟨M³, W⟩` (M³ with the final H and V) are
-/// unchanged from the unfused iteration.
+/// One CP-ALS iteration computing its own mode-1 MTTKRP (standalone
+/// traversal). Bitwise identical to [`cp_iteration_from_m1`] fed with the
+/// pack-fused `M¹` on the same plan.
 pub fn cp_iteration_with_scratch(
     y: &PackedY,
     f: &mut CpFactors,
     opts: CpOptions,
     pool: &Pool,
+    plan: &ChunkPlan,
     scratch: &mut mttkrp::FusedScratch,
 ) -> CpIterStats {
-    // --- mode 1: H (the single Y_k·V sweep) ------------------------------
-    let (m1, yv_products) = mttkrp::mttkrp_mode1_counted(y, &f.v, &f.w, pool);
+    let (m1, yv_products) = mttkrp::mttkrp_mode1_counted(y, &f.v, &f.w, pool, plan);
+    cp_iteration_from_m1(y, m1, yv_products, f, opts, pool, plan, scratch)
+}
+
+/// One fused CP-ALS iteration given a precomputed mode-1 MTTKRP `m1`
+/// (normally emitted by the pack-fused Procrustes sweep,
+/// [`super::procrustes::procrustes_pack_mode1`], with the same `V`/`W`
+/// still held in `f`): the H update consumes `m1`, mode 2 makes the
+/// iteration's **single** cold traversal of the packed slices (caching
+/// `Z_k = Y_kᵀ H`), and mode 3 is an `O(c_k·R)` epilogue fed from the
+/// cache — `Y_k·V` is computed exactly once per subject, all of it during
+/// the pack. The update order (H, then V, then W) and the residual
+/// identity `⟨Y, rec⟩ = ⟨M³, W⟩` (M³ with the final H and V) are
+/// unchanged from the unfused iteration.
+#[allow(clippy::too_many_arguments)]
+pub fn cp_iteration_from_m1(
+    y: &PackedY,
+    m1: Mat,
+    yv_products: u64,
+    f: &mut CpFactors,
+    opts: CpOptions,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    scratch: &mut mttkrp::FusedScratch,
+) -> CpIterStats {
+    // --- mode 1: H (m1 was computed against the current f.v / f.w) ------
     let g1 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.v));
     f.h = solve::solve_gram_system(&m1, &g1);
     normalize_cols_safe(&mut f.h);
 
     // --- mode 2: V (sweep caches Z_k = Y_kᵀ H for mode 3) ----------------
-    let m2 = mttkrp::mttkrp_mode2_cached(y, &f.h, &f.w, pool, scratch);
+    let m2 = mttkrp::mttkrp_mode2_cached(y, &f.h, &f.w, pool, plan, scratch);
     let g2 = blas::hadamard(&blas::gram(&f.w), &blas::gram(&f.h));
     f.v = solve_mode(&m2, &g2, opts.nonneg);
     normalize_cols_safe(&mut f.v);
 
     // --- mode 3: W (carries the scale) — epilogue over cached Z_k --------
-    let m3 = mttkrp::mttkrp_mode3_from_cache(y, &f.v, scratch, pool);
+    let m3 = mttkrp::mttkrp_mode3_from_cache(y, &f.v, scratch, pool, plan);
     let g3 = blas::hadamard(&blas::gram(&f.v), &blas::gram(&f.h));
     f.w = solve_mode(&m3, &g3, opts.nonneg);
 
@@ -186,7 +211,8 @@ mod tests {
             v: Mat::rand_normal(j, r, &mut rng),
             w: Mat::rand_normal(k, r, &mut rng),
         };
-        let stats = cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial());
+        let stats =
+            cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial(), &ChunkPlan::fixed(k));
         let explicit = residual_explicit(&y, &f);
         assert!(
             (stats.y_residual_sq - explicit).abs() < 1e-8 * (1.0 + explicit),
@@ -205,9 +231,10 @@ mod tests {
             v: Mat::rand_normal(j, r, &mut rng),
             w: Mat::rand_uniform(k, r, &mut rng),
         };
+        let plan = ChunkPlan::fixed(k);
         let mut last = f64::INFINITY;
         for it in 0..8 {
-            let stats = cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial());
+            let stats = cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial(), &plan);
             assert!(
                 stats.y_residual_sq <= last * (1.0 + 1e-9) + 1e-12,
                 "iter {it}: {} > {last}",
@@ -228,9 +255,10 @@ mod tests {
             w: Mat::rand_uniform(k, r, &mut rng),
         };
         let opts = CpOptions { nonneg: true };
+        let plan = ChunkPlan::fixed(k);
         let mut last = f64::INFINITY;
         for _ in 0..6 {
-            let stats = cp_iteration(&y, &mut f, opts, &Pool::serial());
+            let stats = cp_iteration(&y, &mut f, opts, &Pool::serial(), &plan);
             assert!(f.v.data().iter().all(|&x| x >= 0.0));
             assert!(f.w.data().iter().all(|&x| x >= 0.0));
             assert!(stats.y_residual_sq <= last * (1.0 + 1e-9) + 1e-12);
@@ -251,6 +279,7 @@ mod tests {
             v: Mat::rand_normal(j, r, &mut rng),
             w: Mat::rand_uniform(k, r, &mut rng),
         };
+        let plan = ChunkPlan::fixed(k);
         for pool in [Pool::serial(), Pool::new(4)] {
             let mut fa = f0.clone();
             let mut fb = f0.clone();
@@ -261,14 +290,73 @@ mod tests {
                     &mut fa,
                     CpOptions::default(),
                     &pool,
+                    &plan,
                     &mut shared,
                 );
-                let sb = cp_iteration(&y, &mut fb, CpOptions::default(), &pool);
+                let sb = cp_iteration(&y, &mut fb, CpOptions::default(), &pool, &plan);
                 assert_eq!(fa.h.data(), fb.h.data());
                 assert_eq!(fa.v.data(), fb.v.data());
                 assert_eq!(fa.w.data(), fb.w.data());
                 assert_eq!(sa.y_residual_sq.to_bits(), sb.y_residual_sq.to_bits());
                 assert_eq!(sa.yv_products, k as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_from_precomputed_m1_is_bitwise_identical() {
+        // The driver's pack-fused path hands cp_iteration_from_m1 an M¹
+        // computed during the pack; feeding the standalone mode-1 result
+        // through the same entry point must reproduce the self-computing
+        // iteration bit for bit, on fixed and balanced plans. K exceeds
+        // SUBJECT_CHUNK so both plans are genuinely multi-chunk and cut
+        // at different boundaries (smaller K would make them the same
+        // single chunk and the plan loop vacuous).
+        let mut rng = Pcg64::seed(136);
+        let (k, j, r) = (crate::threadpool::partition::SUBJECT_CHUNK + 6, 12, 3);
+        let y = random_y(&mut rng, k, j, r);
+        let weights: Vec<u64> =
+            y.slices.iter().map(|s| (s.c_k() * s.rank()) as u64).collect();
+        let f0 = CpFactors {
+            h: Mat::rand_normal(r, r, &mut rng),
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_uniform(k, r, &mut rng),
+        };
+        let balanced = ChunkPlan::balanced(&weights);
+        assert!(balanced.n_chunks() > 1, "plan degenerate: {:?}", balanced.ranges());
+        for plan in [ChunkPlan::fixed(k), balanced] {
+            for pool in [Pool::serial(), Pool::new(3)] {
+                let mut fa = f0.clone();
+                let mut fb = f0.clone();
+                let mut scr_a = super::super::mttkrp::FusedScratch::new();
+                let mut scr_b = super::super::mttkrp::FusedScratch::new();
+                for _ in 0..4 {
+                    let (m1, n) =
+                        super::super::mttkrp::mttkrp_mode1_counted(&y, &fa.v, &fa.w, &pool, &plan);
+                    let sa = cp_iteration_from_m1(
+                        &y,
+                        m1,
+                        n,
+                        &mut fa,
+                        CpOptions::default(),
+                        &pool,
+                        &plan,
+                        &mut scr_a,
+                    );
+                    let sb = cp_iteration_with_scratch(
+                        &y,
+                        &mut fb,
+                        CpOptions::default(),
+                        &pool,
+                        &plan,
+                        &mut scr_b,
+                    );
+                    assert_eq!(fa.h.data(), fb.h.data());
+                    assert_eq!(fa.v.data(), fb.v.data());
+                    assert_eq!(fa.w.data(), fb.w.data());
+                    assert_eq!(sa.y_residual_sq.to_bits(), sb.y_residual_sq.to_bits());
+                    assert_eq!(sa.yv_products, sb.yv_products);
+                }
             }
         }
     }
@@ -283,7 +371,7 @@ mod tests {
             v: Mat::rand_normal(j, r, &mut rng),
             w: Mat::rand_uniform(k, r, &mut rng),
         };
-        cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial());
+        cp_iteration(&y, &mut f, CpOptions::default(), &Pool::serial(), &ChunkPlan::fixed(k));
         for norms in [f.h.col_norms(), f.v.col_norms()] {
             for n in norms {
                 assert!(n == 0.0 || (n - 1.0).abs() < 1e-10, "col norm {n}");

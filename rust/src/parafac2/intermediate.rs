@@ -41,6 +41,22 @@ pub struct PackedSlice {
     /// race-free: the fused sweep does exactly one per subject per CP
     /// iteration (asserted in `metrics::flops`).
     yv_count: AtomicU64,
+    /// `‖Y_k‖²_F`, computed once per (re)pack while `yt` is cache-hot —
+    /// in the same element order a post-hoc scan would use, so the value
+    /// is bitwise identical — sparing the SSE bookkeeping two cold
+    /// `O(nnz(Y))` streams per ALS iteration.
+    norm_sq_cache: f64,
+    /// Lifetime tally of **cold read traversals** of the packed `yt`
+    /// block: standalone passes that stream the whole slice back out of
+    /// memory (standalone mode-1 `Y_k·V`, the mode-2 scatter, standalone
+    /// mode 3, the baseline's COO materialization). The pack itself and
+    /// reads fused into it ([`PackedSlice::yk_times_v_fused`], which
+    /// consumes the rows while the pack has them cache-resident) are *not*
+    /// traversals — that distinction is the whole point of the DPar2-style
+    /// pack→mode-1 fusion, which drops the ALS iteration from 2 cold
+    /// traversals per slice (mode 1 + mode 2) to 1 (mode 2 only), asserted
+    /// in `metrics::flops`.
+    traversal_count: AtomicU64,
 }
 
 impl Clone for PackedSlice {
@@ -49,7 +65,9 @@ impl Clone for PackedSlice {
             support: self.support.clone(),
             local_cols: self.local_cols.clone(),
             yt: self.yt.clone(),
+            norm_sq_cache: self.norm_sq_cache,
             yv_count: AtomicU64::new(self.yv_count.load(Ordering::Relaxed)),
+            traversal_count: AtomicU64::new(self.traversal_count.load(Ordering::Relaxed)),
         }
     }
 }
@@ -64,7 +82,21 @@ impl PackedSlice {
     /// Assemble from raw parts (tests/benches building synthetic slices;
     /// `local_cols` may be empty if the slice will never be repacked).
     pub fn from_parts(support: Vec<u32>, local_cols: Vec<u32>, yt: Mat) -> PackedSlice {
-        PackedSlice { support, local_cols, yt, yv_count: AtomicU64::new(0) }
+        let norm_sq_cache = Self::norm_sq_of(&yt);
+        PackedSlice {
+            support,
+            local_cols,
+            yt,
+            norm_sq_cache,
+            yv_count: AtomicU64::new(0),
+            traversal_count: AtomicU64::new(0),
+        }
+    }
+
+    /// The one canonical `‖Y_k‖²` summation (element order fixed so the
+    /// pack-time cache is bitwise identical to a post-hoc scan).
+    fn norm_sq_of(yt: &Mat) -> f64 {
+        yt.data().iter().map(|x| x * x).sum()
     }
 
     /// Pack `Y_k = Q_kᵀ X_k` directly from the CSR slice and `Q_k`,
@@ -112,7 +144,8 @@ impl PackedSlice {
     }
 
     /// Accumulate `Y_kᵀ` rows from the CSR entries via `local_cols`
-    /// (shared by `pack` and `repack_from`; one pass over the nonzeros).
+    /// (shared by `pack` and `repack_from`; one pass over the nonzeros),
+    /// then refresh the `‖Y_k‖²` cache while the block is still hot.
     fn fill_yt(&mut self, xk: &Csr, qk: &Mat) {
         let mut at = 0usize;
         for i in 0..xk.rows() {
@@ -126,6 +159,7 @@ impl PackedSlice {
                 }
             }
         }
+        self.norm_sq_cache = Self::norm_sq_of(&self.yt);
     }
 
     /// Number of nonzero columns `c_k`.
@@ -140,9 +174,11 @@ impl PackedSlice {
         self.yt.cols()
     }
 
-    /// ‖Y_k‖²_F (used by the fit computation).
+    /// `‖Y_k‖²_F` (used by the fit computation) — served from the
+    /// pack-time cache, so the per-iteration SSE bookkeeping does not
+    /// re-stream the packed slices. Bitwise identical to scanning `yt`.
     pub fn norm_sq(&self) -> f64 {
-        self.yt.data().iter().map(|x| x * x).sum()
+        self.norm_sq_cache
     }
 
     /// Gather the support rows of a J×R factor (`V_c` in the paper's
@@ -156,11 +192,24 @@ impl PackedSlice {
     }
 
     /// `Y_k · V_c` as an R×R product using only support rows of `v` —
-    /// the hottest kernel of the CP step. The fused sweep performs this
-    /// exactly once per subject per CP iteration (mode 1); each call is
-    /// tallied on the slice so that invariant is assertable
-    /// ([`PackedY::yv_products`], checked in `metrics::flops` tests).
+    /// the hottest kernel of the CP step, as a **standalone cold pass**
+    /// (counts one `yt` traversal). The per-iteration sweep performs the
+    /// product exactly once per subject; each call is tallied on the slice
+    /// so that invariant is assertable ([`PackedY::yv_products`], checked
+    /// in `metrics::flops` tests).
     pub fn yk_times_v(&self, v: &Mat) -> Mat {
+        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.yk_times_v_fused(v)
+    }
+
+    /// `Y_k · V_c` **fused into the pack**: call immediately after
+    /// [`PackedSlice::repack_from`], while the freshly written `yt` rows
+    /// are still cache-resident (DPar2-style). Same arithmetic, same
+    /// floating-point order, same `Y_k·V` tally as
+    /// [`PackedSlice::yk_times_v`] — but *not* counted as a traversal,
+    /// because the read rides the pack instead of streaming the slice
+    /// back out of memory.
+    pub fn yk_times_v_fused(&self, v: &Mat) -> Mat {
         self.yv_count.fetch_add(1, Ordering::Relaxed);
         // Ytᵀ · V_c, streamed without materializing V_c: accumulate
         // rank-1 contributions row by row.
@@ -180,6 +229,13 @@ impl PackedSlice {
             }
         }
         out
+    }
+
+    /// Record one cold read traversal of this slice's packed block (the
+    /// MTTKRP mode-2/mode-3 sweeps and the baseline's COO materialization
+    /// call this as they stream `yt`).
+    pub(crate) fn note_traversal(&self) {
+        self.traversal_count.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Dense `R × J` materialization (tests only).
@@ -245,6 +301,15 @@ impl PackedY {
     /// where it was called from.
     pub fn yv_products(&self) -> u64 {
         self.slices.iter().map(|s| s.yv_count.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total cold read traversals of this tensor's packed slices (see
+    /// [`PackedSlice`] for what counts). The pack-fused ALS iteration
+    /// performs exactly **one** per subject per iteration — mode 2 — which
+    /// `metrics::flops` asserts; the pre-fusion sweep performed two
+    /// (mode 1 + mode 2).
+    pub fn traversals(&self) -> u64 {
+        self.slices.iter().map(|s| s.traversal_count.load(Ordering::Relaxed)).sum()
     }
 
     pub fn heap_bytes(&self) -> u64 {
@@ -361,6 +426,27 @@ mod tests {
         for (pos, &j) in xk.indices().iter().enumerate() {
             assert_eq!(p.support[p.local_cols[pos] as usize], j);
         }
+    }
+
+    #[test]
+    fn yv_and_traversal_tallies() {
+        let mut rng = Pcg64::seed(108);
+        let xk = random_sparse(&mut rng, 7, 9, 0.3);
+        let qk = random_orthonormal(7, 3, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        let v = Mat::rand_normal(9, 3, &mut rng);
+        let y = PackedY { slices: vec![p], j_dim: 9 };
+        assert_eq!((y.yv_products(), y.traversals()), (0, 0));
+        // standalone product: one Y·V tally AND one cold traversal
+        let a = y.slices[0].yk_times_v(&v);
+        assert_eq!((y.yv_products(), y.traversals()), (1, 1));
+        // fused product: tallies the Y·V but NOT a traversal, and is
+        // bitwise identical to the standalone kernel
+        let b = y.slices[0].yk_times_v_fused(&v);
+        assert_eq!((y.yv_products(), y.traversals()), (2, 1));
+        assert_eq!(a.data(), b.data());
+        y.slices[0].note_traversal();
+        assert_eq!((y.yv_products(), y.traversals()), (2, 2));
     }
 
     #[test]

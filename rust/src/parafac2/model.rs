@@ -37,6 +37,14 @@ pub struct FitStats {
     pub cp_secs: f64,
     /// Mean seconds per outer iteration.
     pub secs_per_iter: f64,
+    /// `Y_k·V` products performed over the whole fit (the hottest kernel;
+    /// the fused sweep does exactly K per iteration — benches publish this
+    /// next to wall time so perf claims are machine-checkable).
+    pub yv_products: u64,
+    /// Cold read traversals of the packed slices over the whole fit (the
+    /// pack-fused SPARTan sweep does exactly K per iteration — down from
+    /// 2K pre-fusion; see `metrics::flops`).
+    pub traversals: u64,
 }
 
 impl Parafac2Model {

@@ -27,11 +27,19 @@
 //! `M³(k,:) = Σ_{j ∈ supp_k} Z_k(j,:) ∗ V(j,:)`. Caching `Z_k` per
 //! subject (in [`FusedScratch`], `nnz(Y)`-proportional, buffers reused
 //! across iterations) turns mode 3 into an `O(c_k·R)` epilogue with **no
-//! traversal of `Y` at all**, so per CP iteration each subject is swept
-//! exactly twice (mode 1, mode 2) instead of three times, and the hottest
-//! kernel `Y_k·V` ([`PackedSlice::yk_times_v`]) runs **exactly once per
-//! subject** — an invariant counted per iteration and asserted in
-//! `metrics::flops`.
+//! traversal of `Y` at all**.
+//!
+//! Mode 1, in turn, is fused into the **Procrustes pack** itself
+//! (DPar2-style, see [`super::procrustes::procrustes_pack_mode1`]): the
+//! `P_k = Y_k V` product is emitted while `Y_k` is still cache-resident
+//! from being packed, so the ALS iteration performs exactly **one** cold
+//! traversal of the packed slices per subject — the mode-2 sweep — and
+//! the hottest kernel `Y_k·V` runs **exactly once per subject**. Both
+//! invariants are counted per slice and asserted in `metrics::flops`
+//! ([`super::intermediate::PackedY::yv_products`] /
+//! [`super::intermediate::PackedY::traversals`]). The standalone
+//! [`mttkrp_mode1`] below remains as the unfused reference (and for
+//! callers without a pack to fuse into, e.g. the PJRT fallback path).
 //!
 //! Everything uses only the support rows of `V` ("we use only the rows of
 //! V factor matrix corresponding to the non-zero columns of Y_k",
@@ -47,14 +55,15 @@
 //!
 //! ## Determinism
 //!
-//! Per-chunk partials are merged in chunk order with fixed
-//! [`SUBJECT_CHUNK`] boundaries, so every result is bitwise identical
-//! across worker counts, and the cached (fused) and standalone kernels
-//! share their inner loops, so they are bitwise identical to each other.
+//! Per-chunk partials are merged in chunk order over the frozen,
+//! data-dependent boundaries of the caller's [`ChunkPlan`] (nnz-balanced
+//! in the ALS driver), so every result is bitwise identical across worker
+//! counts, and the cached (fused) and standalone kernels share their
+//! inner loops, so they are bitwise identical to each other.
 
 use super::intermediate::PackedY;
 use crate::linalg::{blas, Mat};
-use crate::threadpool::{partition::SUBJECT_CHUNK, Pool};
+use crate::threadpool::{ChunkPlan, Pool};
 use std::ops::Range;
 
 /// Per-subject intermediates cached across the fused sweep (and across
@@ -125,25 +134,33 @@ fn mode3_row_from_z(z: &Mat, support: &[u32], v: &Mat, out: &mut [f64]) {
 
 /// Mode-1 MTTKRP: `M¹ = Y_(1) (W ⊙ V) ∈ R^{R×R}`.
 ///
-/// Per subject: `P_k = Y_k V_c` (R×R — **the** `Y_k·V` product of the CP
-/// iteration), then Hadamard each row with `W(k,:)` and accumulate.
-/// Partial sums merge in chunk order (deterministic).
-pub fn mttkrp_mode1(y: &PackedY, v: &Mat, w: &Mat, pool: &Pool) -> Mat {
-    mttkrp_mode1_counted(y, v, w, pool).0
+/// Per subject: `P_k = Y_k V_c` (R×R), then Hadamard each row with
+/// `W(k,:)` and accumulate. Partial sums merge in the plan's chunk order
+/// (deterministic). This is the **standalone** (cold-traversal) form; the
+/// ALS loop uses the pack-fused
+/// [`super::procrustes::procrustes_pack_mode1`] instead, which is bitwise
+/// identical on the same plan.
+pub fn mttkrp_mode1(y: &PackedY, v: &Mat, w: &Mat, pool: &Pool, plan: &ChunkPlan) -> Mat {
+    mttkrp_mode1_counted(y, v, w, pool, plan).0
 }
 
 /// [`mttkrp_mode1`] also reporting how many `Y_k·V` products it performed
 /// (one per subject — the count the fused-sweep FLOP assertion checks).
-pub fn mttkrp_mode1_counted(y: &PackedY, v: &Mat, w: &Mat, pool: &Pool) -> (Mat, u64) {
+pub fn mttkrp_mode1_counted(
+    y: &PackedY,
+    v: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+) -> (Mat, u64) {
     let k = y.k();
     let r = v.cols();
     assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
     assert_eq!(w.rows(), k, "W rows must equal K");
     assert_eq!(w.cols(), r, "W/V rank mismatch");
-    let chunk = SUBJECT_CHUNK;
-    pool.par_fold(
-        k,
-        chunk,
+    assert!(plan.covers(k), "chunk plan does not cover the K subjects");
+    pool.par_plan_fold(
+        plan,
         |range| {
             let mut acc = Mat::zeros(r, r);
             let mut yv_products = 0u64;
@@ -189,6 +206,7 @@ fn mode2_chunk(
     let mut row_buf = vec![0.0f64; r];
     for (local_k, kk) in range.enumerate() {
         let slice = &y.slices[kk];
+        slice.note_traversal(); // one cold pass over this slice's yt rows
         let wk = w.row(kk);
         let mut z = z_chunk.as_deref_mut().map(|zs| &mut zs[local_k]);
         debug_assert!(z.as_ref().map_or(true, |zm| zm.shape() == (slice.c_k(), r)));
@@ -235,10 +253,9 @@ fn mode2_merge(j_dim: usize, r: usize, partials: Vec<(Vec<u32>, Vec<f64>)>) -> M
 /// rows of the partial result; each chunk accumulates over the union of
 /// its subjects' supports and the chunk partials merge in chunk order
 /// (deterministic across worker counts).
-pub fn mttkrp_mode2(y: &PackedY, h: &Mat, w: &Mat, pool: &Pool) -> Mat {
-    let r = check_mode2_shapes(y, h, w);
-    let partials =
-        pool.par_chunk_results(y.k(), SUBJECT_CHUNK, |range| mode2_chunk(y, h, w, range, None));
+pub fn mttkrp_mode2(y: &PackedY, h: &Mat, w: &Mat, pool: &Pool, plan: &ChunkPlan) -> Mat {
+    let r = check_mode2_shapes(y, h, w, plan);
+    let partials = pool.par_plan_results(plan, |range| mode2_chunk(y, h, w, range, None));
     mode2_merge(y.j_dim, r, partials)
 }
 
@@ -250,21 +267,23 @@ pub fn mttkrp_mode2_cached(
     h: &Mat,
     w: &Mat,
     pool: &Pool,
+    plan: &ChunkPlan,
     scratch: &mut FusedScratch,
 ) -> Mat {
-    let r = check_mode2_shapes(y, h, w);
+    let r = check_mode2_shapes(y, h, w, plan);
     scratch.ensure(y, r);
-    let partials = pool.par_chunks_mut(&mut scratch.z, SUBJECT_CHUNK, |start, sub| {
+    let partials = pool.par_plan_chunks_mut(&mut scratch.z, plan, |start, sub| {
         mode2_chunk(y, h, w, start..start + sub.len(), Some(sub))
     });
     mode2_merge(y.j_dim, r, partials)
 }
 
-fn check_mode2_shapes(y: &PackedY, h: &Mat, w: &Mat) -> usize {
+fn check_mode2_shapes(y: &PackedY, h: &Mat, w: &Mat, plan: &ChunkPlan) -> usize {
     let r = h.cols();
     assert_eq!(h.rows(), r, "H must be R×R");
     assert_eq!(w.rows(), y.k(), "W rows must equal K");
     assert_eq!(w.cols(), r, "W/H rank mismatch");
+    assert!(plan.covers(y.k()), "chunk plan does not cover the K subjects");
     r
 }
 
@@ -275,17 +294,19 @@ fn check_mode2_shapes(y: &PackedY, h: &Mat, w: &Mat) -> usize {
 /// as the paper's Fig. 4, expressed through `Z_k = Y_kᵀ H` so the fused
 /// path can reuse mode 2's intermediate. Bitwise identical to
 /// [`mttkrp_mode3_from_cache`] on the same inputs.
-pub fn mttkrp_mode3(y: &PackedY, h: &Mat, v: &Mat, pool: &Pool) -> Mat {
+pub fn mttkrp_mode3(y: &PackedY, h: &Mat, v: &Mat, pool: &Pool, plan: &ChunkPlan) -> Mat {
     let k = y.k();
     let r = h.cols();
     assert_eq!(h.rows(), r, "H must be R×R");
     assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
     assert_eq!(v.cols(), r, "V/H rank mismatch");
-    let rows = pool.par_chunk_results(k, SUBJECT_CHUNK, |range| {
+    assert!(plan.covers(k), "chunk plan does not cover the K subjects");
+    let rows = pool.par_plan_results(plan, |range| {
         let mut out = Mat::zeros(range.len(), r);
         let mut row_buf = vec![0.0f64; r];
         for (local, kk) in range.enumerate() {
             let slice = &y.slices[kk];
+            slice.note_traversal(); // standalone mode 3 streams yt again
             let orow = out.row_mut(local);
             // Interleaved: compute each Z_k row into a reused R-length
             // buffer and accumulate immediately — same c-then-column
@@ -307,12 +328,19 @@ pub fn mttkrp_mode3(y: &PackedY, h: &Mat, v: &Mat, pool: &Pool) -> Mat {
 /// Fused-sweep mode 3: the epilogue over the cached `Z_k = Y_kᵀ H` from
 /// [`mttkrp_mode2_cached`]. `O(c_k·R)` per subject, no traversal of `Y`,
 /// no `Y_k·V` product. `v` must be the (post-update) `V` factor.
-pub fn mttkrp_mode3_from_cache(y: &PackedY, v: &Mat, scratch: &FusedScratch, pool: &Pool) -> Mat {
+pub fn mttkrp_mode3_from_cache(
+    y: &PackedY,
+    v: &Mat,
+    scratch: &FusedScratch,
+    pool: &Pool,
+    plan: &ChunkPlan,
+) -> Mat {
     let k = y.k();
     let r = v.cols();
     assert_eq!(v.rows(), y.j_dim, "V rows must equal J");
     assert_eq!(scratch.z.len(), k, "scratch must be filled by mttkrp_mode2_cached");
-    let rows = pool.par_chunk_results(k, SUBJECT_CHUNK, |range| {
+    assert!(plan.covers(k), "chunk plan does not cover the K subjects");
+    let rows = pool.par_plan_results(plan, |range| {
         let mut out = Mat::zeros(range.len(), r);
         for (local, kk) in range.enumerate() {
             let slice = &y.slices[kk];
@@ -398,6 +426,7 @@ mod tests {
     use super::*;
     use crate::parafac2::intermediate::PackedSlice;
     use crate::sparse::Csr;
+    use crate::threadpool::partition::SUBJECT_CHUNK;
     use crate::util::rng::Pcg64;
 
     fn random_packed(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> PackedY {
@@ -420,19 +449,53 @@ mod tests {
         PackedY { slices, j_dim: j }
     }
 
+    /// A heavy-tailed cohort: subject 0 alone holds ≈ half the packed nnz
+    /// (the COPA-motivated EHR shape — packed weight is `c_k·R`, so the
+    /// heavy subject touches ~J/2 columns while the rest touch a handful),
+    /// making a balanced plan produce genuinely uneven chunk boundaries.
+    /// Needs a wide column space (`j ≳ 10·k`) to concentrate the weight.
+    fn heavy_tailed_packed(rng: &mut Pcg64, k: usize, j: usize, r: usize) -> PackedY {
+        let slices = (0..k)
+            .map(|kk| {
+                let rows = r.max(2) + rng.range(0, 4);
+                let ncols = if kk == 0 { j / 2 } else { 1 + rng.range(0, 3) };
+                let mut trips = vec![(0usize, rng.range(0, j), 1.0)];
+                for _ in 0..ncols {
+                    let col = rng.range(0, j);
+                    for i in 0..rows {
+                        if rng.chance(0.7) {
+                            trips.push((i, col, rng.normal()));
+                        }
+                    }
+                }
+                let xk = Csr::from_triplets(rows, j, trips);
+                let qk = crate::linalg::random_orthonormal(rows, r, rng);
+                PackedSlice::pack(&xk, &qk)
+            })
+            .collect();
+        PackedY { slices, j_dim: j }
+    }
+
+    /// Packed-nnz weights of a tensor (what the ALS driver keys its
+    /// balanced plan on, up to the constant R factor).
+    fn packed_weights(y: &PackedY) -> Vec<u64> {
+        y.slices.iter().map(|s| (s.c_k() * s.rank()) as u64).collect()
+    }
+
     #[test]
     fn all_modes_match_reference() {
         let mut rng = Pcg64::seed(121);
         for &(k, j, r) in &[(1usize, 5usize, 2usize), (6, 10, 3), (12, 7, 4)] {
             let y = random_packed(&mut rng, k, j, r);
+            let plan = ChunkPlan::fixed(k);
             let h = Mat::rand_normal(r, r, &mut rng);
             let v = Mat::rand_normal(j, r, &mut rng);
             let w = Mat::rand_normal(k, r, &mut rng);
             let pool = Pool::new(3);
 
-            let m1 = mttkrp_mode1(&y, &v, &w, &pool);
-            let m2 = mttkrp_mode2(&y, &h, &w, &pool);
-            let m3 = mttkrp_mode3(&y, &h, &v, &pool);
+            let m1 = mttkrp_mode1(&y, &v, &w, &pool, &plan);
+            let m2 = mttkrp_mode2(&y, &h, &w, &pool, &plan);
+            let m3 = mttkrp_mode3(&y, &h, &v, &pool, &plan);
 
             let r1 = reference::mttkrp_dense(&y, 0, &h, &v, &w);
             let r2 = reference::mttkrp_dense(&y, 1, &h, &v, &w);
@@ -445,42 +508,81 @@ mod tests {
     }
 
     #[test]
+    fn balanced_plan_matches_reference_on_heavy_tail() {
+        // Correctness is plan-independent: the balanced (uneven) plan must
+        // produce the same MTTKRPs as the dense reference on a cohort
+        // where one subject holds ~50% of the nnz.
+        let mut rng = Pcg64::seed(129);
+        // K > SUBJECT_CHUNK so the balanced plan really is multi-chunk
+        // (smaller K would collapse to one chunk and the merge across
+        // uneven boundaries would go untested).
+        let (k, j, r) = (SUBJECT_CHUNK + 6, 300usize, 3usize);
+        let y = heavy_tailed_packed(&mut rng, k, j, r);
+        let plan = ChunkPlan::balanced(&packed_weights(&y));
+        assert!(plan.covers(k));
+        assert!(plan.n_chunks() > 1, "plan degenerate: {:?}", plan.ranges());
+        assert_ne!(plan, ChunkPlan::fixed(k), "boundaries should be uneven");
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::rand_normal(k, r, &mut rng);
+        let pool = Pool::new(4);
+        let m1 = mttkrp_mode1(&y, &v, &w, &pool, &plan);
+        let m2 = mttkrp_mode2(&y, &h, &w, &pool, &plan);
+        let m3 = mttkrp_mode3(&y, &h, &v, &pool, &plan);
+        assert!(m1.max_abs_diff(&reference::mttkrp_dense(&y, 0, &h, &v, &w)) < 1e-9);
+        assert!(m2.max_abs_diff(&reference::mttkrp_dense(&y, 1, &h, &v, &w)) < 1e-9);
+        assert!(m3.max_abs_diff(&reference::mttkrp_dense(&y, 2, &h, &v, &w)) < 1e-9);
+    }
+
+    #[test]
     fn serial_equals_parallel_bitwise() {
         let mut rng = Pcg64::seed(122);
-        // K = 70 > SUBJECT_CHUNK so the parallel pool really runs the
-        // multi-chunk path (a single chunk would take the inline fast
-        // path and the test would compare serial against itself).
+        // K = 70 > SUBJECT_CHUNK so fixed plans have ≥ 2 chunks (a single
+        // chunk would take the inline fast path and the test would compare
+        // serial against itself), and a heavy-tailed variant so balanced
+        // plans exercise genuinely uneven boundaries.
         let k = SUBJECT_CHUNK + 6;
-        let y = random_packed(&mut rng, k, 8, 3);
-        let h = Mat::rand_normal(3, 3, &mut rng);
-        let v = Mat::rand_normal(8, 3, &mut rng);
-        let w = Mat::rand_normal(k, 3, &mut rng);
-        let ser = Pool::serial();
-        let par = Pool::new(4);
-        // chunk-ordered reduction ⇒ identical floating point results,
-        // for every mode and for the fused (cached) sweep
-        assert_eq!(
-            mttkrp_mode1(&y, &v, &w, &ser).data(),
-            mttkrp_mode1(&y, &v, &w, &par).data()
-        );
-        assert_eq!(
-            mttkrp_mode2(&y, &h, &w, &ser).data(),
-            mttkrp_mode2(&y, &h, &w, &par).data()
-        );
-        assert_eq!(
-            mttkrp_mode3(&y, &h, &v, &ser).data(),
-            mttkrp_mode3(&y, &h, &v, &par).data()
-        );
-        let mut scr_s = FusedScratch::new();
-        let mut scr_p = FusedScratch::new();
-        assert_eq!(
-            mttkrp_mode2_cached(&y, &h, &w, &ser, &mut scr_s).data(),
-            mttkrp_mode2_cached(&y, &h, &w, &par, &mut scr_p).data()
-        );
-        assert_eq!(
-            mttkrp_mode3_from_cache(&y, &v, &scr_s, &ser).data(),
-            mttkrp_mode3_from_cache(&y, &v, &scr_p, &par).data()
-        );
+        for heavy in [false, true] {
+            let j = if heavy { 500 } else { 8 };
+            let y = if heavy {
+                heavy_tailed_packed(&mut rng, k, j, 3)
+            } else {
+                random_packed(&mut rng, k, j, 3)
+            };
+            let h = Mat::rand_normal(3, 3, &mut rng);
+            let v = Mat::rand_normal(j, 3, &mut rng);
+            let w = Mat::rand_normal(k, 3, &mut rng);
+            let ser = Pool::serial();
+            let par = Pool::new(4);
+            for plan in [ChunkPlan::fixed(k), ChunkPlan::balanced(&packed_weights(&y))] {
+                assert!(plan.n_chunks() > 1, "heavy={heavy} plan degenerate");
+                // chunk-ordered reduction over plan-frozen boundaries ⇒
+                // identical floating point results, for every mode and for
+                // the fused (cached) sweep
+                assert_eq!(
+                    mttkrp_mode1(&y, &v, &w, &ser, &plan).data(),
+                    mttkrp_mode1(&y, &v, &w, &par, &plan).data()
+                );
+                assert_eq!(
+                    mttkrp_mode2(&y, &h, &w, &ser, &plan).data(),
+                    mttkrp_mode2(&y, &h, &w, &par, &plan).data()
+                );
+                assert_eq!(
+                    mttkrp_mode3(&y, &h, &v, &ser, &plan).data(),
+                    mttkrp_mode3(&y, &h, &v, &par, &plan).data()
+                );
+                let mut scr_s = FusedScratch::new();
+                let mut scr_p = FusedScratch::new();
+                assert_eq!(
+                    mttkrp_mode2_cached(&y, &h, &w, &ser, &plan, &mut scr_s).data(),
+                    mttkrp_mode2_cached(&y, &h, &w, &par, &plan, &mut scr_p).data()
+                );
+                assert_eq!(
+                    mttkrp_mode3_from_cache(&y, &v, &scr_s, &ser, &plan).data(),
+                    mttkrp_mode3_from_cache(&y, &v, &scr_p, &par, &plan).data()
+                );
+            }
+        }
     }
 
     #[test]
@@ -488,30 +590,34 @@ mod tests {
         // Regression guard for the fused path: the cached mode-2 and the
         // cache-fed mode-3 must agree **bitwise** with the standalone
         // kernels on the same inputs, on both serial and parallel pools,
-        // and across repeated reuse of the same scratch.
+        // across repeated reuse of the same scratch, and on both fixed and
+        // balanced (uneven) chunk plans.
         let mut rng = Pcg64::seed(125);
         // K crosses the SUBJECT_CHUNK boundary so the fused z_chunk
         // indexing and the chunk-ordered merge are exercised for real.
         let k = SUBJECT_CHUNK + 5;
-        let y = random_packed(&mut rng, k, 11, 3);
-        let mut scratch = FusedScratch::new();
-        for round in 0..3 {
-            let h = Mat::rand_normal(3, 3, &mut rng);
-            let v = Mat::rand_normal(11, 3, &mut rng);
-            let w = Mat::rand_normal(k, 3, &mut rng);
-            for pool in [Pool::serial(), Pool::new(4)] {
-                let m2_fused = mttkrp_mode2_cached(&y, &h, &w, &pool, &mut scratch);
-                let m3_fused = mttkrp_mode3_from_cache(&y, &v, &scratch, &pool);
-                assert_eq!(
-                    m2_fused.data(),
-                    mttkrp_mode2(&y, &h, &w, &pool).data(),
-                    "round {round} mode2"
-                );
-                assert_eq!(
-                    m3_fused.data(),
-                    mttkrp_mode3(&y, &h, &v, &pool).data(),
-                    "round {round} mode3"
-                );
+        let j = 400;
+        let y = heavy_tailed_packed(&mut rng, k, j, 3);
+        for plan in [ChunkPlan::fixed(k), ChunkPlan::balanced(&packed_weights(&y))] {
+            let mut scratch = FusedScratch::new();
+            for round in 0..3 {
+                let h = Mat::rand_normal(3, 3, &mut rng);
+                let v = Mat::rand_normal(j, 3, &mut rng);
+                let w = Mat::rand_normal(k, 3, &mut rng);
+                for pool in [Pool::serial(), Pool::new(4)] {
+                    let m2_fused = mttkrp_mode2_cached(&y, &h, &w, &pool, &plan, &mut scratch);
+                    let m3_fused = mttkrp_mode3_from_cache(&y, &v, &scratch, &pool, &plan);
+                    assert_eq!(
+                        m2_fused.data(),
+                        mttkrp_mode2(&y, &h, &w, &pool, &plan).data(),
+                        "round {round} mode2"
+                    );
+                    assert_eq!(
+                        m3_fused.data(),
+                        mttkrp_mode3(&y, &h, &v, &pool, &plan).data(),
+                        "round {round} mode3"
+                    );
+                }
             }
         }
     }
@@ -522,8 +628,9 @@ mod tests {
         let y = random_packed(&mut rng, 7, 6, 2);
         let v = Mat::rand_normal(6, 2, &mut rng);
         let w = Mat::rand_normal(7, 2, &mut rng);
+        let plan = ChunkPlan::fixed(7);
         for pool in [Pool::serial(), Pool::new(3)] {
-            let (_, n) = mttkrp_mode1_counted(&y, &v, &w, &pool);
+            let (_, n) = mttkrp_mode1_counted(&y, &v, &w, &pool, &plan);
             assert_eq!(n, 7);
         }
     }
@@ -539,7 +646,7 @@ mod tests {
         let y = PackedY { slices: vec![PackedSlice::pack(&xk, &qk)], j_dim: j };
         let h = Mat::rand_normal(r, r, &mut rng);
         let w = Mat::rand_normal(1, r, &mut rng);
-        let m2 = mttkrp_mode2(&y, &h, &w, &Pool::serial());
+        let m2 = mttkrp_mode2(&y, &h, &w, &Pool::serial(), &ChunkPlan::fixed(1));
         for jj in 0..j {
             let nz = m2.row(jj).iter().any(|&x| x != 0.0);
             assert_eq!(nz, jj == 4 || jj == 9, "row {jj}");
@@ -558,18 +665,22 @@ mod tests {
         let v = Mat::rand_normal(j, r, &mut rng);
         let w = Mat::zeros(0, r);
         let pool = Pool::new(2);
-        let m1 = mttkrp_mode1(&y, &v, &w, &pool);
+        let plan = ChunkPlan::balanced(&[]);
+        let m1 = mttkrp_mode1(&y, &v, &w, &pool, &plan);
         assert_eq!(m1.shape(), (r, r));
         assert!(m1.data().iter().all(|&x| x == 0.0));
-        let m2 = mttkrp_mode2(&y, &h, &w, &pool);
+        let m2 = mttkrp_mode2(&y, &h, &w, &pool, &plan);
         assert_eq!(m2.shape(), (j, r));
         assert!(m2.data().iter().all(|&x| x == 0.0));
-        let m3 = mttkrp_mode3(&y, &h, &v, &pool);
+        let m3 = mttkrp_mode3(&y, &h, &v, &pool, &plan);
         assert_eq!(m3.shape(), (0, r));
         let mut scratch = FusedScratch::new();
-        let m2c = mttkrp_mode2_cached(&y, &h, &w, &pool, &mut scratch);
+        let m2c = mttkrp_mode2_cached(&y, &h, &w, &pool, &plan, &mut scratch);
         assert_eq!(m2c.shape(), (j, r));
-        assert_eq!(mttkrp_mode3_from_cache(&y, &v, &scratch, &pool).shape(), (0, r));
+        assert_eq!(
+            mttkrp_mode3_from_cache(&y, &v, &scratch, &pool, &plan).shape(),
+            (0, r)
+        );
     }
 
     #[test]
@@ -585,16 +696,18 @@ mod tests {
         let yp = PackedY { slices: padded, j_dim: j };
         let wk = w.block(0, k, 0, r);
         let pool = Pool::serial();
+        let plan = ChunkPlan::fixed(k);
+        let plan_p = ChunkPlan::fixed(k + 1);
         assert_eq!(
-            mttkrp_mode1(&y, &v, &wk, &pool).data(),
-            mttkrp_mode1(&yp, &v, &w, &pool).data()
+            mttkrp_mode1(&y, &v, &wk, &pool, &plan).data(),
+            mttkrp_mode1(&yp, &v, &w, &pool, &plan_p).data()
         );
         assert_eq!(
-            mttkrp_mode2(&y, &h, &wk, &pool).data(),
-            mttkrp_mode2(&yp, &h, &w, &pool).data()
+            mttkrp_mode2(&y, &h, &wk, &pool, &plan).data(),
+            mttkrp_mode2(&yp, &h, &w, &pool, &plan_p).data()
         );
         // mode 3 gains one row for the padded subject, and it is zero
-        let m3p = mttkrp_mode3(&yp, &h, &v, &pool);
+        let m3p = mttkrp_mode3(&yp, &h, &v, &pool, &plan_p);
         assert!(m3p.row(k).iter().all(|&x| x == 0.0));
     }
 
@@ -607,7 +720,7 @@ mod tests {
         let v = Mat::rand_normal(4, 1, &mut rng);
         let w = Mat::rand_normal(3, 1, &mut rng);
         let pool = Pool::serial();
-        let m1 = mttkrp_mode1(&y, &v, &w, &pool);
+        let m1 = mttkrp_mode1(&y, &v, &w, &pool, &ChunkPlan::fixed(3));
         let want = reference::mttkrp_dense(&y, 0, &h, &v, &w);
         assert!(m1.max_abs_diff(&want) < 1e-10);
     }

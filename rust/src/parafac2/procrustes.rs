@@ -1,6 +1,9 @@
 //! Step 1 of PARAFAC2-ALS: the per-subject Orthogonal Procrustes update
 //! (paper Algorithm 2, lines 3–6), fused with the construction of the
-//! packed intermediate slices `Y_k = Q_kᵀ X_k` (lines 7–9).
+//! packed intermediate slices `Y_k = Q_kᵀ X_k` (lines 7–9) — and, in the
+//! ALS hot path, fused further with the **mode-1 MTTKRP** so the packed
+//! slice is consumed the moment it is produced
+//! ([`procrustes_pack_mode1`]).
 //!
 //! The textbook step is: SVD of `H S_k Vᵀ X_kᵀ = P_k Σ_k Z_kᵀ`, then
 //! `Q_k ← Z_k P_kᵀ`. That is exactly the orthonormal polar factor of
@@ -9,12 +12,14 @@
 //! per subject instead of an SVD of an R×I_k matrix.
 //!
 //! This step is embarrassingly parallel over the K subjects, and SPARTan
-//! (like the paper) runs it chunked on the worker pool.
+//! (like the paper) runs it chunked on the worker pool over the caller's
+//! frozen [`ChunkPlan`] (nnz-balanced in the ALS driver, so a heavy-tailed
+//! cohort cannot strand the whole sweep behind one overloaded chunk).
 
 use super::intermediate::{PackedSlice, PackedY};
 use crate::linalg::{blas, Mat};
 use crate::sparse::IrregularTensor;
-use crate::threadpool::{partition::SUBJECT_CHUNK, Pool};
+use crate::threadpool::{ChunkPlan, Pool};
 
 /// Compute `B_k = X_k V S_k Hᵀ` for one subject.
 ///
@@ -60,20 +65,21 @@ pub fn procrustes_and_pack(
 /// buffers of an already-filled arena are reused, so steady-state
 /// iterations perform zero per-subject allocations in this phase.
 /// Returns all `Q_k` when `keep_q`.
+#[allow(clippy::too_many_arguments)]
 pub fn procrustes_all_into(
     data: &IrregularTensor,
     v: &Mat,
     h: &Mat,
     w: &Mat,
     pool: &Pool,
+    plan: &ChunkPlan,
     keep_q: bool,
     y: &mut PackedY,
 ) -> Option<Vec<Mat>> {
     let k = data.k();
     y.j_dim = data.j();
     y.resize_slots(k);
-    let chunk = SUBJECT_CHUNK;
-    let per_chunk: Vec<Vec<Mat>> = pool.par_chunks_mut(&mut y.slices, chunk, |start, sub| {
+    let per_chunk: Vec<Vec<Mat>> = pool.par_plan_chunks_mut(&mut y.slices, plan, |start, sub| {
         let mut qs = Vec::with_capacity(if keep_q { sub.len() } else { 0 });
         for (i, slot) in sub.iter_mut().enumerate() {
             let xk = data.slice(start + i);
@@ -97,9 +103,83 @@ pub fn procrustes_all_into(
     }
 }
 
-/// Run step 1 for all subjects on the pool into a fresh [`PackedY`].
-/// (Convenience wrapper over [`procrustes_all_into`]; the ALS loop holds
-/// a persistent arena instead.)
+/// Result of the pack-fused Procrustes → mode-1 sweep.
+pub struct FusedPackSweep {
+    /// `M¹ = Σ_k rowhad(Y_k V, W(k,:))` — the mode-1 MTTKRP, accumulated
+    /// chunk-ordered while each `Y_k` was still cache-resident from its
+    /// pack. Bitwise identical to
+    /// [`super::mttkrp::mttkrp_mode1`]`(y, v, w, pool, plan)` on the same
+    /// plan.
+    pub m1: Mat,
+    /// `Y_k·V` products performed — exactly one per subject.
+    pub yv_products: u64,
+}
+
+/// Step 1 **fused with the mode-1 MTTKRP** (DPar2-style): per subject,
+/// compute `Q_k`, repack `Y_k` into its arena slot, and immediately emit
+/// `P_k = Y_k V` + the `W(k,:)` row-Hadamard while the freshly packed
+/// rows are hot in cache — so the CP step that follows never has to
+/// stream the packed slices for mode 1 again, cutting cold packed-slice
+/// traversals from 2 to 1 per ALS iteration (mode 2 is the only remaining
+/// sweep; asserted in `metrics::flops`).
+///
+/// Mode 1 needs `V` and `W` *as of the start of the iteration* — exactly
+/// the factors this Procrustes step consumes — which is what makes the
+/// fusion legal without changing any update's inputs. Per-chunk `M¹`
+/// partials merge in the plan's chunk order: bitwise identical to the
+/// standalone pack + [`super::mttkrp::mttkrp_mode1`] on the same plan,
+/// and bitwise deterministic across worker counts.
+pub fn procrustes_pack_mode1(
+    data: &IrregularTensor,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    y: &mut PackedY,
+) -> FusedPackSweep {
+    let r = v.cols();
+    assert_eq!(w.cols(), r, "W/V rank mismatch");
+    y.j_dim = data.j();
+    y.resize_slots(data.k());
+    let partials: Vec<(Mat, u64)> = pool.par_plan_chunks_mut(&mut y.slices, plan, |start, sub| {
+        let mut acc = Mat::zeros(r, r);
+        let mut yv_products = 0u64;
+        for (i, slot) in sub.iter_mut().enumerate() {
+            let kk = start + i;
+            let xk = data.slice(kk);
+            let b = procrustes_target(xk, v, h, w.row(kk));
+            let qk = crate::linalg::svd::procrustes_polar_jacobi(&b);
+            slot.repack_from(xk, &qk);
+            // The fusion: consume the slice now, while `yt` is cache-hot
+            // from the pack above. Same kernel, same FP order as the
+            // standalone mode-1 sweep.
+            let mut temp = slot.yk_times_v_fused(v);
+            yv_products += 1;
+            blas::rowhad_inplace(&mut temp, w.row(kk));
+            acc.axpy(1.0, &temp);
+        }
+        (acc, yv_products)
+    });
+    // Seed the merge with the first chunk's partial — the exact fold
+    // structure `mttkrp_mode1` uses — so even the signs of exact zeros
+    // come out bitwise identical to the standalone sweep.
+    let mut parts = partials.into_iter();
+    let (mut m1, mut yv_products) = match parts.next() {
+        Some(first) => first,
+        None => (Mat::zeros(r, r), 0),
+    };
+    for (part, n) in parts {
+        m1.axpy(1.0, &part);
+        yv_products += n;
+    }
+    FusedPackSweep { m1, yv_products }
+}
+
+/// Run step 1 for all subjects on the pool into a fresh [`PackedY`],
+/// chunked by an nnz-balanced plan derived from `data`. (Convenience
+/// wrapper over [`procrustes_all_into`]; the ALS loop holds a persistent
+/// arena and plan instead.)
 pub fn procrustes_all(
     data: &IrregularTensor,
     v: &Mat,
@@ -109,8 +189,19 @@ pub fn procrustes_all(
     keep_q: bool,
 ) -> (PackedY, Option<Vec<Mat>>) {
     let mut y = PackedY::empty(data.j());
-    let qs = procrustes_all_into(data, v, h, w, pool, keep_q, &mut y);
+    let plan = subject_plan(data);
+    let qs = procrustes_all_into(data, v, h, w, pool, &plan, keep_q, &mut y);
     (y, qs)
+}
+
+/// The per-fit chunk plan: contiguous subject chunks balanced by
+/// per-subject `nnz(X_k)` (the dominant per-subject cost of both the
+/// Procrustes pack, `O(nnz_k·R)`, and the CP sweeps, `O(c_k·R²)` with
+/// `c_k ≤ nnz_k`). Boundaries depend only on the data — see
+/// [`ChunkPlan::balanced`] for the determinism contract.
+pub fn subject_plan(data: &IrregularTensor) -> ChunkPlan {
+    let weights: Vec<u64> = (0..data.k()).map(|k| data.slice(k).nnz() as u64).collect();
+    ChunkPlan::balanced(&weights)
 }
 
 #[cfg(test)]
@@ -118,6 +209,7 @@ mod tests {
     use super::*;
     use crate::linalg::qr::orthonormality_defect;
     use crate::linalg::svd::svd_thin;
+    use crate::parafac2::mttkrp;
     use crate::sparse::Csr;
     use crate::util::rng::Pcg64;
 
@@ -218,11 +310,12 @@ mod tests {
         let data = IrregularTensor::new(slices);
         let mut y = crate::parafac2::intermediate::PackedY::empty(data.j());
         let pool = Pool::new(3);
+        let plan = subject_plan(&data);
         for round in 0..4 {
             let v = Mat::rand_normal(8, r, &mut rng);
             let h = Mat::rand_normal(r, r, &mut rng);
             let w = Mat::rand_uniform(5, r, &mut rng);
-            let _ = procrustes_all_into(&data, &v, &h, &w, &pool, false, &mut y);
+            let _ = procrustes_all_into(&data, &v, &h, &w, &pool, &plan, false, &mut y);
             let (fresh, _) = procrustes_all(&data, &v, &h, &w, &Pool::serial(), false);
             for k in 0..data.k() {
                 assert_eq!(
@@ -232,6 +325,78 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pack_fused_mode1_matches_separate_bitwise() {
+        // THE tentpole regression guard: the pack-fused sweep must be
+        // bitwise indistinguishable from "repack, then standalone mode-1
+        // MTTKRP" — same arena contents, same M¹ bits — on the same plan,
+        // for fixed and balanced (heavy-tailed ⇒ uneven) boundaries, on
+        // serial and parallel pools, across arena-reusing rounds.
+        let mut rng = Pcg64::seed(116);
+        let r = 3;
+        let k = 70; // crosses the SUBJECT_CHUNK boundary
+        let slices: Vec<Csr> = (0..k)
+            .map(|kk| {
+                // heavy tail: subject 0 holds ~half the cohort's nnz
+                let (rows, dens) = if kk == 0 { (30, 0.9) } else { (4 + rng.range(0, 4), 0.08) };
+                random_sparse(&mut rng, rows, 40, dens)
+            })
+            .collect();
+        let data = IrregularTensor::new(slices);
+        let balanced = subject_plan(&data);
+        assert!(balanced.n_chunks() > 1);
+        for plan in [ChunkPlan::fixed(k), balanced] {
+            for workers in [1usize, 4] {
+                let pool = Pool::new(workers);
+                let mut y_fused = PackedY::empty(data.j());
+                let mut y_sep = PackedY::empty(data.j());
+                let mut rng2 = Pcg64::seed(991);
+                for round in 0..3 {
+                    let v = Mat::rand_normal(40, r, &mut rng2);
+                    let h = Mat::rand_normal(r, r, &mut rng2);
+                    let w = Mat::rand_uniform(k, r, &mut rng2);
+                    let sweep =
+                        procrustes_pack_mode1(&data, &v, &h, &w, &pool, &plan, &mut y_fused);
+                    let _ =
+                        procrustes_all_into(&data, &v, &h, &w, &pool, &plan, false, &mut y_sep);
+                    let m1 = mttkrp::mttkrp_mode1(&y_sep, &v, &w, &pool, &plan);
+                    assert_eq!(
+                        sweep.m1.data(),
+                        m1.data(),
+                        "round {round}, {workers} workers"
+                    );
+                    assert_eq!(sweep.yv_products, k as u64);
+                    for kk in 0..k {
+                        assert_eq!(
+                            y_fused.slices[kk].yt.data(),
+                            y_sep.slices[kk].yt.data(),
+                            "round {round} subject {kk}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subject_plan_balances_heavy_cohort() {
+        let mut rng = Pcg64::seed(117);
+        // subject 0 carries well over half the nnz of the cohort
+        let slices: Vec<Csr> = (0..80)
+            .map(|kk| {
+                let (rows, dens) = if kk == 0 { (60, 0.95) } else { (12, 0.02) };
+                random_sparse(&mut rng, rows, 120, dens)
+            })
+            .collect();
+        let data = IrregularTensor::new(slices);
+        let plan = subject_plan(&data);
+        assert!(plan.covers(80));
+        // the heavy subject's chunk closes right after it
+        let heavy = plan.ranges().iter().find(|r| r.contains(&0)).unwrap();
+        assert_eq!(heavy.clone(), 0..1, "heavy chunk {heavy:?}");
+        assert_ne!(plan, ChunkPlan::fixed(80));
     }
 
     #[test]

@@ -6,14 +6,19 @@
 //! ## The `pjrt` feature
 //!
 //! The real implementation needs the `xla` bindings crate plus an XLA
-//! toolchain, neither of which exists in the offline build environment,
-//! so it is gated behind the (off-by-default) `pjrt` cargo feature — to
-//! enable it, add the `xla` crate to `[dependencies]` and build with
-//! `--features pjrt`. Without the feature this module compiles a **stub**
-//! with the identical API whose constructors return a descriptive error;
-//! every caller (CLI subcommands, the `compare` table, the PJRT driver,
-//! the roundtrip tests) already handles missing artifacts/clients
-//! gracefully, so the native SPARTan and baseline paths are unaffected.
+//! toolchain; the offline build environment has neither, so execution is
+//! gated behind the (off-by-default) `pjrt` cargo feature. The feature
+//! compiles this wrapper against the `xla` dependency — by default the
+//! vendored **API-pinning stub** (`rust/vendor/xla-stub`), which keeps
+//! every line of this file type-checked in CI's feature-matrix lane
+//! (`cargo check --all-targets --features pjrt`) while its constructors
+//! fail with a descriptive runtime error; swap the path dependency for
+//! the real bindings crate to actually execute. Without the feature this
+//! module compiles a **feature-stub** with the identical API whose
+//! constructors return a descriptive error. Either way every caller (CLI
+//! subcommands, the `compare` table, the PJRT driver, the roundtrip
+//! tests) handles missing artifacts/clients gracefully, so the native
+//! SPARTan and baseline paths are unaffected.
 //!
 //! Adapted from the smoke-verified reference at /opt/xla-example.
 

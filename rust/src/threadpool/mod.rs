@@ -42,6 +42,8 @@
 
 pub mod partition;
 
+pub use partition::ChunkPlan;
+
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -266,27 +268,26 @@ impl Pool {
         }
     }
 
-    /// Apply `f` to chunk index ranges covering `0..n`, returning per-chunk
-    /// results **ordered by chunk id**.
-    pub fn par_chunk_results<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    /// Core ranged executor: apply `f` to `range_of(c)` for every chunk id
+    /// `c in 0..n_chunks`, returning per-chunk results **ordered by chunk
+    /// id**. `range_of` must be cheap and pure — it is re-evaluated on
+    /// whichever worker claims the chunk.
+    fn par_ranged<R, F, G>(&self, n_chunks: usize, range_of: G, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(Range<usize>) -> R + Sync,
+        G: Fn(usize) -> Range<usize> + Sync,
     {
-        let chunk = chunk.max(1);
-        let n_chunks = n.div_ceil(chunk);
         if n_chunks == 0 {
             return Vec::new();
         }
         // Serial fast path: no synchronization.
         if self.core.workers == 1 || n_chunks == 1 {
-            return (0..n_chunks)
-                .map(|c| f(c * chunk..((c + 1) * chunk).min(n)))
-                .collect();
+            return (0..n_chunks).map(|c| f(range_of(c))).collect();
         }
         let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_chunks).map(|_| None).collect());
         let task = |c: usize| {
-            let r = f(c * chunk..((c + 1) * chunk).min(n));
+            let r = f(range_of(c));
             slots.lock().unwrap()[c] = Some(r);
         };
         self.run_job(n_chunks, &task);
@@ -298,41 +299,72 @@ impl Pool {
             .collect()
     }
 
-    /// Chunked parallel mutation: split `items` into contiguous chunks and
-    /// apply `f(start_index, chunk_slice)` to each, returning per-chunk
-    /// results ordered by chunk id. The arena-reuse path (repacking `Y_k`
-    /// slices in place, refreshing per-subject scratch) needs disjoint
-    /// `&mut` access from workers; chunk ranges never overlap, so handing
-    /// out raw-pointer-derived sub-slices is sound.
-    pub fn par_chunks_mut<T, R, F>(&self, items: &mut [T], chunk: usize, f: F) -> Vec<R>
+    /// Apply `f` to fixed-size chunk ranges covering `0..n`, returning
+    /// per-chunk results **ordered by chunk id**.
+    pub fn par_chunk_results<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        let chunk = chunk.max(1);
+        self.par_ranged(n.div_ceil(chunk), |c| c * chunk..((c + 1) * chunk).min(n), f)
+    }
+
+    /// Apply `f` to the frozen ranges of a [`ChunkPlan`] (weight-balanced
+    /// or fixed — the kernels never care which), returning per-chunk
+    /// results ordered by chunk id. Boundaries come from the plan, so the
+    /// chunk-ordered merge downstream is bitwise deterministic across
+    /// worker counts.
+    pub fn par_plan_results<R, F>(&self, plan: &ChunkPlan, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        let ranges = plan.ranges();
+        self.par_ranged(ranges.len(), |c| ranges[c].clone(), f)
+    }
+
+    /// Plan-driven parallel mutation: hand each plan range of `items` to
+    /// `f(start_index, chunk_slice)` as a disjoint `&mut` sub-slice,
+    /// returning per-chunk results ordered by chunk id. The arena-reuse
+    /// path (repacking `Y_k` slices in place, refreshing per-subject
+    /// scratch) needs disjoint `&mut` access from workers; plan ranges
+    /// never overlap (asserted), so handing out raw-pointer-derived
+    /// sub-slices is sound.
+    pub fn par_plan_chunks_mut<T, R, F>(&self, items: &mut [T], plan: &ChunkPlan, f: F) -> Vec<R>
     where
         T: Send,
         R: Send,
         F: Fn(usize, &mut [T]) -> R + Sync,
     {
         let n = items.len();
-        let chunk = chunk.max(1);
-        let n_chunks = n.div_ceil(chunk);
+        assert!(plan.covers(n), "chunk plan does not cover the {n} items");
+        let ranges = plan.ranges();
+        let n_chunks = ranges.len();
         if n_chunks == 0 {
             return Vec::new();
         }
         if self.core.workers == 1 || n_chunks == 1 {
-            return items
-                .chunks_mut(chunk)
-                .enumerate()
-                .map(|(c, sub)| f(c * chunk, sub))
-                .collect();
+            let mut out = Vec::with_capacity(n_chunks);
+            let mut rest: &mut [T] = items;
+            for r in ranges {
+                let (sub, tail) = std::mem::take(&mut rest).split_at_mut(r.end - r.start);
+                rest = tail;
+                out.push(f(r.start, sub));
+            }
+            return out;
         }
         let base = SendPtr(items.as_mut_ptr());
         let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_chunks).map(|_| None).collect());
         let task = |c: usize| {
-            let start = c * chunk;
-            let end = ((c + 1) * chunk).min(n);
-            // SAFETY: chunks are disjoint sub-ranges of `items`, which the
-            // caller exclusively borrows for the duration of the job.
-            let sub = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
-            let r = f(start, sub);
-            slots.lock().unwrap()[c] = Some(r);
+            let r = &ranges[c];
+            // SAFETY: plan ranges are disjoint sub-ranges of `items`
+            // (checked by `covers` above), which the caller exclusively
+            // borrows for the duration of the job.
+            let sub =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.end - r.start) };
+            let out = f(r.start, sub);
+            slots.lock().unwrap()[c] = Some(out);
         };
         self.run_job(n_chunks, &task);
         slots
@@ -341,6 +373,17 @@ impl Pool {
             .into_iter()
             .map(|r| r.expect("chunk result missing"))
             .collect()
+    }
+
+    /// Fixed-size-chunk parallel mutation (see [`Pool::par_plan_chunks_mut`]
+    /// for the plan-driven variant the PARAFAC2 kernels use).
+    pub fn par_chunks_mut<T, R, F>(&self, items: &mut [T], chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut [T]) -> R + Sync,
+    {
+        self.par_plan_chunks_mut(items, &ChunkPlan::fixed_size(items.len(), chunk), f)
     }
 
     /// Parallel fold: per-chunk partial results merged in chunk order
@@ -352,6 +395,20 @@ impl Pool {
         M: FnMut(R, R) -> R,
     {
         let mut parts = self.par_chunk_results(n, chunk, f).into_iter();
+        let first = parts.next()?;
+        Some(parts.fold(first, |acc, x| merge(acc, x)))
+    }
+
+    /// Plan-driven parallel fold: per-chunk partials over the plan's
+    /// frozen ranges, merged in chunk order (deterministic across worker
+    /// counts because the boundaries come from the plan).
+    pub fn par_plan_fold<R, F, M>(&self, plan: &ChunkPlan, f: F, mut merge: M) -> Option<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+        M: FnMut(R, R) -> R,
+    {
+        let mut parts = self.par_plan_results(plan, f).into_iter();
         let first = parts.next()?;
         Some(parts.fold(first, |acc, x| merge(acc, x)))
     }
@@ -510,6 +567,63 @@ mod tests {
             data
         };
         assert_eq!(run(&Pool::serial()), run(&Pool::new(5)));
+    }
+
+    #[test]
+    fn par_plan_results_uneven_ranges_in_order() {
+        // heavy-tailed weights ⇒ uneven, data-dependent boundaries
+        let mut w = vec![1u64; 199];
+        w.insert(0, 10_000);
+        let plan = ChunkPlan::balanced(&w);
+        assert!(plan.covers(200));
+        assert!(plan.n_chunks() > 1);
+        for pool in [Pool::serial(), Pool::new(4)] {
+            let got = pool.par_plan_results(&plan, |r| r.clone());
+            assert_eq!(got.as_slice(), plan.ranges());
+        }
+    }
+
+    #[test]
+    fn par_plan_fold_bitwise_across_worker_counts() {
+        let mut w = vec![3u64; 150];
+        w[77] = 5_000;
+        let plan = ChunkPlan::balanced(&w);
+        let f = |r: Range<usize>| r.map(|i| 1.0 / (1.0 + i as f64)).sum::<f64>();
+        let want = Pool::serial().par_plan_fold(&plan, f, |a, b| a + b).unwrap();
+        for workers in [2usize, 4, 7] {
+            let got = Pool::new(workers).par_plan_fold(&plan, f, |a, b| a + b).unwrap();
+            assert_eq!(want.to_bits(), got.to_bits(), "{workers} workers");
+        }
+    }
+
+    #[test]
+    fn par_plan_chunks_mut_uneven_disjoint_updates() {
+        let mut w = vec![1u64; 90];
+        w[10] = 700;
+        let plan = ChunkPlan::balanced(&w);
+        assert!(plan.n_chunks() > 1);
+        for pool in [Pool::serial(), Pool::new(4)] {
+            let mut data = vec![0u64; 90];
+            let starts = pool.par_plan_chunks_mut(&mut data, &plan, |start, sub| {
+                for (i, x) in sub.iter_mut().enumerate() {
+                    *x = (start + i) as u64 * 3;
+                }
+                start
+            });
+            assert_eq!(
+                starts,
+                plan.ranges().iter().map(|r| r.start).collect::<Vec<_>>()
+            );
+            assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64 * 3));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk plan does not cover")]
+    fn par_plan_chunks_mut_rejects_mismatched_plan() {
+        let plan = ChunkPlan::fixed(8);
+        let mut data = vec![0u32; 9];
+        Pool::serial().par_plan_chunks_mut(&mut data, &plan, |_, _| ());
     }
 
     #[test]

@@ -3,8 +3,20 @@
 //! Subjects have wildly varying nonzero counts (the paper's EHR data is
 //! heavy-tailed), so chunking `0..K` uniformly can leave one chunk holding
 //! most of the work. [`balanced_chunks`] greedily cuts the subject range
-//! into contiguous chunks of approximately equal *weight* (nnz), which the
-//! scheduler then distributes dynamically.
+//! into contiguous chunks of approximately equal *weight* (nnz), and a
+//! [`ChunkPlan`] freezes those boundaries for a whole fit so that every
+//! parallel kernel call chunks the subjects identically.
+//!
+//! ## The determinism contract
+//!
+//! Every reduction in the PARAFAC2 kernels merges per-chunk partials in
+//! chunk order, so results are bit-for-bit identical across worker counts
+//! **iff the chunk boundaries themselves never depend on the worker
+//! count**. Both plan constructors honor that: [`ChunkPlan::fixed`] cuts
+//! at multiples of [`SUBJECT_CHUNK`] (depends only on K), and
+//! [`ChunkPlan::balanced`] cuts by cumulative weight against a target
+//! chunk count of `K.div_ceil(SUBJECT_CHUNK)` (depends only on K and the
+//! per-subject weights, i.e. only on the data).
 
 use std::ops::Range;
 
@@ -41,16 +53,91 @@ pub fn balanced_chunks(weights: &[u64], target_chunks: usize) -> Vec<Range<usize
 /// reduction bit-for-bit deterministic across worker counts: chunk
 /// boundaries — and therefore floating-point summation order — depend only
 /// on the data, never on the machine. 64 subjects per chunk keeps
-/// scheduling overhead < 1% at the workloads in the paper's sweeps while
-/// still load-balancing heavy-tailed subjects. The persistent pool's
-/// dynamic chunk cursor (see [`crate::threadpool::Pool`]) hands these
-/// fixed chunks to whichever worker is free, so load balance is dynamic
-/// while the reduction order stays fixed.
+/// scheduling overhead < 1% at the workloads in the paper's sweeps. The
+/// persistent pool's dynamic chunk cursor (see
+/// [`crate::threadpool::Pool`]) hands chunks to whichever worker is free,
+/// so load balance is dynamic while the reduction order stays fixed;
+/// [`ChunkPlan::balanced`] additionally evens out the per-chunk *work* for
+/// heavy-tailed cohorts.
 pub const SUBJECT_CHUNK: usize = 64;
+
+/// A frozen chunking of `0..items` into contiguous, disjoint, covering
+/// ranges — the unit of scheduling for every per-subject parallel kernel.
+///
+/// One plan is computed per fit (boundaries depend only on the data, see
+/// the module docs) and passed to every kernel call, so the fused
+/// pack→mode-1 sweep, the standalone MTTKRPs, and the regression tests
+/// comparing them all sum in exactly the same order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    ranges: Vec<Range<usize>>,
+    items: usize,
+}
+
+impl ChunkPlan {
+    /// Fixed-size chunks of [`SUBJECT_CHUNK`] subjects (the pre-balancing
+    /// behavior; still the right default when no weights are available).
+    pub fn fixed(items: usize) -> ChunkPlan {
+        ChunkPlan::fixed_size(items, SUBJECT_CHUNK)
+    }
+
+    /// Fixed-size chunks of an explicit size (tests / ablations).
+    pub fn fixed_size(items: usize, chunk: usize) -> ChunkPlan {
+        let chunk = chunk.max(1);
+        let ranges = (0..items.div_ceil(chunk))
+            .map(|c| c * chunk..((c + 1) * chunk).min(items))
+            .collect();
+        ChunkPlan { ranges, items }
+    }
+
+    /// Weight-balanced chunks: boundaries cut by cumulative `weights`
+    /// (per-subject nnz in the ALS driver) against a target chunk count of
+    /// `items.div_ceil(SUBJECT_CHUNK)` — the same chunk count a fixed plan
+    /// would use, but with heavy subjects isolated so no chunk dominates
+    /// the critical path. Depends only on the weights, never on the
+    /// worker count.
+    pub fn balanced(weights: &[u64]) -> ChunkPlan {
+        let items = weights.len();
+        let ranges = balanced_chunks(weights, items.div_ceil(SUBJECT_CHUNK));
+        ChunkPlan { ranges, items }
+    }
+
+    /// The frozen ranges, in subject order.
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Number of items covered (`0..items`).
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Check that this plan covers exactly `0..n` (kernel entry points
+    /// assert it: a plan built for a different tensor would silently
+    /// mis-chunk).
+    pub fn covers(&self, n: usize) -> bool {
+        if self.items != n {
+            return false;
+        }
+        let mut at = 0usize;
+        for r in &self.ranges {
+            if r.start != at || r.end <= r.start {
+                return false;
+            }
+            at = r.end;
+        }
+        at == n
+    }
+}
 
 /// Heuristic chunk size for a uniform split of `n` items across `workers`,
 /// targeting ~4 chunks per worker for load balance without scheduling
-/// overhead. (Use [`SUBJECT_CHUNK`] where cross-run determinism matters.)
+/// overhead. (Use a [`ChunkPlan`] where cross-run determinism matters.)
 pub fn default_chunk_size(n: usize, workers: usize) -> usize {
     (n / (workers.max(1) * 4)).max(1)
 }
@@ -94,5 +181,53 @@ mod tests {
         assert_eq!(default_chunk_size(0, 4), 1);
         assert!(default_chunk_size(1000, 4) >= 1);
         assert!(default_chunk_size(1000, 4) <= 1000);
+    }
+
+    #[test]
+    fn fixed_plan_matches_fixed_chunking() {
+        let p = ChunkPlan::fixed(130);
+        assert_eq!(p.ranges(), &[0..64, 64..128, 128..130]);
+        assert!(p.covers(130));
+        assert_eq!(p.items(), 130);
+        assert_eq!(p.n_chunks(), 3);
+        let empty = ChunkPlan::fixed(0);
+        assert_eq!(empty.n_chunks(), 0);
+        assert!(empty.covers(0));
+    }
+
+    #[test]
+    fn balanced_plan_covers_and_isolates_heavy_subject() {
+        // heavy-tailed cohort: subject 40 holds ~50% of the nnz
+        let mut w = vec![10u64; 200];
+        w[40] = 2000;
+        let p = ChunkPlan::balanced(&w);
+        assert!(p.covers(200));
+        // boundaries are uneven (not multiples of SUBJECT_CHUNK)
+        assert_ne!(p, ChunkPlan::fixed(200));
+        // the greedy cut closes the chunk right after the heavy subject
+        // (its weight alone exceeds the per-chunk budget)
+        let heavy = p.ranges().iter().find(|r| r.contains(&40)).unwrap().clone();
+        assert_eq!(heavy.end, 41, "heavy chunk {heavy:?}");
+    }
+
+    #[test]
+    fn balanced_plan_depends_only_on_weights() {
+        let w: Vec<u64> = (0..150).map(|i| 1 + (i * 37) as u64 % 91).collect();
+        // same weights → same plan, regardless of how often it's built
+        assert_eq!(ChunkPlan::balanced(&w), ChunkPlan::balanced(&w));
+        // uniform weights → the greedy cut lands on (near-)uniform chunks
+        let u = ChunkPlan::balanced(&[3u64; 128]);
+        assert!(u.covers(128));
+        assert_eq!(u.n_chunks(), 2);
+    }
+
+    #[test]
+    fn covers_rejects_wrong_size_or_gaps() {
+        let p = ChunkPlan::fixed(10);
+        assert!(!p.covers(11));
+        let gap = ChunkPlan { ranges: vec![0..3, 4..10], items: 10 };
+        assert!(!gap.covers(10));
+        let overlap = ChunkPlan { ranges: vec![0..5, 3..10], items: 10 };
+        assert!(!overlap.covers(10));
     }
 }

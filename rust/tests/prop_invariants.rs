@@ -7,7 +7,7 @@ use spartan::linalg::{self, Mat};
 use spartan::parafac2::intermediate::{PackedSlice, PackedY};
 use spartan::parafac2::mttkrp;
 use spartan::sparse::{Csr, IrregularTensor};
-use spartan::threadpool::Pool;
+use spartan::threadpool::{ChunkPlan, Pool};
 use spartan::util::rng::Pcg64;
 
 const CASES: u64 = 30;
@@ -59,16 +59,17 @@ fn prop_subject_permutation_equivariance() {
         };
         let wp = w.gather_rows(&perm);
 
-        let m1a = mttkrp::mttkrp_mode1(&y, &v, &w, &pool);
-        let m1b = mttkrp::mttkrp_mode1(&yp, &v, &wp, &pool);
+        let plan = ChunkPlan::fixed(k);
+        let m1a = mttkrp::mttkrp_mode1(&y, &v, &w, &pool, &plan);
+        let m1b = mttkrp::mttkrp_mode1(&yp, &v, &wp, &pool, &plan);
         assert!(m1a.max_abs_diff(&m1b) < 1e-9, "seed {seed} mode1");
 
-        let m2a = mttkrp::mttkrp_mode2(&y, &h, &w, &pool);
-        let m2b = mttkrp::mttkrp_mode2(&yp, &h, &wp, &pool);
+        let m2a = mttkrp::mttkrp_mode2(&y, &h, &w, &pool, &plan);
+        let m2b = mttkrp::mttkrp_mode2(&yp, &h, &wp, &pool, &plan);
         assert!(m2a.max_abs_diff(&m2b) < 1e-9, "seed {seed} mode2");
 
-        let m3a = mttkrp::mttkrp_mode3(&y, &h, &v, &pool);
-        let m3b = mttkrp::mttkrp_mode3(&yp, &h, &v, &pool);
+        let m3a = mttkrp::mttkrp_mode3(&y, &h, &v, &pool, &plan);
+        let m3b = mttkrp::mttkrp_mode3(&yp, &h, &v, &pool, &plan);
         for (dst, &src) in perm.iter().enumerate() {
             for t in 0..r {
                 assert!(
@@ -106,18 +107,19 @@ fn prop_zero_subject_padding_invariance() {
             wp.row_mut(i).copy_from_slice(w.row(i));
         }
 
-        let m1a = mttkrp::mttkrp_mode1(&y, &v, &w, &pool);
-        let m1b = mttkrp::mttkrp_mode1(&yp, &v, &wp, &pool);
+        let m1a = mttkrp::mttkrp_mode1(&y, &v, &w, &pool, &ChunkPlan::fixed(k));
+        let m1b = mttkrp::mttkrp_mode1(&yp, &v, &wp, &pool, &ChunkPlan::fixed(k + 1));
         assert!(m1a.max_abs_diff(&m1b) < 1e-12, "seed {seed} mode1");
 
-        let m2a = mttkrp::mttkrp_mode2(&y, &h, &w, &pool);
-        let m2b = mttkrp::mttkrp_mode2(&yp, &h, &wp, &pool);
+        let m2a = mttkrp::mttkrp_mode2(&y, &h, &w, &pool, &ChunkPlan::fixed(k));
+        let m2b = mttkrp::mttkrp_mode2(&yp, &h, &wp, &pool, &ChunkPlan::fixed(k + 1));
         assert!(m2a.max_abs_diff(&m2b) < 1e-12, "seed {seed} mode2");
     }
 }
 
 /// Property: worker count never changes any kernel result (bitwise), by
-/// the fixed-chunk deterministic reduction design.
+/// the plan-frozen deterministic reduction design — for both fixed and
+/// nnz-balanced (uneven) chunk boundaries.
 #[test]
 fn prop_worker_count_determinism() {
     for seed in 0..CASES {
@@ -127,13 +129,19 @@ fn prop_worker_count_determinism() {
         let v = Mat::rand_normal(j, r, &mut rng);
         let w = Mat::rand_normal(k, r, &mut rng);
         let h = Mat::rand_normal(r, r, &mut rng);
+        let weights: Vec<u64> =
+            y.slices.iter().map(|s| (s.c_k() * s.rank()) as u64).collect();
         let pools = [Pool::serial(), Pool::new(2), Pool::new(7)];
-        let m1: Vec<Mat> = pools.iter().map(|p| mttkrp::mttkrp_mode1(&y, &v, &w, p)).collect();
-        let m2: Vec<Mat> = pools.iter().map(|p| mttkrp::mttkrp_mode2(&y, &h, &w, p)).collect();
-        assert_eq!(m1[0].data(), m1[1].data(), "seed {seed}");
-        assert_eq!(m1[0].data(), m1[2].data(), "seed {seed}");
-        assert_eq!(m2[0].data(), m2[1].data(), "seed {seed}");
-        assert_eq!(m2[0].data(), m2[2].data(), "seed {seed}");
+        for plan in [ChunkPlan::fixed(k), ChunkPlan::balanced(&weights)] {
+            let m1: Vec<Mat> =
+                pools.iter().map(|p| mttkrp::mttkrp_mode1(&y, &v, &w, p, &plan)).collect();
+            let m2: Vec<Mat> =
+                pools.iter().map(|p| mttkrp::mttkrp_mode2(&y, &h, &w, p, &plan)).collect();
+            assert_eq!(m1[0].data(), m1[1].data(), "seed {seed}");
+            assert_eq!(m1[0].data(), m1[2].data(), "seed {seed}");
+            assert_eq!(m2[0].data(), m2[1].data(), "seed {seed}");
+            assert_eq!(m2[0].data(), m2[2].data(), "seed {seed}");
+        }
     }
 }
 

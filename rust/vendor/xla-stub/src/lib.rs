@@ -1,0 +1,163 @@
+//! Offline API-pinning stub of the `xla` PJRT bindings.
+//!
+//! Mirrors the (small) subset of the real crate's API that
+//! `spartan::runtime::pjrt` uses, so the `pjrt` feature type-checks in
+//! environments without an XLA toolchain. Every entry point that would
+//! touch XLA returns [`Error::Unavailable`]; nothing here executes
+//! compute. The one load-bearing guarantee: **signatures must match the
+//! real crate** — if the wrapper drifts, `cargo check --features pjrt`
+//! (CI's feature-matrix lane) breaks loudly instead of silently.
+
+use std::fmt;
+
+/// Error type standing in for the real crate's; only ever constructed as
+/// [`Error::Unavailable`] here.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub was called where real XLA was required.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real `xla` bindings crate and an \
+                 XLA toolchain (this build vendors the API-pinning stub)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tensor) handle.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::Unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module proto (the AOT interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A PJRT client.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list on the default device; the real
+    /// crate returns per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.array_shape().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        let err = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(err.contains("xla stub"), "{err}");
+    }
+}
