@@ -7,6 +7,7 @@
 //! Run: `cargo bench --bench micro_linalg`
 
 use spartan::bench::{bench, write_results, BenchConfig, Measurement};
+use spartan::linalg::kernels::{self, reference};
 use spartan::linalg::{blas, nnls, svd, Mat};
 use spartan::util::json::Json;
 use spartan::util::rng::Pcg64;
@@ -110,6 +111,116 @@ fn main() {
             m.summary(),
             64.0 / m.mean_secs / 1e3
         );
+        measurements.push(m);
+    }
+
+    // ---- kernel layer A/B: register-blocked vs scalar reference ----------
+    // Shape A (sparse-support rows × dense panel): the `Y_k·V` kernel at
+    // per-slice shapes. Same inputs, bitwise-identical outputs (asserted
+    // in kernel_conformance.rs) — these cells measure the speed delta of
+    // the 4-wide / R-unrolled blocking alone.
+    println!("\n=== kernels: blocked vs scalar, shape A (Y_k·V support rows) ===");
+    for &(r, c) in &[(4usize, 256usize), (8, 256), (16, 512), (40, 1024)] {
+        let j = c + 7;
+        let support: Vec<u32> = (0..c as u32).collect();
+        let yt = Mat::rand_normal(c, r, &mut rng);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let reps = (20_000_000 / (2 * r * r * c)).max(1);
+        let fl = (reps * 2 * c * r * r) as f64;
+        let mut out = Mat::zeros(r, r);
+        let m = bench(&format!("spmm_yt_v_blocked_r{r}_c{c}"), &cfg, || {
+            for _ in 0..reps {
+                out.fill_zero();
+                kernels::spmm_yt_v(&yt, &support, &v, &mut out);
+                std::hint::black_box(&out);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+        measurements.push(m);
+        let m = bench(&format!("spmm_yt_v_scalar_r{r}_c{c}"), &cfg, || {
+            for _ in 0..reps {
+                out.fill_zero();
+                reference::spmm_yt_v(&yt, &support, &v, &mut out);
+                std::hint::black_box(&out);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+        measurements.push(m);
+    }
+
+    // Shape B (dense-transpose × dense panel): the `Z_k = Y_kᵀH` row
+    // sweep plus the gram/AᵀB panels behind the normal equations.
+    println!("\n=== kernels: blocked vs scalar, shape B (Y_kᵀH / gram / AᵀB) ===");
+    for &(r, c) in &[(8usize, 256usize), (16, 512), (40, 512)] {
+        let yt = Mat::rand_normal(c, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let mut z = Mat::zeros(c, r);
+        let reps = (20_000_000 / (2 * r * r * c)).max(1);
+        let fl = (reps * 2 * c * r * r) as f64;
+        let m = bench(&format!("zt_panel_blocked_r{r}_c{c}"), &cfg, || {
+            for _ in 0..reps {
+                for cc in 0..c {
+                    kernels::zt_row(yt.row(cc), &h, z.row_mut(cc));
+                }
+                std::hint::black_box(&z);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+        measurements.push(m);
+        let m = bench(&format!("zt_panel_scalar_r{r}_c{c}"), &cfg, || {
+            for _ in 0..reps {
+                for cc in 0..c {
+                    reference::zt_row(yt.row(cc), &h, z.row_mut(cc));
+                }
+                std::hint::black_box(&z);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+        measurements.push(m);
+    }
+    for &(k, n) in &[(256usize, 8usize), (512, 16), (1024, 40)] {
+        let a = Mat::rand_normal(k, n, &mut rng);
+        let b = Mat::rand_normal(k, n, &mut rng);
+        let reps = (20_000_000 / (2 * k * n * n)).max(1);
+        let fl_gram = (reps * k * n * n) as f64; // upper triangle ≈ half
+        let fl_atb = (reps * 2 * k * n * n) as f64;
+        let mut g = Mat::zeros(n, n);
+        let m = bench(&format!("gram_blocked_k{k}_n{n}"), &cfg, || {
+            for _ in 0..reps {
+                g.fill_zero();
+                kernels::gram_into(&a, &mut g);
+                std::hint::black_box(&g);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_gram, m.mean_secs));
+        measurements.push(m);
+        let m = bench(&format!("gram_scalar_k{k}_n{n}"), &cfg, || {
+            for _ in 0..reps {
+                g.fill_zero();
+                reference::gram(&a, &mut g);
+                std::hint::black_box(&g);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_gram, m.mean_secs));
+        measurements.push(m);
+        let mut c = Mat::zeros(n, n);
+        let m = bench(&format!("atb_blocked_k{k}_n{n}"), &cfg, || {
+            for _ in 0..reps {
+                c.fill_zero();
+                kernels::atb_into(&a, &b, &mut c);
+                std::hint::black_box(&c);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_atb, m.mean_secs));
+        measurements.push(m);
+        let m = bench(&format!("atb_scalar_k{k}_n{n}"), &cfg, || {
+            for _ in 0..reps {
+                c.fill_zero();
+                reference::atb(&a, &b, &mut c);
+                std::hint::black_box(&c);
+            }
+        });
+        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_atb, m.mean_secs));
         measurements.push(m);
     }
 

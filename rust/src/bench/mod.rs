@@ -34,6 +34,7 @@
 
 pub mod als_runner;
 pub mod table;
+pub mod trend;
 
 use crate::util::json::Json;
 use crate::util::timer::{fmt_secs, Stopwatch};

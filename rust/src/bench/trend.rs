@@ -1,0 +1,314 @@
+//! Bench-trend diffing: the logic behind `spartan bench-diff` and CI's
+//! `bench-trend` gate.
+//!
+//! Both sides are directories of `bench_results/*.json` files (the schema
+//! in [`super`]): the *old* side is the previous run's
+//! `bench-results-<sha>` artifact (or the committed `BENCH_*.json`
+//! history seeds on a first run), the *new* side is the current run.
+//! Cells are keyed `<bench>/<measurement name>`; each cell's statistic is
+//! the **median** of its raw `iter_secs` samples (medians shrug off the
+//! single-iteration outliers that shared CI runners love to produce;
+//! `mean_secs` is the fallback for measurements without samples).
+//!
+//! Classification per cell, with `max_regress` (CI: 0.10) and `min_iters`
+//! (CI: 5):
+//!
+//! * new median > old × (1 + max_regress) and both sides have ≥
+//!   `min_iters` samples → **regression** (the gate fails);
+//! * over the threshold but either side has fewer samples → **warn-only**
+//!   (too noisy to block on);
+//! * new median < old × (1 − max_regress) → improvement (reported);
+//! * cells present on only one side → added/removed (reported, never
+//!   fatal — benches come and go with the code).
+//!
+//! An empty old side (genuinely first run) gates nothing: every cell is
+//! "added" and the exit is clean, so the trend job bootstraps itself.
+
+use crate::util::json::{self, Json};
+use crate::util::timer::fmt_secs;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One comparable bench cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    /// `<bench>/<measurement name>`.
+    pub id: String,
+    /// Median of the raw per-iteration wall times (or `mean_secs`).
+    pub median_secs: f64,
+    /// Number of samples behind the median.
+    pub iters: usize,
+}
+
+/// Median of a non-empty sample set (average of the two middles for even
+/// lengths).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty sample set");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+/// Extract the cells of one parsed `bench_results/*.json` document.
+pub fn cells_from_json(doc: &Json) -> Vec<Cell> {
+    let bench = doc.get("bench").and_then(|j| j.as_str()).unwrap_or("?").to_string();
+    let mut out = Vec::new();
+    let Some(ms) = doc.get("measurements").and_then(|j| j.as_arr()) else {
+        return out;
+    };
+    for m in ms {
+        let Some(name) = m.get("name").and_then(|j| j.as_str()) else {
+            continue;
+        };
+        let samples: Vec<f64> = m
+            .get("iter_secs")
+            .and_then(|j| j.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        let (median_secs, iters) = if samples.is_empty() {
+            match m.get("mean_secs").and_then(|j| j.as_f64()) {
+                Some(x) => (x, m.get("iters").and_then(|j| j.as_usize()).unwrap_or(1)),
+                None => continue,
+            }
+        } else {
+            (median(&samples), samples.len())
+        };
+        out.push(Cell { id: format!("{bench}/{name}"), median_secs, iters });
+    }
+    out
+}
+
+/// Load every `*.json` under `dir` (sorted for stable output order). A
+/// missing directory is an error; an empty one is an empty baseline.
+pub fn load_cells(dir: &Path) -> Result<Vec<Cell>, String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    let mut paths: Vec<_> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "json"))
+        .collect();
+    paths.sort();
+    let mut cells = Vec::new();
+    for p in paths {
+        let text =
+            std::fs::read_to_string(&p).map_err(|e| format!("reading {}: {e}", p.display()))?;
+        let doc = json::parse(&text).map_err(|e| format!("{}: {e}", p.display()))?;
+        cells.extend(cells_from_json(&doc));
+    }
+    Ok(cells)
+}
+
+/// One old-vs-new cell delta.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub id: String,
+    pub old_secs: f64,
+    pub new_secs: f64,
+    /// `new/old − 1` (positive = slower).
+    pub frac: f64,
+    /// min(old iters, new iters) — the confidence proxy.
+    pub iters: usize,
+}
+
+/// Full classification of a diff.
+#[derive(Clone, Debug, Default)]
+pub struct TrendReport {
+    pub regressions: Vec<Delta>,
+    /// Over the threshold but under `min_iters` samples: warn-only.
+    pub warned: Vec<Delta>,
+    pub improved: Vec<Delta>,
+    pub steady: usize,
+    pub added: Vec<String>,
+    pub removed: Vec<String>,
+}
+
+/// Diff two cell sets.
+pub fn diff(old: &[Cell], new: &[Cell], max_regress: f64, min_iters: usize) -> TrendReport {
+    let old_map: BTreeMap<&str, &Cell> = old.iter().map(|c| (c.id.as_str(), c)).collect();
+    let new_map: BTreeMap<&str, &Cell> = new.iter().map(|c| (c.id.as_str(), c)).collect();
+    let mut rep = TrendReport::default();
+    for (id, n) in &new_map {
+        let Some(o) = old_map.get(id) else {
+            rep.added.push((*id).to_string());
+            continue;
+        };
+        if o.median_secs <= 0.0 {
+            rep.steady += 1; // degenerate baseline: nothing to gate on
+            continue;
+        }
+        let d = Delta {
+            id: (*id).to_string(),
+            old_secs: o.median_secs,
+            new_secs: n.median_secs,
+            frac: n.median_secs / o.median_secs - 1.0,
+            iters: o.iters.min(n.iters),
+        };
+        if d.frac > max_regress {
+            if d.iters < min_iters {
+                rep.warned.push(d);
+            } else {
+                rep.regressions.push(d);
+            }
+        } else if d.frac < -max_regress {
+            rep.improved.push(d);
+        } else {
+            rep.steady += 1;
+        }
+    }
+    for id in old_map.keys() {
+        if !new_map.contains_key(id) {
+            rep.removed.push((*id).to_string());
+        }
+    }
+    rep
+}
+
+fn delta_line(tag: &str, d: &Delta) -> String {
+    format!(
+        "{tag} {} {:+.1}% ({} → {}, {} iters)\n",
+        d.id,
+        d.frac * 100.0,
+        fmt_secs(d.old_secs),
+        fmt_secs(d.new_secs),
+        d.iters
+    )
+}
+
+/// Human-readable report (one line per noteworthy cell + a summary).
+pub fn render(rep: &TrendReport, max_regress: f64, min_iters: usize) -> String {
+    let mut s = String::new();
+    for d in &rep.regressions {
+        s.push_str(&delta_line("REGRESSION", d));
+    }
+    for d in &rep.warned {
+        s.push_str(&delta_line(&format!("warn (<{min_iters} iters)"), d));
+    }
+    for d in &rep.improved {
+        s.push_str(&delta_line("improved", d));
+    }
+    for id in &rep.added {
+        s.push_str(&format!("new cell {id}\n"));
+    }
+    for id in &rep.removed {
+        s.push_str(&format!("removed cell {id}\n"));
+    }
+    s.push_str(&format!(
+        "bench-diff: {} regression(s) past {:.0}%, {} warn-only, {} improved, {} steady, {} new, {} removed\n",
+        rep.regressions.len(),
+        max_regress * 100.0,
+        rep.warned.len(),
+        rep.improved.len(),
+        rep.steady,
+        rep.added.len(),
+        rep.removed.len()
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(id: &str, med: f64, iters: usize) -> Cell {
+        Cell { id: id.into(), median_secs: med, iters }
+    }
+
+    #[test]
+    fn median_odd_even_and_outlier_resistance() {
+        assert_eq!(median(&[3.0]), 3.0);
+        assert_eq!(median(&[1.0, 3.0]), 2.0);
+        assert_eq!(median(&[9.0, 1.0, 2.0]), 2.0);
+        // one 100× outlier does not move the median
+        assert_eq!(median(&[1.0, 1.0, 1.0, 1.0, 100.0]), 1.0);
+    }
+
+    #[test]
+    fn diff_classifies_cells() {
+        let old = vec![
+            cell("a/x", 1.0, 5),
+            cell("a/noisy", 1.0, 2),
+            cell("a/fast", 1.0, 5),
+            cell("a/flat", 1.0, 5),
+            cell("a/gone", 1.0, 5),
+        ];
+        let new = vec![
+            cell("a/x", 1.2, 5),     // +20% with enough iters → regression
+            cell("a/noisy", 1.5, 2), // +50% but 2 iters → warn-only
+            cell("a/fast", 0.5, 5),  // −50% → improved
+            cell("a/flat", 1.05, 5), // +5% → steady
+            cell("a/new", 1.0, 5),   // no baseline → added
+        ];
+        let rep = diff(&old, &new, 0.10, 5);
+        assert_eq!(rep.regressions.len(), 1);
+        assert_eq!(rep.regressions[0].id, "a/x");
+        assert!((rep.regressions[0].frac - 0.2).abs() < 1e-12);
+        assert_eq!(rep.warned.len(), 1);
+        assert_eq!(rep.warned[0].id, "a/noisy");
+        assert_eq!(rep.improved.len(), 1);
+        assert_eq!(rep.steady, 1);
+        assert_eq!(rep.added, vec!["a/new".to_string()]);
+        assert_eq!(rep.removed, vec!["a/gone".to_string()]);
+        let text = render(&rep, 0.10, 5);
+        assert!(text.contains("REGRESSION a/x"), "{text}");
+        assert!(text.contains("1 regression(s)"), "{text}");
+    }
+
+    #[test]
+    fn empty_baseline_gates_nothing() {
+        let new = vec![cell("a/x", 1.0, 5)];
+        let rep = diff(&[], &new, 0.10, 5);
+        assert!(rep.regressions.is_empty());
+        assert_eq!(rep.added.len(), 1);
+    }
+
+    #[test]
+    fn cells_from_json_prefers_iter_secs_median() {
+        let doc = json::parse(
+            r#"{"bench": "b", "measurements": [
+                {"name": "m", "iters": 3, "mean_secs": 9.0,
+                 "iter_secs": [1.0, 100.0, 2.0]},
+                {"name": "no_samples", "iters": 4, "mean_secs": 0.5,
+                 "iter_secs": []},
+                {"name": "useless"}
+            ]}"#,
+        )
+        .unwrap();
+        let cells = cells_from_json(&doc);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0], cell("b/m", 2.0, 3)); // median, not the mean
+        assert_eq!(cells[1], cell("b/no_samples", 0.5, 4)); // mean fallback
+    }
+
+    #[test]
+    fn load_cells_reads_a_directory_and_skips_non_json() {
+        let dir = std::env::temp_dir().join("spartan_trend_load_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("one.json"),
+            r#"{"bench": "one", "measurements": [{"name": "m", "iter_secs": [0.5]}]}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("notes.txt"), "not json").unwrap();
+        let cells = load_cells(&dir).unwrap();
+        assert_eq!(cells, vec![cell("one/m", 0.5, 1)]);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(load_cells(&dir).is_err(), "missing dir is an error");
+    }
+
+    #[test]
+    fn seed_snapshot_is_a_valid_empty_baseline() {
+        // The committed bench_results/BENCH_SEED.json must parse and
+        // contribute zero cells (history bootstrap contract of the CI
+        // bench-trend job).
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("bench_results/BENCH_SEED.json");
+        let text = std::fs::read_to_string(&path).expect("committed seed snapshot");
+        let doc = json::parse(&text).expect("seed snapshot JSON");
+        assert!(cells_from_json(&doc).is_empty());
+    }
+}

@@ -38,6 +38,30 @@
 //!   artifact, so the repo accumulates a machine-readable perf trajectory
 //!   instead of hand-written claims. See [`bench`] for the schema and
 //!   `metrics::flops` for the counter invariants.
+//! * **The trend gate** — CI's `bench-trend` job diffs the current
+//!   artifact against the previous run's (`spartan bench-diff`,
+//!   [`bench::trend`]): any cell whose `iter_secs` **median** regresses
+//!   more than 10% fails the build (cells with fewer than 5 measured
+//!   iterations warn only). Committed `bench_results/BENCH_*.json` files
+//!   seed the history when no artifact exists yet.
+//!
+//! ## Kernel layer
+//!
+//! The ALS hot loops run on register-blocked, R-unrolled micro-kernels
+//! behind **one dispatch point**, [`linalg::kernels`] — two shapes:
+//! sparse-support rows × dense panel (`Y_k·V`, `X_k·V`) and
+//! dense-transpose × dense panel (`Z_k = Y_kᵀH`, `gram`, `AᵀB`). Callers
+//! (`parafac2::intermediate`, `parafac2::mttkrp`, `sparse::csr`,
+//! `linalg::blas`) never select variants themselves. The determinism
+//! contract — which kernels are **bitwise** identical to their scalar
+//! references (the order-preserving blocked family) and which are
+//! **ULP-bounded** (the reordered `dot` family) — is documented in the
+//! module and pinned by the differential harness
+//! `rust/tests/kernel_conformance.rs`; a checked-in golden-trajectory
+//! fixture (`bench::als_runner::golden`) additionally pins the exact
+//! summation order of a full fit, and `cargo bench --bench micro_linalg`
+//! publishes blocked-vs-scalar A/B cells for both shapes. To add a kernel
+//! shape, see "Adding a kernel shape" in [`linalg::kernels`].
 
 pub mod bench;
 pub mod cli;

@@ -6,8 +6,16 @@
 //! inner `j` loop streams both `B.row(k)` and `C.row(i)` contiguously,
 //! which LLVM auto-vectorizes well. A panel-blocked variant kicks in for
 //! larger operands to keep the B panel in L1/L2.
+//!
+//! The transpose-times-panel forms ([`matmul_at_b`], [`gram`]) and the
+//! [`dot`] reduction delegate to the register-blocked micro-kernels in
+//! [`super::kernels`] — the single dispatch point for the ALS hot shapes.
+//! `matmul_at_b`/`gram` sit in the order-preserving family (bitwise
+//! identical to the scalar references); `dot` is in the reordered,
+//! ULP-bounded family (see the kernel module's determinism contract).
 
 use super::dense::Mat;
+use super::kernels;
 
 /// Tunable blocking parameters (also exercised by the ablation bench).
 const BLOCK_K: usize = 128;
@@ -78,25 +86,15 @@ pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64) {
 /// C = Aᵀ · B without materializing Aᵀ.
 ///
 /// For row-major A this is again an `i(k)-j` streaming pattern: row k of A
-/// contributes outer products `A(k,:)ᵀ · B(k,:)`.
+/// contributes outer products `A(k,:)ᵀ · B(k,:)`. Runs on the
+/// register-blocked [`kernels::atb_into`] (4 rows of A in flight; bitwise
+/// identical to the scalar form).
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     let (ka, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "atb inner-dim mismatch");
     let mut c = Mat::zeros(m, n);
-    for k in 0..ka {
-        let arow = a.row(k);
-        let brow = b.row(k);
-        for (i, &aki) in arow.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aki * bv;
-            }
-        }
-    }
+    kernels::atb_into(a, b, &mut c);
     c
 }
 
@@ -118,51 +116,20 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// Gram matrix AᵀA (symmetric; computes upper triangle and mirrors).
+/// Runs on the register-blocked [`kernels::gram_into`] (bitwise identical
+/// to the scalar form).
 pub fn gram(a: &Mat) -> Mat {
-    let (k, n) = a.shape();
+    let n = a.cols();
     let mut g = Mat::zeros(n, n);
-    for r in 0..k {
-        let row = a.row(r);
-        for i in 0..n {
-            let ai = row[i];
-            if ai == 0.0 {
-                continue;
-            }
-            let grow = g.row_mut(i);
-            for j in i..n {
-                grow[j] += ai * row[j];
-            }
-        }
-    }
-    for i in 0..n {
-        for j in 0..i {
-            g[(i, j)] = g[(j, i)];
-        }
-    }
+    kernels::gram_into(a, &mut g);
     g
 }
 
-/// Dot product of two equal-length slices.
+/// Dot product of two equal-length slices ([`kernels::dot`]: 4 independent
+/// accumulators, the kernel layer's reordered / ULP-bounded family).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    // 4-way unrolled accumulators: breaks the dependency chain so the
-    // compiler can keep several FMAs in flight.
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += x[i] * y[i];
-        s1 += x[i + 1] * y[i + 1];
-        s2 += x[i + 2] * y[i + 2];
-        s3 += x[i + 3] * y[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += x[i] * y[i];
-    }
-    s
+    kernels::dot(x, y)
 }
 
 /// y = xᵀ·A for a row vector x (length = A.rows()); returns length A.cols().

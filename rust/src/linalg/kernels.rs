@@ -1,0 +1,608 @@
+//! Register-blocked micro-kernels for the ALS hot loops, behind one
+//! dispatch point.
+//!
+//! Profiling after the PR 1–2 fusions leaves the iteration time inside two
+//! rank-1-update loop shapes, and this module owns both:
+//!
+//! * **Shape A — sparse-support rows × dense panel.** `Y_k·V` restricted
+//!   to the column support ([`spmm_yt_v`], powering
+//!   `PackedSlice::yk_times_v{,_fused}` and therefore the pack-fused
+//!   Procrustes→mode-1 sweep), and the CSR-row AXPY `X_k·V`
+//!   ([`sparse_row_axpy`], powering `Csr::matmul_dense` inside the
+//!   Procrustes target).
+//! * **Shape B — dense-transpose × dense panel.** The per-row
+//!   `Z_k(c,:) = Y_k(:,j_c)ᵀ H` kernel ([`zt_row`], the mode-2/mode-3
+//!   sweeps), and the panel forms `AᵀB` ([`atb_into`], `blas::matmul_at_b`)
+//!   and `AᵀA` ([`gram_into`], `blas::gram`) that the normal equations and
+//!   Procrustes hit every iteration.
+//!
+//! ## Blocking schedule
+//!
+//! Every kernel blocks the **accumulation axis** by [`ACC_BLOCK`] = 4:
+//! four coefficient/row pairs are held in registers and applied to the
+//! destination row in one pass, quartering the destination's load/store
+//! round-trips (the bottleneck of the scalar form, which re-streams the
+//! output row once per accumulation step). The per-slice kernels
+//! additionally monomorphize the panel width for `R ≤` [`R_UNROLL_MAX`]
+//! (the `#[inline(always)]` body is instantiated with a `const` width, so
+//! LLVM fully unrolls and vectorizes the inner loop at the exact rank) —
+//! the R-unrolled fast path for the paper's R ∈ {5..40} sweet spot.
+//!
+//! The schedule is **fixed and data-only**: which variant runs depends
+//! only on operand shapes, never on values, worker counts, or timing, so
+//! kernel selection can never perturb the repo's bitwise-determinism
+//! contracts.
+//!
+//! ## Determinism contract
+//!
+//! Two families, asserted by `rust/tests/kernel_conformance.rs`:
+//!
+//! * **Order-preserving (bitwise).** [`spmm_yt_v`], [`sparse_row_axpy`],
+//!   [`zt_row`], [`atb_into`], [`gram_into`] produce results **bitwise
+//!   identical** to their scalar references in [`reference`] for *every*
+//!   input (zeros, denormals, NaN propagation included): the 4-wide block
+//!   applies its terms left-to-right in the same accumulation-axis order
+//!   as the scalar loop, and exact-zero skips are preserved term-by-term,
+//!   so each output element sees the identical floating-point sequence.
+//!   Swapping the blocked and reference kernels can never move a
+//!   trajectory by even one ulp.
+//! * **Reordered (ULP-bounded).** [`dot`] keeps its 4 independent
+//!   accumulators (the dependency-chain break that lets FMAs overlap) and
+//!   is therefore *not* bitwise against the sequential
+//!   [`reference::dot_seq`]; conformance pins it to a tight ULP
+//!   envelope (and to exact equality on same-sign denormal inputs, where
+//!   every partial addition is exact).
+//!
+//! ## Adding a kernel shape
+//!
+//! 1. Write the scalar loop in [`reference`] first — its floating-point
+//!    order *is* the contract.
+//! 2. Add the blocked form with the same per-element term order (or
+//!    document it in the reordered family) and a single `pub fn` dispatch
+//!    that picks variants by shape only.
+//! 3. Extend `kernel_conformance.rs` with the new shape's differential
+//!    sweep (R sweep, ragged/empty operands, zero and denormal values),
+//!    `prop_invariants.rs` if the kernel feeds a pooled reduction, and a
+//!    blocked-vs-scalar A/B cell in `benches/micro_linalg.rs`.
+//!
+//! Callers (`parafac2::intermediate`, `parafac2::mttkrp`,
+//! `sparse::csr`, `linalg::blas`) go through the dispatch functions and
+//! never select variants themselves.
+
+use super::dense::Mat;
+
+/// Register block over the accumulation axis: 4 coefficient/row pairs in
+/// flight per destination-row pass.
+pub const ACC_BLOCK: usize = 4;
+
+/// Panel widths `1..=R_UNROLL_MAX` get a monomorphized (fully unrolled)
+/// inner loop in the per-slice kernels; wider panels take the same blocked
+/// body with a runtime width.
+pub const R_UNROLL_MAX: usize = 16;
+
+/// Scalar reference kernels. Their loop order defines the floating-point
+/// sequence the order-preserving blocked kernels must reproduce bit for
+/// bit; they also serve as the slow-but-obvious implementations the
+/// conformance harness and the `micro_linalg` A/B cells diff against.
+pub mod reference {
+    use super::Mat;
+
+    /// Shape A reference: `out += Σ_c yt(c,:)ᵀ ⊗ v(support[c],:)` — the
+    /// pre-blocking `yk_times_v` loop (exact-zero coefficients skipped).
+    pub fn spmm_yt_v(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+        for (c, &j) in support.iter().enumerate() {
+            let yrow = yt.row(c);
+            let vrow = v.row(j as usize);
+            for (i, &yv) in yrow.iter().enumerate() {
+                if yv == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += yv * vv;
+                }
+            }
+        }
+    }
+
+    /// Shape A reference: `dst += Σ_p vals[p] · dense(cols[p],:)` — one
+    /// CSR row times a dense panel (no zero skip: stored zeros are rare
+    /// and the historical loop applied them).
+    pub fn sparse_row_axpy(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+        for (&x, &c) in vals.iter().zip(cols) {
+            let drow = dense.row(c as usize);
+            for (o, &d) in dst.iter_mut().zip(drow) {
+                *o += x * d;
+            }
+        }
+    }
+
+    /// Shape B reference: `out = yrowᵀ · H` (overwrites `out`; exact-zero
+    /// coefficients skipped) — the pre-blocking `yt_row_times_h`.
+    pub fn zt_row(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+        out.fill(0.0);
+        for (i, &yv) in yrow.iter().enumerate() {
+            if yv == 0.0 {
+                continue;
+            }
+            let hrow = h.row(i);
+            for (o, &hv) in out.iter_mut().zip(hrow) {
+                *o += yv * hv;
+            }
+        }
+    }
+
+    /// Shape B reference: `c += AᵀB` by outer products over rows of `A`
+    /// (exact-zero coefficients skipped) — the pre-blocking
+    /// `matmul_at_b`.
+    pub fn atb(a: &Mat, b: &Mat, c: &mut Mat) {
+        let ka = a.rows();
+        for k in 0..ka {
+            let arow = a.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aki * bv;
+                }
+            }
+        }
+    }
+
+    /// Shape B reference: `g += AᵀA` upper triangle, then mirror (exact
+    /// zeros skipped) — the pre-blocking `gram`.
+    pub fn gram(a: &Mat, g: &mut Mat) {
+        let (k, n) = a.shape();
+        for r in 0..k {
+            let row = a.row(r);
+            for i in 0..n {
+                let ai = row[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for j in i..n {
+                    grow[j] += ai * row[j];
+                }
+            }
+        }
+        super::mirror_upper(g);
+    }
+
+    /// Strictly sequential dot product — the order baseline for the
+    /// reordered [`super::dot`].
+    pub fn dot_seq(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut s = 0.0;
+        for (&a, &b) in x.iter().zip(y) {
+            s += a * b;
+        }
+        s
+    }
+}
+
+/// Copy the upper triangle of a square matrix onto the lower one.
+fn mirror_upper(g: &mut Mat) {
+    let n = g.rows();
+    for i in 0..n {
+        for j in 0..i {
+            g[(i, j)] = g[(j, i)];
+        }
+    }
+}
+
+/// Shape-only width dispatch: monomorphize the inner loop for
+/// `1..=R_UNROLL_MAX`, fall through to the runtime-width body otherwise.
+/// (Selection depends on shapes alone; every arm computes bitwise the
+/// same result, so dispatch can never perturb determinism.)
+macro_rules! dispatch_width {
+    ($w:expr, $mono:ident, $body:ident, ($($a:expr),+)) => {
+        match $w {
+            1 => $mono::<1>($($a),+),
+            2 => $mono::<2>($($a),+),
+            3 => $mono::<3>($($a),+),
+            4 => $mono::<4>($($a),+),
+            5 => $mono::<5>($($a),+),
+            6 => $mono::<6>($($a),+),
+            7 => $mono::<7>($($a),+),
+            8 => $mono::<8>($($a),+),
+            9 => $mono::<9>($($a),+),
+            10 => $mono::<10>($($a),+),
+            11 => $mono::<11>($($a),+),
+            12 => $mono::<12>($($a),+),
+            13 => $mono::<13>($($a),+),
+            14 => $mono::<14>($($a),+),
+            15 => $mono::<15>($($a),+),
+            16 => $mono::<16>($($a),+),
+            w => $body($($a),+, w),
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Shape A: sparse-support rows × dense panel
+// ---------------------------------------------------------------------------
+
+/// `out += Y_k · V_c` where `Y_k` is held as its packed transpose `yt`
+/// (`c_k × R`) and `V_c` is the support-row gather of `v`. Bitwise
+/// identical to [`reference::spmm_yt_v`] for every input.
+pub fn spmm_yt_v(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+    debug_assert_eq!(yt.rows(), support.len(), "support/yt row mismatch");
+    debug_assert_eq!(out.shape(), (yt.cols(), v.cols()), "spmm output shape");
+    dispatch_width!(v.cols(), spmm_mono, spmm_body, (yt, support, v, out));
+}
+
+#[inline(always)]
+fn spmm_mono<const W: usize>(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+    spmm_body(yt, support, v, out, W);
+}
+
+#[inline(always)]
+fn spmm_body(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat, w: usize) {
+    let r = yt.cols();
+    let n = support.len();
+    let mut c = 0usize;
+    while c + ACC_BLOCK <= n {
+        let v0 = &v.row(support[c] as usize)[..w];
+        let v1 = &v.row(support[c + 1] as usize)[..w];
+        let v2 = &v.row(support[c + 2] as usize)[..w];
+        let v3 = &v.row(support[c + 3] as usize)[..w];
+        for i in 0..r {
+            let y0 = yt[(c, i)];
+            let y1 = yt[(c + 1, i)];
+            let y2 = yt[(c + 2, i)];
+            let y3 = yt[(c + 3, i)];
+            let orow = &mut out.row_mut(i)[..w];
+            if y0 != 0.0 && y1 != 0.0 && y2 != 0.0 && y3 != 0.0 {
+                // Left-to-right: the identical per-element term order the
+                // scalar reference produces with four sequential `+=`.
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = *o + y0 * v0[j] + y1 * v1[j] + y2 * v2[j] + y3 * v3[j];
+                }
+            } else {
+                // Preserve the reference's exact-zero skip term-by-term.
+                for (y, vr) in [(y0, v0), (y1, v1), (y2, v2), (y3, v3)] {
+                    if y == 0.0 {
+                        continue;
+                    }
+                    for (o, &vv) in orow.iter_mut().zip(vr) {
+                        *o += y * vv;
+                    }
+                }
+            }
+        }
+        c += ACC_BLOCK;
+    }
+    // Ragged tail in reference order.
+    for cc in c..n {
+        let vrow = &v.row(support[cc] as usize)[..w];
+        let yrow = yt.row(cc);
+        for (i, &yv) in yrow.iter().enumerate() {
+            if yv == 0.0 {
+                continue;
+            }
+            let orow = &mut out.row_mut(i)[..w];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += yv * vv;
+            }
+        }
+    }
+}
+
+/// `dst += Σ_p vals[p] · dense(cols[p],:)` — one CSR row against a dense
+/// panel. Bitwise identical to [`reference::sparse_row_axpy`].
+pub fn sparse_row_axpy(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+    debug_assert_eq!(vals.len(), cols.len(), "vals/cols length mismatch");
+    debug_assert_eq!(dst.len(), dense.cols(), "dst width mismatch");
+    dispatch_width!(dense.cols(), sparse_row_mono, sparse_row_body, (vals, cols, dense, dst));
+}
+
+#[inline(always)]
+fn sparse_row_mono<const W: usize>(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+    sparse_row_body(vals, cols, dense, dst, W);
+}
+
+#[inline(always)]
+fn sparse_row_body(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64], w: usize) {
+    let dst = &mut dst[..w];
+    let n = vals.len();
+    let mut p = 0usize;
+    while p + ACC_BLOCK <= n {
+        let (x0, x1, x2, x3) = (vals[p], vals[p + 1], vals[p + 2], vals[p + 3]);
+        let d0 = &dense.row(cols[p] as usize)[..w];
+        let d1 = &dense.row(cols[p + 1] as usize)[..w];
+        let d2 = &dense.row(cols[p + 2] as usize)[..w];
+        let d3 = &dense.row(cols[p + 3] as usize)[..w];
+        // No zero skip here — the reference applies every stored entry —
+        // so the fast path is unconditional.
+        for (j, o) in dst.iter_mut().enumerate() {
+            *o = *o + x0 * d0[j] + x1 * d1[j] + x2 * d2[j] + x3 * d3[j];
+        }
+        p += ACC_BLOCK;
+    }
+    for pp in p..n {
+        let x = vals[pp];
+        let drow = &dense.row(cols[pp] as usize)[..w];
+        for (o, &d) in dst.iter_mut().zip(drow) {
+            *o += x * d;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape B: dense-transpose × dense panel
+// ---------------------------------------------------------------------------
+
+/// `out = yrowᵀ · H` (overwrites `out`): one packed row of `Y_kᵀ` against
+/// the `R×R` factor — the `Z_k = Y_kᵀ H` row kernel of the mode-2/mode-3
+/// sweeps. Bitwise identical to [`reference::zt_row`].
+pub fn zt_row(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+    debug_assert_eq!(yrow.len(), h.rows(), "yrow/H row mismatch");
+    debug_assert_eq!(out.len(), h.cols(), "out width mismatch");
+    dispatch_width!(h.cols(), zt_row_mono, zt_row_body, (yrow, h, out));
+}
+
+#[inline(always)]
+fn zt_row_mono<const W: usize>(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+    zt_row_body(yrow, h, out, W);
+}
+
+#[inline(always)]
+fn zt_row_body(yrow: &[f64], h: &Mat, out: &mut [f64], w: usize) {
+    let out = &mut out[..w];
+    out.fill(0.0);
+    let n = yrow.len();
+    let mut i = 0usize;
+    while i + ACC_BLOCK <= n {
+        let (y0, y1, y2, y3) = (yrow[i], yrow[i + 1], yrow[i + 2], yrow[i + 3]);
+        let h0 = &h.row(i)[..w];
+        let h1 = &h.row(i + 1)[..w];
+        let h2 = &h.row(i + 2)[..w];
+        let h3 = &h.row(i + 3)[..w];
+        if y0 != 0.0 && y1 != 0.0 && y2 != 0.0 && y3 != 0.0 {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = *o + y0 * h0[j] + y1 * h1[j] + y2 * h2[j] + y3 * h3[j];
+            }
+        } else {
+            for (y, hr) in [(y0, h0), (y1, h1), (y2, h2), (y3, h3)] {
+                if y == 0.0 {
+                    continue;
+                }
+                for (o, &hv) in out.iter_mut().zip(hr) {
+                    *o += y * hv;
+                }
+            }
+        }
+        i += ACC_BLOCK;
+    }
+    for ii in i..n {
+        let yv = yrow[ii];
+        if yv == 0.0 {
+            continue;
+        }
+        let hrow = &h.row(ii)[..w];
+        for (o, &hv) in out.iter_mut().zip(hrow) {
+            *o += yv * hv;
+        }
+    }
+}
+
+/// `c += AᵀB` without materializing `Aᵀ` (outer products over rows of
+/// `A`, 4 rows in flight). Bitwise identical to [`reference::atb`].
+pub fn atb_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (ka, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "atb inner-dim mismatch");
+    assert_eq!(c.shape(), (m, n), "atb output shape mismatch");
+    let mut k = 0usize;
+    while k + ACC_BLOCK <= ka {
+        let a0 = a.row(k);
+        let a1 = a.row(k + 1);
+        let a2 = a.row(k + 2);
+        let a3 = a.row(k + 3);
+        let b0 = b.row(k);
+        let b1 = b.row(k + 1);
+        let b2 = b.row(k + 2);
+        let b3 = b.row(k + 3);
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let crow = c.row_mut(i);
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv = *cv + x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+                }
+            } else {
+                for (x, br) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for (cv, &bv) in crow.iter_mut().zip(br) {
+                        *cv += x * bv;
+                    }
+                }
+            }
+        }
+        k += ACC_BLOCK;
+    }
+    for kk in k..ka {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for (i, &aki) in arow.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aki * bv;
+            }
+        }
+    }
+}
+
+/// `g += AᵀA`: upper triangle with 4 rows of `A` in flight, then mirror.
+/// Bitwise identical to [`reference::gram`].
+pub fn gram_into(a: &Mat, g: &mut Mat) {
+    let (k, n) = a.shape();
+    assert_eq!(g.shape(), (n, n), "gram output shape mismatch");
+    let mut r = 0usize;
+    while r + ACC_BLOCK <= k {
+        let r0 = a.row(r);
+        let r1 = a.row(r + 1);
+        let r2 = a.row(r + 2);
+        let r3 = a.row(r + 3);
+        for i in 0..n {
+            let (x0, x1, x2, x3) = (r0[i], r1[i], r2[i], r3[i]);
+            let grow = &mut g.row_mut(i)[i..];
+            let (t0, t1, t2, t3) = (&r0[i..], &r1[i..], &r2[i..], &r3[i..]);
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                for (j, gv) in grow.iter_mut().enumerate() {
+                    *gv = *gv + x0 * t0[j] + x1 * t1[j] + x2 * t2[j] + x3 * t3[j];
+                }
+            } else {
+                for (x, tr) in [(x0, t0), (x1, t1), (x2, t2), (x3, t3)] {
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for (gv, &tv) in grow.iter_mut().zip(tr) {
+                        *gv += x * tv;
+                    }
+                }
+            }
+        }
+        r += ACC_BLOCK;
+    }
+    for rr in r..k {
+        let row = a.row(rr);
+        for i in 0..n {
+            let ai = row[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(i);
+            for j in i..n {
+                grow[j] += ai * row[j];
+            }
+        }
+    }
+    mirror_upper(g);
+}
+
+// ---------------------------------------------------------------------------
+// Reordered family
+// ---------------------------------------------------------------------------
+
+/// Dot product with 4 independent accumulators (breaks the dependency
+/// chain so several FMAs stay in flight). **Reordered** relative to
+/// [`reference::dot_seq`]: ULP-bounded, not bitwise — see the module
+/// docs' determinism contract.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn bits_eq(a: &Mat, b: &Mat) -> bool {
+        a.shape() == b.shape()
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn random_support(rng: &mut Pcg64, c: usize, j: usize) -> Vec<u32> {
+        assert!(c <= j);
+        let mut ids: Vec<u32> = (0..j as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(c);
+        ids.sort_unstable();
+        ids
+    }
+
+    /// yt with exact zeros sprinkled in (exercises both skip paths).
+    fn random_yt(rng: &mut Pcg64, c: usize, r: usize) -> Mat {
+        Mat::from_fn(c, r, |_, _| if rng.chance(0.2) { 0.0 } else { rng.normal() })
+    }
+
+    /// One fast unit-level guard per kernel. The *exhaustive* differential
+    /// sweeps (R ∈ {1..=16, 17, 32}, ragged/empty operands, zero /
+    /// denormal / NaN regimes) live in `rust/tests/kernel_conformance.rs`
+    /// — this smoke test only keeps `cargo test --lib` self-contained.
+    #[test]
+    fn blocked_kernels_smoke_bitwise() {
+        let mut rng = Pcg64::seed(601);
+        let (r, c) = (7usize, 9usize); // block + ragged tail, unrolled width
+        let j = c + 5;
+        let support = random_support(&mut rng, c, j);
+        let yt = random_yt(&mut rng, c, r);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let mut blocked = Mat::zeros(r, r);
+        let mut refr = Mat::zeros(r, r);
+        spmm_yt_v(&yt, &support, &v, &mut blocked);
+        reference::spmm_yt_v(&yt, &support, &v, &mut refr);
+        assert!(bits_eq(&blocked, &refr), "spmm");
+
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let yrow: Vec<f64> =
+            (0..r).map(|_| if rng.chance(0.3) { 0.0 } else { rng.normal() }).collect();
+        let mut z_blocked = vec![1.0f64; r]; // nonzero: zt_row must overwrite
+        let mut z_ref = vec![2.0f64; r];
+        zt_row(&yrow, &h, &mut z_blocked);
+        reference::zt_row(&yrow, &h, &mut z_ref);
+        for (x, y) in z_blocked.iter().zip(&z_ref) {
+            assert_eq!(x.to_bits(), y.to_bits(), "zt_row");
+        }
+
+        let a = random_yt(&mut rng, c, r);
+        let b = random_yt(&mut rng, c, r);
+        let mut c_blocked = Mat::zeros(r, r);
+        let mut c_ref = Mat::zeros(r, r);
+        atb_into(&a, &b, &mut c_blocked);
+        reference::atb(&a, &b, &mut c_ref);
+        assert!(bits_eq(&c_blocked, &c_ref), "atb");
+        let mut g_blocked = Mat::zeros(r, r);
+        let mut g_ref = Mat::zeros(r, r);
+        gram_into(&a, &mut g_blocked);
+        reference::gram(&a, &mut g_ref);
+        assert!(bits_eq(&g_blocked, &g_ref), "gram");
+
+        let cols: Vec<u32> = (0..c).map(|_| rng.range(0, j) as u32).collect();
+        let vals: Vec<f64> = (0..c).map(|_| rng.normal()).collect();
+        let dense = Mat::rand_normal(j, r, &mut rng);
+        let mut s_blocked = vec![0.5f64; r];
+        let mut s_ref = vec![0.5f64; r];
+        sparse_row_axpy(&vals, &cols, &dense, &mut s_blocked);
+        reference::sparse_row_axpy(&vals, &cols, &dense, &mut s_ref);
+        for (x, y) in s_blocked.iter().zip(&s_ref) {
+            assert_eq!(x.to_bits(), y.to_bits(), "sparse_row_axpy");
+        }
+    }
+
+    #[test]
+    fn dot_matches_seq_on_exact_inputs() {
+        // integer-valued inputs: both orders are exact
+        for n in 0..20 {
+            let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let y: Vec<f64> = (0..n).map(|i| (2 * i) as f64).collect();
+            assert_eq!(dot(&x, &y), reference::dot_seq(&x, &y));
+        }
+    }
+}

@@ -3,9 +3,15 @@
 //! here): row-major matrices, GEMM kernels, Householder QR, Jacobi
 //! SVD/eigendecomposition, the Procrustes polar factor, SPD solvers, and
 //! Bro & de Jong's fast NNLS.
+//!
+//! The ALS hot loops run on the register-blocked micro-kernels in
+//! [`kernels`] — one dispatch point with a scalar reference implementation
+//! per shape and a documented bitwise/ULP determinism contract (pinned by
+//! `rust/tests/kernel_conformance.rs`).
 
 pub mod blas;
 pub mod dense;
+pub mod kernels;
 pub mod nnls;
 pub mod norms;
 pub mod qr;

@@ -6,6 +6,7 @@
 //! * `phenotype`       fit + emit Table-4/Fig-8 style phenotyping reports
 //! * `inspect`         print dataset summary statistics
 //! * `artifacts-check` validate + smoke-execute the AOT artifacts
+//! * `bench-diff`      gate bench_results medians against a previous run
 //!
 //! Run `spartan help` for options.
 
@@ -47,6 +48,7 @@ fn run(args: &Args) -> Result<()> {
         Some("phenotype") => cmd_phenotype(args),
         Some("inspect") => cmd_inspect(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
+        Some("bench-diff") => cmd_bench_diff(args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -79,6 +81,11 @@ USAGE: spartan <subcommand> [options]
   inspect --input FILE
 
   artifacts-check [--artifacts DIR]
+
+  bench-diff --old DIR --new DIR [--max-regress 0.10] [--min-iters 5]
+           (diff per-cell bench_results/*.json iter_secs medians; exit 1
+            when any cell with enough samples regresses past the gate —
+            CI's bench-trend job)
 
 Environment: SPARTAN_LOG=debug|info|warn|error
 "#;
@@ -429,6 +436,34 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use spartan::bench::trend;
+    args.reject_unknown(&["old", "new", "max-regress", "min-iters"]).map_err(|e| anyhow!(e))?;
+    let old_dir = PathBuf::from(args.get("old").context("--old DIR required")?);
+    let new_dir = PathBuf::from(args.get("new").context("--new DIR required")?);
+    let max_regress = args.get_f64("max-regress").map_err(|e| anyhow!(e))?.unwrap_or(0.10);
+    let min_iters = args.get_usize("min-iters").map_err(|e| anyhow!(e))?.unwrap_or(5);
+    let old = trend::load_cells(&old_dir).map_err(|e| anyhow!(e))?;
+    let new = trend::load_cells(&new_dir).map_err(|e| anyhow!(e))?;
+    if old.is_empty() {
+        println!(
+            "bench-diff: no baseline cells under {} — nothing to gate (first run bootstraps the trend)",
+            old_dir.display()
+        );
+    }
+    let report = trend::diff(&old, &new, max_regress, min_iters);
+    print!("{}", trend::render(&report, max_regress, min_iters));
+    if !report.regressions.is_empty() {
+        bail!(
+            "{} bench cell(s) regressed more than {:.0}% (median iter_secs, ≥{} iters)",
+            report.regressions.len(),
+            max_regress * 100.0,
+            min_iters
+        );
+    }
+    Ok(())
+}
 
 fn load_data(path: &Path) -> Result<IrregularTensor> {
     if path.extension().map_or(false, |e| e == "txt") {

@@ -11,7 +11,7 @@
 //! the support (transposed so that the hot loops — row AXPYs during
 //! packing, row streams during MTTKRP — touch contiguous memory).
 
-use crate::linalg::{blas, Mat};
+use crate::linalg::{blas, kernels, Mat};
 use crate::sparse::Csr;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -211,23 +211,12 @@ impl PackedSlice {
     /// back out of memory.
     pub fn yk_times_v_fused(&self, v: &Mat) -> Mat {
         self.yv_count.fetch_add(1, Ordering::Relaxed);
-        // Ytᵀ · V_c, streamed without materializing V_c: accumulate
-        // rank-1 contributions row by row.
-        let r = self.rank();
-        let mut out = Mat::zeros(r, v.cols());
-        for (c, &j) in self.support.iter().enumerate() {
-            let yrow = self.yt.row(c);
-            let vrow = v.row(j as usize);
-            for (i, &yv) in yrow.iter().enumerate() {
-                if yv == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(i);
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += yv * vv;
-                }
-            }
-        }
+        // Ytᵀ · V_c, streamed without materializing V_c — the shape-A
+        // register-blocked micro-kernel (4 support rows in flight,
+        // R-unrolled panel; bitwise identical to the scalar reference,
+        // see `linalg::kernels` for the dispatch + contract).
+        let mut out = Mat::zeros(self.rank(), v.cols());
+        kernels::spmm_yt_v(&self.yt, &self.support, v, &mut out);
         out
     }
 
@@ -370,14 +359,37 @@ mod tests {
 
     #[test]
     fn yk_times_v_matches_dense() {
+        // Sweeps ranks on both sides of the kernel layer's monomorphized
+        // widths (R ≤ 16 unrolled, 17 takes the runtime-width path) so the
+        // dispatch is exercised where the ALS actually runs it.
         let mut rng = Pcg64::seed(103);
-        let xk = random_sparse(&mut rng, 9, 14, 0.2);
-        let qk = random_orthonormal(9, 5, &mut rng);
-        let p = PackedSlice::pack(&xk, &qk);
-        let v = Mat::rand_normal(14, 5, &mut rng);
-        let got = p.yk_times_v(&v);
-        let want = blas::matmul(&dense_yk(&xk, &qk), &v);
-        assert!(got.max_abs_diff(&want) < 1e-10);
+        for &r in &[1usize, 3, 8, 17] {
+            let xk = random_sparse(&mut rng, r.max(2) + 4, 14 + r, 0.2);
+            let qk = random_orthonormal(r.max(2) + 4, r, &mut rng);
+            let p = PackedSlice::pack(&xk, &qk);
+            let v = Mat::rand_normal(14 + r, r, &mut rng);
+            let got = p.yk_times_v(&v);
+            let want = blas::matmul(&dense_yk(&xk, &qk), &v);
+            assert!(got.max_abs_diff(&want) < 1e-10, "R={r}");
+        }
+    }
+
+    #[test]
+    fn yk_times_v_empty_support_subject() {
+        // The K=0/empty-support convention from PR 1, pinned at the kernel
+        // boundary: a subject whose slice has no nonzero columns must
+        // yield an all-zero R×R product (shape from the factor argument)
+        // while still tallying the Y·V product and the cold traversal.
+        let mut rng = Pcg64::seed(109);
+        for &r in &[1usize, 3, 8, 17] {
+            let p = PackedSlice::from_parts(Vec::new(), Vec::new(), Mat::zeros(0, r));
+            let v = Mat::rand_normal(11, r, &mut rng);
+            let got = p.yk_times_v(&v);
+            assert_eq!(got.shape(), (r, r), "R={r}");
+            assert!(got.data().iter().all(|&x| x == 0.0), "R={r}");
+            let y = PackedY { slices: vec![p], j_dim: 11 };
+            assert_eq!((y.yv_products(), y.traversals()), (1, 1), "R={r}");
+        }
     }
 
     #[test]

@@ -62,7 +62,7 @@
 //! inner loops, so they are bitwise identical to each other.
 
 use super::intermediate::PackedY;
-use crate::linalg::{blas, Mat};
+use crate::linalg::{blas, kernels, Mat};
 use crate::threadpool::{ChunkPlan, Pool};
 use std::ops::Range;
 
@@ -101,22 +101,15 @@ impl FusedScratch {
     }
 }
 
-/// `out = yrow · H` where `yrow = Y_k(:, j)ᵀ` (length R). Skips exact
-/// zeros, matching the packed-row sparsity the pre-fusion kernel
-/// exploited; the inner loop order fixes the floating-point sequence
-/// shared by the standalone and fused paths.
+/// `out = yrow · H` where `yrow = Y_k(:, j)ᵀ` (length R) — the shape-B
+/// register-blocked micro-kernel ([`kernels::zt_row`]: 4 coefficient/row
+/// pairs in flight, R-unrolled panel). Bitwise identical to the scalar
+/// reference, so the floating-point sequence shared by the standalone and
+/// fused paths is unchanged; exact zeros are skipped exactly as the
+/// pre-blocking kernel did.
 #[inline]
 fn yt_row_times_h(yrow: &[f64], h: &Mat, out: &mut [f64]) {
-    out.fill(0.0);
-    for (i, &yv) in yrow.iter().enumerate() {
-        if yv == 0.0 {
-            continue;
-        }
-        let hrow = h.row(i);
-        for (o, &hv) in out.iter_mut().zip(hrow) {
-            *o += yv * hv;
-        }
-    }
+    kernels::zt_row(yrow, h, out);
 }
 
 /// `out = Σ_{c} z(c,:) ∗ v(support[c],:)` — the mode-3 row epilogue.

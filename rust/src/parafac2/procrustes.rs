@@ -15,6 +15,14 @@
 //! (like the paper) runs it chunked on the worker pool over the caller's
 //! frozen [`ChunkPlan`] (nnz-balanced in the ALS driver, so a heavy-tailed
 //! cohort cannot strand the whole sweep behind one overloaded chunk).
+//!
+//! Both per-subject hot products run on the register-blocked micro-kernels
+//! behind the `linalg::kernels` dispatch point: the `C_k = X_k V` stage of
+//! [`procrustes_target`] via `Csr::matmul_dense`, and the pack-fused
+//! mode-1 read via `PackedSlice::yk_times_v_fused`. Both are in the
+//! kernel layer's order-preserving family (bitwise identical to the scalar
+//! references), so this module's fused-vs-separate bitwise guarantees are
+//! untouched by kernel selection.
 
 use super::intermediate::{PackedSlice, PackedY};
 use crate::linalg::{blas, Mat};

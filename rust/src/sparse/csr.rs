@@ -216,18 +216,17 @@ impl Csr {
         )
     }
 
-    /// `self · dense` → dense (rows × dense.cols()); streams CSR rows.
+    /// `self · dense` → dense (rows × dense.cols()); streams CSR rows on
+    /// the shape-A register-blocked micro-kernel
+    /// ([`crate::linalg::kernels::sparse_row_axpy`]: 4 nonzeros in flight,
+    /// R-unrolled panel; bitwise identical to the scalar row loop). This
+    /// is the `C_k = X_k V` stage of every Procrustes target.
     pub fn matmul_dense(&self, dense: &Mat) -> Mat {
         assert_eq!(self.cols, dense.rows(), "spmm dim mismatch");
         let mut out = Mat::zeros(self.rows, dense.cols());
         for r in 0..self.rows {
-            let orow = out.row_mut(r);
-            for (c, v) in self.row_iter(r) {
-                let drow = dense.row(c as usize);
-                for (o, &d) in orow.iter_mut().zip(drow) {
-                    *o += v * d;
-                }
-            }
+            let (cols, vals) = self.row_parts(r);
+            crate::linalg::kernels::sparse_row_axpy(vals, cols, dense, out.row_mut(r));
         }
         out
     }

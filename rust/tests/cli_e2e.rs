@@ -20,9 +20,54 @@ fn help_lists_subcommands() {
     let out = spartan().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["generate", "decompose", "phenotype", "inspect", "artifacts-check"] {
+    for cmd in ["generate", "decompose", "phenotype", "inspect", "artifacts-check", "bench-diff"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+}
+
+#[test]
+fn bench_diff_gates_regressions() {
+    let dir = tmpdir("bench_diff");
+    let old = dir.join("old");
+    let new = dir.join("new");
+    std::fs::create_dir_all(&old).unwrap();
+    std::fs::create_dir_all(&new).unwrap();
+    let doc = |med: f64| {
+        format!(
+            r#"{{"bench": "b", "measurements": [{{"name": "cell", "iters": 5,
+                 "mean_secs": {med}, "iter_secs": [{med}, {med}, {med}, {med}, {med}]}}]}}"#
+        )
+    };
+    std::fs::write(old.join("b.json"), doc(1.0)).unwrap();
+
+    // flat run passes
+    std::fs::write(new.join("b.json"), doc(1.02)).unwrap();
+    let out = spartan()
+        .args(["bench-diff", "--old", old.to_str().unwrap(), "--new", new.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("0 regression(s)"));
+
+    // a >10% median regression fails the gate
+    std::fs::write(new.join("b.json"), doc(1.5)).unwrap();
+    let out = spartan()
+        .args(["bench-diff", "--old", old.to_str().unwrap(), "--new", new.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("REGRESSION b/cell"));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("regressed"));
+
+    // an empty baseline bootstraps cleanly (first trend run)
+    let empty = dir.join("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let out = spartan()
+        .args(["bench-diff", "--old", empty.to_str().unwrap(), "--new", new.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("no baseline"));
 }
 
 #[test]

@@ -1,0 +1,349 @@
+//! Differential kernel-test harness for `linalg::kernels` — the proof
+//! half of the register-blocked micro-kernel layer.
+//!
+//! Every blocked kernel ships next to a scalar reference whose
+//! floating-point order *is* the contract (see the `kernels` module docs):
+//!
+//! * **Order-preserving family** (`spmm_yt_v`, `sparse_row_axpy`,
+//!   `zt_row`, `atb_into`, `gram_into`): the blocked form must be
+//!   **bitwise identical** to the reference for every input. The sweeps
+//!   below cover R ∈ {1..=16} (monomorphized/unrolled dispatch arms) plus
+//!   17 and 32 (runtime-width arm), ragged and empty supports/operands,
+//!   exact-zero coefficient patterns (both skip paths), denormal-adjacent
+//!   magnitudes, and NaN propagation.
+//! * **Reordered family** (`dot`): 4 independent accumulators reorder the
+//!   reduction, so the contract is a tight ULP envelope against the
+//!   sequential reference — and exact equality where every partial
+//!   operation is exact (same-sign denormal-grid inputs).
+//!
+//! The fusion invariants from PR 1–2 are re-asserted end-to-end at the
+//! bottom: a full ALS fit on the kernel layer still performs exactly one
+//! `Y_k·V` product and one cold packed-slice traversal per subject per
+//! iteration (plus the final report pass), so a kernel swap can't silently
+//! regress the traversal structure.
+
+use spartan::linalg::kernels::{self, reference};
+use spartan::linalg::Mat;
+use spartan::util::rng::Pcg64;
+
+/// Rank sweep: every monomorphized dispatch arm (1..=16) plus two
+/// runtime-width ranks (17, 32).
+const R_SWEEP: &[usize] = &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 32];
+
+/// Accumulation-axis lengths: empty, sub-block ragged (< 4), exact
+/// blocks, block+tail, and multi-block.
+const ACC_SWEEP: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 17, 33];
+
+/// Value regimes the differential sweep runs under.
+#[derive(Clone, Copy, Debug)]
+enum Regime {
+    /// Standard normals.
+    Normal,
+    /// Normals with exact zeros sprinkled in (exercises both the
+    /// all-nonzero fast path and the zero-skip fallback of each block).
+    SparseZeros,
+    /// Magnitudes scaled to ~1e-308 so products land at or below the
+    /// normal/denormal boundary.
+    DenormalAdjacent,
+    /// One NaN planted among normals (propagation must be identical).
+    NanLaced,
+}
+
+const REGIMES: &[Regime] =
+    &[Regime::Normal, Regime::SparseZeros, Regime::DenormalAdjacent, Regime::NanLaced];
+
+fn fill(rng: &mut Pcg64, rows: usize, cols: usize, regime: Regime) -> Mat {
+    let mut m = Mat::from_fn(rows, cols, |_, _| match regime {
+        Regime::Normal | Regime::NanLaced => rng.normal(),
+        Regime::SparseZeros => {
+            if rng.chance(0.35) {
+                0.0
+            } else {
+                rng.normal()
+            }
+        }
+        Regime::DenormalAdjacent => rng.normal() * 1e-308,
+    });
+    if matches!(regime, Regime::NanLaced) && rows * cols > 0 {
+        let i = rng.range(0, rows);
+        let j = rng.range(0, cols);
+        m[(i, j)] = f64::NAN;
+    }
+    m
+}
+
+fn random_support(rng: &mut Pcg64, c: usize, j: usize) -> Vec<u32> {
+    assert!(c <= j);
+    let mut ids: Vec<u32> = (0..j as u32).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(c);
+    ids.sort_unstable();
+    ids
+}
+
+fn assert_bits_eq(got: &Mat, want: &Mat, ctx: &str) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape");
+    for (p, (x, y)) in got.data().iter().zip(want.data()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: element {p} differs ({x:e} vs {y:e})"
+        );
+    }
+}
+
+fn assert_slice_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (p, (x, y)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: element {p} differs ({x:e} vs {y:e})"
+        );
+    }
+}
+
+/// Map a float onto the monotone integer line (standard ULP-distance
+/// construction; adjacent representable values differ by 1).
+fn ordered_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1u64 << 63)
+    }
+}
+
+fn ulp_diff(a: f64, b: f64) -> u64 {
+    let (x, y) = (ordered_bits(a), ordered_bits(b));
+    x.max(y) - x.min(y)
+}
+
+// ---------------------------------------------------------------------------
+// Order-preserving family: bitwise identity, blocked vs reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spmm_yt_v_bitwise_across_r_sweep_supports_and_regimes() {
+    let mut rng = Pcg64::seed(71);
+    for &r in R_SWEEP {
+        for &c in ACC_SWEEP {
+            let j = c + 5; // support is a strict, ragged subset of columns
+            for &regime in REGIMES {
+                let support = random_support(&mut rng, c, j);
+                let yt = fill(&mut rng, c, r, regime);
+                let v = fill(&mut rng, j, r, Regime::Normal);
+                let mut blocked = Mat::zeros(r, r);
+                let mut refr = Mat::zeros(r, r);
+                kernels::spmm_yt_v(&yt, &support, &v, &mut blocked);
+                reference::spmm_yt_v(&yt, &support, &v, &mut refr);
+                assert_bits_eq(&blocked, &refr, &format!("spmm R={r} c={c} {regime:?}"));
+            }
+        }
+        // rectangular panel: out width from v, row width from yt
+        let c = 9;
+        let j = c + 3;
+        let support = random_support(&mut rng, c, j);
+        let yt = fill(&mut rng, c, r, Regime::SparseZeros);
+        let v = fill(&mut rng, j, r + 3, Regime::Normal);
+        let mut blocked = Mat::zeros(r, r + 3);
+        let mut refr = Mat::zeros(r, r + 3);
+        kernels::spmm_yt_v(&yt, &support, &v, &mut blocked);
+        reference::spmm_yt_v(&yt, &support, &v, &mut refr);
+        assert_bits_eq(&blocked, &refr, &format!("spmm rect R={r}"));
+    }
+}
+
+#[test]
+fn zt_row_bitwise_across_r_sweep_and_regimes() {
+    let mut rng = Pcg64::seed(72);
+    for &r in R_SWEEP {
+        let h = fill(&mut rng, r, r, Regime::Normal);
+        for &regime in REGIMES {
+            for _ in 0..4 {
+                let yrow = fill(&mut rng, 1, r, regime);
+                // outputs must be overwritten, so seed them differently
+                let mut blocked = vec![3.0f64; r];
+                let mut refr = vec![-7.0f64; r];
+                kernels::zt_row(yrow.row(0), &h, &mut blocked);
+                reference::zt_row(yrow.row(0), &h, &mut refr);
+                assert_slice_bits_eq(&blocked, &refr, &format!("zt_row R={r} {regime:?}"));
+            }
+        }
+        // all-zero coefficient row: every term skipped, result exactly zero
+        let zeros = vec![0.0f64; r];
+        let mut out = vec![1.0f64; r];
+        kernels::zt_row(&zeros, &h, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0 && x.is_sign_positive()), "R={r}");
+    }
+}
+
+#[test]
+fn sparse_row_axpy_bitwise_across_widths_and_nnz() {
+    let mut rng = Pcg64::seed(73);
+    for &w in R_SWEEP {
+        for &nnz in ACC_SWEEP {
+            let j = nnz + 4;
+            for &regime in REGIMES {
+                let dense = fill(&mut rng, j, w, Regime::Normal);
+                let vals_m = fill(&mut rng, 1, nnz, regime);
+                let vals = vals_m.row(0);
+                // duplicate columns allowed: the kernel must not assume
+                // CSR-sorted uniqueness
+                let cols: Vec<u32> = (0..nnz).map(|_| rng.range(0, j) as u32).collect();
+                let mut blocked = vec![0.25f64; w];
+                let mut refr = vec![0.25f64; w];
+                kernels::sparse_row_axpy(vals, &cols, &dense, &mut blocked);
+                reference::sparse_row_axpy(vals, &cols, &dense, &mut refr);
+                assert_slice_bits_eq(
+                    &blocked,
+                    &refr,
+                    &format!("sparse_row_axpy w={w} nnz={nnz} {regime:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn atb_and_gram_bitwise_across_shapes_and_regimes() {
+    let mut rng = Pcg64::seed(74);
+    for &k in ACC_SWEEP {
+        for &n in &[1usize, 3, 8, 16, 17] {
+            for &regime in REGIMES {
+                let a = fill(&mut rng, k, n, regime);
+                let b = fill(&mut rng, k, n, Regime::Normal);
+                let mut c_blocked = Mat::zeros(n, n);
+                let mut c_ref = Mat::zeros(n, n);
+                kernels::atb_into(&a, &b, &mut c_blocked);
+                reference::atb(&a, &b, &mut c_ref);
+                assert_bits_eq(&c_blocked, &c_ref, &format!("atb k={k} n={n} {regime:?}"));
+
+                let mut g_blocked = Mat::zeros(n, n);
+                let mut g_ref = Mat::zeros(n, n);
+                kernels::gram_into(&a, &mut g_blocked);
+                reference::gram(&a, &mut g_ref);
+                assert_bits_eq(&g_blocked, &g_ref, &format!("gram k={k} n={n} {regime:?}"));
+                // exact symmetry survives the blocking (mirror step)
+                if !matches!(regime, Regime::NanLaced) {
+                    for i in 0..n {
+                        for jj in 0..n {
+                            assert_eq!(
+                                g_blocked[(i, jj)].to_bits(),
+                                g_blocked[(jj, i)].to_bits(),
+                                "gram symmetry k={k} n={n}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blas_entry_points_are_bitwise_the_reference_kernels() {
+    // The public `blas::gram` / `blas::matmul_at_b` wrappers must be the
+    // same bits as the scalar references too — the dispatch point cannot
+    // drift from the callers' view of it.
+    use spartan::linalg::blas;
+    let mut rng = Pcg64::seed(75);
+    for &(k, n) in &[(5usize, 3usize), (64, 8), (33, 17)] {
+        let a = fill(&mut rng, k, n, Regime::SparseZeros);
+        let b = fill(&mut rng, k, n, Regime::Normal);
+        let mut g_ref = Mat::zeros(n, n);
+        reference::gram(&a, &mut g_ref);
+        assert_bits_eq(&blas::gram(&a), &g_ref, "blas::gram");
+        let mut c_ref = Mat::zeros(n, n);
+        reference::atb(&a, &b, &mut c_ref);
+        assert_bits_eq(&blas::matmul_at_b(&a, &b), &c_ref, "blas::matmul_at_b");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reordered family: ULP-bounded
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_within_tight_ulp_envelope_of_sequential_reference() {
+    // All-positive inputs: no cancellation, so the 4-accumulator
+    // reordering can move the result by at most a few ULPs per term.
+    let mut rng = Pcg64::seed(76);
+    for &n in &[1usize, 2, 3, 4, 5, 7, 8, 15, 16, 17, 40, 64, 257, 1000] {
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let blocked = kernels::dot(&x, &y);
+        let seq = reference::dot_seq(&x, &y);
+        let ulps = ulp_diff(blocked, seq);
+        assert!(
+            ulps <= 4 * n as u64,
+            "n={n}: {blocked:e} vs {seq:e} differ by {ulps} ulps"
+        );
+    }
+    // Mixed signs: cancellation voids a relative bound, so pin a
+    // normwise one instead.
+    for &n in &[8usize, 33, 256] {
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let norm: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let err = (kernels::dot(&x, &y) - reference::dot_seq(&x, &y)).abs();
+        assert!(err <= 1e-13 * norm.max(1.0), "n={n}: normwise err {err:e}");
+    }
+}
+
+#[test]
+fn dot_exact_on_denormal_grid_inputs() {
+    // Same-sign values on the denormal grid whose partial sums stay below
+    // the normal threshold: every addition is exact in every order, so
+    // even the reordered kernel must agree bit for bit.
+    let x: Vec<f64> = (0..30).map(|i| f64::from_bits(i as u64 + 1)).collect();
+    let y = vec![1.0f64; 30];
+    assert_eq!(
+        kernels::dot(&x, &y).to_bits(),
+        reference::dot_seq(&x, &y).to_bits()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the PR 1–2 fusion counters survive the kernel swap
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_sweep_counters_hold_end_to_end_on_kernel_layer() {
+    use spartan::datagen::synthetic::{generate, SyntheticSpec};
+    use spartan::parafac2::als::fit_parafac2_traced;
+    use spartan::parafac2::{Backend, Parafac2Config};
+
+    let data = generate(&SyntheticSpec {
+        k: 40,
+        j: 30,
+        max_i_k: 8,
+        target_nnz: 2_500,
+        rank: 3,
+        noise: 0.0,
+        seed: 7,
+    })
+    .tensor;
+    let k = data.k() as u64;
+    for iters in [1usize, 3] {
+        let cfg = Parafac2Config {
+            rank: 3,
+            max_iters: iters,
+            tol: 0.0,
+            nonneg: true,
+            workers: 3,
+            seed: 11,
+            backend: Backend::Spartan,
+            mem_budget: None,
+            ..Default::default()
+        };
+        let mut records = 0u64;
+        let model = fit_parafac2_traced(&data, &cfg, &mut |_| records += 1).expect("fit");
+        assert_eq!(records, iters as u64);
+        // exactly one Y_k·V product per subject per iteration …
+        assert_eq!(model.stats.yv_products, iters as u64 * k, "iters={iters}");
+        // … and exactly one cold packed-slice traversal per subject per
+        // iteration (mode 2), plus the final report's mode-3 pass.
+        assert_eq!(model.stats.traversals, (iters as u64 + 1) * k, "iters={iters}");
+    }
+}

@@ -145,6 +145,108 @@ fn prop_worker_count_determinism() {
     }
 }
 
+/// Property: the register-blocked kernel dispatch never changes any
+/// MTTKRP bit — serial == parallel == blocked-dispatch == scalar-reference
+/// composition, under both `fixed` and `balanced` (uneven) ChunkPlans, on
+/// random CSR slices that include a **zero row** (a subject row with no
+/// stored entries) and an **all-dense row** (every column occupied, so the
+/// 4-wide blocks run with no ragged tail on that slice).
+#[test]
+fn prop_kernel_blocked_dispatch_bitwise_under_plans() {
+    use spartan::linalg::kernels;
+
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(7000 + seed);
+        // k crosses the SUBJECT_CHUNK boundary on many seeds so both plan
+        // kinds are genuinely multi-chunk and the chunk-ordered merge of
+        // the manual reference composition is exercised for real.
+        let k = rng.range(3, 150);
+        let j = rng.range(5, 14);
+        let r = [1usize, 3, 8, 17][(seed % 4) as usize];
+        let slices: Vec<Csr> = (0..k)
+            .map(|kk| {
+                let rows = r.max(2) + rng.range(2, 6);
+                let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+                // row 0: left empty — the zero row
+                // row 1: all-dense — every column occupied
+                for jj in 0..j {
+                    trips.push((1, jj, rng.normal()));
+                }
+                for i in 2..rows {
+                    for jj in 0..j {
+                        if rng.chance(0.25) {
+                            trips.push((i, jj, rng.normal()));
+                        }
+                    }
+                }
+                if kk == 0 {
+                    // and one empty-support-adjacent slice shape: only the
+                    // dense row, nothing else (c_k == J exactly)
+                    trips.retain(|&(i, _, _)| i == 1);
+                }
+                Csr::from_triplets(rows, j, trips)
+            })
+            .collect();
+        let y = PackedY {
+            slices: slices
+                .iter()
+                .map(|xk| {
+                    let qk = linalg::random_orthonormal(xk.rows(), r, &mut rng);
+                    PackedSlice::pack(xk, &qk)
+                })
+                .collect(),
+            j_dim: j,
+        };
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let w = Mat::rand_normal(k, r, &mut rng);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let weights: Vec<u64> =
+            y.slices.iter().map(|s| (s.c_k() * s.rank()) as u64).collect();
+        let ser = Pool::serial();
+        let par = Pool::new(4);
+        for plan in [ChunkPlan::fixed(k), ChunkPlan::balanced(&weights)] {
+            // serial == parallel through the blocked dispatch
+            let m1 = mttkrp::mttkrp_mode1(&y, &v, &w, &ser, &plan);
+            assert_eq!(
+                m1.data(),
+                mttkrp::mttkrp_mode1(&y, &v, &w, &par, &plan).data(),
+                "seed {seed} mode1 par"
+            );
+            let m2 = mttkrp::mttkrp_mode2(&y, &h, &w, &ser, &plan);
+            assert_eq!(
+                m2.data(),
+                mttkrp::mttkrp_mode2(&y, &h, &w, &par, &plan).data(),
+                "seed {seed} mode2 par"
+            );
+            let m3 = mttkrp::mttkrp_mode3(&y, &h, &v, &ser, &plan);
+            assert_eq!(
+                m3.data(),
+                mttkrp::mttkrp_mode3(&y, &h, &v, &par, &plan).data(),
+                "seed {seed} mode3 par"
+            );
+            // blocked dispatch == scalar reference, composed with the same
+            // chunk-ordered fold the pooled mode-1 sweep uses
+            let mut chunk_partials: Vec<Mat> = Vec::new();
+            for range in plan.ranges() {
+                let mut acc = Mat::zeros(r, r);
+                for kk in range.clone() {
+                    let s = &y.slices[kk];
+                    let mut temp = Mat::zeros(r, v.cols());
+                    kernels::reference::spmm_yt_v(&s.yt, &s.support, &v, &mut temp);
+                    spartan::linalg::blas::rowhad_inplace(&mut temp, w.row(kk));
+                    acc.axpy(1.0, &temp);
+                }
+                chunk_partials.push(acc);
+            }
+            let mut manual = chunk_partials.remove(0);
+            for part in chunk_partials {
+                manual.axpy(1.0, &part);
+            }
+            assert_eq!(m1.data(), manual.data(), "seed {seed} mode1 vs reference");
+        }
+    }
+}
+
 /// Property: filtering zero rows never changes the column support, nnz, or
 /// Frobenius norm of a slice collection.
 #[test]
