@@ -14,14 +14,23 @@
 //!    before/after of the traversal-fusion work).
 //! 5. **native vs PJRT backend** at equal workload (skipped when the AOT
 //!    artifacts are absent).
+//! 6. **xfuse** — the resident compact-X arena's single-traversal
+//!    Procrustes sweep vs the pre-arena CSR-streaming structure (same
+//!    arithmetic, bitwise-identical outputs, two cold X streams per
+//!    subject) and vs the counted two-sweep separate structure — the
+//!    before/after of the X-side traversal fusion.
 //!
-//! Run: `cargo bench --bench ablations [-- --filter NAME]`
+//! Run: `cargo bench --bench ablations [-- --filter NAME]`. A `--filter`
+//! run writes `bench_results/ablations_<filter>.json` so CI can publish a
+//! focused A/B (e.g. `xfuse`) without clobbering the full cell set.
 
 use spartan::bench::{bench, write_results, BenchConfig, Measurement};
 use spartan::datagen::ehr::{self, EhrSpec};
 use spartan::linalg::{blas, Mat};
 use spartan::parafac2::intermediate::{PackedSlice, PackedY};
+use spartan::parafac2::procrustes::SubjectScratch;
 use spartan::parafac2::{mttkrp, procrustes};
+use spartan::sparse::CompactX;
 use spartan::threadpool::{ChunkPlan, Pool};
 use spartan::util::json::Json;
 use spartan::util::rng::Pcg64;
@@ -158,10 +167,12 @@ fn main() {
 
     // ---- 4. pack fusion ---------------------------------------------------
     if run("fusion") {
+        let cx = CompactX::pack(&data, &pool, &plan);
+        let mut scratch = SubjectScratch::for_plan(&plan);
         let mut arena = PackedY::empty(data.j());
         let m = bench("procrustes_then_standalone_mode1", &cfg, || {
             let _ = procrustes::procrustes_all_into(
-                &data, &v, &h, &w, &pool, &plan, false, &mut arena,
+                &cx, &v, &h, &w, &pool, &plan, false, &mut arena, &mut scratch,
             );
             std::hint::black_box(mttkrp::mttkrp_mode1(&arena, &v, &w, &pool, &plan));
         });
@@ -170,9 +181,63 @@ fn main() {
 
         let mut arena = PackedY::empty(data.j());
         let m = bench("procrustes_pack_mode1_fused", &cfg, || {
-            let sweep =
-                procrustes::procrustes_pack_mode1(&data, &v, &h, &w, &pool, &plan, &mut arena);
+            let sweep = procrustes::procrustes_pack_mode1(
+                &cx, &v, &h, &w, &pool, &plan, &mut arena, &mut scratch,
+            );
             std::hint::black_box(sweep.m1);
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+    }
+
+    // ---- 6. X-side traversal fusion (the compact-X arena A/B) -------------
+    if run("xfuse") {
+        // One-time pack cost (amortized over the fit; measured so the
+        // trade is visible, not hidden).
+        let m = bench("xfuse_arena_pack_once", &cfg, || {
+            std::hint::black_box(CompactX::pack(&data, &pool, &plan));
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+
+        let cx = CompactX::pack(&data, &pool, &plan);
+        let mut scratch = SubjectScratch::for_plan(&plan);
+
+        // A: arena-backed single-traversal fused sweep (the new hot path).
+        let mut arena = PackedY::empty(data.j());
+        let m = bench("xfuse_arena_fused", &cfg, || {
+            let sweep = procrustes::procrustes_pack_mode1(
+                &cx, &v, &h, &w, &pool, &plan, &mut arena, &mut scratch,
+            );
+            std::hint::black_box(sweep.m1);
+        });
+        println!("{}", m.summary());
+        let arena_heap = cx.heap_bytes();
+        measurements.push(m.with_counters(vec![("heap_bytes".into(), arena_heap)]));
+
+        // B: the pre-arena structure — every subject re-streams its
+        // original CSR slice twice (target + repack). Bitwise-identical
+        // outputs (pinned in procrustes.rs tests), so the wall-clock
+        // delta is pure memory-traffic.
+        let mut arena = PackedY::empty(data.j());
+        let m = bench("xfuse_csr_streaming", &cfg, || {
+            let sweep = procrustes::procrustes_pack_mode1_csr(
+                &data, &v, &h, &w, &pool, &plan, &mut arena,
+            );
+            std::hint::black_box(sweep.m1);
+        });
+        println!("{}", m.summary());
+        measurements.push(m);
+
+        // C: the counted two-sweep separate structure (targets first,
+        // repacks second — 2 cold arena passes per subject), the
+        // structure metrics::flops pins the 2→1 counter drop against.
+        let mut arena = PackedY::empty(data.j());
+        let m = bench("xfuse_separate_two_sweeps", &cfg, || {
+            procrustes::procrustes_then_repack_separate(
+                &cx, &v, &h, &w, &pool, &plan, &mut arena,
+            );
+            std::hint::black_box(arena.norm_sq());
         });
         println!("{}", m.summary());
         measurements.push(m);
@@ -230,8 +295,15 @@ fn main() {
         }
     }
 
+    // A filtered run writes to its own file so a focused CI step (e.g.
+    // `--filter xfuse`) cannot clobber the full-run cell set in the
+    // bench-results artifact.
+    let stem = match &which {
+        Some(f) => format!("ablations_{f}"),
+        None => "ablations".to_string(),
+    };
     let ctx = Json::obj(vec![
-        ("bench", Json::str("ablations")),
+        ("bench", Json::str(stem.clone())),
         (
             "config",
             Json::obj(vec![
@@ -242,6 +314,6 @@ fn main() {
             ]),
         ),
     ]);
-    let path = write_results("ablations", ctx, &measurements);
+    let path = write_results(&stem, ctx, &measurements);
     println!("json → {}", path.display());
 }

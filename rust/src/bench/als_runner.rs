@@ -35,20 +35,18 @@ impl CellResult {
 }
 
 /// Iterations measured per cell (plus 1 discarded warmup iteration).
-/// `SPARTAN_BENCH_FAST=1` shrinks the workload but still measures **5**
-/// iterations per cell: CI's `bench-trend` gate treats cells with fewer
-/// than 5 samples as warn-only (too noisy to block on), so a smaller
-/// count would quietly exempt every ALS-fit cell from the >10% median
-/// gate. Smoke datasets are tiny, so the extra iterations are cheap. The
-/// paper averages 10 iterations; on this single-core testbed we average
-/// `measure` (per-iteration variance of ALS is ≪ the cross-method gaps —
-/// recorded in EXPERIMENTS.md).
+/// **Both** modes measure at least **5** iterations per cell: CI's
+/// `bench-trend` gate treats cells with fewer than 5 samples as warn-only
+/// (too noisy to block on), so a smaller count — in either the
+/// `SPARTAN_BENCH_FAST=1` smoke configuration *or* a full-size run whose
+/// JSON later seeds a baseline — would quietly exempt every ALS-fit cell
+/// from the >10% median gate. The paper averages 10 iterations; we
+/// average `measure` (per-iteration variance of ALS is ≪ the
+/// cross-method gaps — recorded in EXPERIMENTS.md).
 pub fn bench_iters() -> (usize, usize) {
-    if std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1") {
-        (1, 5) // warmup, measured — 5 keeps the trend gate's teeth
-    } else {
-        (1, 3)
-    }
+    // (warmup, measured) — measured stays ≥ trend::MIN-ITERS(5) in every
+    // mode so no configuration can produce permanently warn-only cells.
+    (1, 5)
 }
 
 /// One timed ALS run with its raw per-iteration wall times and the exact
@@ -68,6 +66,13 @@ pub struct AlsRun {
     /// Cold packed-slice traversals over the whole fit
     /// (see `FitStats::traversals`).
     pub traversals: u64,
+    /// Cold X passes over the whole fit through the resident compact-X
+    /// arena (see `FitStats::x_traversals`): K for the pack + K per
+    /// iteration + K for the final report pass.
+    pub x_traversals: u64,
+    /// Steady-state resident footprint of the fit's data-plane arenas
+    /// (see `FitStats::heap_bytes`).
+    pub heap_bytes: u64,
 }
 
 impl AlsRun {
@@ -86,6 +91,8 @@ impl AlsRun {
             ("fit_iters".to_string(), self.fit_iters),
             ("yv_products".to_string(), self.yv_products),
             ("traversals".to_string(), self.traversals),
+            ("x_traversals".to_string(), self.x_traversals),
+            ("heap_bytes".to_string(), self.heap_bytes),
         ]))
     }
 }
@@ -136,6 +143,8 @@ pub fn time_als_detailed(
                 fit_iters,
                 yv_products: model.stats.yv_products,
                 traversals: model.stats.traversals,
+                x_traversals: model.stats.x_traversals,
+                heap_bytes: model.stats.heap_bytes,
             }
         }
         Err(crate::parafac2::FitError::OutOfMemory(_)) => AlsRun {
@@ -144,6 +153,8 @@ pub fn time_als_detailed(
             fit_iters: 0,
             yv_products: 0,
             traversals: 0,
+            x_traversals: 0,
+            heap_bytes: 0,
         },
         Err(e) => panic!("bench fit failed: {e}"),
     }
@@ -330,8 +341,12 @@ mod tests {
         // per iteration plus the final-report mode-3 pass
         assert_eq!(run.yv_products, run.fit_iters * k);
         assert_eq!(run.traversals, (run.fit_iters + 1) * k);
+        // one cold X pass per subject per iteration through the resident
+        // arena, plus the pack and the final report pass
+        assert_eq!(run.x_traversals, (run.fit_iters + 2) * k);
+        assert!(run.heap_bytes > 0);
         let m = run.measurement("cell").expect("timed run summarizes");
-        assert_eq!(m.counters.len(), 3);
+        assert_eq!(m.counters.len(), 5);
 
         // OoM cells summarize to None
         let oom = time_als_detailed(&data, 2, Backend::Baseline, Some(64));

@@ -17,7 +17,8 @@
 //!       "name": "...", "iters": N,
 //!       "mean_secs": ..., "std_secs": ..., "min_secs": ..., "max_secs": ...,
 //!       "iter_secs": [ ...wall-time of every measured iteration... ],
-//!       "counters": { "fit_iters": ..., "yv_products": ..., "traversals": ... }
+//!       "counters": { "fit_iters": ..., "yv_products": ..., "traversals": ...,
+//!                     "x_traversals": ..., "heap_bytes": ... }
 //!     }
 //!   ]
 //! }
@@ -27,10 +28,15 @@
 //! statistics. `counters` (present where the bench measures an ALS fit)
 //! holds the exact kernel-work tallies over the **whole fit, warmup
 //! included** — normalize by `fit_iters`, not `iters`:
-//! `yv_products / (K·fit_iters) == 1` and
+//! `yv_products / (K·fit_iters) == 1`,
 //! `traversals / (K·fit_iters) ≈ 1` (one extra K from the final report
-//! pass) for the SPARTan engine — see `metrics::flops`. That makes the
-//! perf trajectory across PRs machine-checkable, not eyeballed.
+//! pass), and `x_traversals / (K·fit_iters) ≈ 1` (one cold X pass per
+//! subject per iteration through the resident compact-X arena, plus the
+//! one-time pack and the final report pass) for the SPARTan engine — see
+//! `metrics::flops`. `heap_bytes` is the steady-state resident footprint
+//! of the fit's data-plane arenas (the residency the arena trades for the
+//! halved X traffic). That makes the perf trajectory across PRs
+//! machine-checkable, not eyeballed.
 
 pub mod als_runner;
 pub mod table;

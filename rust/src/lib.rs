@@ -15,6 +15,46 @@
 //! * **L1 (`python/compile/kernels/`)** — the Pallas kernel for the packed
 //!   per-slice MTTKRP hot-spot.
 //!
+//! ## Dataflow: one cold pass over X *and* Y per subject per iteration
+//!
+//! The ALS loop owns two resident arenas, both packed once per fit and
+//! refilled/streamed in place by every iteration:
+//!
+//! * **Compact-X arena** ([`sparse::CompactX`]) — each subject's
+//!   iteration-invariant values in CSR order plus the entry→support
+//!   mapping (`local_cols`) and support list. The Procrustes sweep makes
+//!   exactly **one** cold pass over it per subject per iteration: the
+//!   target stage `C_k = X̃_k·V` streams the compact values against a
+//!   gathered `V`-support panel, and the repack `Y_k = Q_kᵀX̃_k` rides
+//!   that pass (re-reading the same cache-resident values). The pre-arena
+//!   structure re-streamed the original CSR twice. Counted by
+//!   `x_traversals` (pack + cold reads tally, pass-riding reads don't).
+//! * **Packed-Y arena** ([`parafac2::intermediate::PackedY`]) — the
+//!   `Y_k = Q_kᵀX_k` slices in support-compact transposed layout. The
+//!   pack-fused sweep emits the mode-1 MTTKRP while each slice is
+//!   cache-hot from its repack, mode 2 is the iteration's only cold Y
+//!   traversal (caching `Z_k = Y_kᵀH`), and mode 3 is an epilogue over
+//!   that cache. Counted by `traversals`/`yv_products`.
+//!
+//! Per-subject temporaries (gathered panel, `C_k`, `B_k`, `D = S_kHᵀ`,
+//! `Q_k`, the polar factor's internals) live in per-chunk
+//! [`parafac2::procrustes::SubjectScratch`] arenas: steady-state
+//! iterations allocate nothing in the Procrustes phase (pinned by the
+//! `arena_memory` integration test with a counting global allocator).
+//! Every count above is asserted exactly in `metrics::flops` (2→1 against
+//! the unfused reference structures) and end-to-end through real fits in
+//! `parafac2::als`.
+//!
+//! **Adding an arena-backed stage:** read operands from the arena (never
+//! the original CSR) preserving the CSR entry order so the stage stays
+//! bitwise identical to its streaming reference; put every temporary in a
+//! per-chunk scratch sized by `Mat::reset_to_zeros`; tally a cold pass
+//! (`note_traversal`) only when the stage streams a slice that is not
+//! already cache-resident from the same subject's preceding stage; then
+//! extend the `metrics::flops` count assertions, the bitwise
+//! fused-vs-separate test in `parafac2::procrustes`, and the
+//! `ablations --filter xfuse` A/B with the new stage.
+//!
 //! ## Benchmarks
 //!
 //! The paper-reproduction benches live under `rust/benches/` and run with

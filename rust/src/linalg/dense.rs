@@ -221,6 +221,65 @@ impl Mat {
         self.data.fill(0.0);
     }
 
+    /// Reshape in place to an all-zeros `rows × cols` matrix, reusing the
+    /// existing buffer capacity. Allocates only while the buffer is still
+    /// growing toward its high-water mark — the primitive behind the
+    /// per-worker scratch arenas that make steady-state ALS iterations
+    /// allocation-free (`parafac2::procrustes::SubjectScratch`,
+    /// `linalg::svd::PolarScratch`).
+    pub fn reset_to_zeros(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape in place to the `n × n` identity, reusing the buffer
+    /// (see [`Mat::reset_to_zeros`]). Same values as [`Mat::eye`].
+    pub fn reset_to_eye(&mut self, n: usize) {
+        self.reset_to_zeros(n, n);
+        for i in 0..n {
+            self[(i, i)] = 1.0;
+        }
+    }
+
+    /// Reshape in place WITHOUT zero-filling: for callers that overwrite
+    /// **every** element immediately (gathers, transposes, dense fills).
+    /// The retained contents are the previous buffer's values — never
+    /// uninitialized memory — but they are unspecified, so a caller that
+    /// reads or accumulates before writing each element must use
+    /// [`Mat::reset_to_zeros`] instead. Skipping the fill removes a full
+    /// write pass per buffer per subject from the steady-state hot loops.
+    pub fn reset_for_overwrite(&mut self, rows: usize, cols: usize) {
+        let n = rows * cols;
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() > n {
+            self.data.truncate(n);
+        } else {
+            // only the newly exposed tail gets the (dummy) fill value
+            self.data.resize(n, 0.0);
+        }
+    }
+
+    /// Transposed copy into a reused output buffer — same values, same
+    /// write order as [`Mat::transpose`], zero steady-state allocations
+    /// (every element is written, so no zero-fill pass is needed).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.reset_for_overwrite(self.cols, self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &x) in row.iter().enumerate() {
+                out[(j, i)] = x;
+            }
+        }
+    }
+
+    /// Heap bytes held by the backing buffer (scratch-arena accounting).
+    pub fn heap_bytes(&self) -> u64 {
+        (self.data.capacity() * std::mem::size_of::<f64>()) as u64
+    }
+
     /// Euclidean norm of each column.
     pub fn col_norms(&self) -> Vec<f64> {
         let mut norms = vec![0.0; self.cols];
@@ -379,6 +438,45 @@ mod tests {
         assert_eq!(b.shape(), (2, 3));
         assert_eq!(b[(0, 0)], 7.0);
         assert_eq!(b[(1, 2)], 14.0);
+    }
+
+    #[test]
+    fn reset_reuses_buffer_and_matches_fresh() {
+        let mut m = Mat::rand_normal(6, 7, &mut Pcg64::seed(2));
+        let ptr = m.data().as_ptr();
+        m.reset_to_zeros(4, 5); // shrink: must not reallocate
+        assert_eq!(m.shape(), (4, 5));
+        assert!(m.data().iter().all(|&x| x == 0.0));
+        assert_eq!(m.data().as_ptr(), ptr);
+        m.reset_to_eye(3);
+        assert_eq!(m.data(), Mat::eye(3).data());
+        assert_eq!(m.data().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Pcg64::seed(3);
+        let m = Mat::rand_normal(5, 8, &mut rng);
+        // stale, larger buffer: reset_for_overwrite must not leak old
+        // contents through the full-overwrite fill
+        let mut out = Mat::rand_normal(9, 9, &mut rng);
+        m.transpose_into(&mut out);
+        assert_eq!(out.data(), m.transpose().data());
+        assert_eq!(out.shape(), (8, 5));
+        // and growing from a smaller stale buffer also matches
+        let big = Mat::rand_normal(12, 11, &mut rng);
+        big.transpose_into(&mut out);
+        assert_eq!(out.data(), big.transpose().data());
+    }
+
+    #[test]
+    fn reset_for_overwrite_reuses_buffer() {
+        let mut m = Mat::rand_normal(6, 7, &mut Pcg64::seed(4));
+        let ptr = m.data().as_ptr();
+        m.reset_for_overwrite(3, 4); // shrink: no realloc, no fill pass
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.data().as_ptr(), ptr);
+        assert_eq!(m.data().len(), 12);
     }
 
     #[test]

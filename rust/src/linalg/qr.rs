@@ -104,12 +104,26 @@ pub fn random_orthonormal(m: usize, n: usize, rng: &mut crate::util::rng::Pcg64)
 pub fn orthonormal_complete(q: &mut Mat) -> usize {
     let (m, n) = q.shape();
     assert!(m >= n, "cannot complete a short-fat matrix to orthonormal columns");
+    // Full-rank fast path without touching the heap: the steady-state ALS
+    // loop calls this once per subject per iteration (via the polar
+    // factor), and on non-degenerate slices nothing is deficient — the
+    // Procrustes phase's allocation-free contract forbids materializing
+    // the norms vector just to discover that. Per-column sums accumulate
+    // in the same ascending-row order as `col_norms`, so the deficiency
+    // decision is identical to the slow path's.
+    let any_deficient = (0..n).any(|j| {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += q[(i, j)] * q[(i, j)];
+        }
+        s.sqrt() < 1e-7
+    });
+    if !any_deficient {
+        return 0;
+    }
     let norms = q.col_norms();
     let deficient: Vec<usize> =
         (0..n).filter(|&j| norms[j] < 1e-7).collect();
-    if deficient.is_empty() {
-        return 0;
-    }
     // zero them exactly first
     for &j in &deficient {
         for i in 0..m {

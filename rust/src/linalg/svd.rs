@@ -287,9 +287,63 @@ pub fn polar_orthonormal_completed(b: &Mat) -> Mat {
     q
 }
 
+/// Reusable buffers for [`procrustes_polar_jacobi_into`]: the per-subject
+/// polar factor is the deepest call of the ALS hot loop, so its
+/// temporaries live in a per-worker scratch that grows to the cohort's
+/// high-water shapes during the first iteration and never allocates again
+/// (the steady-state-allocation-free contract of the Procrustes phase,
+/// asserted by the `arena_memory` integration test).
+#[derive(Debug)]
+pub struct PolarScratch {
+    /// `W = Bᵀ` (n × m), rotated in place.
+    w: Mat,
+    /// `Vᵀ` accumulator (n × n).
+    vt: Mat,
+    /// Normalized left factors (m × n; tall branch only).
+    u: Mat,
+    /// Cached squared column norms (length n).
+    norm_sq: Vec<f64>,
+    /// Final singular-value estimates (length n).
+    norms: Vec<f64>,
+}
+
+impl Default for PolarScratch {
+    fn default() -> Self {
+        PolarScratch::new()
+    }
+}
+
+impl PolarScratch {
+    pub fn new() -> PolarScratch {
+        PolarScratch {
+            w: Mat::zeros(0, 0),
+            vt: Mat::zeros(0, 0),
+            u: Mat::zeros(0, 0),
+            norm_sq: Vec::new(),
+            norms: Vec::new(),
+        }
+    }
+
+    /// Heap bytes currently held (scratch-arena accounting).
+    pub fn heap_bytes(&self) -> u64 {
+        self.w.heap_bytes()
+            + self.vt.heap_bytes()
+            + self.u.heap_bytes()
+            + (self.norm_sq.capacity() * 8 + self.norms.capacity() * 8) as u64
+    }
+}
+
 /// Orthogonal-Procrustes solution via **one-sided Jacobi on transposed
 /// storage** — the fast path used by the per-subject step-1 kernel.
-///
+/// Allocating convenience wrapper over [`procrustes_polar_jacobi_into`]
+/// (bitwise identical; the ALS hot loop holds a [`PolarScratch`] instead).
+pub fn procrustes_polar_jacobi(b: &Mat) -> Mat {
+    let mut scratch = PolarScratch::new();
+    let mut q = Mat::zeros(0, 0);
+    procrustes_polar_jacobi_into(b, &mut scratch, &mut q);
+    q
+}
+
 /// Computes `Q = U·Vᵀ` from the thin SVD `B = U Σ Vᵀ` directly, without
 /// forming the Gram matrix or an eigendecomposition: Jacobi rotations
 /// orthogonalize the *columns* of `B`, held transposed (`W = Bᵀ`) so every
@@ -302,10 +356,17 @@ pub fn polar_orthonormal_completed(b: &Mat) -> Mat {
 /// final product, so `QᵀQ = I` holds exactly — same semantics as
 /// [`polar_orthonormal_completed`]. Short matrices (rows < cols) keep the
 /// zero directions and return orthonormal *rows*.
-pub fn procrustes_polar_jacobi(b: &Mat) -> Mat {
+///
+/// `q` receives the `rows(b) × cols(b)` result; every temporary lives in
+/// `scratch`. The floating-point sequence is identical to the historical
+/// allocating form for every input — scratch reuse is invisible to the
+/// bits (buffers are fully overwritten before use).
+pub fn procrustes_polar_jacobi_into(b: &Mat, scratch: &mut PolarScratch, q: &mut Mat) {
     let (m, n) = b.shape();
-    let mut w = b.transpose(); // n rows of length m — B's columns, contiguous
-    let mut vt = Mat::eye(n); // Vᵀ, rotated in the same row layout
+    b.transpose_into(&mut scratch.w); // n rows of length m — B's columns
+    let w = &mut scratch.w;
+    scratch.vt.reset_to_eye(n); // Vᵀ, rotated in the same row layout
+    let vt = &mut scratch.vt;
     let max_sweeps = 64;
     // convergence/skip threshold: |⟨b_p, b_q⟩| ≤ tol·‖b_p‖‖b_q‖.
     // 1e-8 leaves an orthonormality defect ≤ ~1e-8 — far below anything
@@ -316,9 +377,9 @@ pub fn procrustes_polar_jacobi(b: &Mat) -> Mat {
     // Cached squared column norms, updated analytically after each
     // rotation (app' = app − t·apq, aqq' = aqq + t·apq) — only the cross
     // product ⟨w_p, w_q⟩ needs a fresh dot per pair (§Perf step 3).
-    let mut norm_sq: Vec<f64> = (0..n)
-        .map(|j| w.row(j).iter().map(|x| x * x).sum())
-        .collect();
+    scratch.norm_sq.clear();
+    scratch.norm_sq.extend((0..n).map(|j| w.row(j).iter().map(|x| x * x).sum::<f64>()));
+    let norm_sq = &mut scratch.norm_sq;
     for _ in 0..max_sweeps {
         let mut rotated = false;
         for p in 0..n {
@@ -366,7 +427,9 @@ pub fn procrustes_polar_jacobi(b: &Mat) -> Mat {
     }
     // Normalize the components: row j of W is σ_j·u_jᵀ. (Norms recomputed
     // exactly — the cached values drift by rounding over many rotations.)
-    let mut norms = vec![0.0f64; n];
+    scratch.norms.clear();
+    scratch.norms.resize(n, 0.0);
+    let norms = &mut scratch.norms;
     for j in 0..n {
         norms[j] = w.row(j).iter().map(|x| x * x).sum::<f64>().sqrt();
     }
@@ -384,13 +447,15 @@ pub fn procrustes_polar_jacobi(b: &Mat) -> Mat {
     }
     if m >= n {
         // complete zero components (deficiency is axis-aligned here)
-        let mut u = w.transpose(); // m×n, orthonormal-or-zero columns
-        super::qr::orthonormal_complete(&mut u);
-        // Q = U·Vᵀ
-        blas::matmul(&u, &vt)
+        w.transpose_into(&mut scratch.u); // m×n, orthonormal-or-zero columns
+        super::qr::orthonormal_complete(&mut scratch.u);
+        // Q = U·Vᵀ (matmul = zero-init + gemm, reproduced on the reused q)
+        q.reset_to_zeros(m, n);
+        blas::gemm_acc(q, &scratch.u, vt, 1.0);
     } else {
         // short case: Q = Uᵀ-transposed product, orthonormal rows
-        blas::matmul_at_b(&w, &vt)
+        q.reset_to_zeros(m, n);
+        super::kernels::atb_into(w, vt, q);
     }
 }
 
@@ -594,6 +659,38 @@ mod tests {
             let q1 = procrustes_polar_jacobi(&b);
             let q2 = if m >= n { polar_orthonormal_completed(&b) } else { polar_orthonormal(&b) };
             assert!(q1.max_abs_diff(&q2) < 1e-7, "({m},{n}): {}", q1.max_abs_diff(&q2));
+        }
+    }
+
+    #[test]
+    fn jacobi_polar_scratch_reuse_is_bitwise() {
+        // The ALS hot loop reuses one PolarScratch across subjects whose
+        // shapes vary (grow, shrink, short-fat, rank-deficient): every
+        // call must be bit-identical to a fresh allocating call — scratch
+        // residue can never leak into the result.
+        let mut rng = Pcg64::seed(47);
+        let mut scratch = PolarScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        let rank2 = {
+            let x = Mat::rand_normal(12, 2, &mut rng);
+            let y = Mat::rand_normal(5, 2, &mut rng);
+            blas::matmul_a_bt(&x, &y)
+        };
+        let shapes: Vec<Mat> = vec![
+            Mat::rand_normal(20, 5, &mut rng),
+            Mat::rand_normal(6, 3, &mut rng), // shrink
+            Mat::rand_normal(64, 16, &mut rng), // grow
+            Mat::rand_normal(3, 8, &mut rng), // short-fat branch
+            rank2,                            // deficiency → completion path
+            Mat::rand_normal(7, 7, &mut rng),
+        ];
+        for (i, b) in shapes.iter().enumerate() {
+            procrustes_polar_jacobi_into(b, &mut scratch, &mut q);
+            let fresh = procrustes_polar_jacobi(b);
+            assert_eq!(q.shape(), fresh.shape(), "case {i}");
+            for (a, bq) in q.data().iter().zip(fresh.data()) {
+                assert_eq!(a.to_bits(), bq.to_bits(), "case {i}");
+            }
         }
     }
 

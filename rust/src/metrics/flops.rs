@@ -7,7 +7,11 @@
 //! cold packed-slice traversal per subject per ALS iteration** (down from
 //! two), measured by the per-slice tallies behind
 //! [`crate::parafac2::intermediate::PackedY::yv_products`] /
-//! [`crate::parafac2::intermediate::PackedY::traversals`].
+//! [`crate::parafac2::intermediate::PackedY::traversals`] — and, since
+//! the resident compact-X arena landed, **one cold pass over each
+//! subject's X data per iteration** (down from two in the CSR-streaming
+//! structure), measured by
+//! [`crate::sparse::CompactX::x_traversals`].
 
 use crate::sparse::IrregularTensor;
 
@@ -153,8 +157,9 @@ mod tests {
         use crate::parafac2::intermediate::PackedY;
         use crate::parafac2::mttkrp::FusedScratch;
         use crate::parafac2::procrustes::{
-            procrustes_all_into, procrustes_pack_mode1, subject_plan,
+            procrustes_all_into, procrustes_pack_mode1, subject_plan, SubjectScratch,
         };
+        use crate::sparse::CompactX;
         use crate::threadpool::Pool;
         use crate::util::rng::Pcg64;
 
@@ -172,10 +177,14 @@ mod tests {
 
         // fused path: 1 traversal (and 1 Y·V) per subject per iteration
         let mut f = f0.clone();
+        let cx = CompactX::pack(&d, &pool, &plan);
+        let mut sweep_scratch = SubjectScratch::for_plan(&plan);
         let mut y = PackedY::empty(d.j());
         let mut scratch = FusedScratch::new();
         for iter in 1..=3u64 {
-            let sweep = procrustes_pack_mode1(&d, &f.v, &f.h, &f.w, &pool, &plan, &mut y);
+            let sweep = procrustes_pack_mode1(
+                &cx, &f.v, &f.h, &f.w, &pool, &plan, &mut y, &mut sweep_scratch,
+            );
             let _ = cp_iteration_from_m1(
                 &y,
                 sweep.m1,
@@ -193,10 +202,14 @@ mod tests {
         // unfused reference: the same iteration with a standalone mode 1
         // costs 2 traversals per subject
         let mut f = f0.clone();
+        let cx = CompactX::pack(&d, &pool, &plan);
+        let mut sweep_scratch = SubjectScratch::for_plan(&plan);
         let mut y = PackedY::empty(d.j());
         let mut scratch = FusedScratch::new();
         for iter in 1..=2u64 {
-            let _ = procrustes_all_into(&d, &f.v, &f.h, &f.w, &pool, &plan, false, &mut y);
+            let _ = procrustes_all_into(
+                &cx, &f.v, &f.h, &f.w, &pool, &plan, false, &mut y, &mut sweep_scratch,
+            );
             let _ = cp_iteration_with_scratch(
                 &y,
                 &mut f,
@@ -206,6 +219,58 @@ mod tests {
                 &mut scratch,
             );
             assert_eq!(y.traversals(), iter * 2 * k, "unfused traversals, iter {iter}");
+        }
+    }
+
+    #[test]
+    fn compact_arena_iteration_streams_x_once_not_twice() {
+        // THE acceptance invariant of the resident compact-X arena: after
+        // the one-time pack (K cold passes — one per subject), each
+        // arena-backed Procrustes sweep streams every subject's X data
+        // exactly ONCE (the C_k = X̃_k·V stage; the Y_k repack rides that
+        // pass) — while the unfused two-sweep structure (targets first,
+        // repacks in a second pass over the cohort) costs exactly TWO cold
+        // passes per subject. Both sides are counted below, so the 2→1
+        // drop is pinned, not just the new count.
+        use crate::linalg::Mat;
+        use crate::parafac2::intermediate::PackedY;
+        use crate::parafac2::procrustes::{
+            procrustes_pack_mode1, procrustes_then_repack_separate, subject_plan, SubjectScratch,
+        };
+        use crate::sparse::CompactX;
+        use crate::threadpool::Pool;
+        use crate::util::rng::Pcg64;
+
+        let d = data();
+        let k = d.k() as u64;
+        let r = 4;
+        let mut rng = Pcg64::seed(11);
+        let pool = Pool::new(3);
+        let plan = subject_plan(&d);
+        let h = Mat::rand_normal(r, r, &mut rng);
+        let v = Mat::rand_uniform(d.j(), r, &mut rng);
+        let w = Mat::rand_uniform(d.k(), r, &mut rng);
+
+        // fused (arena) path: pack = K, then +K per sweep
+        let cx = CompactX::pack(&d, &pool, &plan);
+        assert_eq!(cx.x_traversals(), k, "the pack is the only cold pass so far");
+        let mut scratch = SubjectScratch::for_plan(&plan);
+        let mut y = PackedY::empty(d.j());
+        for iter in 1..=3u64 {
+            let _ = procrustes_pack_mode1(&cx, &v, &h, &w, &pool, &plan, &mut y, &mut scratch);
+            assert_eq!(cx.x_traversals(), (1 + iter) * k, "fused X passes, iter {iter}");
+        }
+
+        // unfused two-sweep reference: +2K per sweep
+        let cx = CompactX::pack(&d, &pool, &plan);
+        let mut y = PackedY::empty(d.j());
+        for iter in 1..=2u64 {
+            procrustes_then_repack_separate(&cx, &v, &h, &w, &pool, &plan, &mut y);
+            assert_eq!(
+                cx.x_traversals(),
+                (1 + 2 * iter) * k,
+                "unfused X passes, iter {iter}"
+            );
         }
     }
 

@@ -162,6 +162,46 @@ impl PackedSlice {
         self.norm_sq_cache = Self::norm_sq_of(&self.yt);
     }
 
+    /// Refresh `Y_k = Q_kᵀ X̃_k` from the **resident compact-X arena**
+    /// instead of the original CSR: same values in the same CSR entry
+    /// order (the arena stores bit-copies), same per-entry accumulation —
+    /// bitwise identical to [`PackedSlice::repack_from`] on the source
+    /// slice. The slot's `local_cols` stays empty on this path (the
+    /// arena owns the canonical entry→support mapping), so an arena-backed
+    /// fit does not pay for the mapping twice. First use (or a rank
+    /// change) sizes the buffers; steady state allocates nothing.
+    pub fn repack_from_compact(&mut self, cx: &crate::sparse::CompactSlice, qk: &Mat) {
+        let r = qk.cols();
+        debug_assert_eq!(qk.rows(), cx.rows(), "Q_k rows must equal I_k");
+        if self.yt.shape() != (cx.c_k(), r) || self.support.len() != cx.c_k() {
+            self.support.clear();
+            self.support.extend_from_slice(&cx.support);
+            self.local_cols.clear();
+            self.yt.reset_to_zeros(cx.c_k(), r);
+        } else {
+            // Same-pattern precondition, pinned like `repack_from` does.
+            debug_assert_eq!(
+                self.support, cx.support,
+                "repack_from_compact requires the slot's original sparsity pattern"
+            );
+            self.yt.fill_zero();
+        }
+        let mut at = 0usize;
+        for i in 0..cx.rows() {
+            let qrow = qk.row(i);
+            let (cols, vals) = cx.row_parts(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let dst = self.yt.row_mut(c as usize);
+                for (d, &q) in dst.iter_mut().zip(qrow) {
+                    *d += v * q;
+                }
+            }
+            at += vals.len();
+        }
+        debug_assert_eq!(at, cx.nnz());
+        self.norm_sq_cache = Self::norm_sq_of(&self.yt);
+    }
+
     /// Number of nonzero columns `c_k`.
     #[inline]
     pub fn c_k(&self) -> usize {
@@ -210,14 +250,23 @@ impl PackedSlice {
     /// because the read rides the pack instead of streaming the slice
     /// back out of memory.
     pub fn yk_times_v_fused(&self, v: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.yk_times_v_fused_into(v, &mut out);
+        out
+    }
+
+    /// [`PackedSlice::yk_times_v_fused`] into a reused output buffer (the
+    /// steady-state-allocation-free form the arena-backed sweep uses).
+    /// Bitwise identical: the buffer is zero-reset before the kernel runs,
+    /// exactly like a fresh allocation.
+    pub fn yk_times_v_fused_into(&self, v: &Mat, out: &mut Mat) {
         self.yv_count.fetch_add(1, Ordering::Relaxed);
         // Ytᵀ · V_c, streamed without materializing V_c — the shape-A
         // register-blocked micro-kernel (4 support rows in flight,
         // R-unrolled panel; bitwise identical to the scalar reference,
         // see `linalg::kernels` for the dispatch + contract).
-        let mut out = Mat::zeros(self.rank(), v.cols());
-        kernels::spmm_yt_v(&self.yt, &self.support, v, &mut out);
-        out
+        out.reset_to_zeros(self.rank(), v.cols());
+        kernels::spmm_yt_v(&self.yt, &self.support, v, out);
     }
 
     /// Record one cold read traversal of this slice's packed block (the
@@ -426,6 +475,47 @@ mod tests {
         // buffers were reused, not reallocated
         assert_eq!(slot.support.as_ptr(), support_ptr);
         assert_eq!(slot.yt.data().as_ptr(), yt_before);
+    }
+
+    #[test]
+    fn repack_from_compact_matches_csr_repack_bitwise() {
+        // The arena contract: refreshing Y_k from the resident compact
+        // values must be bit-identical to refreshing from the original
+        // CSR, across reuse rounds, with the slot's local_cols left empty
+        // (the arena owns the mapping).
+        let mut rng = Pcg64::seed(110);
+        let xk = random_sparse(&mut rng, 9, 13, 0.25);
+        let cx = crate::sparse::CompactSlice::pack(&xk);
+        let mut slot = PackedSlice::empty();
+        let mut csr_slot = PackedSlice::empty();
+        for round in 0..3 {
+            let qk = random_orthonormal(9, 3, &mut rng);
+            slot.repack_from_compact(&cx, &qk);
+            csr_slot.repack_from(&xk, &qk);
+            assert_eq!(slot.support, csr_slot.support, "round {round}");
+            assert_eq!(slot.yt.data().len(), csr_slot.yt.data().len());
+            for (a, b) in slot.yt.data().iter().zip(csr_slot.yt.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {round}");
+            }
+            assert_eq!(slot.norm_sq().to_bits(), csr_slot.norm_sq().to_bits());
+            assert!(slot.local_cols.is_empty(), "arena path must not duplicate the mapping");
+        }
+    }
+
+    #[test]
+    fn yk_times_v_fused_into_reuses_buffer_bitwise() {
+        let mut rng = Pcg64::seed(111);
+        let xk = random_sparse(&mut rng, 8, 12, 0.3);
+        let qk = random_orthonormal(8, 4, &mut rng);
+        let p = PackedSlice::pack(&xk, &qk);
+        let v = Mat::rand_normal(12, 4, &mut rng);
+        let fresh = p.yk_times_v_fused(&v);
+        let mut reused = Mat::rand_normal(9, 9, &mut rng); // stale contents + wrong shape
+        p.yk_times_v_fused_into(&v, &mut reused);
+        assert_eq!(reused.shape(), fresh.shape());
+        for (a, b) in reused.data().iter().zip(fresh.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

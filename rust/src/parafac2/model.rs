@@ -45,6 +45,19 @@ pub struct FitStats {
     /// pack-fused SPARTan sweep does exactly K per iteration — down from
     /// 2K pre-fusion; see `metrics::flops`).
     pub traversals: u64,
+    /// Cold streaming passes over the subjects' **X data** over the whole
+    /// fit, tallied by the resident compact-X arena: K for the one-time
+    /// pack, then exactly K per iteration (the `C_k = X̃_k·V` stage; the
+    /// repack rides it), plus K for the final report pass — down from 2K
+    /// per iteration in the pre-arena CSR-streaming structure (see
+    /// `metrics::flops`).
+    pub x_traversals: u64,
+    /// Steady-state resident footprint of the fit's data-plane arenas:
+    /// the compact-X arena + the packed-Y arena + the per-chunk sweep
+    /// scratch + the fused Z-cache. The arena trades this residency for
+    /// halved X memory traffic, so benches publish it next to the
+    /// counters.
+    pub heap_bytes: u64,
 }
 
 impl Parafac2Model {

@@ -7,29 +7,142 @@
 //!
 //! The textbook step is: SVD of `H S_k Vᵀ X_kᵀ = P_k Σ_k Z_kᵀ`, then
 //! `Q_k ← Z_k P_kᵀ`. That is exactly the orthonormal polar factor of
-//! `B_k = X_k V S_k Hᵀ`, which we compute via the R×R eigen route
-//! ([`crate::linalg::svd::polar_orthonormal`]) — O(nnz_k·R + I_k·R²)
-//! per subject instead of an SVD of an R×I_k matrix.
+//! `B_k = X_k V S_k Hᵀ`, which we compute via one-sided Jacobi
+//! ([`crate::linalg::svd::procrustes_polar_jacobi_into`]) —
+//! O(nnz_k·R + I_k·R²) per subject instead of an SVD of an R×I_k matrix.
+//!
+//! ## Single traversal over the resident compact-X arena
+//!
+//! The hot sweeps read the [`CompactX`] arena, not the original CSR: the
+//! target stage gathers the support rows of `V` into a contiguous panel
+//! and streams the subject's compact values **once** per iteration
+//! (`C_k = X̃_k·V`, the iteration's only cold X pass), and the repack
+//! `Y_k = Q_kᵀX̃_k` rides that pass, re-reading the same cache-resident
+//! values instead of re-streaming CSR — the data-side twin of the PR 2
+//! pack→mode-1 fusion, with the 2→1 drop pinned by the arena's
+//! `x_traversals` tally (`metrics::flops` asserts it against the
+//! two-sweep reference structure, [`procrustes_then_repack_separate`]).
+//! Every per-subject temporary (the gathered panel, `C_k`, `B_k`,
+//! `D = S_k Hᵀ`, `Q_k`, the polar factor's internals, the fused `Y_k·V`
+//! output) lives in a per-chunk [`SubjectScratch`], so steady-state
+//! iterations allocate nothing in this phase (asserted end-to-end by the
+//! `arena_memory` integration test).
 //!
 //! This step is embarrassingly parallel over the K subjects, and SPARTan
 //! (like the paper) runs it chunked on the worker pool over the caller's
 //! frozen [`ChunkPlan`] (nnz-balanced in the ALS driver, so a heavy-tailed
-//! cohort cannot strand the whole sweep behind one overloaded chunk).
+//! cohort cannot strand the whole sweep behind one overloaded chunk);
+//! scratch arenas are per *chunk*, so results are bitwise identical across
+//! worker counts.
 //!
 //! Both per-subject hot products run on the register-blocked micro-kernels
-//! behind the `linalg::kernels` dispatch point: the `C_k = X_k V` stage of
-//! [`procrustes_target`] via `Csr::matmul_dense`, and the pack-fused
-//! mode-1 read via `PackedSlice::yk_times_v_fused`. Both are in the
-//! kernel layer's order-preserving family (bitwise identical to the scalar
-//! references), so this module's fused-vs-separate bitwise guarantees are
-//! untouched by kernel selection.
+//! behind the `linalg::kernels` dispatch point: the `C_k = X̃_k·V` stage
+//! via `sparse_row_axpy` against the gathered panel (the identical
+//! per-entry floating-point sequence `Csr::matmul_dense` produces — the
+//! arena changes *where* the operands live, never the arithmetic), and
+//! the pack-fused mode-1 read via `PackedSlice::yk_times_v_fused_into`.
+//! The `*_csr` variants keep the pre-arena CSR-streaming structure
+//! callable for the `ablations --filter xfuse` A/B and the bitwise
+//! cross-checks below.
 
 use super::intermediate::{PackedSlice, PackedY};
-use crate::linalg::{blas, Mat};
-use crate::sparse::IrregularTensor;
+use crate::linalg::{blas, svd, Mat};
+use crate::sparse::{CompactSlice, CompactX, IrregularTensor};
 use crate::threadpool::{ChunkPlan, Pool};
 
-/// Compute `B_k = X_k V S_k Hᵀ` for one subject.
+/// Per-chunk scratch arena for the Procrustes sweeps: every per-subject
+/// temporary, sized to the chunk's high-water shapes during the first
+/// iteration and reused (zero-reset) forever after. One instance per plan
+/// chunk ([`SubjectScratch::for_plan`]); chunk→scratch assignment depends
+/// only on the chunk id, so scratch can never perturb determinism.
+#[derive(Debug)]
+pub struct SubjectScratch {
+    /// Gathered `V` support panel (`c_k × R`).
+    vc: Mat,
+    /// `C_k = X̃_k·V` (`I_k × R`).
+    ck: Mat,
+    /// Procrustes target `B_k = C_k·(S_k Hᵀ)` (`I_k × R`).
+    b: Mat,
+    /// `D = S_k Hᵀ` (`R × R`) — hoisted out of the per-subject loop.
+    d: Mat,
+    /// Polar factor `Q_k` (`I_k × R`).
+    q: Mat,
+    /// Fused mode-1 output `rowhad(Y_k V, W(k,:))` staging (`R × R`).
+    temp: Mat,
+    /// The polar factor's internal buffers.
+    polar: svd::PolarScratch,
+}
+
+impl Default for SubjectScratch {
+    fn default() -> Self {
+        SubjectScratch::new()
+    }
+}
+
+impl SubjectScratch {
+    pub fn new() -> SubjectScratch {
+        SubjectScratch {
+            vc: Mat::zeros(0, 0),
+            ck: Mat::zeros(0, 0),
+            b: Mat::zeros(0, 0),
+            d: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            temp: Mat::zeros(0, 0),
+            polar: svd::PolarScratch::new(),
+        }
+    }
+
+    /// One scratch arena per chunk of `plan` (the fit allocates this once
+    /// next to the packed-Y arena).
+    pub fn for_plan(plan: &ChunkPlan) -> Vec<SubjectScratch> {
+        (0..plan.n_chunks()).map(|_| SubjectScratch::new()).collect()
+    }
+
+    /// Current heap footprint (memory accounting; grows to the chunk's
+    /// high-water shapes during iteration 1, then stays put).
+    pub fn heap_bytes(&self) -> u64 {
+        self.vc.heap_bytes()
+            + self.ck.heap_bytes()
+            + self.b.heap_bytes()
+            + self.d.heap_bytes()
+            + self.q.heap_bytes()
+            + self.temp.heap_bytes()
+            + self.polar.heap_bytes()
+    }
+}
+
+/// Total heap footprint of a per-chunk scratch set.
+pub fn scratch_heap_bytes(scratch: &[SubjectScratch]) -> u64 {
+    scratch.iter().map(|s| s.heap_bytes()).sum()
+}
+
+/// Compute `B_k = X̃_k V S_k Hᵀ` for one subject into `s.b`, entirely from
+/// the resident arena + scratch: `D = S_k Hᵀ` into `s.d`, the gathered
+/// support panel into `s.vc`, the cold `C_k = X̃_k·V` pass into `s.ck`
+/// (the subject's **one** tallied X traversal this sweep), then the
+/// `I_k × R²` epilogue. Bitwise identical to the CSR-streaming
+/// [`procrustes_target`].
+fn target_into(cxk: &CompactSlice, v: &Mat, h: &Mat, s_k: &[f64], s: &mut SubjectScratch) {
+    let r = h.rows();
+    // D = S_k Hᵀ: row r of Hᵀ is column r of H scaled by s_k[r] — same
+    // values in the same row-major write order as the historical
+    // `Mat::from_fn`, now in reused scratch (every element written, so no
+    // zero-fill pass).
+    s.d.reset_for_overwrite(r, r);
+    for i in 0..r {
+        for j in 0..r {
+            s.d[(i, j)] = s_k[i] * h[(j, i)];
+        }
+    }
+    cxk.gather_v_into(v, &mut s.vc);
+    cxk.times_v_into(&s.vc, &mut s.ck); // the cold X pass (tallied)
+    s.b.reset_to_zeros(cxk.rows(), r);
+    blas::gemm_acc(&mut s.b, &s.ck, &s.d, 1.0);
+}
+
+/// Compute `B_k = X_k V S_k Hᵀ` for one subject from the original CSR
+/// (pre-arena structure; kept for the coordinator-independent callers,
+/// tests, and the `xfuse` ablation's streaming arm).
 ///
 /// Two-stage to exploit the column sparsity of `X_k`: first
 /// `C_k = X_k · V` (touches only support rows of V, cost `nnz_k · R`),
@@ -47,10 +160,8 @@ pub fn procrustes_target(
     blas::matmul(&ck, &d)
 }
 
-/// Per-subject Procrustes + pack. Returns the packed `Y_k` slice, and the
-/// orthonormal `Q_k` if `keep_q` (memory: keeping every `Q_k` costs
-/// `Σ I_k · R` floats, so the ALS loop only materializes them on the final
-/// iteration).
+/// Per-subject Procrustes + pack from the original CSR. Returns the packed
+/// `Y_k` slice, and the orthonormal `Q_k` if `keep_q`.
 pub fn procrustes_and_pack(
     xk: &crate::sparse::Csr,
     v: &Mat,
@@ -68,13 +179,77 @@ pub fn procrustes_and_pack(
     (packed, if keep_q { Some(qk) } else { None })
 }
 
+/// Per-subject Procrustes + pack from the **resident arena** (the
+/// coordinator's native-fallback path): same bits as
+/// [`procrustes_and_pack`], one cold X pass instead of two, zero
+/// steady-state allocations beyond the returned slice.
+pub fn procrustes_and_pack_compact(
+    cxk: &CompactSlice,
+    v: &Mat,
+    h: &Mat,
+    s_k: &[f64],
+    keep_q: bool,
+    s: &mut SubjectScratch,
+) -> (PackedSlice, Option<Mat>) {
+    target_into(cxk, v, h, s_k, s);
+    svd::procrustes_polar_jacobi_into(&s.b, &mut s.polar, &mut s.q);
+    let mut slot = PackedSlice::empty();
+    cxk.repack_y_fused(&s.q, &mut slot); // rides the C_k pass
+    (slot, if keep_q { Some(s.q.clone()) } else { None })
+}
+
 /// Run step 1 for all subjects on the pool, writing the packed slices
-/// **in place** into `y` (the slice arena): the support/`local_cols`/`yt`
-/// buffers of an already-filled arena are reused, so steady-state
-/// iterations perform zero per-subject allocations in this phase.
-/// Returns all `Q_k` when `keep_q`.
+/// **in place** into `y` (the slice arena) from the resident compact-X
+/// arena: per subject, one cold pass over the compact values (`C_k`) with
+/// the repack riding it. Returns all `Q_k` when `keep_q` (memory: keeping
+/// every `Q_k` costs `Σ I_k · R` floats, so the ALS loop only materializes
+/// them on the final iteration).
 #[allow(clippy::too_many_arguments)]
 pub fn procrustes_all_into(
+    cx: &CompactX,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    keep_q: bool,
+    y: &mut PackedY,
+    scratch: &mut [SubjectScratch],
+) -> Option<Vec<Mat>> {
+    let k = cx.k();
+    y.j_dim = cx.j();
+    y.resize_slots(k);
+    let per_chunk: Vec<Vec<Mat>> =
+        pool.par_plan_zip_mut(&mut y.slices, scratch, plan, |start, sub, s| {
+            let mut qs = Vec::with_capacity(if keep_q { sub.len() } else { 0 });
+            for (i, slot) in sub.iter_mut().enumerate() {
+                let cxk = &cx.slices[start + i];
+                target_into(cxk, v, h, w.row(start + i), s);
+                svd::procrustes_polar_jacobi_into(&s.b, &mut s.polar, &mut s.q);
+                cxk.repack_y_fused(&s.q, slot);
+                if keep_q {
+                    qs.push(s.q.clone());
+                }
+            }
+            qs
+        });
+    if keep_q {
+        let mut qs = Vec::with_capacity(k);
+        for chunk_qs in per_chunk {
+            qs.extend(chunk_qs);
+        }
+        Some(qs)
+    } else {
+        None
+    }
+}
+
+/// Pre-arena CSR-streaming form of [`procrustes_all_into`] (streams each
+/// original `X_k` twice per subject — target + repack). Kept callable for
+/// the `xfuse` ablation's streaming arm and the bitwise cross-checks; the
+/// ALS driver uses the arena form.
+#[allow(clippy::too_many_arguments)]
+pub fn procrustes_all_into_csr(
     data: &IrregularTensor,
     v: &Mat,
     h: &Mat,
@@ -123,21 +298,66 @@ pub struct FusedPackSweep {
     pub yv_products: u64,
 }
 
-/// Step 1 **fused with the mode-1 MTTKRP** (DPar2-style): per subject,
-/// compute `Q_k`, repack `Y_k` into its arena slot, and immediately emit
-/// `P_k = Y_k V` + the `W(k,:)` row-Hadamard while the freshly packed
-/// rows are hot in cache — so the CP step that follows never has to
-/// stream the packed slices for mode 1 again, cutting cold packed-slice
-/// traversals from 2 to 1 per ALS iteration (mode 2 is the only remaining
-/// sweep; asserted in `metrics::flops`).
+/// Step 1 **fused with the mode-1 MTTKRP** (DPar2-style) over the
+/// resident arena: per subject, one cold pass over the compact X values
+/// (`C_k`), `Q_k`, the repack riding that pass, and `P_k = Y_k V` + the
+/// `W(k,:)` row-Hadamard emitted while the freshly packed rows are hot —
+/// so a full ALS iteration makes exactly **one** cold pass over each
+/// subject's X data *and* one cold traversal of its packed Y slice
+/// (mode 2), both asserted in `metrics::flops`.
 ///
 /// Mode 1 needs `V` and `W` *as of the start of the iteration* — exactly
 /// the factors this Procrustes step consumes — which is what makes the
 /// fusion legal without changing any update's inputs. Per-chunk `M¹`
 /// partials merge in the plan's chunk order: bitwise identical to the
 /// standalone pack + [`super::mttkrp::mttkrp_mode1`] on the same plan,
-/// and bitwise deterministic across worker counts.
+/// bitwise identical to the CSR-streaming
+/// [`procrustes_pack_mode1_csr`], and bitwise deterministic across worker
+/// counts.
+#[allow(clippy::too_many_arguments)]
 pub fn procrustes_pack_mode1(
+    cx: &CompactX,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    y: &mut PackedY,
+    scratch: &mut [SubjectScratch],
+) -> FusedPackSweep {
+    let r = v.cols();
+    assert_eq!(w.cols(), r, "W/V rank mismatch");
+    y.j_dim = cx.j();
+    y.resize_slots(cx.k());
+    let partials: Vec<(Mat, u64)> =
+        pool.par_plan_zip_mut(&mut y.slices, scratch, plan, |start, sub, s| {
+            let mut acc = Mat::zeros(r, r);
+            let mut yv_products = 0u64;
+            for (i, slot) in sub.iter_mut().enumerate() {
+                let kk = start + i;
+                let cxk = &cx.slices[kk];
+                target_into(cxk, v, h, w.row(kk), s);
+                svd::procrustes_polar_jacobi_into(&s.b, &mut s.polar, &mut s.q);
+                cxk.repack_y_fused(&s.q, slot);
+                // The fusion: consume the slice now, while `yt` is
+                // cache-hot from the pack above. Same kernel, same FP
+                // order as the standalone mode-1 sweep.
+                slot.yk_times_v_fused_into(v, &mut s.temp);
+                yv_products += 1;
+                blas::rowhad_inplace(&mut s.temp, w.row(kk));
+                acc.axpy(1.0, &s.temp);
+            }
+            (acc, yv_products)
+        });
+    merge_fused_partials(partials, r)
+}
+
+/// Pre-arena CSR-streaming form of [`procrustes_pack_mode1`]: identical
+/// arithmetic (bitwise — pinned by `pack_fused_mode1_matches_csr_bitwise`)
+/// but every subject re-streams its original CSR slice twice (target +
+/// repack). The `xfuse` ablation's A/B arm: the wall-clock delta between
+/// this and the arena sweep is the PR's claim, measured.
+pub fn procrustes_pack_mode1_csr(
     data: &IrregularTensor,
     v: &Mat,
     h: &Mat,
@@ -159,9 +379,6 @@ pub fn procrustes_pack_mode1(
             let b = procrustes_target(xk, v, h, w.row(kk));
             let qk = crate::linalg::svd::procrustes_polar_jacobi(&b);
             slot.repack_from(xk, &qk);
-            // The fusion: consume the slice now, while `yt` is cache-hot
-            // from the pack above. Same kernel, same FP order as the
-            // standalone mode-1 sweep.
             let mut temp = slot.yk_times_v_fused(v);
             yv_products += 1;
             blas::rowhad_inplace(&mut temp, w.row(kk));
@@ -169,9 +386,13 @@ pub fn procrustes_pack_mode1(
         }
         (acc, yv_products)
     });
-    // Seed the merge with the first chunk's partial — the exact fold
-    // structure `mttkrp_mode1` uses — so even the signs of exact zeros
-    // come out bitwise identical to the standalone sweep.
+    merge_fused_partials(partials, r)
+}
+
+/// Seed the merge with the first chunk's partial — the exact fold
+/// structure `mttkrp_mode1` uses — so even the signs of exact zeros come
+/// out bitwise identical to the standalone sweep.
+fn merge_fused_partials(partials: Vec<(Mat, u64)>, r: usize) -> FusedPackSweep {
     let mut parts = partials.into_iter();
     let (mut m1, mut yv_products) = match parts.next() {
         Some(first) => first,
@@ -184,10 +405,55 @@ pub fn procrustes_pack_mode1(
     FusedPackSweep { m1, yv_products }
 }
 
-/// Run step 1 for all subjects on the pool into a fresh [`PackedY`],
-/// chunked by an nnz-balanced plan derived from `data`. (Convenience
-/// wrapper over [`procrustes_all_into`]; the ALS loop holds a persistent
-/// arena and plan instead.)
+/// The **unfused two-sweep reference structure** for the X-traversal
+/// claim: sweep 1 computes every target and `Q_k` (one cold `C_k` pass
+/// per subject), sweep 2 repacks every `Y_k` in a separate pass over the
+/// arena (a second cold re-stream per subject, tallied via
+/// [`CompactSlice::repack_y`]) — 2 cold X passes per subject per
+/// iteration where the fused sweeps do 1. Bitwise identical outputs;
+/// `metrics::flops` pins the 2→1 counter drop against this, and the
+/// `xfuse` ablation times it.
+pub fn procrustes_then_repack_separate(
+    cx: &CompactX,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    y: &mut PackedY,
+) {
+    // Sweep 1 — targets + polar factors for every subject (chunk-ordered).
+    let per_chunk: Vec<Vec<Mat>> = pool.par_plan_results(plan, |range| {
+        let mut s = SubjectScratch::new();
+        let mut qs = Vec::with_capacity(range.len());
+        for kk in range {
+            target_into(&cx.slices[kk], v, h, w.row(kk), &mut s);
+            svd::procrustes_polar_jacobi_into(&s.b, &mut s.polar, &mut s.q);
+            qs.push(s.q.clone());
+        }
+        qs
+    });
+    let mut qs = Vec::with_capacity(cx.k());
+    for chunk_qs in per_chunk {
+        qs.extend(chunk_qs);
+    }
+    // Sweep 2 — repack every slice in a second pass over the arena: by
+    // now subject k's values are long out of cache (the whole cohort's
+    // targets ran in between), so this is the honest cold re-stream the
+    // fused structure eliminates.
+    y.j_dim = cx.j();
+    y.resize_slots(cx.k());
+    pool.par_plan_chunks_mut(&mut y.slices, plan, |start, sub| {
+        for (i, slot) in sub.iter_mut().enumerate() {
+            cx.slices[start + i].repack_y(&qs[start + i], slot);
+        }
+    });
+}
+
+/// Run step 1 for all subjects into a fresh [`PackedY`], building a
+/// one-shot arena + scratch internally. (Convenience wrapper over
+/// [`procrustes_all_into`]; the ALS loop holds the persistent arena,
+/// scratch, and plan instead.)
 pub fn procrustes_all(
     data: &IrregularTensor,
     v: &Mat,
@@ -198,7 +464,9 @@ pub fn procrustes_all(
 ) -> (PackedY, Option<Vec<Mat>>) {
     let mut y = PackedY::empty(data.j());
     let plan = subject_plan(data);
-    let qs = procrustes_all_into(data, v, h, w, pool, &plan, keep_q, &mut y);
+    let cx = CompactX::pack(data, pool, &plan);
+    let mut scratch = SubjectScratch::for_plan(&plan);
+    let qs = procrustes_all_into(&cx, v, h, w, pool, &plan, keep_q, &mut y, &mut scratch);
     (y, qs)
 }
 
@@ -231,6 +499,11 @@ mod tests {
             }
         }
         Csr::from_triplets(rows, cols, trips)
+    }
+
+    fn bits_eq(a: &Mat, b: &Mat) -> bool {
+        a.shape() == b.shape()
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]
@@ -282,6 +555,29 @@ mod tests {
     }
 
     #[test]
+    fn compact_and_pack_matches_csr_and_pack_bitwise() {
+        // The arena-backed per-subject path (coordinator fallback) against
+        // the original CSR path: identical Y_k and Q_k bits, across
+        // scratch-reusing calls with heterogeneous shapes.
+        let mut rng = Pcg64::seed(119);
+        let r = 4;
+        let mut s = SubjectScratch::new();
+        for round in 0..4 {
+            let rows = 4 + rng.range(0, 12);
+            let xk = random_sparse(&mut rng, rows, 11, 0.3);
+            let cx = CompactSlice::pack(&xk);
+            let v = Mat::rand_normal(11, r, &mut rng);
+            let h = Mat::rand_normal(r, r, &mut rng);
+            let s_k: Vec<f64> = (0..r).map(|_| rng.uniform(0.5, 2.0)).collect();
+            let (p_csr, q_csr) = procrustes_and_pack(&xk, &v, &h, &s_k, true);
+            let (p_cx, q_cx) = procrustes_and_pack_compact(&cx, &v, &h, &s_k, true, &mut s);
+            assert!(bits_eq(&p_cx.yt, &p_csr.yt), "round {round}");
+            assert!(bits_eq(&q_cx.unwrap(), &q_csr.unwrap()), "round {round}");
+            assert_eq!(p_cx.support, p_csr.support, "round {round}");
+        }
+    }
+
+    #[test]
     fn parallel_matches_serial() {
         let mut rng = Pcg64::seed(113);
         let r = 3;
@@ -319,11 +615,14 @@ mod tests {
         let mut y = crate::parafac2::intermediate::PackedY::empty(data.j());
         let pool = Pool::new(3);
         let plan = subject_plan(&data);
+        let cx = CompactX::pack(&data, &pool, &plan);
+        let mut scratch = SubjectScratch::for_plan(&plan);
         for round in 0..4 {
             let v = Mat::rand_normal(8, r, &mut rng);
             let h = Mat::rand_normal(r, r, &mut rng);
             let w = Mat::rand_uniform(5, r, &mut rng);
-            let _ = procrustes_all_into(&data, &v, &h, &w, &pool, &plan, false, &mut y);
+            let _ =
+                procrustes_all_into(&cx, &v, &h, &w, &pool, &plan, false, &mut y, &mut scratch);
             let (fresh, _) = procrustes_all(&data, &v, &h, &w, &Pool::serial(), false);
             for k in 0..data.k() {
                 assert_eq!(
@@ -341,7 +640,8 @@ mod tests {
         // bitwise indistinguishable from "repack, then standalone mode-1
         // MTTKRP" — same arena contents, same M¹ bits — on the same plan,
         // for fixed and balanced (heavy-tailed ⇒ uneven) boundaries, on
-        // serial and parallel pools, across arena-reusing rounds.
+        // serial and parallel pools, across arena-reusing rounds; and the
+        // two-sweep separate-X reference must agree bitwise too.
         let mut rng = Pcg64::seed(116);
         let r = 3;
         let k = 70; // crosses the SUBJECT_CHUNK boundary
@@ -358,17 +658,23 @@ mod tests {
         for plan in [ChunkPlan::fixed(k), balanced] {
             for workers in [1usize, 4] {
                 let pool = Pool::new(workers);
+                let cx = CompactX::pack(&data, &pool, &plan);
+                let mut fused_scratch = SubjectScratch::for_plan(&plan);
+                let mut sep_scratch = SubjectScratch::for_plan(&plan);
                 let mut y_fused = PackedY::empty(data.j());
                 let mut y_sep = PackedY::empty(data.j());
+                let mut y_two = PackedY::empty(data.j());
                 let mut rng2 = Pcg64::seed(991);
                 for round in 0..3 {
                     let v = Mat::rand_normal(40, r, &mut rng2);
                     let h = Mat::rand_normal(r, r, &mut rng2);
                     let w = Mat::rand_uniform(k, r, &mut rng2);
-                    let sweep =
-                        procrustes_pack_mode1(&data, &v, &h, &w, &pool, &plan, &mut y_fused);
-                    let _ =
-                        procrustes_all_into(&data, &v, &h, &w, &pool, &plan, false, &mut y_sep);
+                    let sweep = procrustes_pack_mode1(
+                        &cx, &v, &h, &w, &pool, &plan, &mut y_fused, &mut fused_scratch,
+                    );
+                    let _ = procrustes_all_into(
+                        &cx, &v, &h, &w, &pool, &plan, false, &mut y_sep, &mut sep_scratch,
+                    );
                     let m1 = mttkrp::mttkrp_mode1(&y_sep, &v, &w, &pool, &plan);
                     assert_eq!(
                         sweep.m1.data(),
@@ -376,14 +682,62 @@ mod tests {
                         "round {round}, {workers} workers"
                     );
                     assert_eq!(sweep.yv_products, k as u64);
+                    procrustes_then_repack_separate(&cx, &v, &h, &w, &pool, &plan, &mut y_two);
                     for kk in 0..k {
                         assert_eq!(
                             y_fused.slices[kk].yt.data(),
                             y_sep.slices[kk].yt.data(),
                             "round {round} subject {kk}"
                         );
+                        assert_eq!(
+                            y_fused.slices[kk].yt.data(),
+                            y_two.slices[kk].yt.data(),
+                            "two-sweep reference, round {round} subject {kk}"
+                        );
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_fused_mode1_matches_csr_bitwise() {
+        // The arena sweep against the pre-arena CSR-streaming sweep (the
+        // xfuse ablation's two arms): identical M¹ and arena contents,
+        // bit for bit — the arena changes where operands live, never the
+        // arithmetic.
+        let mut rng = Pcg64::seed(118);
+        let r = 5;
+        let k = 40;
+        let slices: Vec<Csr> = (0..k)
+            .map(|_| {
+                let rows = 3 + rng.range(0, 9);
+                random_sparse(&mut rng, rows, 25, 0.15)
+            })
+            .collect();
+        let data = IrregularTensor::new(slices);
+        let plan = subject_plan(&data);
+        let pool = Pool::new(3);
+        let cx = CompactX::pack(&data, &pool, &plan);
+        let mut scratch = SubjectScratch::for_plan(&plan);
+        let mut y_arena = PackedY::empty(data.j());
+        let mut y_csr = PackedY::empty(data.j());
+        let mut rng2 = Pcg64::seed(313);
+        for round in 0..3 {
+            let v = Mat::rand_normal(25, r, &mut rng2);
+            let h = Mat::rand_normal(r, r, &mut rng2);
+            let w = Mat::rand_uniform(k, r, &mut rng2);
+            let a = procrustes_pack_mode1(
+                &cx, &v, &h, &w, &pool, &plan, &mut y_arena, &mut scratch,
+            );
+            let b = procrustes_pack_mode1_csr(&data, &v, &h, &w, &pool, &plan, &mut y_csr);
+            assert!(bits_eq(&a.m1, &b.m1), "round {round}");
+            assert_eq!(a.yv_products, b.yv_products);
+            for kk in 0..k {
+                assert!(
+                    bits_eq(&y_arena.slices[kk].yt, &y_csr.slices[kk].yt),
+                    "round {round} subject {kk}"
+                );
             }
         }
     }

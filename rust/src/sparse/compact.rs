@@ -1,0 +1,419 @@
+//! Resident compact-X arena: the data-side twin of the packed-`Y` arena.
+//!
+//! The values and column supports of the input slices `X_k` are
+//! **iteration-invariant** — only the factors change across ALS sweeps —
+//! yet the pre-arena Procrustes step re-streamed each original CSR slice
+//! twice per iteration: once for the target stage `C_k = X_k·V` and once
+//! for the repack `Y_k = Q_kᵀX_k`. DPar2 (Jang & Kang, 2022) and COPA
+//! (Afshar et al., 2018) both show that packing the irregular slices
+//! *once* into a support-compact reusable form and running every
+//! per-iteration product off that residency is where the next constant
+//! factor lives.
+//!
+//! [`CompactSlice`] stores, per subject, exactly what the two Procrustes
+//! stages need and nothing else:
+//!
+//! * `values` — the stored nonzeros in CSR order (bit-copies of the
+//!   originals, so every product is bitwise identical to the CSR path),
+//! * `local_cols` — for each nonzero, the *local* index of its column in
+//!   the slice's sorted `support` (the same mapping
+//!   `parafac2::intermediate::PackedSlice` uses, computed once here),
+//! * `support` — the sorted nonzero column ids (`c_k` of paper §3.3),
+//! * `row_ptr` — CSR row boundaries, so the repack can recover the row
+//!   index of each entry.
+//!
+//! Per iteration the target stage gathers the support rows of `V` into a
+//! contiguous `c_k × R` panel and runs `C_k = X̃_k·V` against it on the
+//! existing shape-A micro-kernel ([`crate::linalg::kernels::sparse_row_axpy`]
+//! with local column ids — same per-entry accumulation order as
+//! `Csr::matmul_dense`, hence bitwise identical); the repack then reads
+//! the *same* cache-resident compact values instead of re-streaming the
+//! original CSR. That makes **one cold pass over each subject's data per
+//! iteration**, counted by the per-slice [`x_traversals`] tally exactly
+//! like the packed-`Y` arena counts its cold traversals: the pack and the
+//! cold `C_k` read tally, the pack-riding repack read does not, and a
+//! standalone repack (the unfused two-sweep reference structure) does —
+//! so the 2→1 drop is assertable, not just claimed (`metrics::flops`).
+//!
+//! [`x_traversals`]: CompactX::x_traversals
+
+use crate::linalg::{kernels, Mat};
+use crate::sparse::{Csr, IrregularTensor};
+use crate::threadpool::{ChunkPlan, Pool};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One subject's support-compact resident copy of `X_k`.
+#[derive(Debug)]
+pub struct CompactSlice {
+    /// Observation count `I_k`.
+    rows: usize,
+    /// Sorted original column ids with at least one nonzero (length `c_k`).
+    pub support: Vec<u32>,
+    /// Per-nonzero local support index, CSR entry order (length `nnz_k`).
+    pub local_cols: Vec<u32>,
+    /// Per-nonzero value, CSR entry order (bit-copies of the originals).
+    pub values: Vec<f64>,
+    /// Row boundaries into `values`/`local_cols` (`rows + 1` entries).
+    pub row_ptr: Vec<usize>,
+    /// `‖X_k‖²_F`, summed in CSR entry order at pack time — bitwise
+    /// identical to `Csr::fro_norm_sq`, so the fit's constant term never
+    /// needs another pass over the original CSR.
+    norm_sq: f64,
+    /// Lifetime tally of **cold streaming passes** over this subject's X
+    /// data: the one-time pack from CSR, each per-iteration `C_k = X̃_k·V`
+    /// read, and any *standalone* repack read
+    /// ([`CompactSlice::repack_y`]). The pack-riding repack
+    /// ([`CompactSlice::repack_y_fused`]) is not a traversal — it consumes
+    /// the values the `C_k` stage just streamed, which is the whole point
+    /// of the arena (mirrors `PackedSlice`'s `yk_times_v_fused`
+    /// convention).
+    x_traversal_count: AtomicU64,
+}
+
+impl Clone for CompactSlice {
+    fn clone(&self) -> CompactSlice {
+        CompactSlice {
+            rows: self.rows,
+            support: self.support.clone(),
+            local_cols: self.local_cols.clone(),
+            values: self.values.clone(),
+            row_ptr: self.row_ptr.clone(),
+            norm_sq: self.norm_sq,
+            x_traversal_count: AtomicU64::new(self.x_traversal_count.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl CompactSlice {
+    /// Pack one CSR slice (the one-time cold stream over the original;
+    /// tallied as a traversal).
+    pub fn pack(xk: &Csr) -> CompactSlice {
+        let support = xk.col_support();
+        // column id → local index scratch, only needed here
+        let mut local = vec![u32::MAX; xk.cols()];
+        for (c, &j) in support.iter().enumerate() {
+            local[j as usize] = c as u32;
+        }
+        let local_cols: Vec<u32> = xk.indices().iter().map(|&j| local[j as usize]).collect();
+        let values = xk.values().to_vec();
+        let norm_sq: f64 = values.iter().map(|v| v * v).sum();
+        CompactSlice {
+            rows: xk.rows(),
+            support,
+            local_cols,
+            values,
+            row_ptr: xk.indptr().to_vec(),
+            norm_sq,
+            x_traversal_count: AtomicU64::new(1),
+        }
+    }
+
+    /// `I_k`.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// `nnz(X_k)`.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Support size `c_k`.
+    #[inline]
+    pub fn c_k(&self) -> usize {
+        self.support.len()
+    }
+
+    /// `‖X_k‖²_F` from the pack-time cache (bitwise identical to
+    /// `Csr::fro_norm_sq` on the source slice).
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        self.norm_sq
+    }
+
+    /// Entry range of row `i`: `(local column ids, values)`.
+    #[inline]
+    pub fn row_parts(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        (&self.local_cols[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Gather the support rows of a `J × R` factor into a contiguous
+    /// `c_k × R` panel (`V_c` of the paper's Fig. 2), reusing `panel`'s
+    /// buffer. Rows are bit-copies, so products against the panel are
+    /// bitwise identical to indexing the full factor.
+    pub fn gather_v_into(&self, v: &Mat, panel: &mut Mat) {
+        // every panel row is copied in full, so skip the zero-fill pass
+        panel.reset_for_overwrite(self.support.len(), v.cols());
+        for (c, &j) in self.support.iter().enumerate() {
+            panel.row_mut(c).copy_from_slice(v.row(j as usize));
+        }
+    }
+
+    /// `C_k = X̃_k · V_c` — the Procrustes target's data stage, and the
+    /// iteration's **one cold pass** over this subject's values (tallied).
+    /// `panel` must be the [`CompactSlice::gather_v_into`] panel of the
+    /// factor; each row streams on the shape-A register-blocked
+    /// micro-kernel with the precomputed local column ids — the identical
+    /// per-entry floating-point sequence `Csr::matmul_dense` produces
+    /// against the full factor.
+    pub fn times_v_into(&self, panel: &Mat, out: &mut Mat) {
+        debug_assert_eq!(panel.rows(), self.support.len(), "panel/support mismatch");
+        self.x_traversal_count.fetch_add(1, Ordering::Relaxed);
+        out.reset_to_zeros(self.rows, panel.cols());
+        for i in 0..self.rows {
+            let (cols, vals) = self.row_parts(i);
+            kernels::sparse_row_axpy(vals, cols, panel, out.row_mut(i));
+        }
+    }
+
+    /// Standalone repack `Y_k = Q_kᵀX̃_k` into the packed-`Y` arena slot —
+    /// a **cold** re-stream of the compact values (tallied): the unfused
+    /// reference structure where the repack runs in its own sweep instead
+    /// of riding the `C_k` pass.
+    pub fn repack_y(&self, qk: &Mat, slot: &mut crate::parafac2::intermediate::PackedSlice) {
+        self.x_traversal_count.fetch_add(1, Ordering::Relaxed);
+        slot.repack_from_compact(self, qk);
+    }
+
+    /// Repack `Y_k = Q_kᵀX̃_k` **fused into the `C_k` pass**: call
+    /// immediately after [`CompactSlice::times_v_into`] on the same slice,
+    /// while the compact values are still cache-resident — same
+    /// arithmetic, same accumulation order, *not* a traversal.
+    pub fn repack_y_fused(
+        &self,
+        qk: &Mat,
+        slot: &mut crate::parafac2::intermediate::PackedSlice,
+    ) {
+        slot.repack_from_compact(self, qk);
+    }
+
+    /// Record one cold streaming pass (callers that consume the raw
+    /// compact buffers directly).
+    pub fn note_traversal(&self) {
+        self.x_traversal_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lifetime cold-pass tally of this slice.
+    pub fn x_traversals(&self) -> u64 {
+        self.x_traversal_count.load(Ordering::Relaxed)
+    }
+
+    /// Heap bytes of the resident copy (memory accounting; the arena is a
+    /// deliberate residency-for-traffic trade, so its footprint is
+    /// first-class in the bench counters).
+    pub fn heap_bytes(&self) -> u64 {
+        (self.support.capacity() * 4
+            + self.local_cols.capacity() * 4
+            + self.values.capacity() * 8
+            + self.row_ptr.capacity() * std::mem::size_of::<usize>()) as u64
+    }
+}
+
+/// The per-fit resident arena: one [`CompactSlice`] per subject, packed
+/// once at fit start (pool-parallel over the fit's chunk plan) and read by
+/// every subsequent Procrustes sweep.
+#[derive(Clone, Debug)]
+pub struct CompactX {
+    pub slices: Vec<CompactSlice>,
+    /// Shared variable count J.
+    j_dim: usize,
+}
+
+impl CompactX {
+    /// Pack every slice of `data` (chunked on the pool; per-slice packs
+    /// are independent, so the result is identical for any worker count).
+    pub fn pack(data: &IrregularTensor, pool: &Pool, plan: &ChunkPlan) -> CompactX {
+        let per_chunk: Vec<Vec<CompactSlice>> = pool.par_plan_results(plan, |range| {
+            range.map(|k| CompactSlice::pack(data.slice(k))).collect()
+        });
+        let mut slices = Vec::with_capacity(data.k());
+        for chunk in per_chunk {
+            slices.extend(chunk);
+        }
+        CompactX { slices, j_dim: data.j() }
+    }
+
+    /// Serial pack (tests / small tools).
+    pub fn pack_serial(data: &IrregularTensor) -> CompactX {
+        CompactX {
+            slices: (0..data.k()).map(|k| CompactSlice::pack(data.slice(k))).collect(),
+            j_dim: data.j(),
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.slices.len()
+    }
+
+    #[inline]
+    pub fn j(&self) -> usize {
+        self.j_dim
+    }
+
+    /// Total resident nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.slices.iter().map(|s| s.nnz()).sum()
+    }
+
+    /// `Σ_k ‖X_k‖²_F` — bitwise identical to
+    /// [`IrregularTensor::fro_norm_sq`] (same per-slice entry order, same
+    /// ascending-`k` fold).
+    pub fn norm_sq(&self) -> f64 {
+        self.slices.iter().map(|s| s.norm_sq()).sum()
+    }
+
+    /// Total cold X passes ever performed through this arena (see
+    /// [`CompactSlice`] for what counts). The arena-backed ALS iteration
+    /// performs exactly **one** per subject — asserted in
+    /// `metrics::flops` and end-to-end in `parafac2::als`.
+    pub fn x_traversals(&self) -> u64 {
+        self.slices.iter().map(|s| s.x_traversals()).sum()
+    }
+
+    /// Resident footprint of the whole arena.
+    pub fn heap_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.heap_bytes()).sum()
+    }
+
+    /// Largest `I_k` (scratch sizing diagnostics).
+    pub fn max_i_k(&self) -> usize {
+        self.slices.iter().map(|s| s.rows()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut trips = vec![(0, 0, 1.0)];
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.chance(density) {
+                    trips.push((i, j, rng.normal()));
+                }
+            }
+        }
+        Csr::from_triplets(rows, cols, trips)
+    }
+
+    #[test]
+    fn pack_preserves_structure_and_values() {
+        let mut rng = Pcg64::seed(211);
+        let xk = random_sparse(&mut rng, 9, 14, 0.2);
+        let c = CompactSlice::pack(&xk);
+        assert_eq!(c.rows(), xk.rows());
+        assert_eq!(c.nnz(), xk.nnz());
+        assert_eq!(c.support, xk.col_support());
+        assert_eq!(c.row_ptr, xk.indptr());
+        // values are bit-copies in CSR order
+        for (a, b) in c.values.iter().zip(xk.values()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // local ids map back to the original columns
+        for (pos, &j) in xk.indices().iter().enumerate() {
+            assert_eq!(c.support[c.local_cols[pos] as usize], j);
+        }
+        // pack counts as the one-time cold stream
+        assert_eq!(c.x_traversals(), 1);
+    }
+
+    #[test]
+    fn norm_sq_bitwise_matches_csr() {
+        let mut rng = Pcg64::seed(212);
+        let slices: Vec<Csr> = (0..6).map(|_| random_sparse(&mut rng, 7, 11, 0.3)).collect();
+        let data = IrregularTensor::new(slices);
+        let cx = CompactX::pack_serial(&data);
+        assert_eq!(cx.norm_sq().to_bits(), data.fro_norm_sq().to_bits());
+        for k in 0..data.k() {
+            assert_eq!(cx.slices[k].norm_sq().to_bits(), data.slice(k).fro_norm_sq().to_bits());
+        }
+    }
+
+    #[test]
+    fn times_v_bitwise_matches_csr_matmul_dense() {
+        // THE arena contract: the gathered-panel product must reproduce
+        // the CSR product bit for bit, across the kernel layer's
+        // monomorphized and runtime-width paths.
+        let mut rng = Pcg64::seed(213);
+        for &r in &[1usize, 3, 8, 17] {
+            let xk = random_sparse(&mut rng, 10, 20 + r, 0.25);
+            let v = Mat::rand_normal(20 + r, r, &mut rng);
+            let c = CompactSlice::pack(&xk);
+            let mut panel = Mat::zeros(0, 0);
+            let mut out = Mat::zeros(0, 0);
+            c.gather_v_into(&v, &mut panel);
+            c.times_v_into(&panel, &mut out);
+            let want = xk.matmul_dense(&v);
+            assert_eq!(out.shape(), want.shape(), "R={r}");
+            for (a, b) in out.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "R={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn traversal_tallies_pack_cold_and_standalone_only() {
+        let mut rng = Pcg64::seed(214);
+        let xk = random_sparse(&mut rng, 6, 9, 0.4);
+        let c = CompactSlice::pack(&xk); // +1 (pack)
+        let v = Mat::rand_normal(9, 3, &mut rng);
+        let qk = crate::linalg::random_orthonormal(6, 3, &mut rng);
+        let mut panel = Mat::zeros(0, 0);
+        let mut out = Mat::zeros(0, 0);
+        c.gather_v_into(&v, &mut panel); // gather is factor-side: no tally
+        assert_eq!(c.x_traversals(), 1);
+        c.times_v_into(&panel, &mut out); // +1 (cold C_k pass)
+        assert_eq!(c.x_traversals(), 2);
+        let mut slot = crate::parafac2::intermediate::PackedSlice::empty();
+        c.repack_y_fused(&qk, &mut slot); // rides the pass: no tally
+        assert_eq!(c.x_traversals(), 2);
+        c.repack_y(&qk, &mut slot); // standalone re-stream: +1
+        assert_eq!(c.x_traversals(), 3);
+    }
+
+    #[test]
+    fn parallel_pack_matches_serial() {
+        let mut rng = Pcg64::seed(215);
+        let slices: Vec<Csr> = (0..30)
+            .map(|kk| {
+                let (rows, dens) = if kk == 0 { (25, 0.8) } else { (5, 0.15) };
+                random_sparse(&mut rng, rows, 18, dens)
+            })
+            .collect();
+        let data = IrregularTensor::new(slices);
+        let weights: Vec<u64> = (0..data.k()).map(|k| data.slice(k).nnz() as u64).collect();
+        let plan = ChunkPlan::balanced(&weights);
+        let par = CompactX::pack(&data, &Pool::new(4), &plan);
+        let ser = CompactX::pack_serial(&data);
+        assert_eq!(par.k(), ser.k());
+        for k in 0..ser.k() {
+            assert_eq!(par.slices[k].support, ser.slices[k].support);
+            assert_eq!(par.slices[k].local_cols, ser.slices[k].local_cols);
+            assert_eq!(par.slices[k].row_ptr, ser.slices[k].row_ptr);
+            for (a, b) in par.slices[k].values.iter().zip(&ser.slices[k].values) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert!(par.heap_bytes() > 0);
+        assert_eq!(par.nnz(), data.nnz());
+    }
+
+    #[test]
+    fn heap_bytes_accounts_every_buffer() {
+        let mut rng = Pcg64::seed(216);
+        let xk = random_sparse(&mut rng, 8, 12, 0.3);
+        let c = CompactSlice::pack(&xk);
+        let floor = (c.support.len() * 4
+            + c.local_cols.len() * 4
+            + c.values.len() * 8
+            + c.row_ptr.len() * std::mem::size_of::<usize>()) as u64;
+        assert!(c.heap_bytes() >= floor, "{} < {floor}", c.heap_bytes());
+    }
+}

@@ -1,12 +1,15 @@
 //! Sparse data structures for PARAFAC2's "irregular tensors": CSR slices,
-//! the K-slice collection, the COO tensor the baseline materializes, and
+//! the K-slice collection, the resident compact-X arena the ALS loop
+//! streams per iteration, the COO tensor the baseline materializes, and
 //! file I/O.
 
+pub mod compact;
 pub mod coo;
 pub mod csr;
 pub mod io;
 pub mod irregular;
 
+pub use compact::{CompactSlice, CompactX};
 pub use coo::CooTensor3;
 pub use csr::Csr;
 pub use irregular::IrregularTensor;

@@ -375,6 +375,74 @@ impl Pool {
             .collect()
     }
 
+    /// Plan-driven parallel mutation **with per-chunk scratch**: like
+    /// [`Pool::par_plan_chunks_mut`], but additionally hands chunk `c` the
+    /// exclusive `&mut scratch[c]`. The arena-backed Procrustes sweep
+    /// keeps one scratch arena per *chunk* (plans are frozen per fit, so
+    /// the chunk count is stable and scratch buffers reach their
+    /// high-water sizes during the first iteration and are reused
+    /// thereafter — scratch assignment depends only on the chunk id, never
+    /// on which worker claims it, so results stay bitwise deterministic
+    /// across worker counts).
+    pub fn par_plan_zip_mut<T, S, R, F>(
+        &self,
+        items: &mut [T],
+        scratch: &mut [S],
+        plan: &ChunkPlan,
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        S: Send,
+        R: Send,
+        F: Fn(usize, &mut [T], &mut S) -> R + Sync,
+    {
+        let n = items.len();
+        assert!(plan.covers(n), "chunk plan does not cover the {n} items");
+        let ranges = plan.ranges();
+        let n_chunks = ranges.len();
+        assert_eq!(
+            scratch.len(),
+            n_chunks,
+            "need exactly one scratch slot per plan chunk"
+        );
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        if self.core.workers == 1 || n_chunks == 1 {
+            let mut out = Vec::with_capacity(n_chunks);
+            let mut rest: &mut [T] = items;
+            for (r, s) in ranges.iter().zip(scratch.iter_mut()) {
+                let (sub, tail) = std::mem::take(&mut rest).split_at_mut(r.end - r.start);
+                rest = tail;
+                out.push(f(r.start, sub, s));
+            }
+            return out;
+        }
+        let base = SendPtr(items.as_mut_ptr());
+        let scratch_base = SendPtr(scratch.as_mut_ptr());
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_chunks).map(|_| None).collect());
+        let task = |c: usize| {
+            let r = &ranges[c];
+            // SAFETY: plan ranges are disjoint sub-ranges of `items`
+            // (checked by `covers`), and chunk `c` is claimed by exactly
+            // one worker, so `scratch[c]` is touched by exactly one thread;
+            // the caller exclusively borrows both slices for the job.
+            let sub =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.end - r.start) };
+            let s = unsafe { &mut *scratch_base.0.add(c) };
+            let out = f(r.start, sub, s);
+            slots.lock().unwrap()[c] = Some(out);
+        };
+        self.run_job(n_chunks, &task);
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("chunk result missing"))
+            .collect()
+    }
+
     /// Fixed-size-chunk parallel mutation (see [`Pool::par_plan_chunks_mut`]
     /// for the plan-driven variant the PARAFAC2 kernels use).
     pub fn par_chunks_mut<T, R, F>(&self, items: &mut [T], chunk: usize, f: F) -> Vec<R>
@@ -616,6 +684,41 @@ mod tests {
             );
             assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64 * 3));
         }
+    }
+
+    #[test]
+    fn par_plan_zip_mut_exclusive_scratch_per_chunk() {
+        let mut w = vec![1u64; 90];
+        w[10] = 700; // heavy-tailed ⇒ uneven, multi-chunk plan
+        let plan = ChunkPlan::balanced(&w);
+        assert!(plan.n_chunks() > 1);
+        for pool in [Pool::serial(), Pool::new(4)] {
+            let mut data = vec![0u64; 90];
+            let mut scratch = vec![0u64; plan.n_chunks()];
+            let sums = pool.par_plan_zip_mut(&mut data, &mut scratch, &plan, |start, sub, s| {
+                for (i, x) in sub.iter_mut().enumerate() {
+                    *x = (start + i) as u64;
+                    *s += *x; // scratch accumulates across this chunk only
+                }
+                *s
+            });
+            assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64));
+            // per-chunk scratch sums match the chunk ranges exactly
+            for (c, r) in plan.ranges().iter().enumerate() {
+                let want: u64 = (r.start as u64..r.end as u64).sum();
+                assert_eq!(scratch[c], want, "chunk {c}");
+                assert_eq!(sums[c], want, "chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one scratch slot per plan chunk")]
+    fn par_plan_zip_mut_rejects_scratch_mismatch() {
+        let plan = ChunkPlan::fixed(8);
+        let mut data = vec![0u32; 8];
+        let mut scratch = vec![0u32; plan.n_chunks() + 1];
+        Pool::serial().par_plan_zip_mut(&mut data, &mut scratch, &plan, |_, _, _| ());
     }
 
     #[test]

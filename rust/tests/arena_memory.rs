@@ -1,0 +1,138 @@
+//! Arena memory accounting, end to end: steady-state ALS iterations must
+//! allocate **nothing** in the Procrustes phase.
+//!
+//! The resident compact-X arena, the packed-Y arena, and the per-chunk
+//! [`SubjectScratch`] reach their high-water sizes during the first sweep;
+//! from then on every per-subject temporary (gathered V panel, `C_k`,
+//! `B_k`, `D`, `Q_k`, the polar factor's internals, the fused `Y_k·V`
+//! staging) is a zero-reset of an existing buffer. This test pins that
+//! with a counting global allocator: the bytes allocated during a
+//! steady-state fused sweep are bounded by a small per-chunk constant
+//! (the chunk-ordered `M¹` partials the pool hands back) — *independent*
+//! of nnz, `I_k`, and K. A single per-subject `I_k × R` allocation
+//! sneaking back into the hot loop blows the bound by orders of
+//! magnitude.
+//!
+//! This file holds exactly one #[test]: the allocator counters are
+//! process-global, and a concurrently running sibling test would pollute
+//! the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static CALLS: AtomicU64 = AtomicU64::new(0);
+static TRACK: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            CALLS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_procrustes_phase_allocates_nothing_per_subject() {
+    use spartan::datagen::synthetic::{generate, SyntheticSpec};
+    use spartan::linalg::Mat;
+    use spartan::parafac2::intermediate::PackedY;
+    use spartan::parafac2::procrustes::{
+        procrustes_pack_mode1, scratch_heap_bytes, subject_plan, SubjectScratch,
+    };
+    use spartan::sparse::CompactX;
+    use spartan::threadpool::Pool;
+    use spartan::util::rng::Pcg64;
+
+    // Sizable cohort: any per-subject O(I_k·R) allocation in the sweep
+    // would cost ≫ the asserted bound (Σ I_k·R·8 alone is hundreds of KB).
+    // Planted rank above the fit rank R=8 (plus noise) keeps every
+    // Procrustes target solidly full-rank, so the polar factor never
+    // takes the (allocating) rank-deficiency completion path in steady
+    // state — that path is for degenerate cohorts, not this test.
+    let data = generate(&SyntheticSpec {
+        k: 90,
+        j: 120,
+        max_i_k: 40,
+        target_nnz: 40_000,
+        rank: 10,
+        noise: 0.05,
+        seed: 21,
+    })
+    .tensor;
+    let r = 8usize;
+    let mut rng = Pcg64::seed(77);
+    // Serial pool: the sweep runs inline on this thread, so the allocator
+    // counters see exactly the sweep's own traffic (worker threads would
+    // interleave their pool bookkeeping nondeterministically).
+    let pool = Pool::serial();
+    let plan = subject_plan(&data);
+    let cx = CompactX::pack(&data, &pool, &plan);
+    let mut scratch = SubjectScratch::for_plan(&plan);
+    let mut y = PackedY::empty(data.j());
+    let h = Mat::rand_normal(r, r, &mut rng);
+    let v = Mat::rand_uniform(data.j(), r, &mut rng);
+    let w = Mat::rand_uniform(data.k(), r, &mut rng);
+
+    let k = data.k() as u64;
+    // Warmup: two sweeps grow every arena/scratch buffer to its
+    // high-water size (iteration 1 is allowed to allocate).
+    for _ in 0..2 {
+        let _ = procrustes_pack_mode1(&cx, &v, &h, &w, &pool, &plan, &mut y, &mut scratch);
+    }
+
+    // Steady state: arena footprints must be pinned...
+    let cx_heap = cx.heap_bytes();
+    let y_heap = y.heap_bytes();
+    let scratch_heap = scratch_heap_bytes(&scratch);
+    let x_before = cx.x_traversals();
+
+    TRACK.store(true, Ordering::SeqCst);
+    let sweep = procrustes_pack_mode1(&cx, &v, &h, &w, &pool, &plan, &mut y, &mut scratch);
+    TRACK.store(false, Ordering::SeqCst);
+    let bytes = BYTES.load(Ordering::SeqCst);
+    let calls = CALLS.load(Ordering::SeqCst);
+
+    // ...and unchanged by the measured sweep.
+    assert_eq!(cx.heap_bytes(), cx_heap, "compact-X arena grew in steady state");
+    assert_eq!(y.heap_bytes(), y_heap, "packed-Y arena grew in steady state");
+    assert_eq!(
+        scratch_heap_bytes(&scratch),
+        scratch_heap,
+        "sweep scratch grew in steady state"
+    );
+    // The arena's heap accounting covers the real resident buffers.
+    assert!(cx_heap as usize >= cx.nnz() * (8 + 4), "compact-X heap_bytes undercounts");
+
+    // Exactly one cold X pass per subject in the sweep (satellite
+    // invariant: x_traversals == K per iteration).
+    assert_eq!(cx.x_traversals() - x_before, k);
+    assert_eq!(sweep.yv_products, k);
+
+    // The only allocations left are the pool's chunk-ordered result
+    // collection and the per-chunk `M¹` partial (R×R each) — O(n_chunks),
+    // never O(K) or O(nnz).
+    let n_chunks = plan.n_chunks() as u64;
+    let bound = 8_192 + n_chunks * (8 * 8 * 8 + 1024);
+    assert!(
+        bytes <= bound,
+        "steady-state Procrustes sweep allocated {bytes} bytes in {calls} calls \
+         (bound {bound}, {n_chunks} chunks) — a per-subject allocation crept back \
+         into the hot loop"
+    );
+    // Paranoia: the bound itself must be far below what one per-subject
+    // temporary set would cost on this cohort, or the assertion is toothless.
+    let per_subject_floor: u64 = (0..data.k()).map(|kk| (data.i_k(kk) * r * 8) as u64).sum();
+    assert!(bound * 4 < per_subject_floor, "cohort too small for the bound to have teeth");
+}

@@ -345,5 +345,9 @@ fn fused_sweep_counters_hold_end_to_end_on_kernel_layer() {
         // … and exactly one cold packed-slice traversal per subject per
         // iteration (mode 2), plus the final report's mode-3 pass.
         assert_eq!(model.stats.traversals, (iters as u64 + 1) * k, "iters={iters}");
+        // … and, through the resident compact-X arena, exactly one cold
+        // X pass per subject per iteration, plus the one-time pack and
+        // the final report pass.
+        assert_eq!(model.stats.x_traversals, (iters as u64 + 2) * k, "iters={iters}");
     }
 }
