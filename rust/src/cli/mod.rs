@@ -70,6 +70,16 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Value of a mandatory option, with the standard error message.
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.get(key).ok_or_else(|| format!("--{key} required"))
+    }
+
+    /// Mandatory integer option (parse error or missing both reported).
+    pub fn require_u64(&self, key: &str) -> Result<u64, String> {
+        self.get_u64(key)?.ok_or_else(|| format!("--{key} required"))
+    }
+
     /// Keys the user supplied (for unknown-option detection).
     pub fn option_keys(&self) -> Vec<&str> {
         self.options
@@ -124,6 +134,17 @@ mod tests {
         let a = parse("cmd --verbose --rank 3");
         assert!(a.has_flag("verbose"));
         assert_eq!(a.get("rank"), Some("3"));
+    }
+
+    #[test]
+    fn require_reports_missing_and_bad_values() {
+        let a = parse("cmd --id 7");
+        assert_eq!(a.require("id").unwrap(), "7");
+        assert_eq!(a.require_u64("id").unwrap(), 7);
+        assert!(a.require("addr").unwrap_err().contains("--addr required"));
+        assert!(a.require_u64("addr").unwrap_err().contains("--addr required"));
+        let bad = parse("cmd --id seven");
+        assert!(bad.require_u64("id").is_err());
     }
 
     #[test]

@@ -55,6 +55,42 @@
 //! fused-vs-separate test in `parafac2::procrustes`, and the
 //! `ablations --filter xfuse` A/B with the new stage.
 //!
+//! ## Fit sessions & the service
+//!
+//! The ALS loop is inverted into a resumable [`parafac2::FitSession`]:
+//! construction validates the config, charges the session's arena
+//! estimate against a (shareable) [`util::membudget::MemBudget`] via an
+//! RAII `SharedCharge` (admission *enforced* — construction fails with
+//! `FitError::OutOfMemory` before packing when it can't fit), packs the
+//! compact-X arena, and runs init (or adopts a caller-supplied
+//! [`parafac2::WarmStart`], e.g. a previous model's `H/V/W`). Each
+//! [`FitSession::step`](parafac2::FitSession::step) is one ALS iteration
+//! returning an `IterationRecord`; a cancel flag is honored at iteration
+//! boundaries (within one iteration, leaving the trajectory at the last
+//! completed iterate — resumable bitwise);
+//! [`FitSession::finish`](parafac2::FitSession::finish) runs the final
+//! Q-pass and yields the model. `fit_parafac2` is now a thin driver over
+//! this, bitwise identical to the old batch loop (golden gate unchanged).
+//! Fit-only sessions that own their data drop the original CSR slices
+//! after the pack (the arena serves every fit-path read) and shrink
+//! their charge accordingly — the memory diet is asserted through
+//! `MemBudget::peak()`.
+//!
+//! [`service`] builds the "heavy traffic" layer on top: a resident
+//! [`service::Service`] multiplexes many concurrent fits over **one**
+//! shared [`threadpool::Pool`] (the pool's FIFO job queue interleaves
+//! chunk grants; per-job `ChunkPlan`s, subjects never shard across jobs,
+//! so every fit stays bitwise identical to running alone) with
+//! membudget admission (structured reject when a job could never fit,
+//! FIFO queueing when it merely doesn't fit *now*), a bounded queue, a
+//! job-state API (submit / status with per-iteration progress / cancel /
+//! result), and a warm-model cache keyed by cohort id so re-fits skip
+//! init. `spartan serve` exposes it as a newline-delimited-JSON TCP
+//! daemon ([`service::server`], std `TcpListener`, no new deps); factor
+//! matrices travel as IEEE-754 bit patterns ([`service::protocol`]), so
+//! a model fetched over the wire is bit-identical to the fit. End-to-end
+//! coverage: `rust/tests/service_e2e.rs` and CI's `service-smoke` step.
+//!
 //! ## Benchmarks
 //!
 //! The paper-reproduction benches live under `rust/benches/` and run with
@@ -113,6 +149,7 @@ pub mod metrics;
 pub mod parafac2;
 pub mod pheno;
 pub mod runtime;
+pub mod service;
 pub mod sparse;
 pub mod threadpool;
 pub mod util;

@@ -7,6 +7,8 @@
 //! * `inspect`         print dataset summary statistics
 //! * `artifacts-check` validate + smoke-execute the AOT artifacts
 //! * `bench-diff`      gate bench_results medians against a previous run
+//! * `serve`           resident fit daemon (shared pool, admission, warm cache)
+//! * `submit`/`status`/`cancel`/`result`/`serve-stop`  clients for `serve`
 //!
 //! Run `spartan help` for options.
 
@@ -19,6 +21,7 @@ use spartan::parafac2::{fit_parafac2, FitError, Parafac2Model};
 use spartan::runtime::{ArtifactRegistry, PjrtContext};
 use spartan::sparse::{io as tio, IrregularTensor};
 use spartan::util::humansize;
+use spartan::util::json::Json;
 use std::path::{Path, PathBuf};
 
 fn main() {
@@ -49,6 +52,12 @@ fn run(args: &Args) -> Result<()> {
         Some("inspect") => cmd_inspect(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("bench-diff") => cmd_bench_diff(args),
+        Some("serve") => cmd_serve(args),
+        Some("serve-stop") => cmd_serve_stop(args),
+        Some("submit") => cmd_submit(args),
+        Some("status") => cmd_status(args),
+        Some("cancel") => cmd_cancel(args),
+        Some("result") => cmd_result(args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -86,6 +95,23 @@ USAGE: spartan <subcommand> [options]
            (diff per-cell bench_results/*.json iter_secs medians; exit 1
             when any cell with enough samples regresses past the gate —
             CI's bench-trend job)
+
+  serve    [--addr 127.0.0.1:7473] [--workers N] [--mem-budget 4GiB]
+           [--max-pending N] [--warm-cache N]
+           (resident fit daemon: many concurrent fits on one shared pool,
+            membudget admission control, warm-started cohort re-fits;
+            newline-delimited JSON over TCP)
+
+  submit   --input FILE --rank R [--addr A] [--engine spartan|baseline]
+           [--max-iters N] [--tol T] [--nonneg] [--unconstrained]
+           [--seed S] [--cohort ID] [--wait]
+           (queue a fit on the daemon; --cohort opts into warm-starting
+            from that cohort's previous factors; --wait polls to completion)
+
+  status   --id N [--addr A]
+  cancel   --id N [--addr A]       (stops within one ALS iteration)
+  result   --id N [--addr A] [--save-model DIR]
+  serve-stop [--addr A]            (ask the daemon to shut down)
 
 Environment: SPARTAN_LOG=debug|info|warn|error
 "#;
@@ -433,6 +459,148 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
     }
     println!("all artifacts compile and execute");
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Service daemon & clients
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use spartan::service::server::ServeConfig;
+    args.reject_unknown(&["addr", "workers", "mem-budget", "max-pending", "warm-cache"])
+        .map_err(|e| anyhow!(e))?;
+    let mut cfg = ServeConfig::default();
+    if let Some(a) = args.get("addr") {
+        cfg.addr = a.to_string();
+    }
+    if let Some(w) = args.get_usize("workers").map_err(|e| anyhow!(e))? {
+        cfg.service.workers = w;
+    }
+    if let Some(b) = args.get("mem-budget") {
+        cfg.service.mem_budget = Some(humansize::parse_bytes(b).context("bad --mem-budget")?);
+    }
+    if let Some(n) = args.get_usize("max-pending").map_err(|e| anyhow!(e))? {
+        cfg.service.max_pending = n;
+    }
+    if let Some(n) = args.get_usize("warm-cache").map_err(|e| anyhow!(e))? {
+        cfg.service.warm_cache = n;
+    }
+    spartan::service::server::serve(&cfg).map_err(|e| anyhow!("{e}"))
+}
+
+fn cmd_serve_stop(args: &Args) -> Result<()> {
+    args.reject_unknown(&["addr"]).map_err(|e| anyhow!(e))?;
+    let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
+    spartan::service::server::shutdown(addr).map_err(|e| anyhow!("{e}"))?;
+    println!("server at {addr} stopping");
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    use spartan::service::server::{self, SubmitRequest};
+    args.reject_unknown(&[
+        "input", "rank", "addr", "engine", "max-iters", "tol", "nonneg", "unconstrained",
+        "seed", "cohort", "wait",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
+    let req = SubmitRequest {
+        input: args.require("input").map_err(|e| anyhow!(e))?.to_string(),
+        rank: args
+            .get_usize("rank")
+            .map_err(|e| anyhow!(e))?
+            .context("--rank required")?,
+        max_iters: args.get_usize("max-iters").map_err(|e| anyhow!(e))?,
+        tol: args.get_f64("tol").map_err(|e| anyhow!(e))?,
+        nonneg: if args.has_flag("nonneg") {
+            Some(true)
+        } else if args.has_flag("unconstrained") {
+            Some(false)
+        } else {
+            None
+        },
+        seed: args.get_u64("seed").map_err(|e| anyhow!(e))?,
+        engine: args.get("engine").map(str::to_string),
+        cohort: args.get("cohort").map(str::to_string),
+    };
+    let id = server::submit(addr, &req).map_err(|e| anyhow!("{e}"))?;
+    println!("submitted job {id}");
+    if args.has_flag("wait") {
+        loop {
+            let st = server::status(addr, id).map_err(|e| anyhow!("{e}"))?;
+            let state = st.get("state").and_then(Json::as_str).unwrap_or("?");
+            if matches!(state, "done" | "cancelled" | "failed") {
+                print_wire_status(&st);
+                if state == "failed" {
+                    bail!(
+                        "job {id} failed: {}",
+                        st.get("reason").and_then(Json::as_str).unwrap_or("unknown")
+                    );
+                }
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    args.reject_unknown(&["id", "addr"]).map_err(|e| anyhow!(e))?;
+    let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
+    let id = args.require_u64("id").map_err(|e| anyhow!(e))?;
+    let st = spartan::service::server::status(addr, id).map_err(|e| anyhow!("{e}"))?;
+    print_wire_status(&st);
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    args.reject_unknown(&["id", "addr"]).map_err(|e| anyhow!(e))?;
+    let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
+    let id = args.require_u64("id").map_err(|e| anyhow!(e))?;
+    let snap = spartan::service::server::cancel(addr, id).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "cancelled job {id}: state={} iterations_at_cancel={}",
+        snap.get("state").and_then(Json::as_str).unwrap_or("?"),
+        snap.get("iterations").and_then(Json::as_usize).unwrap_or(0),
+    );
+    Ok(())
+}
+
+fn cmd_result(args: &Args) -> Result<()> {
+    args.reject_unknown(&["id", "addr", "save-model"]).map_err(|e| anyhow!(e))?;
+    let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
+    let id = args.require_u64("id").map_err(|e| anyhow!(e))?;
+    match spartan::service::server::result(addr, id).map_err(|e| anyhow!("{e}"))? {
+        None => {
+            let st = spartan::service::server::status(addr, id).map_err(|e| anyhow!("{e}"))?;
+            bail!(
+                "job {id} not finished (state {})",
+                st.get("state").and_then(Json::as_str).unwrap_or("?")
+            );
+        }
+        Some(model) => {
+            print_fit_summary(&model);
+            if let Some(dir) = args.get("save-model") {
+                save_model(&model, Path::new(dir))?;
+                println!("model saved to {dir}/");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One parseable line per job snapshot (the e2e tests grep these fields).
+fn print_wire_status(st: &Json) {
+    let id = st.get("id").and_then(Json::as_usize).unwrap_or(0);
+    let state = st.get("state").and_then(Json::as_str).unwrap_or("?");
+    let iters = st.get("iterations").and_then(Json::as_usize).unwrap_or(0);
+    let warm = st.get("warm_started").and_then(Json::as_bool).unwrap_or(false);
+    let fit = st
+        .get("fit")
+        .and_then(Json::as_f64)
+        .map(|f| format!(" fit={f:.5}"))
+        .unwrap_or_default();
+    println!("job {id}: state={state} iterations={iters}{fit} warm_started={warm}");
 }
 
 // ---------------------------------------------------------------------------

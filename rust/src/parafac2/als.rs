@@ -30,6 +30,16 @@
 //! `Q_kᵀQ_k = I`, i.e. all `I_k ≥ R`; slices shorter than the rank make it
 //! an upper-bound approximation, which is also what the reference Matlab
 //! implementation tracks).
+//!
+//! The loop itself is **inverted into a [`FitSession`]**: construction
+//! performs the one-time work (budget admission → arena pack →
+//! initialization or warm-start), [`FitSession::step`] runs one ALS
+//! iteration, and [`FitSession::finish`] materializes the model. The
+//! batch entry points [`fit_parafac2`] / [`fit_parafac2_traced`] are thin
+//! drivers over a borrowed-data session and preserve the historical
+//! floating-point sequence bit for bit (the golden-trajectory gate in
+//! `bench::als_runner` pins it). The service layer drives owned-data
+//! sessions concurrently on one shared pool.
 
 use super::baseline::{cp_iteration_baseline, BaselinePhases};
 use super::cp_als::{cp_iteration_from_m1, CpFactors, CpOptions};
@@ -40,10 +50,12 @@ use super::mttkrp::FusedScratch;
 use super::procrustes::{
     procrustes_all_into, procrustes_pack_mode1, scratch_heap_bytes, subject_plan, SubjectScratch,
 };
+use crate::linalg::Mat;
 use crate::sparse::{CompactX, IrregularTensor};
-use crate::threadpool::Pool;
-use crate::util::membudget::{BudgetExceeded, MemBudget};
+use crate::threadpool::{ChunkPlan, Pool};
+use crate::util::membudget::{BudgetExceeded, MemBudget, SharedCharge};
 use crate::util::timer::Stopwatch;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Which step-2 engine to use.
@@ -140,189 +152,477 @@ pub struct IterationRecord {
     pub cp_secs: f64,
 }
 
+/// How a [`FitSession`] holds its input tensor.
+///
+/// Borrowed sessions (the batch `fit_parafac2*` drivers) leave ownership
+/// with the caller; owned sessions (service jobs) carry the tensor in and
+/// — unless [`SessionOptions::keep_data`] is set — **release it after
+/// initialization**: the fit path reads only the resident compact-X arena
+/// from there on (the arena caches `‖X_k‖²` too), so the original CSR
+/// slices are dead weight for a fit-only job. The session's budget charge
+/// shrinks accordingly, which is the ROADMAP's memory-diet fix made
+/// assertable through [`MemBudget::peak`].
+pub enum DataHandle<'d> {
+    Borrowed(&'d IrregularTensor),
+    Owned(IrregularTensor),
+    /// CSR slices already released (fit-only owned session, post-init).
+    Released,
+}
+
+impl<'d> DataHandle<'d> {
+    fn get(&self) -> Option<&IrregularTensor> {
+        match self {
+            DataHandle::Borrowed(d) => Some(d),
+            DataHandle::Owned(d) => Some(d),
+            DataHandle::Released => None,
+        }
+    }
+}
+
+/// Initial factors taken from a previously fitted model (COPA-style
+/// repeated fits of an updated cohort): the session starts ALS from these
+/// instead of running [`initialize`], skipping the seeded RNG entirely.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    pub h: Mat,
+    pub v: Mat,
+    pub w: Mat,
+}
+
+impl WarmStart {
+    /// Warm-start factors from a fitted model (e.g. the service's
+    /// warm-model cache). The model's `{Q_k}` are not needed — the first
+    /// Procrustes sweep recomputes them from H/V/W.
+    pub fn from_model(m: &Parafac2Model) -> WarmStart {
+        WarmStart { h: m.h.clone(), v: m.v.clone(), w: m.w.clone() }
+    }
+}
+
+/// Per-session knobs beyond [`Parafac2Config`]. `Default` reproduces the
+/// batch drivers exactly: private pool, budget from `cfg.mem_budget`, cold
+/// init, data kept, no cancellation.
+#[derive(Default)]
+pub struct SessionOptions {
+    /// Share an existing pool instead of spawning one per fit
+    /// (`cfg.workers` is then ignored). The pool's job queue interleaves
+    /// any number of concurrent sessions over one worker set.
+    pub pool: Option<Pool>,
+    /// Charge a shared budget instead of a per-fit one — admission across
+    /// concurrent sessions is enforced against the same tracker.
+    pub budget: Option<Arc<MemBudget>>,
+    /// Start from these factors instead of [`initialize`].
+    pub warm: Option<WarmStart>,
+    /// Keep the original CSR slices resident even in an owned fit-only
+    /// session (needed when the caller wants exact-SSE reporting against
+    /// the data afterwards, e.g. [`Parafac2Model::fit`]).
+    pub keep_data: bool,
+    /// External cancel flag, checked at step entry and between the two
+    /// sweeps of an iteration — cancellation takes effect within one ALS
+    /// iteration and never perturbs the trajectory (a cancelled sweep is
+    /// discarded; the factors still hold the last completed iterate).
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+/// What one [`FitSession::step`] call did.
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// One more ALS iteration completed.
+    Iterated(IterationRecord),
+    /// Converged (tol) or `max_iters` reached — nothing ran; the session
+    /// is ready for [`FitSession::finish`].
+    Done,
+    /// The cancel flag was observed — nothing took effect; the factors
+    /// hold the last completed iterate and [`FitSession::finish`] still
+    /// produces a valid (partial) model.
+    Cancelled,
+}
+
+/// A PARAFAC2 fit **inverted into a session object**: construction does
+/// the one-time work (admission charge → arena pack → init), after which
+/// the owner drives [`FitSession::step`] one ALS iteration at a time and
+/// [`FitSession::finish`] materializes the model. The batch
+/// [`fit_parafac2*`](fit_parafac2) entry points are thin drivers over
+/// this, preserving their exact floating-point sequence — the
+/// golden-trajectory gate pins that.
+///
+/// The session owns everything a fit touches — the resident [`CompactX`]
+/// arena, the packed-`Y` arena, the per-chunk scratch, and the frozen
+/// [`ChunkPlan`] — so any number of sessions can interleave on one shared
+/// [`Pool`] without contending on anything but worker time. Memory is
+/// accounted up front: construction charges the arena's *upper-bound
+/// estimate* (plus the CSR bytes for owned data) against the budget via
+/// [`SharedCharge`], fails with [`FitError::OutOfMemory`] **before
+/// packing** when it does not fit, and shrinks the charge to the actual
+/// footprint after the pack (and again after a fit-only session releases
+/// its CSR slices).
+pub struct FitSession<'d> {
+    cfg: Parafac2Config,
+    data: DataHandle<'d>,
+    pool: Pool,
+    budget: Arc<MemBudget>,
+    /// Admission charge: CSR bytes (owned data only) + arena footprint.
+    charge: SharedCharge,
+    total_sw: Stopwatch,
+    plan: ChunkPlan,
+    cx: CompactX,
+    x_norm_sq: f64,
+    x_norm: f64,
+    factors: CpFactors,
+    opts: CpOptions,
+    stats: FitStats,
+    baseline_phases: BaselinePhases,
+    prev_sse: f64,
+    iters_done: usize,
+    converged: bool,
+    cancel: Arc<AtomicBool>,
+    y: PackedY,
+    scratch: FusedScratch,
+    sweep_scratch: Vec<SubjectScratch>,
+}
+
+impl<'d> FitSession<'d> {
+    /// Borrowed-data session with per-fit pool and budget — the exact
+    /// construction the batch drivers perform.
+    pub fn new(data: &'d IrregularTensor, cfg: &Parafac2Config) -> Result<FitSession<'d>, FitError> {
+        FitSession::with_options(DataHandle::Borrowed(data), cfg, SessionOptions::default())
+    }
+
+    /// Full-control constructor. `DataHandle::Owned` + default `keep_data`
+    /// gives the fit-only memory diet: the CSR slices are dropped right
+    /// after initialization and their budget charge released.
+    pub fn with_options(
+        data: DataHandle<'d>,
+        cfg: &Parafac2Config,
+        options: SessionOptions,
+    ) -> Result<FitSession<'d>, FitError> {
+        let tensor = data.get().expect("fresh DataHandle");
+        if cfg.rank == 0 {
+            return Err(FitError::Config("rank must be ≥ 1".into()));
+        }
+        if cfg.rank > tensor.j() {
+            return Err(FitError::Config(format!(
+                "rank {} exceeds variable count J={}",
+                cfg.rank,
+                tensor.j()
+            )));
+        }
+        let pool = options.pool.unwrap_or_else(|| Pool::new(cfg.workers));
+        let budget: Arc<MemBudget> = match options.budget {
+            Some(b) => b,
+            None => match cfg.mem_budget {
+                Some(b) => MemBudget::limited(b),
+                None => MemBudget::unlimited(),
+            },
+        };
+        let total_sw = Stopwatch::start();
+
+        // Persistent per-fit arenas and schedule: the resident compact-X
+        // arena (values + local column ids, packed once — every subsequent
+        // Procrustes sweep streams it exactly once per subject), the
+        // packed-Y slice buffers, the per-chunk sweep scratch, the fused
+        // sweep's Z_k cache, and the nnz-balanced chunk plan are built
+        // once and reused (refilled in place) by every iteration.
+        let plan = subject_plan(tensor);
+
+        // Admission happens BEFORE the pack: charge the arena's upper
+        // bound (plus the CSR bytes when the session owns them), so an
+        // over-budget fit fails structurally with nothing allocated.
+        let owned = matches!(data, DataHandle::Owned(_));
+        let data_bytes = if owned { tensor.heap_bytes() } else { 0 };
+        let estimate = CompactX::estimate_heap_bytes(tensor);
+        let mut charge = SharedCharge::new(&budget, data_bytes + estimate)
+            .map_err(FitError::OutOfMemory)?;
+
+        let cx = CompactX::pack(tensor, &pool, &plan);
+        // Estimate → actual (the estimate is an upper bound; `min` guards
+        // the assert-only-shrinks contract against allocator slack).
+        charge.shrink_to((data_bytes + cx.heap_bytes()).min(charge.bytes()));
+        // ‖X‖² served from the arena's pack-time per-slice caches —
+        // bitwise identical to `tensor.fro_norm_sq()`, and the last
+        // fit-path read of the original CSR goes away with it.
+        let x_norm_sq = cx.norm_sq();
+        let x_norm = x_norm_sq.sqrt();
+
+        let factors = match options.warm {
+            Some(warm) => {
+                let (r, j, k) = (cfg.rank, tensor.j(), tensor.k());
+                if warm.h.shape() != (r, r) || warm.v.shape() != (j, r) || warm.w.shape() != (k, r)
+                {
+                    return Err(FitError::Config(format!(
+                        "warm-start shapes {:?}/{:?}/{:?} do not match rank {r}, J={j}, K={k}",
+                        warm.h.shape(),
+                        warm.v.shape(),
+                        warm.w.shape()
+                    )));
+                }
+                CpFactors { h: warm.h, v: warm.v, w: warm.w }
+            }
+            None => {
+                let init = initialize(tensor, cfg.rank, cfg.init, cfg.seed, &pool);
+                CpFactors { h: init.h, v: init.v, w: init.w }
+            }
+        };
+        let opts = CpOptions { nonneg: cfg.nonneg };
+
+        let y = PackedY::empty(tensor.j());
+
+        // Memory diet: a fit-only owned session has no further use for the
+        // original CSR slices — everything downstream (both sweeps, the
+        // final report pass) reads the arena. Drop them and give the bytes
+        // back to the budget.
+        let mut data = data;
+        if owned && !options.keep_data {
+            data = DataHandle::Released;
+            charge.shrink_to(charge.bytes() - data_bytes);
+        }
+
+        let sweep_scratch = SubjectScratch::for_plan(&plan);
+        Ok(FitSession {
+            cfg: cfg.clone(),
+            data,
+            pool,
+            budget,
+            charge,
+            total_sw,
+            plan,
+            cx,
+            x_norm_sq,
+            x_norm,
+            factors,
+            opts,
+            stats: FitStats::default(),
+            baseline_phases: BaselinePhases::default(),
+            prev_sse: f64::INFINITY,
+            iters_done: 0,
+            converged: false,
+            cancel: options.cancel.unwrap_or_else(|| Arc::new(AtomicBool::new(false))),
+            y,
+            scratch: FusedScratch::new(),
+            sweep_scratch,
+        })
+    }
+
+    /// Run **one** ALS iteration. Returns [`StepOutcome::Done`] once
+    /// converged or `max_iters` is reached (idempotently), and
+    /// [`StepOutcome::Cancelled`] when the cancel flag is up — at step
+    /// entry, or at the checkpoint between the Procrustes sweep and the CP
+    /// step (the sweep's outputs are then discarded; re-stepping after
+    /// clearing the flag reproduces them from the unchanged factors).
+    pub fn step(&mut self) -> Result<StepOutcome, FitError> {
+        if self.converged || self.iters_done >= self.cfg.max_iters {
+            return Ok(StepOutcome::Done);
+        }
+        if self.cancel.load(Ordering::Relaxed) {
+            return Ok(StepOutcome::Cancelled);
+        }
+        let iter = self.iters_done;
+
+        // --- step 1: Procrustes + packing (into the arena); the SPARTan
+        // backend also emits M¹ while each slice is cache-hot ------------
+        let sw = Stopwatch::start();
+        let fused = match self.cfg.backend {
+            Backend::Spartan => Some(procrustes_pack_mode1(
+                &self.cx,
+                &self.factors.v,
+                &self.factors.h,
+                &self.factors.w,
+                &self.pool,
+                &self.plan,
+                &mut self.y,
+                &mut self.sweep_scratch,
+            )),
+            Backend::Baseline => {
+                let _ = procrustes_all_into(
+                    &self.cx,
+                    &self.factors.v,
+                    &self.factors.h,
+                    &self.factors.w,
+                    &self.pool,
+                    &self.plan,
+                    false,
+                    &mut self.y,
+                    &mut self.sweep_scratch,
+                );
+                None
+            }
+        };
+        let procrustes_secs = sw.elapsed_secs();
+
+        // Cancellation checkpoint between sweeps: the sweep only refilled
+        // the session-private Y/M¹ from the (untouched) factors, so
+        // discarding it leaves the trajectory exactly at the last
+        // completed iterate. Its timing is discarded with it.
+        if self.cancel.load(Ordering::Relaxed) {
+            return Ok(StepOutcome::Cancelled);
+        }
+        self.stats.procrustes_secs += procrustes_secs;
+
+        // --- step 2: the rest of one CP-ALS iteration on Y ---------------
+        let sw = Stopwatch::start();
+        let cp_stats = match fused {
+            Some(sweep) => cp_iteration_from_m1(
+                &self.y,
+                sweep.m1,
+                sweep.yv_products,
+                &mut self.factors,
+                self.opts,
+                &self.pool,
+                &self.plan,
+                &mut self.scratch,
+            ),
+            None => cp_iteration_baseline(
+                &self.y,
+                &mut self.factors,
+                self.opts,
+                &self.budget,
+                &mut self.baseline_phases,
+            )
+            .map_err(FitError::OutOfMemory)?,
+        };
+        let cp_secs = sw.elapsed_secs();
+        self.stats.cp_secs += cp_secs;
+
+        if iter == 0 {
+            crate::debug!(
+                "arena: compact X {} B, packed Y {} B, sweep scratch {} B, fused scratch {} B",
+                self.cx.heap_bytes(),
+                self.y.heap_bytes(),
+                scratch_heap_bytes(&self.sweep_scratch),
+                self.scratch.heap_bytes()
+            );
+        }
+
+        let sse = (self.x_norm_sq - self.y.norm_sq() + cp_stats.y_residual_sq).max(0.0);
+        let fit = 1.0 - sse.sqrt() / self.x_norm;
+        self.stats.fit_history.push(fit);
+        self.iters_done = iter + 1;
+        crate::debug!("iter {iter}: sse={sse:.6e} fit={fit:.6}");
+
+        // --- convergence --------------------------------------------------
+        if self.prev_sse.is_finite() {
+            let denom = self.prev_sse.max(f64::MIN_POSITIVE);
+            if (self.prev_sse - sse).abs() / denom < self.cfg.tol {
+                self.converged = true;
+            }
+        }
+        self.prev_sse = sse;
+
+        Ok(StepOutcome::Iterated(IterationRecord { iter, sse, fit, procrustes_secs, cp_secs }))
+    }
+
+    /// Final pass: materialize Q_k for the fitted factors (kept out of the
+    /// loop so the loop's footprint stays at the packed-Y size), and
+    /// recompute the SSE against the refreshed Q_k so the reported fit is
+    /// exactly the returned model's (the refresh strictly improves on the
+    /// last tracked SSE). Reuses the same arena. Valid after any number of
+    /// steps — including zero, or a cancellation — so a cancelled job
+    /// still yields its last completed iterate (e.g. for the warm cache).
+    pub fn finish(mut self) -> Parafac2Model {
+        let qs = procrustes_all_into(
+            &self.cx,
+            &self.factors.v,
+            &self.factors.h,
+            &self.factors.w,
+            &self.pool,
+            &self.plan,
+            true,
+            &mut self.y,
+            &mut self.sweep_scratch,
+        );
+        let m3 =
+            super::mttkrp::mttkrp_mode3(&self.y, &self.factors.h, &self.factors.v, &self.pool, &self.plan);
+        let final_res = super::cp_als::residual_stats(&m3, &self.factors, self.y.norm_sq());
+        let final_sse = (self.x_norm_sq - self.y.norm_sq() + final_res.y_residual_sq).max(0.0);
+        let mut stats = self.stats;
+        stats.yv_products = self.y.yv_products();
+        stats.traversals = self.y.traversals();
+        stats.x_traversals = self.cx.x_traversals();
+        stats.heap_bytes = self.cx.heap_bytes()
+            + self.y.heap_bytes()
+            + scratch_heap_bytes(&self.sweep_scratch)
+            + self.scratch.heap_bytes();
+
+        stats.iterations = self.iters_done;
+        stats.final_sse = final_sse;
+        stats.final_fit = 1.0 - final_sse.sqrt() / self.x_norm;
+        stats.total_secs = self.total_sw.elapsed_secs();
+        stats.secs_per_iter = if self.iters_done > 0 {
+            (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64
+        } else {
+            0.0
+        };
+
+        Parafac2Model {
+            rank: self.cfg.rank,
+            h: self.factors.h,
+            v: self.factors.v,
+            w: self.factors.w,
+            q: qs.expect("keep_q requested"),
+            stats,
+        }
+    }
+
+    /// ALS iterations completed so far.
+    pub fn iterations(&self) -> usize {
+        self.iters_done
+    }
+
+    /// Whether the tol-based convergence test has fired.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// The session's cancel flag (the one passed in, or a private one).
+    /// Setting it stops the fit within one ALS iteration.
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.cancel)
+    }
+
+    /// Progress so far (fit history, phase timings). Counters and final
+    /// figures are filled by [`FitSession::finish`].
+    pub fn stats(&self) -> &FitStats {
+        &self.stats
+    }
+
+    /// Bytes this session currently holds against its budget.
+    pub fn charged_bytes(&self) -> u64 {
+        self.charge.bytes()
+    }
+
+    /// The budget this session charges (shared or per-fit).
+    pub fn budget(&self) -> &Arc<MemBudget> {
+        &self.budget
+    }
+
+    /// Whether the original CSR slices are still resident.
+    pub fn holds_data(&self) -> bool {
+        self.data.get().is_some()
+    }
+}
+
 /// Fit a PARAFAC2 model.
 pub fn fit_parafac2(data: &IrregularTensor, cfg: &Parafac2Config) -> Result<Parafac2Model, FitError> {
     let mut records = Vec::new();
     fit_parafac2_traced(data, cfg, &mut |r| records.push(r))
 }
 
-/// Fit with a per-iteration callback (bench instrumentation).
+/// Fit with a per-iteration callback (bench instrumentation). Thin driver
+/// over [`FitSession`]: construct, step to completion, finish.
 pub fn fit_parafac2_traced(
     data: &IrregularTensor,
     cfg: &Parafac2Config,
     on_iter: &mut dyn FnMut(IterationRecord),
 ) -> Result<Parafac2Model, FitError> {
-    if cfg.rank == 0 {
-        return Err(FitError::Config("rank must be ≥ 1".into()));
-    }
-    if cfg.rank > data.j() {
-        return Err(FitError::Config(format!(
-            "rank {} exceeds variable count J={}",
-            cfg.rank,
-            data.j()
-        )));
-    }
-    let pool = Pool::new(cfg.workers);
-    let budget: Arc<MemBudget> = match cfg.mem_budget {
-        Some(b) => MemBudget::limited(b),
-        None => MemBudget::unlimited(),
-    };
-    let total_sw = Stopwatch::start();
-
-    // Persistent per-fit arenas and schedule: the resident compact-X
-    // arena (values + local column ids, packed once — every subsequent
-    // Procrustes sweep streams it exactly once per subject), the packed-Y
-    // slice buffers, the per-chunk sweep scratch, the fused sweep's Z_k
-    // cache, and the nnz-balanced chunk plan are built once and reused
-    // (refilled in place) by every iteration.
-    let plan = subject_plan(data);
-    let cx = CompactX::pack(data, &pool, &plan);
-    // ‖X‖² served from the arena's pack-time per-slice caches — bitwise
-    // identical to `data.fro_norm_sq()`, and the last fit-path read of
-    // the original CSR goes away with it.
-    let x_norm_sq = cx.norm_sq();
-    let x_norm = x_norm_sq.sqrt();
-
-    let init = initialize(data, cfg.rank, cfg.init, cfg.seed, &pool);
-    let mut factors = CpFactors { h: init.h, v: init.v, w: init.w };
-    let opts = CpOptions { nonneg: cfg.nonneg };
-
-    let mut stats = FitStats::default();
-    let mut baseline_phases = BaselinePhases::default();
-    let mut prev_sse = f64::INFINITY;
-    let mut iters_done = 0;
-
-    let mut y = PackedY::empty(data.j());
-    let mut scratch = FusedScratch::new();
-    let mut sweep_scratch: Vec<SubjectScratch> = SubjectScratch::for_plan(&plan);
-
-    for iter in 0..cfg.max_iters {
-        // --- step 1: Procrustes + packing (into the arena); the SPARTan
-        // backend also emits M¹ while each slice is cache-hot ------------
-        let sw = Stopwatch::start();
-        let fused = match cfg.backend {
-            Backend::Spartan => Some(procrustes_pack_mode1(
-                &cx,
-                &factors.v,
-                &factors.h,
-                &factors.w,
-                &pool,
-                &plan,
-                &mut y,
-                &mut sweep_scratch,
-            )),
-            Backend::Baseline => {
-                let _ = procrustes_all_into(
-                    &cx,
-                    &factors.v,
-                    &factors.h,
-                    &factors.w,
-                    &pool,
-                    &plan,
-                    false,
-                    &mut y,
-                    &mut sweep_scratch,
-                );
-                None
-            }
-        };
-        let procrustes_secs = sw.elapsed_secs();
-        stats.procrustes_secs += procrustes_secs;
-
-        // --- step 2: the rest of one CP-ALS iteration on Y ---------------
-        let sw = Stopwatch::start();
-        let cp_stats = match fused {
-            Some(sweep) => cp_iteration_from_m1(
-                &y,
-                sweep.m1,
-                sweep.yv_products,
-                &mut factors,
-                opts,
-                &pool,
-                &plan,
-                &mut scratch,
-            ),
-            None => cp_iteration_baseline(&y, &mut factors, opts, &budget, &mut baseline_phases)
-                .map_err(FitError::OutOfMemory)?,
-        };
-        let cp_secs = sw.elapsed_secs();
-        stats.cp_secs += cp_secs;
-
-        if iter == 0 {
-            crate::debug!(
-                "arena: compact X {} B, packed Y {} B, sweep scratch {} B, fused scratch {} B",
-                cx.heap_bytes(),
-                y.heap_bytes(),
-                scratch_heap_bytes(&sweep_scratch),
-                scratch.heap_bytes()
-            );
+    let mut session = FitSession::new(data, cfg)?;
+    loop {
+        match session.step()? {
+            StepOutcome::Iterated(rec) => on_iter(rec),
+            // no cancel flag is wired here, so Cancelled cannot occur —
+            // handled all the same to keep the driver total
+            StepOutcome::Done | StepOutcome::Cancelled => break,
         }
-
-        let sse = (x_norm_sq - y.norm_sq() + cp_stats.y_residual_sq).max(0.0);
-        let fit = 1.0 - sse.sqrt() / x_norm;
-        stats.fit_history.push(fit);
-        iters_done = iter + 1;
-        on_iter(IterationRecord { iter, sse, fit, procrustes_secs, cp_secs });
-        crate::debug!("iter {iter}: sse={sse:.6e} fit={fit:.6}");
-
-        // --- convergence --------------------------------------------------
-        if prev_sse.is_finite() {
-            let denom = prev_sse.max(f64::MIN_POSITIVE);
-            if (prev_sse - sse).abs() / denom < cfg.tol {
-                prev_sse = sse;
-                break;
-            }
-        }
-        prev_sse = sse;
     }
-
-    // Final pass: materialize Q_k for the fitted factors (kept out of the
-    // loop so the loop's footprint stays at the packed-Y size), and
-    // recompute the SSE against the refreshed Q_k so the reported fit is
-    // exactly the returned model's (the refresh strictly improves on the
-    // last tracked SSE). Reuses the same arena.
-    let qs = procrustes_all_into(
-        &cx,
-        &factors.v,
-        &factors.h,
-        &factors.w,
-        &pool,
-        &plan,
-        true,
-        &mut y,
-        &mut sweep_scratch,
-    );
-    let m3 = super::mttkrp::mttkrp_mode3(&y, &factors.h, &factors.v, &pool, &plan);
-    let final_res = super::cp_als::residual_stats(&m3, &factors, y.norm_sq());
-    let final_sse = (x_norm_sq - y.norm_sq() + final_res.y_residual_sq).max(0.0);
-    stats.yv_products = y.yv_products();
-    stats.traversals = y.traversals();
-    stats.x_traversals = cx.x_traversals();
-    stats.heap_bytes = cx.heap_bytes()
-        + y.heap_bytes()
-        + scratch_heap_bytes(&sweep_scratch)
-        + scratch.heap_bytes();
-    drop(y);
-
-    stats.iterations = iters_done;
-    stats.final_sse = final_sse;
-    stats.final_fit = 1.0 - final_sse.sqrt() / x_norm;
-    let _ = prev_sse;
-    stats.total_secs = total_sw.elapsed_secs();
-    stats.secs_per_iter = if iters_done > 0 {
-        (stats.procrustes_secs + stats.cp_secs) / iters_done as f64
-    } else {
-        0.0
-    };
-
-    Ok(Parafac2Model {
-        rank: cfg.rank,
-        h: factors.h,
-        v: factors.v,
-        w: factors.w,
-        q: qs.expect("keep_q requested"),
-        stats,
-    })
+    Ok(session.finish())
 }
 
 #[cfg(test)]
@@ -527,6 +827,233 @@ mod tests {
         // and the resident footprint is accounted (arena + packed Y +
         // scratch must all be nonzero once a fit ran)
         assert!(model.stats.heap_bytes > 0);
+    }
+
+    #[test]
+    fn interleaved_sessions_on_shared_pool_bitwise_match_batch() {
+        // Two sessions alternate steps on ONE shared pool — the service's
+        // multiplexing shape — and must each reproduce their standalone
+        // batch fit bit for bit.
+        let mut rng = Pcg64::seed(181);
+        let (d1, _, _) = planted(&mut rng, 10, 9, 3);
+        let (d2, _, _) = planted(&mut rng, 7, 11, 2);
+        let cfg1 = Parafac2Config {
+            rank: 3,
+            max_iters: 6,
+            tol: 0.0,
+            workers: 3,
+            ..Default::default()
+        };
+        let cfg2 = Parafac2Config { rank: 2, seed: 17, ..cfg1.clone() };
+        let b1 = fit_parafac2(&d1, &cfg1).unwrap();
+        let b2 = fit_parafac2(&d2, &cfg2).unwrap();
+
+        let pool = Pool::new(3);
+        let opts = |p: &Pool| SessionOptions { pool: Some(p.clone()), ..Default::default() };
+        let mut s1 = FitSession::with_options(DataHandle::Borrowed(&d1), &cfg1, opts(&pool)).unwrap();
+        let mut s2 = FitSession::with_options(DataHandle::Borrowed(&d2), &cfg2, opts(&pool)).unwrap();
+        let (mut done1, mut done2) = (false, false);
+        while !(done1 && done2) {
+            if !done1 {
+                done1 = matches!(s1.step().unwrap(), StepOutcome::Done);
+            }
+            if !done2 {
+                done2 = matches!(s2.step().unwrap(), StepOutcome::Done);
+            }
+        }
+        let (m1, m2) = (s1.finish(), s2.finish());
+        assert_eq!(m1.h.data(), b1.h.data());
+        assert_eq!(m1.v.data(), b1.v.data());
+        assert_eq!(m1.w.data(), b1.w.data());
+        assert_eq!(m2.h.data(), b2.h.data());
+        assert_eq!(m2.v.data(), b2.v.data());
+        assert_eq!(m2.w.data(), b2.w.data());
+        assert_eq!(m1.stats.iterations, b1.stats.iterations);
+    }
+
+    #[test]
+    fn cancellation_stops_and_resume_stays_on_trajectory() {
+        let mut rng = Pcg64::seed(182);
+        let (data, _, _) = planted(&mut rng, 8, 9, 2);
+        let cfg = Parafac2Config {
+            rank: 2,
+            max_iters: 5,
+            tol: 0.0,
+            workers: 1,
+            ..Default::default()
+        };
+        let mut plain = Vec::new();
+        let batch = fit_parafac2_traced(&data, &cfg, &mut |r| plain.push(r.sse)).unwrap();
+
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mut s = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &cfg,
+            SessionOptions { cancel: Some(Arc::clone(&cancel)), ..Default::default() },
+        )
+        .unwrap();
+        let mut sses = Vec::new();
+        match s.step().unwrap() {
+            StepOutcome::Iterated(r) => sses.push(r.sse),
+            other => panic!("expected an iteration, got {other:?}"),
+        }
+        // flag up ⇒ the very next step refuses to iterate
+        cancel.store(true, Ordering::Relaxed);
+        assert!(matches!(s.step().unwrap(), StepOutcome::Cancelled));
+        assert_eq!(s.iterations(), 1, "cancel must not consume an iteration");
+        // flag down ⇒ the fit resumes exactly where it left off
+        cancel.store(false, Ordering::Relaxed);
+        loop {
+            match s.step().unwrap() {
+                StepOutcome::Iterated(r) => sses.push(r.sse),
+                StepOutcome::Done => break,
+                StepOutcome::Cancelled => panic!("flag is down"),
+            }
+        }
+        assert_eq!(sses.len(), plain.len());
+        for (i, (a, b)) in sses.iter().zip(&plain).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "iter {i} diverged after cancel/resume");
+        }
+        let model = s.finish();
+        assert_eq!(model.v.data(), batch.v.data());
+        // a cancelled-for-good session still yields its partial iterate
+        let cancel2 = Arc::new(AtomicBool::new(false));
+        let mut s2 = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &cfg,
+            SessionOptions { cancel: Some(Arc::clone(&cancel2)), ..Default::default() },
+        )
+        .unwrap();
+        let _ = s2.step().unwrap();
+        cancel2.store(true, Ordering::Relaxed);
+        assert!(matches!(s2.step().unwrap(), StepOutcome::Cancelled));
+        let partial = s2.finish();
+        assert_eq!(partial.stats.iterations, 1);
+        assert_eq!(partial.q.len(), data.k());
+    }
+
+    #[test]
+    fn warm_start_matches_continued_batch_fit() {
+        // fit 3 iters, warm-start 3 more ⇒ bitwise the same endpoint as
+        // one uninterrupted 6-iteration fit (the final Q-pass never
+        // touches H/V/W, so a model's factors ARE the loop state).
+        let mut rng = Pcg64::seed(183);
+        let (data, _, _) = planted(&mut rng, 9, 8, 2);
+        let mk = |iters| Parafac2Config {
+            rank: 2,
+            max_iters: iters,
+            tol: 0.0,
+            workers: 2,
+            ..Default::default()
+        };
+        let first = fit_parafac2(&data, &mk(3)).unwrap();
+        let full = fit_parafac2(&data, &mk(6)).unwrap();
+        let mut s = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &mk(3),
+            SessionOptions { warm: Some(WarmStart::from_model(&first)), ..Default::default() },
+        )
+        .unwrap();
+        while let StepOutcome::Iterated(_) = s.step().unwrap() {}
+        let resumed = s.finish();
+        assert_eq!(resumed.h.data(), full.h.data());
+        assert_eq!(resumed.v.data(), full.v.data());
+        assert_eq!(resumed.w.data(), full.w.data());
+        for (a, b) in resumed.q.iter().zip(&full.q) {
+            assert_eq!(a.data(), b.data());
+        }
+
+        // shape mismatches are structured Config errors
+        let bad = WarmStart { h: Mat::zeros(3, 3), v: first.v.clone(), w: first.w.clone() };
+        let err = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &mk(3),
+            SessionOptions { warm: Some(bad), ..Default::default() },
+        );
+        assert!(matches!(err, Err(FitError::Config(_))));
+    }
+
+    #[test]
+    fn session_admission_rejects_before_packing() {
+        let mut rng = Pcg64::seed(184);
+        let (data, _, _) = planted(&mut rng, 8, 9, 2);
+        let cfg = Parafac2Config { rank: 2, workers: 1, ..Default::default() };
+        let budget = MemBudget::limited(64); // far below any arena estimate
+        let err = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &cfg,
+            SessionOptions { budget: Some(Arc::clone(&budget)), ..Default::default() },
+        );
+        assert!(matches!(err, Err(FitError::OutOfMemory(_))));
+        // the rejected charge rolled back — the budget stays serviceable
+        assert_eq!(budget.used(), 0);
+        let ok = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &cfg,
+            SessionOptions {
+                budget: Some(MemBudget::limited(64 << 20)),
+                ..Default::default()
+            },
+        );
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn fit_only_owned_session_drops_csr_and_budget_proves_it() {
+        let mut rng = Pcg64::seed(185);
+        let (data, _, _) = planted(&mut rng, 10, 9, 2);
+        let csr_bytes = data.heap_bytes();
+        assert!(csr_bytes > 0);
+        let cfg = Parafac2Config {
+            rank: 2,
+            max_iters: 5,
+            tol: 0.0,
+            workers: 1,
+            ..Default::default()
+        };
+        let batch = fit_parafac2(&data, &cfg).unwrap();
+
+        // fit-only: CSR released right after init, charge shrunk
+        let diet = MemBudget::unlimited();
+        let mut s = FitSession::with_options(
+            DataHandle::Owned(data.clone()),
+            &cfg,
+            SessionOptions { budget: Some(Arc::clone(&diet)), ..Default::default() },
+        )
+        .unwrap();
+        assert!(!s.holds_data());
+        assert_eq!(diet.used(), s.charged_bytes());
+        // the peak proves the CSR bytes were charged during construction…
+        assert!(
+            diet.peak() >= diet.used() + csr_bytes,
+            "peak {} should cover arena {} + CSR {csr_bytes}",
+            diet.peak(),
+            diet.used()
+        );
+
+        // …and keep_data holds exactly those bytes longer
+        let keep = MemBudget::unlimited();
+        let s_keep = FitSession::with_options(
+            DataHandle::Owned(data.clone()),
+            &cfg,
+            SessionOptions {
+                budget: Some(Arc::clone(&keep)),
+                keep_data: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(s_keep.holds_data());
+        assert_eq!(s_keep.charged_bytes(), s.charged_bytes() + csr_bytes);
+
+        // the diet changes nothing about the math
+        while let StepOutcome::Iterated(_) = s.step().unwrap() {}
+        let model = s.finish();
+        assert_eq!(model.v.data(), batch.v.data());
+        assert_eq!(model.w.data(), batch.w.data());
+        drop(s_keep);
+        assert_eq!(keep.used(), 0, "dropping the session releases its charge");
+        assert_eq!(diet.used(), 0);
     }
 
     #[test]

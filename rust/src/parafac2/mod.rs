@@ -12,6 +12,9 @@ pub mod mttkrp;
 pub mod procrustes;
 pub mod restarts;
 
-pub use als::{fit_parafac2, Backend, FitError, Parafac2Config};
+pub use als::{
+    fit_parafac2, Backend, DataHandle, FitError, FitSession, IterationRecord, Parafac2Config,
+    SessionOptions, StepOutcome, WarmStart,
+};
 pub use model::{FitStats, Parafac2Model};
 pub use restarts::fit_parafac2_restarts;

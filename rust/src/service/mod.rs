@@ -1,0 +1,819 @@
+//! The resident fit service: many concurrent PARAFAC2 fits on one
+//! shared worker pool, with membudget admission and warm-started re-fits.
+//!
+//! A [`Service`] is what `spartan serve` runs behind the wire protocol
+//! (see [`server`]), but it is a plain library type — tests and embedders
+//! drive it in-process. It owns:
+//!
+//! * **one shared [`Pool`]** — every job's `ChunkPlan` is scheduled onto
+//!   the same workers (the pool's FIFO job queue interleaves chunk grants
+//!   across jobs; subjects never shard across jobs, so each fit stays
+//!   bitwise identical to running alone — pinned by
+//!   `concurrent_jobs_bitwise_equal_standalone` in [`crate::threadpool`]
+//!   and end-to-end by `rust/tests/service_e2e.rs`);
+//! * **one shared [`MemBudget`]** — admission is *enforced*, not
+//!   advisory: a job's arena estimate (`data.heap_bytes()` +
+//!   [`CompactX::estimate_heap_bytes`]) is charged via
+//!   [`crate::util::membudget::SharedCharge`] inside the
+//!   [`FitSession`], so a submit whose estimate can never fit is rejected
+//!   up front ([`ServiceError::BudgetExceeded`]) and one that merely
+//!   does not fit *right now* queues until running jobs release;
+//! * **a job registry** — submit / status / cancel / result over
+//!   monotonically increasing job ids, with per-iteration
+//!   [`IterationRecord`] progress;
+//! * **a bounded FIFO queue** — at most `max_pending` jobs waiting
+//!   ([`ServiceError::QueueFull`] beyond that), drained strictly in
+//!   order by a scheduler thread;
+//! * **a warm-model cache** ([`warm::WarmCache`]) keyed by cohort id —
+//!   a submit naming a cohort warm-starts from that cohort's previous
+//!   `H/V/W` when the shapes match, skipping init entirely.
+//!
+//! Scheduling admits **one job into session construction at a time**
+//! (the `starting` latch): the arena pack is the only moment a job's
+//! charge races another admission decision, so serializing construction
+//! makes the headroom check sound without double-charging. Fits
+//! themselves run fully concurrently, one OS thread per running job,
+//! all sharing the pool's workers.
+//!
+//! Cancellation sets the session's cancel flag; the running fit observes
+//! it at the next iteration boundary (within one ALS iteration — the
+//! engine checkpoints at step entry and between sweeps) and concludes
+//! with a partial model at the last completed iterate.
+//!
+//! Determinism contract: a job submitted **without** a cohort id (or
+//! missing the cache) runs exactly the batch fit — same init, same
+//! trajectory, bitwise — regardless of what else the service is doing.
+//! Naming a cohort opts into warm-starting, which by design changes the
+//! trajectory; omit it for runs that must reproduce `spartan decompose`.
+
+pub mod protocol;
+pub mod server;
+pub mod warm;
+
+use crate::parafac2::{
+    DataHandle, FitSession, IterationRecord, Parafac2Config, Parafac2Model, SessionOptions,
+    StepOutcome, WarmStart,
+};
+use crate::sparse::{CompactX, IrregularTensor};
+use crate::threadpool::Pool;
+use crate::util::membudget::MemBudget;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+// ---------------------------------------------------------------------------
+// Errors
+
+/// Structured failures of the service API (satellite of the job-level
+/// [`crate::parafac2::FitError`], which surfaces as [`JobState::Failed`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceError {
+    /// The pending queue is at capacity; resubmit later.
+    QueueFull { pending: usize, max: usize },
+    /// The job's arena estimate exceeds the budget limit outright — it
+    /// could never run, so it is rejected at submit instead of queued.
+    BudgetExceeded { estimate: u64, limit: u64 },
+    /// No job with that id.
+    UnknownJob(u64),
+    /// The job ran and failed; `reason` is the fit error's rendering.
+    JobFailed { id: u64, reason: String },
+    /// Invalid submission (rank bounds, empty data, bad options).
+    Invalid(String),
+    /// The service is shutting down and no longer accepts jobs.
+    ShuttingDown,
+    /// Client-side transport failure (connect/read/write).
+    Io(String),
+    /// Malformed request or response on the wire.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::QueueFull { pending, max } => {
+                write!(f, "queue full: {pending} job(s) pending (max {max})")
+            }
+            ServiceError::BudgetExceeded { estimate, limit } => write!(
+                f,
+                "memory budget exceeded: job needs an estimated {} but the budget limit is {}",
+                crate::util::humansize::bytes(*estimate),
+                crate::util::humansize::bytes(*limit),
+            ),
+            ServiceError::UnknownJob(id) => write!(f, "unknown job id {id}"),
+            ServiceError::JobFailed { id, reason } => write!(f, "job {id} failed: {reason}"),
+            ServiceError::Invalid(msg) => write!(f, "invalid submission: {msg}"),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::Io(msg) => write!(f, "service i/o error: {msg}"),
+            ServiceError::Protocol(msg) => write!(f, "service protocol error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+// ---------------------------------------------------------------------------
+// Configuration & job types
+
+/// How to stand up a [`Service`].
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Shared pool size (0 ⇒ all cores, [`Pool::new`] semantics).
+    pub workers: usize,
+    /// Shared memory budget in bytes (`None` ⇒ accounting only).
+    pub mem_budget: Option<u64>,
+    /// Max jobs waiting in the queue (running jobs don't count).
+    pub max_pending: usize,
+    /// Warm-model cache capacity in cohorts (0 disables warm-starting).
+    pub warm_cache: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig { workers: 0, mem_budget: None, max_pending: 16, warm_cache: 8 }
+    }
+}
+
+/// One fit job: the (owned) data, the fit config, and an optional cohort
+/// id for warm-start caching. `cfg.workers` and `cfg.mem_budget` are
+/// ignored — the service's shared pool and budget govern.
+pub struct JobSpec {
+    pub data: IrregularTensor,
+    pub cfg: Parafac2Config,
+    pub cohort: Option<String>,
+}
+
+/// Lifecycle of a job. `Starting` is the brief session-construction
+/// window (arena pack + init); `Cancelled` jobs that ran at all still
+/// carry a partial model at the last completed iterate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    Queued,
+    Starting,
+    Running,
+    Done,
+    Cancelled,
+    Failed(String),
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Failed(_))
+    }
+
+    /// Wire name (see [`protocol`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Starting => "starting",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Point-in-time snapshot of a job (what `status` returns).
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub id: u64,
+    pub state: JobState,
+    /// One record per completed ALS iteration, in order.
+    pub records: Vec<IterationRecord>,
+    /// Whether the job skipped init by warm-starting from its cohort.
+    pub warm_started: bool,
+    /// Admission estimate charged for this job (data + arena bound).
+    pub estimate_bytes: u64,
+    pub subjects: usize,
+    pub variables: usize,
+    pub nnz: usize,
+}
+
+/// Bytes a job will charge against the shared budget: the owned CSR
+/// slices plus the compact-X arena packing bound. This is exactly what
+/// [`FitSession::with_options`] charges for an owned-data session, so
+/// "admitted here" ⇒ "constructs there" (modulo concurrent releases,
+/// which only add headroom).
+pub fn estimate_job_bytes(data: &IrregularTensor) -> u64 {
+    data.heap_bytes() + CompactX::estimate_heap_bytes(data)
+}
+
+// ---------------------------------------------------------------------------
+// Service internals
+
+struct JobEntry {
+    state: JobState,
+    cancel: Arc<AtomicBool>,
+    records: Vec<IterationRecord>,
+    model: Option<Parafac2Model>,
+    warm_started: bool,
+    estimate: u64,
+    subjects: usize,
+    variables: usize,
+    nnz: usize,
+}
+
+impl JobEntry {
+    fn snapshot(&self, id: u64) -> JobStatus {
+        JobStatus {
+            id,
+            state: self.state.clone(),
+            records: self.records.clone(),
+            warm_started: self.warm_started,
+            estimate_bytes: self.estimate,
+            subjects: self.subjects,
+            variables: self.variables,
+            nnz: self.nnz,
+        }
+    }
+}
+
+struct Pending {
+    id: u64,
+    spec: JobSpec,
+    estimate: u64,
+}
+
+struct RegistryState {
+    next_id: u64,
+    jobs: HashMap<u64, JobEntry>,
+    pending: VecDeque<Pending>,
+    running: usize,
+    /// True while one job thread is constructing its session — the
+    /// scheduler admits nothing else until the charge lands (serialized
+    /// admission keeps the headroom check sound).
+    starting: bool,
+}
+
+struct Inner {
+    pool: Pool,
+    budget: Arc<MemBudget>,
+    max_pending: usize,
+    state: Mutex<RegistryState>,
+    /// Scheduler wake: submits, job conclusions, construction acks.
+    wake: Condvar,
+    /// Waiter wake: any registry mutation (used by [`Service::wait`]).
+    progress: Condvar,
+    warm: Mutex<warm::WarmCache>,
+    shutdown: AtomicBool,
+}
+
+/// The resident fit service. Dropping it cancels everything in flight
+/// and joins the scheduler (each running fit stops within one iteration).
+pub struct Service {
+    inner: Arc<Inner>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn start(cfg: &ServiceConfig) -> Service {
+        let budget = match cfg.mem_budget {
+            Some(limit) => MemBudget::limited(limit),
+            None => MemBudget::unlimited(),
+        };
+        let inner = Arc::new(Inner {
+            pool: Pool::new(cfg.workers),
+            budget,
+            max_pending: cfg.max_pending,
+            state: Mutex::new(RegistryState {
+                next_id: 1,
+                jobs: HashMap::new(),
+                pending: VecDeque::new(),
+                running: 0,
+                starting: false,
+            }),
+            wake: Condvar::new(),
+            progress: Condvar::new(),
+            warm: Mutex::new(warm::WarmCache::new(cfg.warm_cache)),
+            shutdown: AtomicBool::new(false),
+        });
+        let sched = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("spartan-scheduler".into())
+                .spawn(move || scheduler_loop(inner))
+                .expect("spawn scheduler thread")
+        };
+        Service { inner, scheduler: Some(sched) }
+    }
+
+    /// Queue a fit. Fails fast with a structured error when the queue is
+    /// full, the submission is invalid, or the estimate exceeds the
+    /// budget limit outright; otherwise returns the job id.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64, ServiceError> {
+        if self.inner.shutdown.load(Ordering::SeqCst) {
+            return Err(ServiceError::ShuttingDown);
+        }
+        let (k, j, nnz) = (spec.data.k(), spec.data.j(), spec.data.nnz());
+        if spec.cfg.rank == 0 {
+            return Err(ServiceError::Invalid("rank must be ≥ 1".into()));
+        }
+        if spec.cfg.rank > j {
+            return Err(ServiceError::Invalid(format!(
+                "rank {} exceeds variable count J={j}",
+                spec.cfg.rank
+            )));
+        }
+        let estimate = estimate_job_bytes(&spec.data);
+        if let Some(limit) = self.inner.budget.limit() {
+            if estimate > limit {
+                return Err(ServiceError::BudgetExceeded { estimate, limit });
+            }
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        if st.pending.len() >= self.inner.max_pending {
+            return Err(ServiceError::QueueFull {
+                pending: st.pending.len(),
+                max: self.inner.max_pending,
+            });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            JobEntry {
+                state: JobState::Queued,
+                cancel: Arc::new(AtomicBool::new(false)),
+                records: Vec::new(),
+                model: None,
+                warm_started: false,
+                estimate,
+                subjects: k,
+                variables: j,
+                nnz,
+            },
+        );
+        st.pending.push_back(Pending { id, spec, estimate });
+        self.inner.wake.notify_all();
+        self.inner.progress.notify_all();
+        Ok(id)
+    }
+
+    /// Snapshot a job's state and per-iteration progress.
+    pub fn status(&self, id: u64) -> Result<JobStatus, ServiceError> {
+        let st = self.inner.state.lock().unwrap();
+        st.jobs.get(&id).map(|e| e.snapshot(id)).ok_or(ServiceError::UnknownJob(id))
+    }
+
+    /// Request cancellation. Queued jobs are removed immediately; running
+    /// jobs stop within one ALS iteration. Returns the snapshot at
+    /// token-set time — `records.len()` is the iteration count the
+    /// "within one iteration" guarantee is measured from. Cancelling a
+    /// terminal job is a no-op (its snapshot is returned unchanged).
+    pub fn cancel(&self, id: u64) -> Result<JobStatus, ServiceError> {
+        let mut st = self.inner.state.lock().unwrap();
+        let entry = st.jobs.get_mut(&id).ok_or(ServiceError::UnknownJob(id))?;
+        match entry.state {
+            JobState::Queued => {
+                entry.state = JobState::Cancelled;
+                let snap = entry.snapshot(id);
+                st.pending.retain(|p| p.id != id);
+                self.inner.wake.notify_all();
+                self.inner.progress.notify_all();
+                Ok(snap)
+            }
+            JobState::Starting | JobState::Running => {
+                entry.cancel.store(true, Ordering::SeqCst);
+                Ok(entry.snapshot(id))
+            }
+            _ => Ok(entry.snapshot(id)),
+        }
+    }
+
+    /// The fitted model, once terminal. `Ok(None)` while the job is still
+    /// queued/starting/running; cancelled jobs yield the partial model at
+    /// the last completed iterate (or `None` if they never started);
+    /// failed jobs surface [`ServiceError::JobFailed`].
+    pub fn result(&self, id: u64) -> Result<Option<Parafac2Model>, ServiceError> {
+        let st = self.inner.state.lock().unwrap();
+        let entry = st.jobs.get(&id).ok_or(ServiceError::UnknownJob(id))?;
+        match &entry.state {
+            JobState::Failed(reason) => {
+                Err(ServiceError::JobFailed { id, reason: reason.clone() })
+            }
+            s if s.is_terminal() => Ok(entry.model.clone()),
+            _ => Ok(None),
+        }
+    }
+
+    /// Block until the job reaches a terminal state; returns the final
+    /// snapshot.
+    pub fn wait(&self, id: u64) -> Result<JobStatus, ServiceError> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match st.jobs.get(&id) {
+                None => return Err(ServiceError::UnknownJob(id)),
+                Some(e) if e.state.is_terminal() => return Ok(e.snapshot(id)),
+                Some(_) => st = self.inner.progress.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// The shared budget (for inspection: `used()`, `peak()`, `limit()`).
+    pub fn budget(&self) -> &Arc<MemBudget> {
+        &self.inner.budget
+    }
+
+    /// Stop accepting jobs, cancel everything pending or running. The
+    /// scheduler exits once running jobs conclude (each within one
+    /// iteration); [`Service::drop`] joins it.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        let st = self.inner.state.lock().unwrap();
+        for entry in st.jobs.values() {
+            entry.cancel.store(true, Ordering::SeqCst);
+        }
+        drop(st);
+        self.inner.wake.notify_all();
+        self.inner.progress.notify_all();
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler & job threads
+
+fn scheduler_loop(inner: Arc<Inner>) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            // Flush the queue as cancelled, then wait for running jobs to
+            // conclude (their cancel flags are already set).
+            while let Some(p) = st.pending.pop_front() {
+                if let Some(e) = st.jobs.get_mut(&p.id) {
+                    e.state = JobState::Cancelled;
+                }
+            }
+            inner.progress.notify_all();
+            if st.running == 0 && !st.starting {
+                return;
+            }
+            st = inner.wake.wait(st).unwrap();
+            continue;
+        }
+        // Serialize admission: while one session is packing its arena, its
+        // charge is still landing — admitting another job against the same
+        // headroom could overcommit.
+        if st.starting {
+            st = inner.wake.wait(st).unwrap();
+            continue;
+        }
+        let admit = match st.pending.front() {
+            None => false,
+            Some(front) => match inner.budget.limit() {
+                None => true,
+                Some(limit) => front.estimate <= limit.saturating_sub(inner.budget.used()),
+            },
+        };
+        if !admit {
+            // Nothing to run, or the front job waits for running jobs to
+            // release memory (it fits the limit — submit rejected it
+            // otherwise — so the queue always drains).
+            st = inner.wake.wait(st).unwrap();
+            continue;
+        }
+        let p = st.pending.pop_front().expect("admitted front job");
+        if let Some(e) = st.jobs.get_mut(&p.id) {
+            e.state = JobState::Starting;
+        }
+        st.starting = true;
+        st.running += 1;
+        inner.progress.notify_all();
+        let inner2 = Arc::clone(&inner);
+        std::thread::Builder::new()
+            .name(format!("spartan-job-{}", p.id))
+            .spawn(move || run_job(inner2, p.id, p.spec))
+            .expect("spawn job thread");
+    }
+}
+
+/// Terminal bookkeeping for one job; `clear_starting` is set on paths
+/// that conclude before the construction ack.
+fn conclude(
+    inner: &Arc<Inner>,
+    id: u64,
+    state: JobState,
+    model: Option<Parafac2Model>,
+    clear_starting: bool,
+) {
+    let mut st = inner.state.lock().unwrap();
+    if clear_starting {
+        st.starting = false;
+    }
+    st.running -= 1;
+    if let Some(e) = st.jobs.get_mut(&id) {
+        e.state = state;
+        e.model = model;
+    }
+    inner.wake.notify_all();
+    inner.progress.notify_all();
+}
+
+fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
+    let JobSpec { data, cfg, cohort } = spec;
+    let cancel = {
+        let st = inner.state.lock().unwrap();
+        st.jobs.get(&id).expect("registered job").cancel.clone()
+    };
+    let warm = cohort
+        .as_deref()
+        .and_then(|c| inner.warm.lock().unwrap().get(c, cfg.rank, data.j(), data.k()));
+    let warm_started = warm.is_some();
+    let options = SessionOptions {
+        pool: Some(inner.pool.clone()),
+        budget: Some(Arc::clone(&inner.budget)),
+        warm,
+        keep_data: false,
+        cancel: Some(cancel),
+    };
+    let mut session = match FitSession::with_options(DataHandle::Owned(data), &cfg, options) {
+        Ok(s) => s,
+        Err(e) => {
+            conclude(&inner, id, JobState::Failed(e.to_string()), None, true);
+            return;
+        }
+    };
+    {
+        // Construction ack: the charge has landed, admission may resume.
+        let mut st = inner.state.lock().unwrap();
+        if let Some(e) = st.jobs.get_mut(&id) {
+            e.state = JobState::Running;
+            e.warm_started = warm_started;
+        }
+        st.starting = false;
+        inner.wake.notify_all();
+        inner.progress.notify_all();
+    }
+    enum End {
+        Done,
+        Cancelled,
+        Failed(String),
+    }
+    let end = loop {
+        match session.step() {
+            Ok(StepOutcome::Iterated(rec)) => {
+                let mut st = inner.state.lock().unwrap();
+                if let Some(e) = st.jobs.get_mut(&id) {
+                    e.records.push(rec);
+                }
+                inner.progress.notify_all();
+            }
+            Ok(StepOutcome::Done) => break End::Done,
+            Ok(StepOutcome::Cancelled) => break End::Cancelled,
+            Err(e) => break End::Failed(e.to_string()),
+        }
+    };
+    match end {
+        End::Failed(reason) => {
+            // Release the session's charge before waking the scheduler.
+            drop(session);
+            conclude(&inner, id, JobState::Failed(reason), None, false);
+        }
+        End::Done | End::Cancelled => {
+            let cancelled = matches!(end, End::Cancelled);
+            let model = session.finish();
+            if let Some(c) = &cohort {
+                // Even a cancelled fit's partial factors beat SvdWarm for
+                // the cohort's next submit.
+                inner.warm.lock().unwrap().put(c, WarmStart::from_model(&model));
+            }
+            let state = if cancelled { JobState::Cancelled } else { JobState::Done };
+            conclude(&inner, id, state, Some(model), false);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::synthetic::{generate, SyntheticSpec};
+    use crate::parafac2::fit_parafac2;
+
+    fn data(seed: u64) -> IrregularTensor {
+        generate(&SyntheticSpec {
+            k: 24,
+            j: 12,
+            max_i_k: 8,
+            target_nnz: 1_500,
+            rank: 2,
+            noise: 0.05,
+            seed,
+        })
+        .tensor
+    }
+
+    fn cfg(rank: usize, max_iters: usize) -> Parafac2Config {
+        Parafac2Config { rank, max_iters, workers: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn concurrent_service_jobs_bitwise_match_direct_fits() {
+        let svc = Service::start(&ServiceConfig { workers: 2, ..Default::default() });
+        let (d1, d2) = (data(11), data(12));
+        let c1 = cfg(3, 8);
+        let c2 = cfg(2, 10);
+        let id1 = svc
+            .submit(JobSpec { data: d1.clone(), cfg: c1.clone(), cohort: None })
+            .unwrap();
+        let id2 = svc
+            .submit(JobSpec { data: d2.clone(), cfg: c2.clone(), cohort: None })
+            .unwrap();
+        assert_eq!(svc.wait(id1).unwrap().state, JobState::Done);
+        assert_eq!(svc.wait(id2).unwrap().state, JobState::Done);
+        let m1 = svc.result(id1).unwrap().expect("done job has model");
+        let m2 = svc.result(id2).unwrap().expect("done job has model");
+        let r1 = fit_parafac2(&d1, &c1).unwrap();
+        let r2 = fit_parafac2(&d2, &c2).unwrap();
+        for (got, want) in [(&m1, &r1), (&m2, &r2)] {
+            assert_eq!(got.h.data(), want.h.data());
+            assert_eq!(got.v.data(), want.v.data());
+            assert_eq!(got.w.data(), want.w.data());
+            assert_eq!(got.stats.final_sse.to_bits(), want.stats.final_sse.to_bits());
+            for (qa, qb) in got.q.iter().zip(&want.q) {
+                assert_eq!(qa.data(), qb.data());
+            }
+        }
+        // all charges released once jobs concluded
+        assert_eq!(svc.budget().used(), 0);
+        assert!(svc.budget().peak() > 0);
+    }
+
+    #[test]
+    fn admission_blocks_queue_until_memory_frees_and_bounds_queue() {
+        let d = data(21);
+        let est = estimate_job_bytes(&d);
+        // Room for exactly one resident job at a time: a running job holds
+        // at least its arena (~half the estimate, the CSR half is released
+        // after the pack), so the est/4 slack never admits a second job.
+        let svc = Service::start(&ServiceConfig {
+            workers: 1,
+            mem_budget: Some(est + est / 4),
+            max_pending: 1,
+            ..Default::default()
+        });
+        // Job 1 runs "forever" (tol 0 never converges) until cancelled.
+        let mut long = cfg(2, 1_000_000);
+        long.tol = 0.0;
+        let id1 = svc.submit(JobSpec { data: d.clone(), cfg: long, cohort: None }).unwrap();
+        // Let the scheduler claim job 1 so the bounded queue is empty.
+        while matches!(svc.status(id1).unwrap().state, JobState::Queued) {
+            std::thread::yield_now();
+        }
+        // Job 2 fits the limit but not the current headroom → stays queued.
+        let id2 = svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }).unwrap();
+        // Queue is bounded: a third submit is a structured reject.
+        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }) {
+            Err(ServiceError::QueueFull { pending: 1, max: 1 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // Wait until job 1 is actually running, then confirm 2 is queued.
+        while !matches!(svc.status(id1).unwrap().state, JobState::Running) {
+            std::thread::yield_now();
+        }
+        assert_eq!(svc.status(id2).unwrap().state, JobState::Queued);
+        // Cancelling job 1 frees its charge; job 2 is admitted and runs.
+        svc.cancel(id1).unwrap();
+        assert_eq!(svc.wait(id1).unwrap().state, JobState::Cancelled);
+        assert_eq!(svc.wait(id2).unwrap().state, JobState::Done);
+        assert!(svc.result(id2).unwrap().is_some());
+        assert_eq!(svc.budget().used(), 0);
+    }
+
+    #[test]
+    fn oversized_job_rejected_at_submit_and_service_stays_usable() {
+        let d = data(31);
+        let est = estimate_job_bytes(&d);
+        let svc = Service::start(&ServiceConfig {
+            workers: 1,
+            mem_budget: Some(est / 2),
+            ..Default::default()
+        });
+        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }) {
+            Err(ServiceError::BudgetExceeded { estimate, limit }) => {
+                assert_eq!(estimate, est);
+                assert_eq!(limit, est / 2);
+            }
+            other => panic!("expected BudgetExceeded, got {other:?}"),
+        }
+        // Nothing was charged or registered; the daemon keeps serving.
+        assert_eq!(svc.budget().used(), 0);
+        assert!(matches!(svc.status(1), Err(ServiceError::UnknownJob(1))));
+        let tiny = generate(&SyntheticSpec {
+            k: 4,
+            j: 6,
+            max_i_k: 3,
+            target_nnz: 40,
+            rank: 2,
+            noise: 0.0,
+            seed: 5,
+        })
+        .tensor;
+        assert!(estimate_job_bytes(&tiny) <= est / 2, "test premise: tiny job fits");
+        let id = svc.submit(JobSpec { data: tiny, cfg: cfg(2, 3), cohort: None }).unwrap();
+        assert_eq!(svc.wait(id).unwrap().state, JobState::Done);
+    }
+
+    #[test]
+    fn cancel_queued_job_never_runs() {
+        let d = data(41);
+        let est = estimate_job_bytes(&d);
+        let svc = Service::start(&ServiceConfig {
+            workers: 1,
+            mem_budget: Some(est + est / 4),
+            ..Default::default()
+        });
+        let mut long = cfg(2, 1_000_000);
+        long.tol = 0.0;
+        let id1 = svc.submit(JobSpec { data: d.clone(), cfg: long, cohort: None }).unwrap();
+        while !matches!(svc.status(id1).unwrap().state, JobState::Running) {
+            std::thread::yield_now();
+        }
+        let id2 = svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }).unwrap();
+        let snap = svc.cancel(id2).unwrap();
+        assert_eq!(snap.state, JobState::Cancelled);
+        assert_eq!(snap.records.len(), 0);
+        assert!(svc.result(id2).unwrap().is_none(), "never-started job has no model");
+        svc.cancel(id1).unwrap();
+        assert_eq!(svc.wait(id1).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn cohort_refits_warm_start_and_shape_mismatch_cold_starts() {
+        let svc = Service::start(&ServiceConfig { workers: 1, ..Default::default() });
+        let d = data(51);
+        let id1 = svc
+            .submit(JobSpec {
+                data: d.clone(),
+                cfg: cfg(3, 5),
+                cohort: Some("ehr-weekly".into()),
+            })
+            .unwrap();
+        let s1 = svc.wait(id1).unwrap();
+        assert_eq!(s1.state, JobState::Done);
+        assert!(!s1.warm_started, "first fit of a cohort cold-starts");
+        // Same cohort, same shape → warm-started from the cached factors.
+        let id2 = svc
+            .submit(JobSpec {
+                data: d.clone(),
+                cfg: cfg(3, 5),
+                cohort: Some("ehr-weekly".into()),
+            })
+            .unwrap();
+        let s2 = svc.wait(id2).unwrap();
+        assert_eq!(s2.state, JobState::Done);
+        assert!(s2.warm_started);
+        // Different rank → shape miss, silent cold start.
+        let id3 = svc
+            .submit(JobSpec {
+                data: d.clone(),
+                cfg: cfg(2, 5),
+                cohort: Some("ehr-weekly".into()),
+            })
+            .unwrap();
+        let s3 = svc.wait(id3).unwrap();
+        assert_eq!(s3.state, JobState::Done);
+        assert!(!s3.warm_started);
+    }
+
+    #[test]
+    fn invalid_submissions_are_structured() {
+        let svc = Service::start(&ServiceConfig { workers: 1, ..Default::default() });
+        let d = data(61);
+        assert!(matches!(
+            svc.submit(JobSpec { data: d.clone(), cfg: cfg(0, 3), cohort: None }),
+            Err(ServiceError::Invalid(_))
+        ));
+        assert!(matches!(
+            svc.submit(JobSpec { data: d.clone(), cfg: cfg(999, 3), cohort: None }),
+            Err(ServiceError::Invalid(_))
+        ));
+        assert!(matches!(svc.status(42), Err(ServiceError::UnknownJob(42))));
+        assert!(matches!(svc.cancel(42), Err(ServiceError::UnknownJob(42))));
+        assert!(matches!(svc.result(42), Err(ServiceError::UnknownJob(42))));
+    }
+
+    #[test]
+    fn errors_render_and_are_std_errors() {
+        let errs: Vec<Box<dyn std::error::Error>> = vec![
+            Box::new(ServiceError::QueueFull { pending: 3, max: 3 }),
+            Box::new(ServiceError::BudgetExceeded { estimate: 1 << 30, limit: 1 << 20 }),
+            Box::new(ServiceError::UnknownJob(7)),
+            Box::new(ServiceError::JobFailed { id: 7, reason: "boom".into() }),
+            Box::new(ServiceError::Invalid("rank".into())),
+            Box::new(ServiceError::ShuttingDown),
+        ];
+        for e in errs {
+            assert!(!e.to_string().is_empty());
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! Newline-delimited JSON wire protocol for `spartan serve`.
+//!
+//! One request object per line, one response object per line, over a
+//! plain TCP stream ([`crate::util::json`] does the encoding — no new
+//! dependencies). Verbs:
+//!
+//! | verb       | request fields                                   | response |
+//! |------------|--------------------------------------------------|----------|
+//! | `ping`     | —                                                | `{"ok":true,"service":"spartan"}` |
+//! | `submit`   | `input` (dataset path on the server), `rank`, optional `max_iters`/`tol`/`nonneg`/`seed`/`engine`/`cohort` | `{"ok":true,"id":N}` |
+//! | `status`   | `id`                                             | job snapshot (state, per-iteration records) |
+//! | `cancel`   | `id`                                             | snapshot at token-set time |
+//! | `result`   | `id`                                             | `ready` flag + the full model once terminal |
+//! | `shutdown` | —                                                | `{"ok":true,"stopping":true}` |
+//!
+//! Failures are `{"ok":false,"kind":K,"error":MSG,...}` with a stable
+//! machine-readable `kind` per [`ServiceError`] variant.
+//!
+//! **Bitwise model transport.** `result` carries every factor matrix
+//! (`H`, `V`, `W`, all `Q_k`) as arrays of 16-hex-digit IEEE-754 bit
+//! patterns — the same idiom as the golden-trajectory fixture
+//! ([`crate::bench::als_runner::golden`]) — so a model fetched over the
+//! wire is **bit-identical** to the one the server fitted; JSON's
+//! decimal float syntax never touches factor data. Timing fields in
+//! `stats` and the per-iteration progress records are display-oriented
+//! and travel as plain numbers; `final_sse`/`final_fit` also get bit
+//! encodings so the SSE trajectory endpoint survives exactly.
+
+use crate::linalg::Mat;
+use crate::parafac2::{FitStats, IterationRecord, Parafac2Model};
+use crate::service::{JobState, JobStatus, ServiceError};
+use crate::util::json::Json;
+
+/// Default listen address of `spartan serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7473";
+
+// ---------------------------------------------------------------------------
+// f64 bit-exact transport (golden-fixture idiom)
+
+fn f64_to_bits_str(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+fn f64_from_bits_str(j: &Json) -> Result<f64, String> {
+    let s = j.as_str().ok_or("expected hex bit string")?;
+    u64::from_str_radix(s, 16).map(f64::from_bits).map_err(|_| format!("bad f64 bits `{s}`"))
+}
+
+/// `{rows, cols, bits: ["3ff0…", …]}` — row-major, bit-exact.
+pub fn mat_to_json(m: &Mat) -> Json {
+    Json::obj(vec![
+        ("rows", Json::num(m.rows() as f64)),
+        ("cols", Json::num(m.cols() as f64)),
+        ("bits", Json::arr(m.data().iter().map(|x| f64_to_bits_str(*x)))),
+    ])
+}
+
+pub fn mat_from_json(j: &Json) -> Result<Mat, String> {
+    let rows = j.get("rows").and_then(Json::as_usize).ok_or("mat missing rows")?;
+    let cols = j.get("cols").and_then(Json::as_usize).ok_or("mat missing cols")?;
+    let bits = j.get("bits").and_then(Json::as_arr).ok_or("mat missing bits")?;
+    if bits.len() != rows * cols {
+        return Err(format!("mat bits len {} ≠ {rows}×{cols}", bits.len()));
+    }
+    let data = bits.iter().map(f64_from_bits_str).collect::<Result<Vec<f64>, _>>()?;
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+// ---------------------------------------------------------------------------
+// Model transport
+
+pub fn model_to_json(m: &Parafac2Model) -> Json {
+    let s = &m.stats;
+    Json::obj(vec![
+        ("rank", Json::num(m.rank as f64)),
+        ("h", mat_to_json(&m.h)),
+        ("v", mat_to_json(&m.v)),
+        ("w", mat_to_json(&m.w)),
+        ("q", Json::arr(m.q.iter().map(mat_to_json))),
+        (
+            "stats",
+            Json::obj(vec![
+                ("iterations", Json::num(s.iterations as f64)),
+                ("final_sse_bits", f64_to_bits_str(s.final_sse)),
+                ("final_fit_bits", f64_to_bits_str(s.final_fit)),
+                ("final_sse", Json::num(s.final_sse)),
+                ("final_fit", Json::num(s.final_fit)),
+                ("total_secs", Json::num(s.total_secs)),
+                ("procrustes_secs", Json::num(s.procrustes_secs)),
+                ("cp_secs", Json::num(s.cp_secs)),
+                ("secs_per_iter", Json::num(s.secs_per_iter)),
+                ("yv_products", Json::num(s.yv_products as f64)),
+                ("traversals", Json::num(s.traversals as f64)),
+                ("x_traversals", Json::num(s.x_traversals as f64)),
+                ("heap_bytes", Json::num(s.heap_bytes as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Inverse of [`model_to_json`]. `fit_history` does not travel (it is
+/// reconstructible from the status records); everything else round-trips,
+/// factors bit-exactly.
+pub fn model_from_json(j: &Json) -> Result<Parafac2Model, String> {
+    let rank = j.get("rank").and_then(Json::as_usize).ok_or("model missing rank")?;
+    let h = mat_from_json(j.get("h").ok_or("model missing h")?)?;
+    let v = mat_from_json(j.get("v").ok_or("model missing v")?)?;
+    let w = mat_from_json(j.get("w").ok_or("model missing w")?)?;
+    let q = j
+        .get("q")
+        .and_then(Json::as_arr)
+        .ok_or("model missing q")?
+        .iter()
+        .map(mat_from_json)
+        .collect::<Result<Vec<Mat>, _>>()?;
+    let sj = j.get("stats").ok_or("model missing stats")?;
+    let num = |k: &str| sj.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let stats = FitStats {
+        iterations: sj.get("iterations").and_then(Json::as_usize).unwrap_or(0),
+        final_sse: sj.get("final_sse_bits").map(f64_from_bits_str).transpose()?.unwrap_or(0.0),
+        final_fit: sj.get("final_fit_bits").map(f64_from_bits_str).transpose()?.unwrap_or(0.0),
+        fit_history: Vec::new(),
+        total_secs: num("total_secs"),
+        procrustes_secs: num("procrustes_secs"),
+        cp_secs: num("cp_secs"),
+        secs_per_iter: num("secs_per_iter"),
+        yv_products: num("yv_products") as u64,
+        traversals: num("traversals") as u64,
+        x_traversals: num("x_traversals") as u64,
+        heap_bytes: num("heap_bytes") as u64,
+    };
+    Ok(Parafac2Model { rank, h, v, w, q, stats })
+}
+
+// ---------------------------------------------------------------------------
+// Status transport
+
+pub fn record_to_json(r: &IterationRecord) -> Json {
+    Json::obj(vec![
+        ("iter", Json::num(r.iter as f64)),
+        ("sse", Json::num(r.sse)),
+        ("fit", Json::num(r.fit)),
+        ("procrustes_secs", Json::num(r.procrustes_secs)),
+        ("cp_secs", Json::num(r.cp_secs)),
+    ])
+}
+
+/// Snapshot → response body (caller adds `"ok": true`).
+pub fn status_to_json(s: &JobStatus) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(s.id as f64)),
+        ("state", Json::str(s.state.as_str())),
+        ("iterations", Json::num(s.records.len() as f64)),
+        ("warm_started", Json::Bool(s.warm_started)),
+        ("estimate_bytes", Json::num(s.estimate_bytes as f64)),
+        ("subjects", Json::num(s.subjects as f64)),
+        ("variables", Json::num(s.variables as f64)),
+        ("nnz", Json::num(s.nnz as f64)),
+        ("records", Json::arr(s.records.iter().map(record_to_json))),
+    ];
+    if let JobState::Failed(reason) = &s.state {
+        fields.push(("reason", Json::str(reason.clone())));
+    }
+    if let Some(last) = s.records.last() {
+        fields.push(("fit", Json::num(last.fit)));
+        fields.push(("sse", Json::num(last.sse)));
+    }
+    Json::obj(fields)
+}
+
+// ---------------------------------------------------------------------------
+// Responses & errors
+
+/// `{"ok":true, …fields}`.
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields)
+}
+
+/// Stable machine-readable `kind` slug per error variant.
+pub fn error_kind(e: &ServiceError) -> &'static str {
+    match e {
+        ServiceError::QueueFull { .. } => "queue_full",
+        ServiceError::BudgetExceeded { .. } => "budget_exceeded",
+        ServiceError::UnknownJob(_) => "unknown_job",
+        ServiceError::JobFailed { .. } => "job_failed",
+        ServiceError::Invalid(_) => "invalid",
+        ServiceError::ShuttingDown => "shutting_down",
+        ServiceError::Io(_) => "io",
+        ServiceError::Protocol(_) => "protocol",
+    }
+}
+
+/// `{"ok":false,"kind":…,"error":…}` plus the variant's structured fields.
+pub fn error_to_response(e: &ServiceError) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("kind", Json::str(error_kind(e))),
+        ("error", Json::str(e.to_string())),
+    ];
+    match e {
+        ServiceError::QueueFull { pending, max } => {
+            fields.push(("pending", Json::num(*pending as f64)));
+            fields.push(("max", Json::num(*max as f64)));
+        }
+        ServiceError::BudgetExceeded { estimate, limit } => {
+            fields.push(("estimate", Json::num(*estimate as f64)));
+            fields.push(("limit", Json::num(*limit as f64)));
+        }
+        ServiceError::UnknownJob(id) | ServiceError::JobFailed { id, .. } => {
+            fields.push(("id", Json::num(*id as f64)));
+        }
+        _ => {}
+    }
+    Json::obj(fields)
+}
+
+/// Reconstruct a [`ServiceError`] from a `{"ok":false,…}` response.
+pub fn error_from_response(j: &Json) -> ServiceError {
+    let msg = j.get("error").and_then(Json::as_str).unwrap_or("unknown error").to_string();
+    let u64_of = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    match j.get("kind").and_then(Json::as_str).unwrap_or("") {
+        "queue_full" => ServiceError::QueueFull {
+            pending: u64_of("pending") as usize,
+            max: u64_of("max") as usize,
+        },
+        "budget_exceeded" => {
+            ServiceError::BudgetExceeded { estimate: u64_of("estimate"), limit: u64_of("limit") }
+        }
+        "unknown_job" => ServiceError::UnknownJob(u64_of("id")),
+        "job_failed" => ServiceError::JobFailed { id: u64_of("id"), reason: msg },
+        "invalid" => ServiceError::Invalid(msg),
+        "shutting_down" => ServiceError::ShuttingDown,
+        "io" => ServiceError::Io(msg),
+        _ => ServiceError::Protocol(msg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::synthetic::{generate, SyntheticSpec};
+    use crate::parafac2::{fit_parafac2, Parafac2Config};
+    use crate::util::json;
+
+    #[test]
+    fn mat_roundtrip_is_bitwise_even_for_odd_values() {
+        let m = Mat::from_vec(
+            2,
+            3,
+            vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE, 1.0 / 3.0, 6.02214076e23, 1e-300],
+        );
+        let j = mat_to_json(&m);
+        let text = j.to_string();
+        let back = mat_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.rows(), 2);
+        assert_eq!(back.cols(), 3);
+        assert_eq!(back.data(), m.data());
+    }
+
+    #[test]
+    fn model_roundtrip_is_bitwise_through_a_real_fit() {
+        let d = generate(&SyntheticSpec {
+            k: 12,
+            j: 8,
+            max_i_k: 5,
+            target_nnz: 400,
+            rank: 2,
+            noise: 0.05,
+            seed: 7,
+        })
+        .tensor;
+        let cfg = Parafac2Config { rank: 2, max_iters: 4, workers: 1, ..Default::default() };
+        let model = fit_parafac2(&d, &cfg).unwrap();
+        let text = model_to_json(&model).to_string();
+        let back = model_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.rank, model.rank);
+        assert_eq!(back.h.data(), model.h.data());
+        assert_eq!(back.v.data(), model.v.data());
+        assert_eq!(back.w.data(), model.w.data());
+        assert_eq!(back.q.len(), model.q.len());
+        for (a, b) in back.q.iter().zip(&model.q) {
+            assert_eq!(a.data(), b.data());
+        }
+        assert_eq!(back.stats.final_sse.to_bits(), model.stats.final_sse.to_bits());
+        assert_eq!(back.stats.final_fit.to_bits(), model.stats.final_fit.to_bits());
+        assert_eq!(back.stats.iterations, model.stats.iterations);
+    }
+
+    #[test]
+    fn errors_roundtrip_with_structured_fields() {
+        let cases = vec![
+            ServiceError::QueueFull { pending: 9, max: 9 },
+            ServiceError::BudgetExceeded { estimate: 123_456, limit: 99 },
+            ServiceError::UnknownJob(41),
+            ServiceError::JobFailed { id: 6, reason: "job 6 failed: boom".into() },
+            ServiceError::ShuttingDown,
+        ];
+        for e in cases {
+            let resp = error_to_response(&e);
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+            let back = error_from_response(&json::parse(&resp.to_string()).unwrap());
+            match (&e, &back) {
+                (ServiceError::QueueFull { pending: a, max: b },
+                 ServiceError::QueueFull { pending: c, max: d }) => {
+                    assert_eq!((a, b), (c, d));
+                }
+                (ServiceError::BudgetExceeded { estimate: a, limit: b },
+                 ServiceError::BudgetExceeded { estimate: c, limit: d }) => {
+                    assert_eq!((a, b), (c, d));
+                }
+                (ServiceError::UnknownJob(a), ServiceError::UnknownJob(b)) => assert_eq!(a, b),
+                (ServiceError::JobFailed { id: a, .. }, ServiceError::JobFailed { id: b, .. }) => {
+                    assert_eq!(a, b)
+                }
+                (ServiceError::ShuttingDown, ServiceError::ShuttingDown) => {}
+                other => panic!("variant changed across the wire: {other:?}"),
+            }
+        }
+    }
+}

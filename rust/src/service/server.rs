@@ -1,0 +1,417 @@
+//! TCP daemon (`spartan serve`) and blocking client for the service.
+//!
+//! The server speaks the newline-delimited JSON protocol of
+//! [`super::protocol`] on a [`std::net::TcpListener`] — one handler
+//! thread per connection, any number of requests per connection. The
+//! client side is a set of one-shot blocking helpers (`submit`,
+//! `status`, `cancel`, `result`, `ping`, `shutdown`) used by the CLI
+//! subcommands and the `service_e2e` test.
+//!
+//! Datasets are referenced **by server-side path** in `submit` — the
+//! daemon and its clients share a filesystem (the `spartan generate` /
+//! `decompose` workflow), so the tensor itself never travels; only the
+//! fitted factors do, bit-exactly (see [`super::protocol`]).
+
+use crate::parafac2::{Backend, Parafac2Config, Parafac2Model};
+use crate::service::protocol::{
+    error_from_response, error_to_response, model_to_json, ok_response, status_to_json,
+};
+use crate::service::{JobSpec, Service, ServiceConfig, ServiceError};
+use crate::sparse::IrregularTensor;
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// How to stand up the daemon.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks a free port (announced on stdout).
+    pub addr: String,
+    pub service: ServiceConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: super::protocol::DEFAULT_ADDR.to_string(),
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+/// Bind, announce the resolved address on stdout (machine-parsable:
+/// `spartan serve: listening on <addr> …`), and serve until a `shutdown`
+/// request arrives.
+pub fn serve(cfg: &ServeConfig) -> Result<(), ServiceError> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| ServiceError::Io(format!("bind {}: {e}", cfg.addr)))?;
+    let local = listener.local_addr().map_err(|e| ServiceError::Io(e.to_string()))?;
+    {
+        // Explicit flush: the announce line is how scripts (CI smoke, the
+        // e2e tests) discover a port-0 bind, and a piped stdout is block
+        // buffered.
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        let budget = match cfg.service.mem_budget {
+            Some(b) => crate::util::humansize::bytes(b),
+            None => "unlimited".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "spartan serve: listening on {local} (workers {}, budget {budget}, queue {})",
+            cfg.service.workers, cfg.service.max_pending,
+        );
+        let _ = out.flush();
+    }
+    serve_listener(listener, &cfg.service)
+}
+
+/// Serve on an already-bound listener (tests bind `127.0.0.1:0` and keep
+/// the port). Returns after a `shutdown` request drains the service.
+pub fn serve_listener(listener: TcpListener, cfg: &ServiceConfig) -> Result<(), ServiceError> {
+    let local = listener.local_addr().map_err(|e| ServiceError::Io(e.to_string()))?;
+    let service = Arc::new(Service::start(cfg));
+    let stop = Arc::new(AtomicBool::new(false));
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let service = Arc::clone(&service);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || handle_conn(stream, &service, &stop, local));
+    }
+    service.shutdown();
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, service: &Service, stop: &AtomicBool, local: SocketAddr) {
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = dispatch(service, line.trim());
+        if writeln!(writer, "{}", resp.to_string()).is_err() || writer.flush().is_err() {
+            return;
+        }
+        if quit {
+            stop.store(true, Ordering::SeqCst);
+            service.shutdown();
+            // Unblock the accept loop so serve_listener observes `stop`.
+            let _ = TcpStream::connect(local);
+            return;
+        }
+    }
+}
+
+/// One request line → (response, stop-the-server?).
+fn dispatch(service: &Service, line: &str) -> (Json, bool) {
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return (error_to_response(&ServiceError::Protocol(format!("bad request: {e}"))), false)
+        }
+    };
+    let verb = req.get("verb").and_then(Json::as_str).unwrap_or("");
+    let resp = match verb {
+        "ping" => Ok(ok_response(vec![("service", Json::str("spartan"))])),
+        "submit" => handle_submit(service, &req),
+        "status" => req_id(&req)
+            .and_then(|id| service.status(id))
+            .map(|s| merge_ok(status_to_json(&s))),
+        "cancel" => req_id(&req)
+            .and_then(|id| service.cancel(id))
+            .map(|s| merge_ok(status_to_json(&s))),
+        "result" => handle_result(service, &req),
+        "shutdown" => {
+            return (ok_response(vec![("stopping", Json::Bool(true))]), true);
+        }
+        other => Err(ServiceError::Protocol(format!("unknown verb `{other}`"))),
+    };
+    match resp {
+        Ok(j) => (j, false),
+        Err(e) => (error_to_response(&e), false),
+    }
+}
+
+fn req_id(req: &Json) -> Result<u64, ServiceError> {
+    req.get("id")
+        .and_then(Json::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| ServiceError::Protocol("missing job `id`".into()))
+}
+
+fn merge_ok(body: Json) -> Json {
+    match body {
+        Json::Obj(mut m) => {
+            m.insert("ok".into(), Json::Bool(true));
+            Json::Obj(m)
+        }
+        other => ok_response(vec![("body", other)]),
+    }
+}
+
+fn handle_submit(service: &Service, req: &Json) -> Result<Json, ServiceError> {
+    let input = req
+        .get("input")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ServiceError::Protocol("submit requires `input`".into()))?;
+    let rank = req
+        .get("rank")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ServiceError::Protocol("submit requires `rank`".into()))?;
+    let data = load_tensor(input)?;
+    // Defaults mirror `spartan decompose` (one shared Parafac2Config
+    // default), so a submit with the same options reproduces it bitwise.
+    let mut cfg = Parafac2Config { rank, ..Default::default() };
+    if let Some(n) = req.get("max_iters").and_then(Json::as_usize) {
+        cfg.max_iters = n;
+    }
+    if let Some(t) = req.get("tol").and_then(Json::as_f64) {
+        cfg.tol = t;
+    }
+    if let Some(b) = req.get("nonneg").and_then(Json::as_bool) {
+        cfg.nonneg = b;
+    }
+    if let Some(s) = req.get("seed").and_then(Json::as_f64) {
+        cfg.seed = s as u64;
+    }
+    if let Some(e) = req.get("engine").and_then(Json::as_str) {
+        cfg.backend = Backend::parse(e)
+            .ok_or_else(|| ServiceError::Invalid(format!("unknown engine `{e}`")))?;
+    }
+    let cohort = req.get("cohort").and_then(Json::as_str).map(str::to_string);
+    let id = service.submit(JobSpec { data, cfg, cohort })?;
+    Ok(ok_response(vec![("id", Json::num(id as f64))]))
+}
+
+fn handle_result(service: &Service, req: &Json) -> Result<Json, ServiceError> {
+    let id = req_id(req)?;
+    let state = service.status(id)?.state;
+    match service.result(id)? {
+        Some(model) => Ok(ok_response(vec![
+            ("ready", Json::Bool(true)),
+            ("state", Json::str(state.as_str())),
+            ("model", model_to_json(&model)),
+        ])),
+        None => Ok(ok_response(vec![
+            ("ready", Json::Bool(false)),
+            ("state", Json::str(state.as_str())),
+        ])),
+    }
+}
+
+fn load_tensor(path: &str) -> Result<IrregularTensor, ServiceError> {
+    let p = std::path::Path::new(path);
+    let loaded = if p.extension().map_or(false, |e| e == "txt") {
+        crate::sparse::io::load_triplets_text(p)
+    } else {
+        crate::sparse::io::load_binary(p)
+    };
+    loaded.map_err(|e| ServiceError::Invalid(format!("loading {path}: {e}")))
+}
+
+// ---------------------------------------------------------------------------
+// Blocking client
+
+/// One request / one response over a fresh connection.
+pub fn request(addr: &str, req: &Json) -> Result<Json, ServiceError> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| ServiceError::Io(format!("connect {addr}: {e}")))?;
+    let mut writer = BufWriter::new(
+        stream.try_clone().map_err(|e| ServiceError::Io(e.to_string()))?,
+    );
+    writeln!(writer, "{}", req.to_string()).map_err(|e| ServiceError::Io(e.to_string()))?;
+    writer.flush().map_err(|e| ServiceError::Io(e.to_string()))?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| ServiceError::Io(e.to_string()))?;
+    if line.trim().is_empty() {
+        return Err(ServiceError::Io("server closed the connection".into()));
+    }
+    let resp = json::parse(line.trim()).map_err(ServiceError::Protocol)?;
+    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+        Ok(resp)
+    } else {
+        Err(error_from_response(&resp))
+    }
+}
+
+pub fn ping(addr: &str) -> bool {
+    request(addr, &Json::obj(vec![("verb", Json::str("ping"))])).is_ok()
+}
+
+/// Options for a client-side submit (server-side defaults apply to every
+/// `None`, mirroring `spartan decompose`).
+#[derive(Clone, Debug, Default)]
+pub struct SubmitRequest {
+    pub input: String,
+    pub rank: usize,
+    pub max_iters: Option<usize>,
+    pub tol: Option<f64>,
+    pub nonneg: Option<bool>,
+    pub seed: Option<u64>,
+    pub engine: Option<String>,
+    pub cohort: Option<String>,
+}
+
+pub fn submit(addr: &str, req: &SubmitRequest) -> Result<u64, ServiceError> {
+    let mut fields = vec![
+        ("verb", Json::str("submit")),
+        ("input", Json::str(req.input.clone())),
+        ("rank", Json::num(req.rank as f64)),
+    ];
+    if let Some(n) = req.max_iters {
+        fields.push(("max_iters", Json::num(n as f64)));
+    }
+    if let Some(t) = req.tol {
+        fields.push(("tol", Json::num(t)));
+    }
+    if let Some(b) = req.nonneg {
+        fields.push(("nonneg", Json::Bool(b)));
+    }
+    if let Some(s) = req.seed {
+        fields.push(("seed", Json::num(s as f64)));
+    }
+    if let Some(e) = &req.engine {
+        fields.push(("engine", Json::str(e.clone())));
+    }
+    if let Some(c) = &req.cohort {
+        fields.push(("cohort", Json::str(c.clone())));
+    }
+    let resp = request(addr, &Json::obj(fields))?;
+    resp.get("id")
+        .and_then(Json::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| ServiceError::Protocol("submit response missing id".into()))
+}
+
+/// Raw status body (`state`, `iterations`, `records`, …).
+pub fn status(addr: &str, id: u64) -> Result<Json, ServiceError> {
+    request(
+        addr,
+        &Json::obj(vec![("verb", Json::str("status")), ("id", Json::num(id as f64))]),
+    )
+}
+
+/// Snapshot at token-set time (its `iterations` anchors the
+/// within-one-iteration cancellation guarantee).
+pub fn cancel(addr: &str, id: u64) -> Result<Json, ServiceError> {
+    request(
+        addr,
+        &Json::obj(vec![("verb", Json::str("cancel")), ("id", Json::num(id as f64))]),
+    )
+}
+
+/// `Ok(None)` while the job is still in flight; the decoded (bit-exact)
+/// model once terminal. Failed jobs surface [`ServiceError::JobFailed`].
+pub fn result(addr: &str, id: u64) -> Result<Option<Parafac2Model>, ServiceError> {
+    let resp = request(
+        addr,
+        &Json::obj(vec![("verb", Json::str("result")), ("id", Json::num(id as f64))]),
+    )?;
+    if resp.get("ready").and_then(Json::as_bool) != Some(true) {
+        return Ok(None);
+    }
+    let mj = resp.get("model").ok_or_else(|| {
+        ServiceError::Protocol("ready result missing model".into())
+    })?;
+    crate::service::protocol::model_from_json(mj)
+        .map(Some)
+        .map_err(ServiceError::Protocol)
+}
+
+/// Ask the daemon to stop (drains in-flight jobs via cancellation).
+pub fn shutdown(addr: &str) -> Result<(), ServiceError> {
+    request(addr, &Json::obj(vec![("verb", Json::str("shutdown"))])).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::synthetic::{generate, SyntheticSpec};
+    use crate::parafac2::fit_parafac2;
+
+    #[test]
+    fn wire_roundtrip_submit_status_result_shutdown() {
+        let data = generate(&SyntheticSpec {
+            k: 16,
+            j: 10,
+            max_i_k: 6,
+            target_nnz: 600,
+            rank: 2,
+            noise: 0.05,
+            seed: 3,
+        })
+        .tensor;
+        let dir = std::env::temp_dir()
+            .join(format!("spartan_server_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wire.spt");
+        crate::sparse::io::save_binary(&data, &path).unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let svc_cfg = ServiceConfig { workers: 1, ..Default::default() };
+        let server = std::thread::spawn(move || serve_listener(listener, &svc_cfg));
+
+        assert!(ping(&addr));
+        let req = SubmitRequest {
+            input: path.to_string_lossy().into_owned(),
+            rank: 2,
+            max_iters: Some(4),
+            seed: Some(42),
+            ..Default::default()
+        };
+        let id = submit(&addr, &req).unwrap();
+        // poll over the wire until terminal
+        let model = loop {
+            if let Some(m) = result(&addr, id).unwrap() {
+                break m;
+            }
+            std::thread::yield_now();
+        };
+        let st = status(&addr, id).unwrap();
+        assert_eq!(st.get("state").and_then(Json::as_str), Some("done"));
+        assert_eq!(
+            st.get("iterations").and_then(Json::as_usize),
+            Some(model.stats.iterations)
+        );
+
+        // the fetched model is bit-identical to a direct in-process fit
+        let cfg = crate::parafac2::Parafac2Config {
+            rank: 2,
+            max_iters: 4,
+            ..Default::default()
+        };
+        let direct = fit_parafac2(&data, &cfg).unwrap();
+        assert_eq!(model.h.data(), direct.h.data());
+        assert_eq!(model.v.data(), direct.v.data());
+        assert_eq!(model.w.data(), direct.w.data());
+        assert_eq!(model.stats.final_sse.to_bits(), direct.stats.final_sse.to_bits());
+
+        // structured errors cross the wire typed
+        assert!(matches!(status(&addr, 999), Err(ServiceError::UnknownJob(999))));
+
+        shutdown(&addr).unwrap();
+        server.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,128 @@
+//! Warm-model cache keyed by cohort id.
+//!
+//! Re-fits of an updated cohort (nightly EHR refresh, a MovieLens window
+//! sliding one week) converge in far fewer sweeps when seeded from the
+//! previous factors than from SvdWarm init. The service keeps the most
+//! recent `H/V/W` per cohort id; a submit that names the same cohort and
+//! matches its shape picks them up as a [`WarmStart`] instead of running
+//! initialization.
+//!
+//! Shape discipline: a cached start is only handed out when the rank,
+//! variable count `J`, **and** subject count `K` all match — `W` is `K×R`,
+//! so a cohort that gained subjects cannot reuse the old factors directly
+//! (that is ROADMAP item 3's append path, not a cache hit). A mismatch is
+//! a silent miss, never an error: the job simply cold-starts.
+//!
+//! Recency is LRU over both hits and inserts, bounded by `capacity`
+//! (capacity 0 disables the cache entirely).
+
+use crate::parafac2::WarmStart;
+use std::collections::VecDeque;
+
+/// Bounded LRU of the latest fitted factors per cohort id.
+pub struct WarmCache {
+    capacity: usize,
+    /// Most recently used at the back.
+    entries: VecDeque<(String, WarmStart)>,
+}
+
+impl WarmCache {
+    pub fn new(capacity: usize) -> WarmCache {
+        WarmCache { capacity, entries: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert (or replace) the factors for `cohort`, evicting the least
+    /// recently used entry when over capacity.
+    pub fn put(&mut self, cohort: &str, warm: WarmStart) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.entries.retain(|(k, _)| k != cohort);
+        self.entries.push_back((cohort.to_string(), warm));
+        while self.entries.len() > self.capacity {
+            self.entries.pop_front();
+        }
+    }
+
+    /// Clone the cached start for `cohort` if its shape matches the job
+    /// (`rank`, `J`, `K`); refreshes recency on hit. Shape mismatch or an
+    /// unknown cohort is a miss.
+    pub fn get(&mut self, cohort: &str, rank: usize, j: usize, k: usize) -> Option<WarmStart> {
+        let pos = self.entries.iter().position(|(key, _)| key == cohort)?;
+        let fits = {
+            let (_, w) = &self.entries[pos];
+            w.h.shape() == (rank, rank) && w.v.shape() == (j, rank) && w.w.shape() == (k, rank)
+        };
+        if !fits {
+            return None;
+        }
+        let entry = self.entries.remove(pos).expect("position just found");
+        let warm = entry.1.clone();
+        self.entries.push_back(entry);
+        Some(warm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn warm(rank: usize, j: usize, k: usize) -> WarmStart {
+        WarmStart {
+            h: Mat::zeros(rank, rank),
+            v: Mat::zeros(j, rank),
+            w: Mat::zeros(k, rank),
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_shape_gate() {
+        let mut c = WarmCache::new(4);
+        c.put("ehr-2026w31", warm(3, 10, 20));
+        assert!(c.get("ehr-2026w31", 3, 10, 20).is_some());
+        // any shape mismatch is a miss, not an error
+        assert!(c.get("ehr-2026w31", 4, 10, 20).is_none());
+        assert!(c.get("ehr-2026w31", 3, 11, 20).is_none());
+        assert!(c.get("ehr-2026w31", 3, 10, 21).is_none());
+        assert!(c.get("unknown", 3, 10, 20).is_none());
+    }
+
+    #[test]
+    fn replaces_existing_cohort_entry() {
+        let mut c = WarmCache::new(2);
+        c.put("a", warm(2, 5, 5));
+        c.put("a", warm(3, 5, 5));
+        assert_eq!(c.len(), 1);
+        assert!(c.get("a", 2, 5, 5).is_none());
+        assert!(c.get("a", 3, 5, 5).is_some());
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = WarmCache::new(2);
+        c.put("a", warm(2, 5, 5));
+        c.put("b", warm(2, 5, 5));
+        assert!(c.get("a", 2, 5, 5).is_some()); // refresh `a`
+        c.put("c", warm(2, 5, 5)); // evicts `b`, the LRU
+        assert!(c.get("b", 2, 5, 5).is_none());
+        assert!(c.get("a", 2, 5, 5).is_some());
+        assert!(c.get("c", 2, 5, 5).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_cache() {
+        let mut c = WarmCache::new(0);
+        c.put("a", warm(2, 5, 5));
+        assert!(c.is_empty());
+        assert!(c.get("a", 2, 5, 5).is_none());
+    }
+}

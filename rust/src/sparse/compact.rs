@@ -88,7 +88,13 @@ impl CompactSlice {
     /// Pack one CSR slice (the one-time cold stream over the original;
     /// tallied as a traversal).
     pub fn pack(xk: &Csr) -> CompactSlice {
-        let support = xk.col_support();
+        // `col_support` collects through a filter, which can over-allocate;
+        // every other buffer below collects with exact capacity. Shrink so
+        // [`CompactX::estimate_heap_bytes`]'s admission bound holds on
+        // *capacities* (what [`CompactSlice::heap_bytes`] reports), not
+        // just lengths.
+        let mut support = xk.col_support();
+        support.shrink_to_fit();
         // column id → local index scratch, only needed here
         let mut local = vec![u32::MAX; xk.cols()];
         for (c, &j) in support.iter().enumerate() {
@@ -280,6 +286,28 @@ impl CompactX {
         self.slices.iter().map(|s| s.heap_bytes()).sum()
     }
 
+    /// Upper bound on [`CompactX::heap_bytes`] computable **without
+    /// packing** — the admission estimate a fit charges against its
+    /// [`crate::util::membudget::MemBudget`] *before* the arena exists, so
+    /// an over-budget fit is rejected structurally instead of discovering
+    /// OOM mid-pack. Per slice: `support ≤ min(nnz_k, J)` ids (exact when
+    /// every nonzero hits a distinct column), `nnz_k` local ids, `nnz_k`
+    /// values, `rows_k + 1` row pointers — all packed via exact-size
+    /// collects, so the bound is tight up to support overcount.
+    pub fn estimate_heap_bytes(data: &IrregularTensor) -> u64 {
+        let j = data.j();
+        (0..data.k())
+            .map(|k| {
+                let s = data.slice(k);
+                let nnz = s.nnz();
+                (nnz.min(j) * 4
+                    + nnz * 4
+                    + nnz * 8
+                    + (s.rows() + 1) * std::mem::size_of::<usize>()) as u64
+            })
+            .sum()
+    }
+
     /// Largest `I_k` (scratch sizing diagnostics).
     pub fn max_i_k(&self) -> usize {
         self.slices.iter().map(|s| s.rows()).max().unwrap_or(0)
@@ -403,6 +431,23 @@ mod tests {
         }
         assert!(par.heap_bytes() > 0);
         assert_eq!(par.nnz(), data.nnz());
+    }
+
+    #[test]
+    fn estimate_bounds_actual_heap_bytes() {
+        // The admission estimate must never under-charge: every packed
+        // arena fits inside what was reserved for it. Dense-ish slices
+        // make the support overcount bite (nnz > c_k), sparse ones make
+        // it tight.
+        let mut rng = Pcg64::seed(217);
+        for &dens in &[0.05, 0.3, 0.9] {
+            let slices: Vec<Csr> =
+                (0..12).map(|_| random_sparse(&mut rng, 10, 15, dens)).collect();
+            let data = IrregularTensor::new(slices);
+            let est = CompactX::estimate_heap_bytes(&data);
+            let actual = CompactX::pack_serial(&data).heap_bytes();
+            assert!(est >= actual, "density {dens}: estimate {est} < actual {actual}");
+        }
     }
 
     #[test]

@@ -15,11 +15,18 @@
 //!   `Pool::serial()` spawns nothing and runs inline with zero
 //!   synchronization).
 //! * Each parallel call publishes **one job** — an erased chunk executor
-//!   plus an atomic chunk cursor — into a shared slot guarded by a
-//!   `Mutex`/`Condvar`; idle workers wake, pull chunk ids from the cursor
-//!   until it is exhausted, and go back to sleep. Work is therefore
-//!   dynamically load-balanced (subjects have wildly different nnz, so
-//!   static splits would skew).
+//!   plus an atomic chunk cursor — into a shared FIFO **job queue** guarded
+//!   by a `Mutex`/`Condvar`; idle workers wake, help the oldest live job by
+//!   pulling chunk ids from its cursor until it is exhausted, then move to
+//!   the next queued job or go back to sleep. Work is therefore dynamically
+//!   load-balanced (subjects have wildly different nnz, so static splits
+//!   would skew).
+//! * The queue is what makes one pool **shareable across concurrent
+//!   fits**: any number of threads may publish jobs simultaneously (the
+//!   resident service multiplexes every running [`crate::parafac2::FitSession`]
+//!   over one worker set this way). Each publisher always participates in
+//!   *its own* job, so a job makes progress even while the workers are
+//!   busy helping an older one; workers drain jobs oldest-first.
 //! * The caller participates in the chunk loop, then blocks on a
 //!   completion latch counting finished chunks. Only after every chunk
 //!   has finished does the call return, which is what makes lending the
@@ -28,14 +35,16 @@
 //!   observe an exhausted cursor and never dereference the task again).
 //! * Per-chunk results are stored **by chunk id** and merged in chunk
 //!   order, so every reduction is bit-for-bit deterministic regardless of
-//!   thread scheduling or worker count (chunk boundaries depend only on
-//!   the data — see [`partition::SUBJECT_CHUNK`]).
+//!   thread scheduling, worker count, or what *other* jobs are in flight
+//!   on the same pool (concurrent jobs share workers, never chunks — see
+//!   `concurrent_jobs_bitwise_equal_standalone` below and the end-to-end
+//!   teeth in `rust/tests/service_e2e.rs`).
 //! * A panic inside a chunk is caught, the latch still advances (no
 //!   deadlock), and the payload is re-thrown on the calling thread after
 //!   the job drains.
-//! * Jobs do not nest: a parallel call issued while a job is already
-//!   active (e.g. from inside a worker) runs inline serially — same
-//!   results, no deadlock.
+//! * Jobs do not nest: a parallel call issued from inside a running chunk
+//!   (tracked by a thread-local, so it is per-thread, not per-pool) runs
+//!   inline serially — same results, no deadlock.
 //!
 //! Cloning a [`Pool`] shares the same workers; the threads shut down when
 //! the last handle drops.
@@ -44,6 +53,8 @@ pub mod partition;
 
 pub use partition::ChunkPlan;
 
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -82,17 +93,30 @@ struct Job {
     status: Arc<JobStatus>,
 }
 
-/// The slot workers watch. `epoch` distinguishes successive jobs so a
-/// worker that finishes early does not re-enter the same job.
-struct JobSlot {
-    epoch: u64,
-    job: Option<Job>,
+/// FIFO of published jobs — what workers watch. A job is pushed by its
+/// publisher and removed by that same publisher once the completion latch
+/// releases; workers additionally drop fully-claimed jobs from the front
+/// so the scan never lingers on dead work. Multiple publishers (concurrent
+/// fits sharing one pool) simply interleave here.
+struct JobQueue {
+    jobs: VecDeque<Job>,
     shutdown: bool,
 }
 
 struct Shared {
-    slot: Mutex<JobSlot>,
+    queue: Mutex<JobQueue>,
     work_cv: Condvar,
+}
+
+thread_local! {
+    /// True while *this thread* is executing a chunk of some job. A
+    /// parallel call issued while set runs inline (publishing a nested job
+    /// could deadlock the latch the outer chunk is counted in, and inline
+    /// execution preserves the exact serial chunk order anyway). Tracking
+    /// this per-thread — rather than per-pool as a "some job is active"
+    /// flag — is what lets *other* threads keep publishing top-level jobs
+    /// concurrently.
+    static IN_JOB: Cell<bool> = const { Cell::new(false) };
 }
 
 struct PoolCore {
@@ -104,8 +128,8 @@ struct PoolCore {
 impl Drop for PoolCore {
     fn drop(&mut self) {
         {
-            let mut slot = self.shared.slot.lock().unwrap();
-            slot.shutdown = true;
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
         }
         self.shared.work_cv.notify_all();
         for h in self.handles.lock().unwrap().drain(..) {
@@ -115,7 +139,8 @@ impl Drop for PoolCore {
 }
 
 /// Claim chunks from the cursor until exhausted. Shared by workers and the
-/// publishing caller.
+/// publishing caller. Sets the thread-local [`IN_JOB`] flag around each
+/// chunk so nested parallel calls run inline.
 fn run_chunks(job: &Job) {
     loop {
         let c = job.next.fetch_add(1, Ordering::Relaxed);
@@ -124,9 +149,14 @@ fn run_chunks(job: &Job) {
         }
         // SAFETY: the task outlives the job — the publishing call blocks
         // until `remaining` hits 0, and this deref happens strictly before
-        // this chunk's decrement below.
+        // this chunk's decrement below. (A worker that grabs the job clone
+        // *after* completion only ever observes an exhausted cursor above
+        // and never reaches this deref.)
         let task = unsafe { &*job.task.0 };
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(c))) {
+        IN_JOB.with(|f| f.set(true));
+        let result = catch_unwind(AssertUnwindSafe(|| task(c)));
+        IN_JOB.with(|f| f.set(false));
+        if let Err(payload) = result {
             let mut slot = job.status.panic.lock().unwrap();
             if slot.is_none() {
                 *slot = Some(payload);
@@ -141,19 +171,27 @@ fn run_chunks(job: &Job) {
 }
 
 fn worker_loop(shared: Arc<Shared>) {
-    let mut last_epoch = 0u64;
     loop {
         let job = {
-            let mut slot = shared.slot.lock().unwrap();
+            let mut q = shared.queue.lock().unwrap();
             loop {
-                if slot.shutdown {
+                if q.shutdown {
                     return;
                 }
-                if slot.job.is_some() && slot.epoch != last_epoch {
-                    last_epoch = slot.epoch;
-                    break slot.job.clone().unwrap();
+                // Drop fully-claimed jobs off the front (their publisher
+                // still holds a clone for the latch wait, so this only
+                // trims the scan), then help the oldest live job.
+                while q
+                    .jobs
+                    .front()
+                    .is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.n_chunks)
+                {
+                    q.jobs.pop_front();
                 }
-                slot = shared.work_cv.wait(slot).unwrap();
+                if let Some(front) = q.jobs.front() {
+                    break front.clone();
+                }
+                q = shared.work_cv.wait(q).unwrap();
             }
         };
         run_chunks(&job);
@@ -183,7 +221,7 @@ impl Pool {
         };
         let workers = resolved.max(1);
         let shared = Arc::new(Shared {
-            slot: Mutex::new(JobSlot { epoch: 0, job: None, shutdown: false }),
+            queue: Mutex::new(JobQueue { jobs: VecDeque::new(), shutdown: false }),
             work_cv: Condvar::new(),
         });
         let mut handles = Vec::with_capacity(workers.saturating_sub(1));
@@ -218,10 +256,15 @@ impl Pool {
     }
 
     /// Execute `task(c)` for every `c in 0..n_chunks`, either inline
-    /// (serial pool, single chunk, or a job already active) or on the
-    /// persistent workers with the caller participating.
+    /// (serial pool, single chunk, or nested inside a running chunk on
+    /// this thread) or by publishing a job to the shared queue with the
+    /// caller participating. Concurrent top-level publishers — e.g. two
+    /// `FitSession`s stepping on one pool — queue independently and each
+    /// block only on their own latch.
     fn run_job(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
-        if self.core.workers == 1 || n_chunks <= 1 {
+        if self.core.workers == 1 || n_chunks <= 1 || IN_JOB.with(|f| f.get()) {
+            // Nested parallel calls (issued from inside a running chunk)
+            // run inline — identical chunk order, no deadlock.
             for c in 0..n_chunks {
                 task(c);
             }
@@ -238,18 +281,8 @@ impl Pool {
             }),
         };
         {
-            let mut slot = self.core.shared.slot.lock().unwrap();
-            if slot.job.is_some() {
-                // Nested parallel call (issued from inside a running job):
-                // run inline — identical chunk order, no deadlock.
-                drop(slot);
-                for c in 0..n_chunks {
-                    task(c);
-                }
-                return;
-            }
-            slot.epoch = slot.epoch.wrapping_add(1);
-            slot.job = Some(job.clone());
+            let mut q = self.core.shared.queue.lock().unwrap();
+            q.jobs.push_back(job.clone());
         }
         self.core.shared.work_cv.notify_all();
         run_chunks(&job);
@@ -260,8 +293,11 @@ impl Pool {
             }
         }
         {
-            let mut slot = self.core.shared.slot.lock().unwrap();
-            slot.job = None;
+            // Workers may already have trimmed it off the front; `retain`
+            // is then a no-op. Identity is the status Arc — tasks can be
+            // byte-identical across jobs, the latch never is.
+            let mut q = self.core.shared.queue.lock().unwrap();
+            q.jobs.retain(|j| !Arc::ptr_eq(&j.status, &job.status));
         }
         if let Some(payload) = job.status.panic.lock().unwrap().take() {
             resume_unwind(payload);
@@ -737,6 +773,76 @@ mod tests {
             pool.par_fold(10, 3, |q| q.sum::<usize>(), |a, b| a + b).unwrap() + r.len()
         });
         assert_eq!(outer, vec![47, 47, 47]);
+    }
+
+    #[test]
+    fn concurrent_jobs_bitwise_equal_standalone() {
+        // Two OS threads hammer one shared pool with interleaved
+        // plan-folds — the shape of two FitSessions sharing a worker set.
+        // Every result must be bitwise equal to the serial run: concurrent
+        // jobs share workers, never chunks, and each job merges its own
+        // chunk-ordered partials.
+        let mut w = vec![2u64; 120];
+        w[13] = 4_000; // heavy-tailed ⇒ uneven, multi-chunk plan
+        let plan = ChunkPlan::balanced(&w);
+        assert!(plan.n_chunks() > 1);
+        let f_a = |r: Range<usize>| r.map(|i| (i as f64 + 1.0).ln()).sum::<f64>();
+        let f_b = |r: Range<usize>| r.map(|i| 1.0 / (i as f64 + 2.0)).sum::<f64>();
+        let want_a = Pool::serial().par_plan_fold(&plan, f_a, |x, y| x + y).unwrap();
+        let want_b = Pool::serial().par_plan_fold(&plan, f_b, |x, y| x + y).unwrap();
+        let pool = Pool::new(4);
+        std::thread::scope(|s| {
+            let plan = &plan;
+            let pa = pool.clone();
+            let ha = s.spawn(move || {
+                (0..100)
+                    .map(|_| pa.par_plan_fold(plan, f_a, |x, y| x + y).unwrap())
+                    .collect::<Vec<f64>>()
+            });
+            let pb = pool.clone();
+            let hb = s.spawn(move || {
+                (0..100)
+                    .map(|_| pb.par_plan_fold(plan, f_b, |x, y| x + y).unwrap())
+                    .collect::<Vec<f64>>()
+            });
+            for (i, got) in ha.join().unwrap().into_iter().enumerate() {
+                assert_eq!(got.to_bits(), want_a.to_bits(), "job A round {i}");
+            }
+            for (i, got) in hb.join().unwrap().into_iter().enumerate() {
+                assert_eq!(got.to_bits(), want_b.to_bits(), "job B round {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn concurrent_mutating_jobs_stay_disjoint() {
+        // Concurrent par_plan_chunks_mut jobs on one pool must never leak
+        // chunks across jobs: each thread owns its buffer exclusively.
+        let plan = ChunkPlan::fixed_size(96, 7);
+        let pool = Pool::new(3);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|t| {
+                    let p = pool.clone();
+                    let plan = &plan;
+                    s.spawn(move || {
+                        let mut data = vec![0u64; 96];
+                        for round in 0..50 {
+                            p.par_plan_chunks_mut(&mut data, plan, |start, sub| {
+                                for (i, x) in sub.iter_mut().enumerate() {
+                                    *x = (start + i) as u64 * 1000 + t * 10 + round % 10;
+                                }
+                            });
+                            let want = |i: u64| i * 1000 + t * 10 + round % 10;
+                            assert!(data.iter().enumerate().all(|(i, &x)| x == want(i as u64)));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
     }
 
     #[test]

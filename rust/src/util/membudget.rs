@@ -120,6 +120,48 @@ impl Drop for Charge<'_> {
     }
 }
 
+/// Owned RAII charge against a **shared** (`Arc`) budget — the admission
+/// primitive for long-lived holders that cannot borrow the tracker for a
+/// lifetime (a [`crate::parafac2::FitSession`] keeps its arena charge for
+/// the whole fit; the service keeps one per resident job). Semantically
+/// identical to [`Charge`]: the bytes are charged on construction
+/// (admission *enforced*, not advisory — construction fails when the
+/// budget would be exceeded) and released exactly once on drop.
+#[derive(Debug)]
+pub struct SharedCharge {
+    budget: Arc<MemBudget>,
+    bytes: u64,
+}
+
+impl SharedCharge {
+    pub fn new(budget: &Arc<MemBudget>, bytes: u64) -> Result<Self, BudgetExceeded> {
+        budget.charge(bytes)?;
+        Ok(SharedCharge { budget: Arc::clone(budget), bytes })
+    }
+
+    /// Bytes held by this charge.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Shrink the held charge to `bytes` (release the difference). Used
+    /// when an admission *estimate* is replaced by the actual packed size,
+    /// or when a session drops a sub-resource (the CSR slices after the
+    /// arena pack) without giving up the rest of its reservation. Growing
+    /// is not supported — admission happens once, up front.
+    pub fn shrink_to(&mut self, bytes: u64) {
+        assert!(bytes <= self.bytes, "SharedCharge can only shrink");
+        self.budget.release(self.bytes - bytes);
+        self.bytes = bytes;
+    }
+}
+
+impl Drop for SharedCharge {
+    fn drop(&mut self) {
+        self.budget.release(self.bytes);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +204,45 @@ mod tests {
         }
         assert_eq!(b.used(), 0);
         assert_eq!(b.peak(), 90);
+    }
+
+    #[test]
+    fn shared_charge_admission_and_release() {
+        let b = MemBudget::limited(100);
+        let c = SharedCharge::new(&b, 70).unwrap();
+        assert_eq!(c.bytes(), 70);
+        assert_eq!(b.used(), 70);
+        // a second holder is admission-checked against the same tracker
+        let err = SharedCharge::new(&b, 40).unwrap_err();
+        assert_eq!(err.used, 70);
+        let c2 = SharedCharge::new(&b, 30).unwrap();
+        drop(c);
+        assert_eq!(b.used(), 30);
+        drop(c2);
+        assert_eq!(b.used(), 0);
+        assert_eq!(b.peak(), 100);
+    }
+
+    #[test]
+    fn shared_charge_shrinks_but_never_grows() {
+        let b = MemBudget::limited(100);
+        let mut c = SharedCharge::new(&b, 90).unwrap();
+        c.shrink_to(40); // e.g. estimate → actual, or CSR dropped post-pack
+        assert_eq!(b.used(), 40);
+        assert_eq!(c.bytes(), 40);
+        // freed headroom is immediately admissible to others
+        let c2 = SharedCharge::new(&b, 50).unwrap();
+        drop(c2);
+        drop(c);
+        assert_eq!(b.used(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "only shrink")]
+    fn shared_charge_grow_panics() {
+        let b = MemBudget::unlimited();
+        let mut c = SharedCharge::new(&b, 10).unwrap();
+        c.shrink_to(20);
     }
 
     #[test]

@@ -20,7 +20,10 @@ fn help_lists_subcommands() {
     let out = spartan().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["generate", "decompose", "phenotype", "inspect", "artifacts-check", "bench-diff"] {
+    for cmd in [
+        "generate", "decompose", "phenotype", "inspect", "artifacts-check", "bench-diff",
+        "serve", "submit", "status", "cancel", "result", "serve-stop",
+    ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
 }

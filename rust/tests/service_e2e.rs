@@ -1,0 +1,303 @@
+//! End-to-end service tests: spawn the real `spartan serve` daemon and
+//! drive it through the CLI clients (`submit` / `status` / `cancel` /
+//! `result` / `serve-stop`), asserting the PR's three contracts:
+//!
+//! 1. two fits interleaved on the daemon's one shared pool are **bitwise
+//!    identical** to standalone `spartan decompose` runs (CSV byte
+//!    compare of every saved factor matrix);
+//! 2. cancellation stops a running fit within one ALS iteration and
+//!    still yields the partial model;
+//! 3. a job whose arena estimate exceeds the memory budget is rejected
+//!    with a structured error — not an OOM — and the daemon keeps
+//!    serving.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn spartan() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_spartan"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spartan_service_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Guard that kills the daemon if a test panics before stopping it.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    /// Start `spartan serve` on a free port and parse the announced
+    /// address off its stdout.
+    fn start(extra: &[&str]) -> Daemon {
+        let mut cmd = spartan();
+        cmd.args(["serve", "--addr", "127.0.0.1:0"]).args(extra).stdout(Stdio::piped());
+        let mut child = cmd.spawn().unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad announce line: {line:?}"))
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .to_string();
+        Daemon { child, addr }
+    }
+
+    fn stop(mut self) {
+        let out =
+            spartan().args(["serve-stop", "--addr", &self.addr]).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let status = self.child.wait().unwrap();
+        assert!(status.success(), "daemon exited with {status}");
+        // skip the kill in Drop
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn generate(data: &Path, subjects: &str, nnz: &str, seed: &str) {
+    let out = spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", subjects, "--variables", "20", "--max-obs", "8",
+            "--nnz", nnz, "--rank", "3", "--seed", seed,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+/// `submitted job <id>` → id.
+fn submit(addr: &str, data: &Path, extra: &[&str]) -> String {
+    let out = spartan()
+        .args(["submit", "--addr", addr, "--input", data.to_str().unwrap()])
+        .args(extra)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    text.lines()
+        .find_map(|l| l.strip_prefix("submitted job "))
+        .unwrap_or_else(|| panic!("no job id in {text:?}"))
+        .trim()
+        .to_string()
+}
+
+/// `job N: state=S iterations=I …` → (state, iterations).
+fn status(addr: &str, id: &str) -> (String, usize) {
+    let out = spartan().args(["status", "--addr", addr, "--id", id]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let field = |key: &str| {
+        text.split_whitespace()
+            .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+            .unwrap_or_else(|| panic!("no {key} in {text:?}"))
+            .to_string()
+    };
+    (field("state"), field("iterations").parse().unwrap())
+}
+
+fn wait_terminal(addr: &str, id: &str) -> (String, usize) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (state, iters) = status(addr, id);
+        if matches!(state.as_str(), "done" | "cancelled" | "failed") {
+            return (state, iters);
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in {state}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn read_model_csvs(dir: &Path) -> Vec<(String, String)> {
+    let mut files: Vec<String> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".csv"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 4, "expected factor CSVs in {dir:?}, got {files:?}");
+    files
+        .into_iter()
+        .map(|n| {
+            let body = std::fs::read_to_string(dir.join(&n)).unwrap();
+            (n, body)
+        })
+        .collect()
+}
+
+#[test]
+fn interleaved_daemon_fits_bitwise_match_standalone_decompose() {
+    let dir = tmpdir("bitwise");
+    let d1 = dir.join("a.spt");
+    let d2 = dir.join("b.spt");
+    generate(&d1, "40", "3000", "6");
+    generate(&d2, "30", "2500", "7");
+
+    let daemon = Daemon::start(&["--workers", "2"]);
+    // Submit both up front so the fits interleave on the shared pool.
+    let id1 = submit(&daemon.addr, &d1, &["--rank", "3", "--max-iters", "8", "--seed", "2"]);
+    let id2 = submit(&daemon.addr, &d2, &["--rank", "2", "--max-iters", "10", "--seed", "5"]);
+    assert_eq!(wait_terminal(&daemon.addr, &id1).0, "done");
+    assert_eq!(wait_terminal(&daemon.addr, &id2).0, "done");
+
+    for (id, data, rank, iters, seed) in
+        [(&id1, &d1, "3", "8", "2"), (&id2, &d2, "2", "10", "5")]
+    {
+        let served = dir.join(format!("served_{id}"));
+        let out = spartan()
+            .args([
+                "result", "--addr", &daemon.addr, "--id", id,
+                "--save-model", served.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+        let direct = dir.join(format!("direct_{id}"));
+        let out = spartan()
+            .args([
+                "decompose", "--input", data.to_str().unwrap(), "--rank", rank,
+                "--max-iters", iters, "--seed", seed, "--workers", "1",
+                "--save-model", direct.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+        // byte-identical CSVs ⇒ bitwise-identical factors, end to end
+        // through the wire (hex-bit transport) and the shared pool.
+        let a = read_model_csvs(&served);
+        let b = read_model_csvs(&direct);
+        assert_eq!(a.len(), b.len());
+        for ((na, ca), (nb, cb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(ca, cb, "factor CSV {na} differs between served and direct fit");
+        }
+    }
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cancel_stops_within_one_iteration_and_keeps_partial_model() {
+    let dir = tmpdir("cancel");
+    let data = dir.join("data.spt");
+    generate(&data, "40", "3000", "9");
+
+    let daemon = Daemon::start(&["--workers", "2"]);
+    // tol 0 never converges; the job runs until cancelled.
+    let id = submit(
+        &daemon.addr,
+        &data,
+        &["--rank", "3", "--max-iters", "1000000", "--tol", "0", "--seed", "3"],
+    );
+    // let it make real progress first
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (state, iters) = status(&daemon.addr, &id);
+        assert_ne!(state, "failed");
+        if state == "running" && iters >= 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never reached 2 iterations");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let out = spartan().args(["cancel", "--addr", &daemon.addr, "--id", &id]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let at_cancel: usize = text
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("iterations_at_cancel="))
+        .unwrap_or_else(|| panic!("no iterations_at_cancel in {text:?}"))
+        .parse()
+        .unwrap();
+
+    let (state, final_iters) = wait_terminal(&daemon.addr, &id);
+    assert_eq!(state, "cancelled");
+    // the engine checkpoints at iteration boundaries: at most the
+    // iteration in flight when the flag was raised completes.
+    assert!(
+        final_iters <= at_cancel + 1,
+        "cancelled at {at_cancel} but ran to {final_iters}"
+    );
+    // the partial model at the last completed iterate is available
+    let saved = dir.join("partial");
+    let out = spartan()
+        .args([
+            "result", "--addr", &daemon.addr, "--id", &id,
+            "--save-model", saved.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(saved.join("H.csv").exists());
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oversized_job_gets_structured_reject_and_daemon_keeps_serving() {
+    let dir = tmpdir("admission");
+    let big = dir.join("big.spt");
+    let small = dir.join("small.spt");
+    generate(&big, "200", "50000", "12");
+    generate(&small, "20", "500", "13");
+
+    let daemon = Daemon::start(&["--workers", "1", "--mem-budget", "64KB"]);
+    // the big job's arena estimate exceeds the whole budget → structured
+    // reject at submit, never an allocation
+    let out = spartan()
+        .args([
+            "submit", "--addr", &daemon.addr, "--input", big.to_str().unwrap(),
+            "--rank", "3", "--max-iters", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("memory budget exceeded"), "stderr: {err}");
+
+    // the daemon is still fully serviceable: a job that fits runs to done
+    let id = submit(&daemon.addr, &small, &["--rank", "2", "--max-iters", "4"]);
+    let (state, _) = wait_terminal(&daemon.addr, &id);
+    assert_eq!(state, "done");
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cohort_resubmit_warm_starts() {
+    let dir = tmpdir("warm");
+    let data = dir.join("data.spt");
+    generate(&data, "30", "2000", "15");
+
+    let daemon = Daemon::start(&["--workers", "1"]);
+    let args = ["--rank", "2", "--max-iters", "5", "--cohort", "nightly", "--wait"];
+    let id1 = submit(&daemon.addr, &data, &args);
+    let id2 = submit(&daemon.addr, &data, &args);
+    let stat = |id: &str| {
+        let out = spartan().args(["status", "--addr", &daemon.addr, "--id", id]).output().unwrap();
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    assert!(stat(&id1).contains("warm_started=false"), "{}", stat(&id1));
+    assert!(stat(&id2).contains("warm_started=true"), "{}", stat(&id2));
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
