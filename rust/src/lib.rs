@@ -91,6 +91,28 @@
 //! a model fetched over the wire is bit-identical to the fit. End-to-end
 //! coverage: `rust/tests/service_e2e.rs` and CI's `service-smoke` step.
 //!
+//! The fit also shards **across processes** ([`service::shard`]):
+//! `spartan shard-worker` processes own contiguous subject ranges (each
+//! packs its own compact-X arena) and a coordinator — `spartan decompose
+//! --shards …` or a daemon job submitted with `shards` — streams only
+//! `R×R`/`J×R` partials per iteration and replays the single-process
+//! merge, so the sharded trajectory is **bitwise identical** to a local
+//! fit (pinned by `rust/tests/shard_e2e.rs` and CI's `shard-smoke` job).
+//!
+//! ## Documentation map
+//!
+//! Three books under `docs/` go deeper than any one module doc:
+//!
+//! * `docs/ARCHITECTURE.md` — the layer map (sparse arenas → kernels →
+//!   ALS/FitSession → pool → service/shards), the one-cold-pass dataflow
+//!   with its counter names, and the bitwise-determinism contract.
+//! * `docs/PROTOCOL.md` — the **normative** wire spec for `spartan
+//!   serve` and `spartan shard-worker`: framing, every verb, payload
+//!   schemas, the hex-bit f64 rule, error slugs, version handshake.
+//! * `docs/OPERATIONS.md` — running the daemon and sharded fits:
+//!   membudget sizing, queue/admission semantics, warm-cache behavior,
+//!   shard topologies, and how to read the fit counters.
+//!
 //! ## Benchmarks
 //!
 //! The paper-reproduction benches live under `rust/benches/` and run with

@@ -8,6 +8,7 @@
 //! * `artifacts-check` validate + smoke-execute the AOT artifacts
 //! * `bench-diff`      gate bench_results medians against a previous run
 //! * `serve`           resident fit daemon (shared pool, admission, warm cache)
+//! * `shard-worker`    own a subject range for a sharded fit (see docs/OPERATIONS.md)
 //! * `submit`/`status`/`cancel`/`result`/`serve-stop`  clients for `serve`
 //!
 //! Run `spartan help` for options.
@@ -53,6 +54,7 @@ fn run(args: &Args) -> Result<()> {
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("bench-diff") => cmd_bench_diff(args),
         Some("serve") => cmd_serve(args),
+        Some("shard-worker") => cmd_shard_worker(args),
         Some("serve-stop") => cmd_serve_stop(args),
         Some("submit") => cmd_submit(args),
         Some("status") => cmd_status(args),
@@ -80,6 +82,10 @@ USAGE: spartan <subcommand> [options]
            [--max-iters N] [--tol T] [--nonneg] [--unconstrained]
            [--workers N] [--seed S] [--restarts N] [--mem-budget 4GiB]
            [--artifacts DIR] [--save-model DIR]
+           [--shards host:port,host:port,...]
+           (--shards runs the fit as a coordinator over `shard-worker`
+            processes — bitwise identical to the local fit; FILE must be
+            readable by every worker)
 
   compare  --input FILE --rank R [--max-iters N] [--workers N] [--seed S]
            (times one ALS iteration under every engine and prints speedups)
@@ -102,11 +108,19 @@ USAGE: spartan <subcommand> [options]
             membudget admission control, warm-started cohort re-fits;
             newline-delimited JSON over TCP)
 
+  shard-worker [--addr 127.0.0.1:0] [--workers N]
+           (own one contiguous subject range of a sharded fit; announces
+            its resolved address on stdout, serves coordinators until
+            shut down — protocol in docs/PROTOCOL.md)
+
   submit   --input FILE --rank R [--addr A] [--engine spartan|baseline]
            [--max-iters N] [--tol T] [--nonneg] [--unconstrained]
            [--seed S] [--cohort ID] [--wait]
+           [--shards host:port,host:port,...]
            (queue a fit on the daemon; --cohort opts into warm-starting
-            from that cohort's previous factors; --wait polls to completion)
+            from that cohort's previous factors; --wait polls to completion;
+            --shards makes the daemon coordinate shard-workers instead of
+            fitting locally)
 
   status   --id N [--addr A]
   cancel   --id N [--addr A]       (stops within one ALS iteration)
@@ -180,7 +194,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_decompose(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "input", "rank", "engine", "config", "max-iters", "tol", "nonneg", "unconstrained",
-        "workers", "seed", "restarts", "mem-budget", "artifacts", "save-model",
+        "workers", "seed", "restarts", "mem-budget", "artifacts", "save-model", "shards",
     ])
     .map_err(|e| anyhow!(e))?;
     let input = PathBuf::from(args.get("input").context("--input required")?);
@@ -223,6 +237,38 @@ fn cmd_decompose(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     println!("data: {}", data.summary());
+
+    // Sharded coordinator path: the subject-heavy phases run in
+    // `spartan shard-worker` processes, bitwise identical to the local
+    // fit (see docs/ARCHITECTURE.md § sharding).
+    if let Some(list) = args.get("shards") {
+        if matches!(cfg.engine, Engine::Pjrt) {
+            bail!("--shards is incompatible with --engine pjrt");
+        }
+        let addrs: Vec<String> = list
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        if addrs.is_empty() {
+            bail!("--shards needs at least one host:port");
+        }
+        let mut fit_cfg = cfg.fit.clone();
+        fit_cfg.backend = cfg.native_backend();
+        let spec = spartan::service::shard::ShardSpec::new(
+            addrs,
+            input.to_string_lossy().into_owned(),
+        );
+        println!("sharding over {} worker(s): {}", spec.addrs.len(), spec.addrs.join(", "));
+        let model = run_sharded_fit(data, &fit_cfg, &spec)?;
+        print_fit_summary(&model);
+        if let Some(dir) = args.get("save-model") {
+            save_model(&model, Path::new(dir))?;
+            println!("model saved to {dir}/");
+        }
+        return Ok(());
+    }
+
     let model = match cfg.engine {
         Engine::Pjrt => {
             let ctx = PjrtContext::cpu()?;
@@ -487,6 +533,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     spartan::service::server::serve(&cfg).map_err(|e| anyhow!("{e}"))
 }
 
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    args.reject_unknown(&["addr", "workers"]).map_err(|e| anyhow!(e))?;
+    let addr = args.get_or("addr", "127.0.0.1:0");
+    let workers = args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    spartan::service::shard::run_worker(addr, workers).map_err(|e| anyhow!("{e}"))
+}
+
+/// Drive a [`ShardedFitSession`](spartan::service::shard::ShardedFitSession)
+/// to completion — the sharded counterpart of `fit_parafac2`.
+fn run_sharded_fit(
+    data: IrregularTensor,
+    cfg: &spartan::parafac2::Parafac2Config,
+    spec: &spartan::service::shard::ShardSpec,
+) -> Result<Parafac2Model> {
+    use spartan::parafac2::StepOutcome;
+    let mut session = spartan::service::shard::ShardedFitSession::new(data, cfg, spec, None)
+        .map_err(|e| anyhow!("{e}"))?;
+    loop {
+        match session.step().map_err(|e| anyhow!("{e}"))? {
+            StepOutcome::Iterated(_) => {}
+            StepOutcome::Done | StepOutcome::Cancelled => break,
+        }
+    }
+    session.finish().map_err(|e| anyhow!("{e}"))
+}
+
 fn cmd_serve_stop(args: &Args) -> Result<()> {
     args.reject_unknown(&["addr"]).map_err(|e| anyhow!(e))?;
     let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
@@ -499,7 +571,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
     use spartan::service::server::{self, SubmitRequest};
     args.reject_unknown(&[
         "input", "rank", "addr", "engine", "max-iters", "tol", "nonneg", "unconstrained",
-        "seed", "cohort", "wait",
+        "seed", "cohort", "wait", "shards",
     ])
     .map_err(|e| anyhow!(e))?;
     let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
@@ -521,6 +593,15 @@ fn cmd_submit(args: &Args) -> Result<()> {
         seed: args.get_u64("seed").map_err(|e| anyhow!(e))?,
         engine: args.get("engine").map(str::to_string),
         cohort: args.get("cohort").map(str::to_string),
+        shards: args
+            .get("shards")
+            .map(|s| {
+                s.split(',')
+                    .map(|a| a.trim().to_string())
+                    .filter(|a| !a.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default(),
     };
     let id = server::submit(addr, &req).map_err(|e| anyhow!("{e}"))?;
     println!("submitted job {id}");

@@ -492,18 +492,15 @@ impl<'d> FitSession<'d> {
             );
         }
 
-        let sse = (self.x_norm_sq - self.y.norm_sq() + cp_stats.y_residual_sq).max(0.0);
-        let fit = 1.0 - sse.sqrt() / self.x_norm;
+        let sse = sse_from_parts(self.x_norm_sq, self.y.norm_sq(), cp_stats.y_residual_sq);
+        let fit = fit_from_sse(sse, self.x_norm);
         self.stats.fit_history.push(fit);
         self.iters_done = iter + 1;
         crate::debug!("iter {iter}: sse={sse:.6e} fit={fit:.6}");
 
         // --- convergence --------------------------------------------------
-        if self.prev_sse.is_finite() {
-            let denom = self.prev_sse.max(f64::MIN_POSITIVE);
-            if (self.prev_sse - sse).abs() / denom < self.cfg.tol {
-                self.converged = true;
-            }
+        if sse_converged(self.prev_sse, sse, self.cfg.tol) {
+            self.converged = true;
         }
         self.prev_sse = sse;
 
@@ -532,7 +529,7 @@ impl<'d> FitSession<'d> {
         let m3 =
             super::mttkrp::mttkrp_mode3(&self.y, &self.factors.h, &self.factors.v, &self.pool, &self.plan);
         let final_res = super::cp_als::residual_stats(&m3, &self.factors, self.y.norm_sq());
-        let final_sse = (self.x_norm_sq - self.y.norm_sq() + final_res.y_residual_sq).max(0.0);
+        let final_sse = sse_from_parts(self.x_norm_sq, self.y.norm_sq(), final_res.y_residual_sq);
         let mut stats = self.stats;
         stats.yv_products = self.y.yv_products();
         stats.traversals = self.y.traversals();
@@ -544,7 +541,7 @@ impl<'d> FitSession<'d> {
 
         stats.iterations = self.iters_done;
         stats.final_sse = final_sse;
-        stats.final_fit = 1.0 - final_sse.sqrt() / self.x_norm;
+        stats.final_fit = fit_from_sse(final_sse, self.x_norm);
         stats.total_secs = self.total_sw.elapsed_secs();
         stats.secs_per_iter = if self.iters_done > 0 {
             (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64
@@ -598,6 +595,36 @@ impl<'d> FitSession<'d> {
     pub fn holds_data(&self) -> bool {
         self.data.get().is_some()
     }
+}
+
+// ---------------------------------------------------------------------------
+// The per-iteration scalar seam
+//
+// The sharded coordinator (`service::shard`) re-evaluates exactly these
+// expressions from merged partials; sharing the functions (not copies of
+// the formulas) is what makes "bitwise identical to a local fit" a
+// property of the code rather than of reviewer vigilance.
+
+/// SSE of the current iterate from the tracked decomposition
+/// `‖X‖² − ‖Y‖² + ‖Y − M‖²` (module docs) — evaluated in exactly this
+/// operation order by both the local step and the sharded merge.
+pub(crate) fn sse_from_parts(x_norm_sq: f64, y_norm_sq: f64, y_residual_sq: f64) -> f64 {
+    (x_norm_sq - y_norm_sq + y_residual_sq).max(0.0)
+}
+
+/// Fit = `1 − √SSE / ‖X‖`.
+pub(crate) fn fit_from_sse(sse: f64, x_norm: f64) -> f64 {
+    1.0 - sse.sqrt() / x_norm
+}
+
+/// The relative-ΔSSE convergence test (`|ΔSSE|/SSE < tol`), total over the
+/// first iteration's infinite `prev_sse`.
+pub(crate) fn sse_converged(prev_sse: f64, sse: f64, tol: f64) -> bool {
+    if !prev_sse.is_finite() {
+        return false;
+    }
+    let denom = prev_sse.max(f64::MIN_POSITIVE);
+    (prev_sse - sse).abs() / denom < tol
 }
 
 /// Fit a PARAFAC2 model.

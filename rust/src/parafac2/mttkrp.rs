@@ -227,7 +227,11 @@ fn mode2_chunk(
     (ids, vals)
 }
 
-fn mode2_merge(j_dim: usize, r: usize, partials: Vec<(Vec<u32>, Vec<f64>)>) -> Mat {
+/// Scatter-add the per-chunk `(support ids, row-major vals)` partials into
+/// a dense `J×R` result, in partial (= plan chunk) order. `pub(crate)`
+/// because the sharded coordinator replays this exact scatter over the
+/// wire-shipped per-chunk partials, concatenated in global chunk order.
+pub(crate) fn mode2_merge(j_dim: usize, r: usize, partials: Vec<(Vec<u32>, Vec<f64>)>) -> Mat {
     let mut m = Mat::zeros(j_dim, r);
     for (ids, vals) in partials {
         for (t, &j) in ids.iter().enumerate() {
@@ -264,11 +268,28 @@ pub fn mttkrp_mode2_cached(
     scratch: &mut FusedScratch,
 ) -> Mat {
     let r = check_mode2_shapes(y, h, w, plan);
-    scratch.ensure(y, r);
-    let partials = pool.par_plan_chunks_mut(&mut scratch.z, plan, |start, sub| {
-        mode2_chunk(y, h, w, start..start + sub.len(), Some(sub))
-    });
+    let partials = mttkrp_mode2_partials_cached(y, h, w, pool, plan, scratch);
     mode2_merge(y.j_dim, r, partials)
+}
+
+/// The per-chunk half of [`mttkrp_mode2_cached`]: run the fused sweep
+/// (filling the `Z_k` cache) and return the **unmerged** per-chunk
+/// `(support ids, vals)` partials in plan chunk order — support ids stay
+/// in the global `0..J` space, so a shard's partials scatter directly
+/// into the coordinator's `J×R` accumulator via [`mode2_merge`].
+pub(crate) fn mttkrp_mode2_partials_cached(
+    y: &PackedY,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    scratch: &mut FusedScratch,
+) -> Vec<(Vec<u32>, Vec<f64>)> {
+    let r = check_mode2_shapes(y, h, w, plan);
+    scratch.ensure(y, r);
+    pool.par_plan_chunks_mut(&mut scratch.z, plan, |start, sub| {
+        mode2_chunk(y, h, w, start..start + sub.len(), Some(sub))
+    })
 }
 
 fn check_mode2_shapes(y: &PackedY, h: &Mat, w: &Mat, plan: &ChunkPlan) -> usize {

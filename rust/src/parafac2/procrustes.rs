@@ -326,30 +326,50 @@ pub fn procrustes_pack_mode1(
     scratch: &mut [SubjectScratch],
 ) -> FusedPackSweep {
     let r = v.cols();
+    let partials = procrustes_pack_mode1_partials(cx, v, h, w, pool, plan, y, scratch);
+    merge_fused_partials(partials, r)
+}
+
+/// The per-chunk half of [`procrustes_pack_mode1`]: run the fused sweep
+/// and return the **unmerged** per-chunk `(M¹ partial, yv_products)` in
+/// plan chunk order. The sharded coordinator ships these partials over
+/// the wire and replays [`merge_fused_partials`] over the *global* chunk
+/// sequence — the same flat seeded-from-first fold a single process runs —
+/// which is what keeps a sharded fit bitwise identical to a local one.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn procrustes_pack_mode1_partials(
+    cx: &CompactX,
+    v: &Mat,
+    h: &Mat,
+    w: &Mat,
+    pool: &Pool,
+    plan: &ChunkPlan,
+    y: &mut PackedY,
+    scratch: &mut [SubjectScratch],
+) -> Vec<(Mat, u64)> {
+    let r = v.cols();
     assert_eq!(w.cols(), r, "W/V rank mismatch");
     y.j_dim = cx.j();
     y.resize_slots(cx.k());
-    let partials: Vec<(Mat, u64)> =
-        pool.par_plan_zip_mut(&mut y.slices, scratch, plan, |start, sub, s| {
-            let mut acc = Mat::zeros(r, r);
-            let mut yv_products = 0u64;
-            for (i, slot) in sub.iter_mut().enumerate() {
-                let kk = start + i;
-                let cxk = &cx.slices[kk];
-                target_into(cxk, v, h, w.row(kk), s);
-                svd::procrustes_polar_jacobi_into(&s.b, &mut s.polar, &mut s.q);
-                cxk.repack_y_fused(&s.q, slot);
-                // The fusion: consume the slice now, while `yt` is
-                // cache-hot from the pack above. Same kernel, same FP
-                // order as the standalone mode-1 sweep.
-                slot.yk_times_v_fused_into(v, &mut s.temp);
-                yv_products += 1;
-                blas::rowhad_inplace(&mut s.temp, w.row(kk));
-                acc.axpy(1.0, &s.temp);
-            }
-            (acc, yv_products)
-        });
-    merge_fused_partials(partials, r)
+    pool.par_plan_zip_mut(&mut y.slices, scratch, plan, |start, sub, s| {
+        let mut acc = Mat::zeros(r, r);
+        let mut yv_products = 0u64;
+        for (i, slot) in sub.iter_mut().enumerate() {
+            let kk = start + i;
+            let cxk = &cx.slices[kk];
+            target_into(cxk, v, h, w.row(kk), s);
+            svd::procrustes_polar_jacobi_into(&s.b, &mut s.polar, &mut s.q);
+            cxk.repack_y_fused(&s.q, slot);
+            // The fusion: consume the slice now, while `yt` is
+            // cache-hot from the pack above. Same kernel, same FP
+            // order as the standalone mode-1 sweep.
+            slot.yk_times_v_fused_into(v, &mut s.temp);
+            yv_products += 1;
+            blas::rowhad_inplace(&mut s.temp, w.row(kk));
+            acc.axpy(1.0, &s.temp);
+        }
+        (acc, yv_products)
+    })
 }
 
 /// Pre-arena CSR-streaming form of [`procrustes_pack_mode1`]: identical
@@ -391,8 +411,10 @@ pub fn procrustes_pack_mode1_csr(
 
 /// Seed the merge with the first chunk's partial — the exact fold
 /// structure `mttkrp_mode1` uses — so even the signs of exact zeros come
-/// out bitwise identical to the standalone sweep.
-fn merge_fused_partials(partials: Vec<(Mat, u64)>, r: usize) -> FusedPackSweep {
+/// out bitwise identical to the standalone sweep. `pub(crate)` because the
+/// sharded coordinator replays this exact fold over the wire-shipped
+/// per-chunk partials, concatenated in global chunk order.
+pub(crate) fn merge_fused_partials(partials: Vec<(Mat, u64)>, r: usize) -> FusedPackSweep {
     let mut parts = partials.into_iter();
     let (mut m1, mut yv_products) = match parts.next() {
         Some(first) => first,

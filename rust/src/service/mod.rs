@@ -48,6 +48,7 @@
 
 pub mod protocol;
 pub mod server;
+pub mod shard;
 pub mod warm;
 
 use crate::parafac2::{
@@ -81,6 +82,10 @@ pub enum ServiceError {
     Invalid(String),
     /// The service is shutting down and no longer accepts jobs.
     ShuttingDown,
+    /// A shard worker died mid-fit (connection refused, EOF, read
+    /// timeout, or a structured error from the worker): the coordinator
+    /// aborts the remaining shards and surfaces which one was lost.
+    ShardLost(String),
     /// Client-side transport failure (connect/read/write).
     Io(String),
     /// Malformed request or response on the wire.
@@ -103,6 +108,7 @@ impl std::fmt::Display for ServiceError {
             ServiceError::JobFailed { id, reason } => write!(f, "job {id} failed: {reason}"),
             ServiceError::Invalid(msg) => write!(f, "invalid submission: {msg}"),
             ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::ShardLost(msg) => write!(f, "shard lost: {msg}"),
             ServiceError::Io(msg) => write!(f, "service i/o error: {msg}"),
             ServiceError::Protocol(msg) => write!(f, "service protocol error: {msg}"),
         }
@@ -136,10 +142,19 @@ impl Default for ServiceConfig {
 /// One fit job: the (owned) data, the fit config, and an optional cohort
 /// id for warm-start caching. `cfg.workers` and `cfg.mem_budget` are
 /// ignored — the service's shared pool and budget govern.
+///
+/// When `shards` is set the job runs as a **sharded coordinator** over
+/// the named `spartan shard-worker` processes instead of fitting locally
+/// (see [`shard`]): the heavy per-subject work happens in the workers'
+/// address spaces, the coordinator only replays the deterministic merge,
+/// so the job charges nothing against the service budget and does not
+/// warm-start (its trajectory must stay bitwise identical to a cold
+/// local fit).
 pub struct JobSpec {
     pub data: IrregularTensor,
     pub cfg: Parafac2Config,
     pub cohort: Option<String>,
+    pub shards: Option<shard::ShardSpec>,
 }
 
 /// Lifecycle of a job. `Starting` is the brief session-construction
@@ -518,11 +533,15 @@ fn conclude(
 }
 
 fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
-    let JobSpec { data, cfg, cohort } = spec;
+    let JobSpec { data, cfg, cohort, shards } = spec;
     let cancel = {
         let st = inner.state.lock().unwrap();
         st.jobs.get(&id).expect("registered job").cancel.clone()
     };
+    if let Some(shard_spec) = shards {
+        run_sharded_job(inner, id, data, cfg, shard_spec, cancel);
+        return;
+    }
     let warm = cohort
         .as_deref()
         .and_then(|c| inner.warm.lock().unwrap().get(c, cfg.rank, data.j(), data.k()));
@@ -591,6 +610,72 @@ fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
     }
 }
 
+/// The sharded-coordinator variant of [`run_job`]: the per-subject work
+/// happens in the shard workers' address spaces, so the job charges
+/// nothing against the shared budget, never warm-starts (the sharded
+/// trajectory must stay bitwise identical to a cold local fit), and does
+/// not feed the warm cache. State transitions, per-iteration records, and
+/// cancellation semantics are identical to a local job.
+fn run_sharded_job(
+    inner: Arc<Inner>,
+    id: u64,
+    data: IrregularTensor,
+    cfg: Parafac2Config,
+    spec: shard::ShardSpec,
+    cancel: Arc<AtomicBool>,
+) {
+    let mut session = match shard::ShardedFitSession::new(data, &cfg, &spec, Some(cancel)) {
+        Ok(s) => s,
+        Err(e) => {
+            conclude(&inner, id, JobState::Failed(e.to_string()), None, true);
+            return;
+        }
+    };
+    {
+        // Construction ack: the shards are planned, admission may resume
+        // (a sharded job never held budget, but it did hold the latch).
+        let mut st = inner.state.lock().unwrap();
+        if let Some(e) = st.jobs.get_mut(&id) {
+            e.state = JobState::Running;
+        }
+        st.starting = false;
+        inner.wake.notify_all();
+        inner.progress.notify_all();
+    }
+    enum End {
+        Done,
+        Cancelled,
+        Failed(String),
+    }
+    let end = loop {
+        match session.step() {
+            Ok(StepOutcome::Iterated(rec)) => {
+                let mut st = inner.state.lock().unwrap();
+                if let Some(e) = st.jobs.get_mut(&id) {
+                    e.records.push(rec);
+                }
+                inner.progress.notify_all();
+            }
+            Ok(StepOutcome::Done) => break End::Done,
+            Ok(StepOutcome::Cancelled) => break End::Cancelled,
+            Err(e) => break End::Failed(e.to_string()),
+        }
+    };
+    match end {
+        End::Failed(reason) => conclude(&inner, id, JobState::Failed(reason), None, false),
+        End::Done | End::Cancelled => {
+            let cancelled = matches!(end, End::Cancelled);
+            match session.finish() {
+                Ok(model) => {
+                    let state = if cancelled { JobState::Cancelled } else { JobState::Done };
+                    conclude(&inner, id, state, Some(model), false);
+                }
+                Err(e) => conclude(&inner, id, JobState::Failed(e.to_string()), None, false),
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 
 #[cfg(test)]
@@ -623,10 +708,10 @@ mod tests {
         let c1 = cfg(3, 8);
         let c2 = cfg(2, 10);
         let id1 = svc
-            .submit(JobSpec { data: d1.clone(), cfg: c1.clone(), cohort: None })
+            .submit(JobSpec { data: d1.clone(), cfg: c1.clone(), cohort: None, shards: None })
             .unwrap();
         let id2 = svc
-            .submit(JobSpec { data: d2.clone(), cfg: c2.clone(), cohort: None })
+            .submit(JobSpec { data: d2.clone(), cfg: c2.clone(), cohort: None, shards: None })
             .unwrap();
         assert_eq!(svc.wait(id1).unwrap().state, JobState::Done);
         assert_eq!(svc.wait(id2).unwrap().state, JobState::Done);
@@ -664,15 +749,19 @@ mod tests {
         // Job 1 runs "forever" (tol 0 never converges) until cancelled.
         let mut long = cfg(2, 1_000_000);
         long.tol = 0.0;
-        let id1 = svc.submit(JobSpec { data: d.clone(), cfg: long, cohort: None }).unwrap();
+        let id1 = svc
+            .submit(JobSpec { data: d.clone(), cfg: long, cohort: None, shards: None })
+            .unwrap();
         // Let the scheduler claim job 1 so the bounded queue is empty.
         while matches!(svc.status(id1).unwrap().state, JobState::Queued) {
             std::thread::yield_now();
         }
         // Job 2 fits the limit but not the current headroom → stays queued.
-        let id2 = svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }).unwrap();
+        let id2 = svc
+            .submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None })
+            .unwrap();
         // Queue is bounded: a third submit is a structured reject.
-        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }) {
+        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None }) {
             Err(ServiceError::QueueFull { pending: 1, max: 1 }) => {}
             other => panic!("expected QueueFull, got {other:?}"),
         }
@@ -698,7 +787,7 @@ mod tests {
             mem_budget: Some(est / 2),
             ..Default::default()
         });
-        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }) {
+        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None }) {
             Err(ServiceError::BudgetExceeded { estimate, limit }) => {
                 assert_eq!(estimate, est);
                 assert_eq!(limit, est / 2);
@@ -719,7 +808,9 @@ mod tests {
         })
         .tensor;
         assert!(estimate_job_bytes(&tiny) <= est / 2, "test premise: tiny job fits");
-        let id = svc.submit(JobSpec { data: tiny, cfg: cfg(2, 3), cohort: None }).unwrap();
+        let id = svc
+            .submit(JobSpec { data: tiny, cfg: cfg(2, 3), cohort: None, shards: None })
+            .unwrap();
         assert_eq!(svc.wait(id).unwrap().state, JobState::Done);
     }
 
@@ -734,11 +825,15 @@ mod tests {
         });
         let mut long = cfg(2, 1_000_000);
         long.tol = 0.0;
-        let id1 = svc.submit(JobSpec { data: d.clone(), cfg: long, cohort: None }).unwrap();
+        let id1 = svc
+            .submit(JobSpec { data: d.clone(), cfg: long, cohort: None, shards: None })
+            .unwrap();
         while !matches!(svc.status(id1).unwrap().state, JobState::Running) {
             std::thread::yield_now();
         }
-        let id2 = svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None }).unwrap();
+        let id2 = svc
+            .submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None })
+            .unwrap();
         let snap = svc.cancel(id2).unwrap();
         assert_eq!(snap.state, JobState::Cancelled);
         assert_eq!(snap.records.len(), 0);
@@ -756,6 +851,7 @@ mod tests {
                 data: d.clone(),
                 cfg: cfg(3, 5),
                 cohort: Some("ehr-weekly".into()),
+                shards: None,
             })
             .unwrap();
         let s1 = svc.wait(id1).unwrap();
@@ -767,6 +863,7 @@ mod tests {
                 data: d.clone(),
                 cfg: cfg(3, 5),
                 cohort: Some("ehr-weekly".into()),
+                shards: None,
             })
             .unwrap();
         let s2 = svc.wait(id2).unwrap();
@@ -778,6 +875,7 @@ mod tests {
                 data: d.clone(),
                 cfg: cfg(2, 5),
                 cohort: Some("ehr-weekly".into()),
+                shards: None,
             })
             .unwrap();
         let s3 = svc.wait(id3).unwrap();
@@ -790,11 +888,11 @@ mod tests {
         let svc = Service::start(&ServiceConfig { workers: 1, ..Default::default() });
         let d = data(61);
         assert!(matches!(
-            svc.submit(JobSpec { data: d.clone(), cfg: cfg(0, 3), cohort: None }),
+            svc.submit(JobSpec { data: d.clone(), cfg: cfg(0, 3), cohort: None, shards: None }),
             Err(ServiceError::Invalid(_))
         ));
         assert!(matches!(
-            svc.submit(JobSpec { data: d.clone(), cfg: cfg(999, 3), cohort: None }),
+            svc.submit(JobSpec { data: d.clone(), cfg: cfg(999, 3), cohort: None, shards: None }),
             Err(ServiceError::Invalid(_))
         ));
         assert!(matches!(svc.status(42), Err(ServiceError::UnknownJob(42))));

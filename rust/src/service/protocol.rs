@@ -7,11 +7,19 @@
 //! | verb       | request fields                                   | response |
 //! |------------|--------------------------------------------------|----------|
 //! | `ping`     | —                                                | `{"ok":true,"service":"spartan"}` |
-//! | `submit`   | `input` (dataset path on the server), `rank`, optional `max_iters`/`tol`/`nonneg`/`seed`/`engine`/`cohort` | `{"ok":true,"id":N}` |
+//! | `submit`   | `input` (dataset path on the server), `rank`, optional `max_iters`/`tol`/`nonneg`/`seed`/`engine`/`cohort`/`shards` | `{"ok":true,"id":N}` |
 //! | `status`   | `id`                                             | job snapshot (state, per-iteration records) |
 //! | `cancel`   | `id`                                             | snapshot at token-set time |
 //! | `result`   | `id`                                             | `ready` flag + the full model once terminal |
 //! | `shutdown` | —                                                | `{"ok":true,"stopping":true}` |
+//!
+//! A `spartan shard-worker` process speaks the same framing with its own
+//! verb set (`hello`/`plan`/`sweep`/`mode2`/`mode3`/`finish`/`abort`/
+//! `shutdown`, plus `ping`), opened by a [`PROTOCOL_VERSION`] handshake.
+//! The **normative spec** of the whole wire format — framing, every verb
+//! above and every shard verb, payload schemas, error slugs, and the
+//! bitwise-transport rationale — is `docs/PROTOCOL.md`; this module is
+//! its implementation.
 //!
 //! Failures are `{"ok":false,"kind":K,"error":MSG,...}` with a stable
 //! machine-readable `kind` per [`ServiceError`] variant.
@@ -34,16 +42,38 @@ use crate::util::json::Json;
 /// Default listen address of `spartan serve`.
 pub const DEFAULT_ADDR: &str = "127.0.0.1:7473";
 
+/// Wire protocol version, exchanged in the shard `hello` handshake. A
+/// worker built at a different version refuses the connection with an
+/// `invalid` error naming both versions — a silent mismatch could merge
+/// partials whose encoding (or merge order) changed, corrupting the
+/// bitwise contract instead of failing loudly. Bump on any change to a
+/// shard payload schema or to the documented merge/fold order
+/// (`docs/PROTOCOL.md` keeps the version history).
+pub const PROTOCOL_VERSION: u64 = 1;
+
 // ---------------------------------------------------------------------------
 // f64 bit-exact transport (golden-fixture idiom)
 
-fn f64_to_bits_str(x: f64) -> Json {
+/// One f64 as a 16-hex-digit IEEE-754 bit pattern (`"3ff0000000000000"`).
+pub fn f64_to_bits_str(x: f64) -> Json {
     Json::str(format!("{:016x}", x.to_bits()))
 }
 
-fn f64_from_bits_str(j: &Json) -> Result<f64, String> {
+/// Inverse of [`f64_to_bits_str`].
+pub fn f64_from_bits_str(j: &Json) -> Result<f64, String> {
     let s = j.as_str().ok_or("expected hex bit string")?;
     u64::from_str_radix(s, 16).map(f64::from_bits).map_err(|_| format!("bad f64 bits `{s}`"))
+}
+
+/// A flat f64 slice as an array of bit strings (per-slice norms, packed
+/// mode-2 partial values — anything that must survive the wire bitwise).
+pub fn f64_list_to_json(xs: &[f64]) -> Json {
+    Json::arr(xs.iter().map(|x| f64_to_bits_str(*x)))
+}
+
+/// Inverse of [`f64_list_to_json`].
+pub fn f64_list_from_json(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr().ok_or("expected bit-string array")?.iter().map(f64_from_bits_str).collect()
 }
 
 /// `{rows, cols, bits: ["3ff0…", …]}` — row-major, bit-exact.
@@ -64,6 +94,69 @@ pub fn mat_from_json(j: &Json) -> Result<Mat, String> {
     }
     let data = bits.iter().map(f64_from_bits_str).collect::<Result<Vec<f64>, _>>()?;
     Ok(Mat::from_vec(rows, cols, data))
+}
+
+// ---------------------------------------------------------------------------
+// Shard partial transport
+//
+// A shard never ships merged results — it ships the *unmerged* per-chunk
+// partials of its contiguous run of global plan chunks, in chunk order, so
+// the coordinator can replay the exact single-process fold over the global
+// chunk sequence (see `docs/PROTOCOL.md` § determinism).
+
+/// Per-chunk fused-sweep partials: `[{m1, yv}, …]` in chunk order.
+pub fn m1_partials_to_json(parts: &[(Mat, u64)]) -> Json {
+    Json::arr(parts.iter().map(|(m1, yv)| {
+        Json::obj(vec![("m1", mat_to_json(m1)), ("yv", Json::num(*yv as f64))])
+    }))
+}
+
+/// Inverse of [`m1_partials_to_json`].
+pub fn m1_partials_from_json(j: &Json) -> Result<Vec<(Mat, u64)>, String> {
+    j.as_arr()
+        .ok_or("expected m1-partial array")?
+        .iter()
+        .map(|p| {
+            let m1 = mat_from_json(p.get("m1").ok_or("partial missing m1")?)?;
+            let yv = p.get("yv").and_then(Json::as_f64).ok_or("partial missing yv")? as u64;
+            Ok((m1, yv))
+        })
+        .collect()
+}
+
+/// Per-chunk mode-2 partials: `[{ids, bits}, …]` in chunk order, `ids` in
+/// the **global** `0..J` column space, `bits` the row-major values
+/// (`ids.len()×R`) bit-encoded.
+pub fn mode2_partials_to_json(parts: &[(Vec<u32>, Vec<f64>)]) -> Json {
+    Json::arr(parts.iter().map(|(ids, vals)| {
+        Json::obj(vec![
+            ("ids", Json::arr(ids.iter().map(|&i| Json::num(i as f64)))),
+            ("bits", f64_list_to_json(vals)),
+        ])
+    }))
+}
+
+/// Inverse of [`mode2_partials_to_json`]; `r` validates the per-chunk
+/// value count (`ids.len()×r`).
+pub fn mode2_partials_from_json(j: &Json, r: usize) -> Result<Vec<(Vec<u32>, Vec<f64>)>, String> {
+    j.as_arr()
+        .ok_or("expected mode2-partial array")?
+        .iter()
+        .map(|p| {
+            let ids = p
+                .get("ids")
+                .and_then(Json::as_arr)
+                .ok_or("partial missing ids")?
+                .iter()
+                .map(|v| v.as_usize().map(|u| u as u32).ok_or("bad support id"))
+                .collect::<Result<Vec<u32>, _>>()?;
+            let vals = f64_list_from_json(p.get("bits").ok_or("partial missing bits")?)?;
+            if vals.len() != ids.len() * r {
+                return Err(format!("mode2 partial vals len {} ≠ {}×{r}", vals.len(), ids.len()));
+            }
+            Ok((ids, vals))
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -186,6 +279,7 @@ pub fn error_kind(e: &ServiceError) -> &'static str {
         ServiceError::JobFailed { .. } => "job_failed",
         ServiceError::Invalid(_) => "invalid",
         ServiceError::ShuttingDown => "shutting_down",
+        ServiceError::ShardLost(_) => "shard_lost",
         ServiceError::Io(_) => "io",
         ServiceError::Protocol(_) => "protocol",
     }
@@ -210,6 +304,11 @@ pub fn error_to_response(e: &ServiceError) -> Json {
         ServiceError::UnknownJob(id) | ServiceError::JobFailed { id, .. } => {
             fields.push(("id", Json::num(*id as f64)));
         }
+        ServiceError::ShardLost(which) => {
+            // `error` carries the "shard lost: …" rendering; this field
+            // keeps the inner message so the variant round-trips exactly.
+            fields.push(("shard", Json::str(which.clone())));
+        }
         _ => {}
     }
     Json::obj(fields)
@@ -231,6 +330,9 @@ pub fn error_from_response(j: &Json) -> ServiceError {
         "job_failed" => ServiceError::JobFailed { id: u64_of("id"), reason: msg },
         "invalid" => ServiceError::Invalid(msg),
         "shutting_down" => ServiceError::ShuttingDown,
+        "shard_lost" => ServiceError::ShardLost(
+            j.get("shard").and_then(Json::as_str).map(str::to_string).unwrap_or(msg),
+        ),
         "io" => ServiceError::Io(msg),
         _ => ServiceError::Protocol(msg),
     }
@@ -288,6 +390,38 @@ mod tests {
     }
 
     #[test]
+    fn shard_partials_roundtrip_bitwise() {
+        let parts = vec![
+            (Mat::from_vec(2, 2, vec![0.1 + 0.2, -0.0, 1.0 / 3.0, 1e-300]), 7u64),
+            (Mat::from_vec(2, 2, vec![1.5, 2.5, -3.5, 4.5]), 0u64),
+        ];
+        let text = m1_partials_to_json(&parts).to_string();
+        let back = m1_partials_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        for ((m, n), (bm, bn)) in parts.iter().zip(&back) {
+            assert_eq!(m.data(), bm.data());
+            assert_eq!(n, bn);
+        }
+
+        let m2 = vec![
+            (vec![0u32, 3, 9], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]),
+            (vec![4u32], vec![-0.0, f64::MIN_POSITIVE]),
+        ];
+        let text = mode2_partials_to_json(&m2).to_string();
+        let back = mode2_partials_from_json(&json::parse(&text).unwrap(), 2).unwrap();
+        assert_eq!(back.len(), 2);
+        for ((ids, vals), (bids, bvals)) in m2.iter().zip(&back) {
+            assert_eq!(ids, bids);
+            assert_eq!(vals.len(), bvals.len());
+            for (a, b) in vals.iter().zip(bvals) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // wrong rank → length validation trips
+        assert!(mode2_partials_from_json(&json::parse(&text).unwrap(), 3).is_err());
+    }
+
+    #[test]
     fn errors_roundtrip_with_structured_fields() {
         let cases = vec![
             ServiceError::QueueFull { pending: 9, max: 9 },
@@ -295,6 +429,7 @@ mod tests {
             ServiceError::UnknownJob(41),
             ServiceError::JobFailed { id: 6, reason: "job 6 failed: boom".into() },
             ServiceError::ShuttingDown,
+            ServiceError::ShardLost("shard 1 (127.0.0.1:9) died: eof".into()),
         ];
         for e in cases {
             let resp = error_to_response(&e);
@@ -314,6 +449,7 @@ mod tests {
                     assert_eq!(a, b)
                 }
                 (ServiceError::ShuttingDown, ServiceError::ShuttingDown) => {}
+                (ServiceError::ShardLost(a), ServiceError::ShardLost(b)) => assert_eq!(a, b),
                 other => panic!("variant changed across the wire: {other:?}"),
             }
         }

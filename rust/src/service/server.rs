@@ -198,7 +198,23 @@ fn handle_submit(service: &Service, req: &Json) -> Result<Json, ServiceError> {
             .ok_or_else(|| ServiceError::Invalid(format!("unknown engine `{e}`")))?;
     }
     let cohort = req.get("cohort").and_then(Json::as_str).map(str::to_string);
-    let id = service.submit(JobSpec { data, cfg, cohort })?;
+    // Optional sharding: an array of `spartan shard-worker` addresses.
+    // The dataset path the workers load is `input` itself (shared
+    // filesystem, same convention as the local load above).
+    let shards = match req.get("shards").and_then(Json::as_arr) {
+        Some(arr) if !arr.is_empty() => {
+            let addrs = arr
+                .iter()
+                .map(|a| a.as_str().map(str::to_string))
+                .collect::<Option<Vec<String>>>()
+                .ok_or_else(|| {
+                    ServiceError::Protocol("`shards` must be an array of addresses".into())
+                })?;
+            Some(super::shard::ShardSpec::new(addrs, input))
+        }
+        _ => None,
+    };
+    let id = service.submit(JobSpec { data, cfg, cohort, shards })?;
     Ok(ok_response(vec![("id", Json::num(id as f64))]))
 }
 
@@ -218,7 +234,7 @@ fn handle_result(service: &Service, req: &Json) -> Result<Json, ServiceError> {
     }
 }
 
-fn load_tensor(path: &str) -> Result<IrregularTensor, ServiceError> {
+pub(crate) fn load_tensor(path: &str) -> Result<IrregularTensor, ServiceError> {
     let p = std::path::Path::new(path);
     let loaded = if p.extension().map_or(false, |e| e == "txt") {
         crate::sparse::io::load_triplets_text(p)
@@ -270,6 +286,9 @@ pub struct SubmitRequest {
     pub seed: Option<u64>,
     pub engine: Option<String>,
     pub cohort: Option<String>,
+    /// Shard-worker addresses; non-empty runs the job as a sharded
+    /// coordinator over them (dataset path = `input` on every worker).
+    pub shards: Vec<String>,
 }
 
 pub fn submit(addr: &str, req: &SubmitRequest) -> Result<u64, ServiceError> {
@@ -295,6 +314,9 @@ pub fn submit(addr: &str, req: &SubmitRequest) -> Result<u64, ServiceError> {
     }
     if let Some(c) = &req.cohort {
         fields.push(("cohort", Json::str(c.clone())));
+    }
+    if !req.shards.is_empty() {
+        fields.push(("shards", Json::arr(req.shards.iter().map(|a| Json::str(a.clone())))));
     }
     let resp = request(addr, &Json::obj(fields))?;
     resp.get("id")

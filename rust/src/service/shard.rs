@@ -1,0 +1,1051 @@
+//! Sharded fitting: `spartan shard-worker` processes own contiguous
+//! subject ranges; a coordinator replays the single-process merge.
+//!
+//! **Unit of distribution: the subject.** Each worker loads the shared
+//! dataset file, slices out its contiguous subject range, packs its own
+//! compact-X arena, and serves one ALS phase per request — only `R×R`
+//! mode-1 partials, support-compact mode-2 partials, `K_s×R` mode-3
+//! blocks, and per-slice norm bits ever cross the wire (framing and
+//! payload schemas: `docs/PROTOCOL.md`). The coordinator
+//! ([`ShardedFitSession`]) holds no slice data at all: it drives the
+//! per-iteration fan-out and runs the factor-sized algebra locally.
+//!
+//! **Bitwise determinism.** A sharded fit must reproduce the
+//! single-process trajectory *bitwise* (pinned by
+//! `rust/tests/shard_e2e.rs`; the golden gate is never re-blessed for
+//! sharding). Three decisions make that hold:
+//!
+//! 1. **Shards align to the global chunk plan.** The coordinator builds
+//!    the same nnz-balanced [`subject_plan`] a local fit would and deals
+//!    each shard a contiguous *run of whole chunks*; a worker executes
+//!    its run with the plan chunk boundaries intact (rebased to its local
+//!    subject indices), so every per-chunk reduction happens over exactly
+//!    the subjects it would cover locally.
+//! 2. **Workers ship unmerged per-chunk partials.** No shard-local
+//!    folding: the coordinator concatenates the per-chunk partials in
+//!    global chunk order and replays the *flat* single-process folds —
+//!    [`merge_fused_partials`] for M¹, [`mode2_merge`] for M², plain row
+//!    concatenation for M³ (a pure copy, no arithmetic) — instead of a
+//!    two-level shard-then-global reduction, which FP non-associativity
+//!    would make a different (non-bitwise) sum.
+//! 3. **Norms travel as bits, folded in subject order.** `‖X‖²`/`‖Y‖²`
+//!    are flat left-to-right sums over per-slice cached norms; workers
+//!    ship the per-slice values bit-exactly and the coordinator runs the
+//!    identical fold over all `K` in subject order.
+//!
+//! Init runs on the coordinator (it is data-shape-dependent only, and
+//! bitwise across pool sizes per the determinism contract), as does every
+//! factor-sized solve — through the *same* `cp_als`/`blas`/`solve`
+//! functions the local path uses.
+//!
+//! **Robustness.** Every worker connection carries a read timeout; a
+//! refused connect, EOF, timeout, or structured worker error surfaces as
+//! [`ServiceError::ShardLost`] naming the shard, after a best-effort
+//! `abort` fan-out to the surviving workers. Cancellation is observed at
+//! the same checkpoints as a local [`crate::parafac2::FitSession`] (step
+//! entry and post-sweep), so a cancel reaches every shard within one
+//! iteration — workers are request-driven and simply stop being asked.
+
+use crate::linalg::{blas, solve, Mat};
+use crate::parafac2::als::{fit_from_sse, sse_converged, sse_from_parts};
+use crate::parafac2::cp_als::{normalize_cols_safe, residual_stats, solve_mode, CpFactors};
+use crate::parafac2::init::initialize;
+use crate::parafac2::intermediate::PackedY;
+use crate::parafac2::mttkrp::{
+    mode2_merge, mttkrp_mode2_partials_cached, mttkrp_mode3, mttkrp_mode3_from_cache,
+    FusedScratch,
+};
+use crate::parafac2::procrustes::{
+    merge_fused_partials, procrustes_all_into, procrustes_pack_mode1_partials,
+    scratch_heap_bytes, subject_plan, SubjectScratch,
+};
+use crate::parafac2::{
+    Backend, FitStats, IterationRecord, Parafac2Config, Parafac2Model, StepOutcome,
+};
+use crate::service::protocol::{
+    error_to_response, f64_list_from_json, f64_list_to_json, m1_partials_from_json,
+    m1_partials_to_json, mat_from_json, mat_to_json, mode2_partials_from_json,
+    mode2_partials_to_json, ok_response, PROTOCOL_VERSION,
+};
+use crate::service::ServiceError;
+use crate::sparse::{CompactX, IrregularTensor};
+use crate::threadpool::{ChunkPlan, Pool};
+use crate::util::json::{self, Json};
+use crate::util::timer::Stopwatch;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Default per-response read timeout on coordinator→worker connections.
+/// Generous — a worker phase is a fraction of a local iteration — but
+/// finite, so a hung worker becomes [`ServiceError::ShardLost`] instead
+/// of a hung coordinator.
+pub const DEFAULT_READ_TIMEOUT_SECS: u64 = 600;
+
+/// Where the shards are and what they should load.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSpec {
+    /// Worker addresses (`host:port`), one per shard, in subject order:
+    /// shard 0 gets the lowest subject range.
+    pub addrs: Vec<String>,
+    /// Dataset path, resolvable by **every worker** (shared filesystem —
+    /// the same convention as `submit`'s `input`).
+    pub path: String,
+    /// Per-response read timeout (seconds) on worker connections.
+    pub read_timeout_secs: u64,
+}
+
+impl ShardSpec {
+    pub fn new(addrs: Vec<String>, path: impl Into<String>) -> ShardSpec {
+        ShardSpec { addrs, path: path.into(), read_timeout_secs: DEFAULT_READ_TIMEOUT_SECS }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Everything a worker holds for its subject range between requests:
+/// the same arenas a local [`crate::parafac2::FitSession`] owns, built
+/// over the *rebased* chunk plan so chunk boundaries match the global
+/// plan exactly.
+struct WorkerFit {
+    pool: Pool,
+    plan: ChunkPlan,
+    cx: CompactX,
+    y: PackedY,
+    sweep_scratch: Vec<SubjectScratch>,
+    scratch: FusedScratch,
+    /// This shard's `W` rows as of the last `sweep` — mode 2 consumes the
+    /// pre-update `W` with the post-update `H`, mirroring
+    /// [`crate::parafac2::cp_als::cp_iteration_from_m1`].
+    w: Mat,
+    /// Phase tracking: `sweep` must precede `mode2`, `mode2` must precede
+    /// `mode3` (the `Z_k` cache is filled by mode 2).
+    swept: bool,
+    mode2_done: bool,
+}
+
+/// Run a shard worker: bind, announce the resolved address on stdout
+/// (machine-parsable, same idiom as `spartan serve`), and serve
+/// coordinators until a `shutdown` request. One coordinator connection at
+/// a time — the fit protocol is strictly sequential — with per-connection
+/// state dropped at EOF, so a worker survives its coordinator and can
+/// serve the next fit.
+pub fn run_worker(addr: &str, workers: usize) -> Result<(), ServiceError> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| ServiceError::Io(format!("bind {addr}: {e}")))?;
+    let local = listener.local_addr().map_err(|e| ServiceError::Io(e.to_string()))?;
+    {
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        let _ = writeln!(out, "spartan shard-worker: listening on {local} (workers {workers})");
+        let _ = out.flush();
+    }
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if !serve_coordinator(stream, workers) {
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+/// Serve one coordinator connection to EOF. Returns `false` when a
+/// `shutdown` request asks the whole worker process to exit.
+fn serve_coordinator(stream: TcpStream, workers: usize) -> bool {
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return true,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = BufWriter::new(stream);
+    let mut state: Option<WorkerFit> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return true,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = dispatch_worker(&mut state, workers, line.trim());
+        if writeln!(writer, "{}", resp.to_string()).is_err() || writer.flush().is_err() {
+            return true;
+        }
+        if quit {
+            return false;
+        }
+    }
+}
+
+/// One request line → (response, stop-the-worker-process?).
+fn dispatch_worker(state: &mut Option<WorkerFit>, workers: usize, line: &str) -> (Json, bool) {
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return (error_to_response(&ServiceError::Protocol(format!("bad request: {e}"))), false)
+        }
+    };
+    let verb = req.get("verb").and_then(Json::as_str).unwrap_or("");
+    if verb == "shutdown" {
+        return (ok_response(vec![("stopping", Json::Bool(true))]), true);
+    }
+    let resp = match verb {
+        "ping" => Ok(ok_response(vec![("service", Json::str("spartan-shard"))])),
+        "hello" => handle_hello(&req),
+        "plan" => handle_plan(state, workers, &req),
+        "sweep" => handle_sweep(state, &req),
+        "mode2" => handle_mode2(state, &req),
+        "mode3" => handle_mode3(state, &req),
+        "finish" => handle_finish(state, &req),
+        "abort" => {
+            *state = None;
+            Ok(ok_response(vec![("aborted", Json::Bool(true))]))
+        }
+        other => Err(ServiceError::Protocol(format!("unknown verb `{other}`"))),
+    };
+    match resp {
+        Ok(j) => (j, false),
+        Err(e) => (error_to_response(&e), false),
+    }
+}
+
+fn handle_hello(req: &Json) -> Result<Json, ServiceError> {
+    let theirs = req.get("version").and_then(Json::as_f64).map(|x| x as u64);
+    match theirs {
+        Some(v) if v == PROTOCOL_VERSION => Ok(ok_response(vec![
+            ("service", Json::str("spartan-shard")),
+            ("version", Json::num(PROTOCOL_VERSION as f64)),
+        ])),
+        Some(v) => Err(ServiceError::Invalid(format!(
+            "protocol version mismatch: coordinator speaks {v}, worker speaks {PROTOCOL_VERSION}"
+        ))),
+        None => Err(ServiceError::Protocol("hello requires `version`".into())),
+    }
+}
+
+fn handle_plan(
+    state: &mut Option<WorkerFit>,
+    workers: usize,
+    req: &Json,
+) -> Result<Json, ServiceError> {
+    let path = req
+        .get("path")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ServiceError::Protocol("plan requires `path`".into()))?;
+    let lo = req
+        .get("lo")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ServiceError::Protocol("plan requires `lo`".into()))?;
+    let hi = req
+        .get("hi")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ServiceError::Protocol("plan requires `hi`".into()))?;
+    let ranges = req
+        .get("ranges")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServiceError::Protocol("plan requires `ranges`".into()))?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().filter(|p| p.len() == 2).ok_or("range must be [start,end]")?;
+            let s = p[0].as_usize().ok_or("bad range start")?;
+            let e = p[1].as_usize().ok_or("bad range end")?;
+            Ok(s..e)
+        })
+        .collect::<Result<Vec<Range<usize>>, &str>>()
+        .map_err(|e| ServiceError::Protocol(e.into()))?;
+
+    let full = super::server::load_tensor(path)?;
+    if lo >= hi || hi > full.k() {
+        return Err(ServiceError::Invalid(format!(
+            "subject range {lo}..{hi} out of bounds for K={}",
+            full.k()
+        )));
+    }
+    // Contiguous subject range, local indices 0..(hi-lo). The rebased
+    // chunk ranges must tile it exactly — `from_ranges` validates.
+    let local = IrregularTensor::new_unchecked(full.slices()[lo..hi].to_vec());
+    let plan = ChunkPlan::from_ranges(ranges, hi - lo).map_err(ServiceError::Invalid)?;
+    let pool = Pool::new(workers);
+    let cx = CompactX::pack(&local, &pool, &plan);
+    let x_norm_bits: Vec<f64> = cx.slices.iter().map(|s| s.norm_sq()).collect();
+    let (j, nnz) = (local.j(), local.nnz());
+    let y = PackedY::empty(j);
+    let sweep_scratch = SubjectScratch::for_plan(&plan);
+    // The original CSR slices drop here — every fit-path read below is
+    // served by the arena, the same memory diet as an owned FitSession.
+    *state = Some(WorkerFit {
+        pool,
+        plan,
+        cx,
+        y,
+        sweep_scratch,
+        scratch: FusedScratch::new(),
+        w: Mat::zeros(0, 0),
+        swept: false,
+        mode2_done: false,
+    });
+    Ok(ok_response(vec![
+        ("k", Json::num((hi - lo) as f64)),
+        ("j", Json::num(j as f64)),
+        ("nnz", Json::num(nnz as f64)),
+        ("x_norm_bits", f64_list_to_json(&x_norm_bits)),
+    ]))
+}
+
+fn planned(state: &mut Option<WorkerFit>) -> Result<&mut WorkerFit, ServiceError> {
+    state.as_mut().ok_or_else(|| ServiceError::Invalid("no plan loaded (send `plan` first)".into()))
+}
+
+fn req_mat(req: &Json, key: &str) -> Result<Mat, ServiceError> {
+    let j = req
+        .get(key)
+        .ok_or_else(|| ServiceError::Protocol(format!("request missing `{key}`")))?;
+    mat_from_json(j).map_err(ServiceError::Protocol)
+}
+
+fn handle_sweep(state: &mut Option<WorkerFit>, req: &Json) -> Result<Json, ServiceError> {
+    let st = planned(state)?;
+    let (v, h, w) = (req_mat(req, "v")?, req_mat(req, "h")?, req_mat(req, "w")?);
+    let r = v.cols();
+    if h.rows() != r || h.cols() != r || w.cols() != r || v.rows() != st.cx.j() {
+        return Err(ServiceError::Invalid(format!(
+            "sweep factor shapes {:?}/{:?}/{:?} do not match J={}, R={r}",
+            v.shape(),
+            h.shape(),
+            w.shape(),
+            st.cx.j()
+        )));
+    }
+    if w.rows() != st.cx.k() {
+        return Err(ServiceError::Invalid(format!(
+            "sweep W has {} rows but the shard owns {} subjects",
+            w.rows(),
+            st.cx.k()
+        )));
+    }
+    st.w = w;
+    let partials = procrustes_pack_mode1_partials(
+        &st.cx,
+        &v,
+        &h,
+        &st.w,
+        &st.pool,
+        &st.plan,
+        &mut st.y,
+        &mut st.sweep_scratch,
+    );
+    st.swept = true;
+    st.mode2_done = false;
+    let y_norm_bits: Vec<f64> = st.y.slices.iter().map(|s| s.norm_sq()).collect();
+    Ok(ok_response(vec![
+        ("m1", m1_partials_to_json(&partials)),
+        ("y_norm_bits", f64_list_to_json(&y_norm_bits)),
+    ]))
+}
+
+fn handle_mode2(state: &mut Option<WorkerFit>, req: &Json) -> Result<Json, ServiceError> {
+    let st = planned(state)?;
+    if !st.swept {
+        return Err(ServiceError::Invalid("mode2 before sweep".into()));
+    }
+    let h = req_mat(req, "h")?;
+    if h.rows() != h.cols() || h.cols() != st.w.cols() {
+        return Err(ServiceError::Invalid(format!(
+            "mode2 H shape {:?} does not match rank {}",
+            h.shape(),
+            st.w.cols()
+        )));
+    }
+    let partials =
+        mttkrp_mode2_partials_cached(&st.y, &h, &st.w, &st.pool, &st.plan, &mut st.scratch);
+    st.mode2_done = true;
+    Ok(ok_response(vec![("m2", mode2_partials_to_json(&partials))]))
+}
+
+fn handle_mode3(state: &mut Option<WorkerFit>, req: &Json) -> Result<Json, ServiceError> {
+    let st = planned(state)?;
+    if !st.mode2_done {
+        return Err(ServiceError::Invalid("mode3 before mode2".into()));
+    }
+    let v = req_mat(req, "v")?;
+    if v.rows() != st.cx.j() || v.cols() != st.w.cols() {
+        return Err(ServiceError::Invalid(format!(
+            "mode3 V shape {:?} does not match J={}, R={}",
+            v.shape(),
+            st.cx.j(),
+            st.w.cols()
+        )));
+    }
+    let m3 = mttkrp_mode3_from_cache(&st.y, &v, &st.scratch, &st.pool, &st.plan);
+    Ok(ok_response(vec![("m3", mat_to_json(&m3))]))
+}
+
+fn handle_finish(state: &mut Option<WorkerFit>, req: &Json) -> Result<Json, ServiceError> {
+    let st = planned(state)?;
+    let (v, h, w) = (req_mat(req, "v")?, req_mat(req, "h")?, req_mat(req, "w")?);
+    let r = v.cols();
+    if v.rows() != st.cx.j() || h.rows() != r || h.cols() != r || w.cols() != r {
+        return Err(ServiceError::Invalid("finish factor shapes mismatch".into()));
+    }
+    if w.rows() != st.cx.k() {
+        return Err(ServiceError::Invalid(format!(
+            "finish W has {} rows but the shard owns {} subjects",
+            w.rows(),
+            st.cx.k()
+        )));
+    }
+    st.w = w;
+    let qs = procrustes_all_into(
+        &st.cx,
+        &v,
+        &h,
+        &st.w,
+        &st.pool,
+        &st.plan,
+        true,
+        &mut st.y,
+        &mut st.sweep_scratch,
+    )
+    .expect("keep_q requested");
+    let m3 = mttkrp_mode3(&st.y, &h, &v, &st.pool, &st.plan);
+    let y_norm_bits: Vec<f64> = st.y.slices.iter().map(|s| s.norm_sq()).collect();
+    let heap = st.cx.heap_bytes()
+        + st.y.heap_bytes()
+        + scratch_heap_bytes(&st.sweep_scratch)
+        + st.scratch.heap_bytes();
+    Ok(ok_response(vec![
+        ("q", Json::arr(qs.iter().map(mat_to_json))),
+        ("m3", mat_to_json(&m3)),
+        ("y_norm_bits", f64_list_to_json(&y_norm_bits)),
+        ("yv_products", Json::num(st.y.yv_products() as f64)),
+        ("traversals", Json::num(st.y.traversals() as f64)),
+        ("x_traversals", Json::num(st.cx.x_traversals() as f64)),
+        ("heap_bytes", Json::num(heap as f64)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+/// One persistent coordinator→worker connection, carrying this shard's
+/// subject range and its run of global plan chunks.
+struct ShardConn {
+    index: usize,
+    addr: String,
+    subjects: Range<usize>,
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl ShardConn {
+    fn lost(&self, what: &str) -> ServiceError {
+        ServiceError::ShardLost(format!("shard {} ({}): {what}", self.index, self.addr))
+    }
+
+    /// Fan-out half: write one request line.
+    fn send(&mut self, req: &Json) -> Result<(), ServiceError> {
+        writeln!(self.writer, "{}", req.to_string())
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| self.lost(&format!("write failed: {e}")))
+    }
+
+    /// Fan-in half: read one response line (bounded by the read timeout),
+    /// surfacing worker-side errors typed.
+    fn recv(&mut self) -> Result<Json, ServiceError> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => return Err(self.lost("connection closed (worker died?)")),
+            Err(e) => return Err(self.lost(&format!("read failed: {e}"))),
+            Ok(_) => {}
+        }
+        let resp = json::parse(line.trim())
+            .map_err(|e| self.lost(&format!("bad response: {e}")))?;
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            Ok(resp)
+        } else {
+            Err(crate::service::protocol::error_from_response(&resp))
+        }
+    }
+
+    fn request(&mut self, req: &Json) -> Result<Json, ServiceError> {
+        self.send(req)?;
+        self.recv()
+    }
+}
+
+/// The sharded counterpart of [`crate::parafac2::FitSession`]: same
+/// step/finish surface, same `IterationRecord`s, but every per-subject
+/// phase runs in the shard workers and the coordinator replays the
+/// deterministic merge (module docs). Trajectory is bitwise identical to
+/// a local fit of the same config.
+pub struct ShardedFitSession {
+    cfg: Parafac2Config,
+    conns: Vec<ShardConn>,
+    factors: CpFactors,
+    j: usize,
+    k: usize,
+    x_norm_sq: f64,
+    x_norm: f64,
+    /// `‖Y‖²` of the last sweep (flat subject-order fold of shipped bits).
+    y_norm_sq: f64,
+    stats: FitStats,
+    total_sw: Stopwatch,
+    prev_sse: f64,
+    iters_done: usize,
+    converged: bool,
+    cancel: Arc<AtomicBool>,
+}
+
+impl ShardedFitSession {
+    /// Connect to every worker, deal out the global chunk plan, and have
+    /// each shard load + pack its subject range. `data` is only read for
+    /// its shape, per-subject nnz (the global plan), and init — it is
+    /// dropped before the first iteration; the workers load their ranges
+    /// from `spec.path`.
+    pub fn new(
+        data: IrregularTensor,
+        cfg: &Parafac2Config,
+        spec: &ShardSpec,
+        cancel: Option<Arc<AtomicBool>>,
+    ) -> Result<ShardedFitSession, ServiceError> {
+        if cfg.rank == 0 {
+            return Err(ServiceError::Invalid("rank must be ≥ 1".into()));
+        }
+        if cfg.rank > data.j() {
+            return Err(ServiceError::Invalid(format!(
+                "rank {} exceeds variable count J={}",
+                cfg.rank,
+                data.j()
+            )));
+        }
+        if spec.addrs.is_empty() {
+            return Err(ServiceError::Invalid("no shard addresses".into()));
+        }
+        if !matches!(cfg.backend, Backend::Spartan) {
+            return Err(ServiceError::Invalid(
+                "sharded fitting requires the spartan engine (the workers run the fused sweep)"
+                    .into(),
+            ));
+        }
+        let total_sw = Stopwatch::start();
+
+        // The same global plan a local fit would build; shard boundaries
+        // align to its chunk boundaries (module docs, invariant 1).
+        let plan = subject_plan(&data);
+        let nc = plan.n_chunks();
+        let ns = spec.addrs.len();
+        if ns > nc {
+            return Err(ServiceError::Invalid(format!(
+                "{ns} shards but the plan has only {nc} chunks (fewer subjects than shards?)"
+            )));
+        }
+        // Shard s owns the contiguous chunk run [s·nc/ns, (s+1)·nc/ns).
+        let chunk_runs: Vec<Range<usize>> =
+            (0..ns).map(|s| (s * nc / ns)..((s + 1) * nc / ns)).collect();
+
+        // Init on the coordinator — bitwise identical to the local fit's
+        // (the determinism contract covers pool-size independence).
+        let init = initialize(&data, cfg.rank, cfg.init, cfg.seed, &Pool::serial());
+        let factors = CpFactors { h: init.h, v: init.v, w: init.w };
+        let (j, k) = (data.j(), data.k());
+        drop(data);
+
+        // Connect + handshake + plan, shard by shard. An early failure
+        // aborts the shards already planned.
+        let mut conns: Vec<ShardConn> = Vec::with_capacity(ns);
+        let mut x_norm_parts: Vec<Vec<f64>> = Vec::with_capacity(ns);
+        for (index, (addr, run)) in spec.addrs.iter().zip(&chunk_runs).enumerate() {
+            let subjects = plan.ranges()[run.start].start..plan.ranges()[run.end - 1].end;
+            let mut conn = match connect_shard(index, addr, subjects.clone(), spec) {
+                Ok(c) => c,
+                Err(e) => {
+                    abort_all(&mut conns);
+                    return Err(e);
+                }
+            };
+            let lo = subjects.start;
+            let ranges = Json::arr(plan.ranges()[run.clone()].iter().map(|r| {
+                Json::arr(vec![
+                    Json::num((r.start - lo) as f64),
+                    Json::num((r.end - lo) as f64),
+                ])
+            }));
+            let req = Json::obj(vec![
+                ("verb", Json::str("plan")),
+                ("path", Json::str(spec.path.clone())),
+                ("lo", Json::num(lo as f64)),
+                ("hi", Json::num(subjects.end as f64)),
+                ("ranges", ranges),
+            ]);
+            let resp = match conn.request(&req) {
+                Ok(r) => r,
+                Err(e) => {
+                    abort_all(&mut conns);
+                    return Err(e);
+                }
+            };
+            match parse_plan_reply(&resp, subjects.len(), j, &spec.path) {
+                Ok(bits) => x_norm_parts.push(bits),
+                Err(msg) => {
+                    abort_all(&mut conns);
+                    let _ = conn.request(&Json::obj(vec![("verb", Json::str("abort"))]));
+                    return Err(ServiceError::Invalid(format!("shard {index} ({addr}): {msg}")));
+                }
+            }
+            conns.push(conn);
+        }
+
+        // ‖X‖²: the flat per-slice fold `CompactX::norm_sq` runs locally,
+        // replayed over all K slices in subject order.
+        let x_norm_sq: f64 = x_norm_parts.iter().flatten().sum();
+        let x_norm = x_norm_sq.sqrt();
+
+        Ok(ShardedFitSession {
+            cfg: cfg.clone(),
+            conns,
+            factors,
+            j,
+            k,
+            x_norm_sq,
+            x_norm,
+            y_norm_sq: 0.0,
+            stats: FitStats::default(),
+            total_sw,
+            prev_sse: f64::INFINITY,
+            iters_done: 0,
+            converged: false,
+            cancel: cancel.unwrap_or_else(|| Arc::new(AtomicBool::new(false))),
+        })
+    }
+
+    /// Fan a request out to every shard, then collect the responses in
+    /// shard order (which *is* global subject/chunk order). Any failure
+    /// aborts the surviving shards and surfaces [`ServiceError::ShardLost`]
+    /// (or the worker's own typed error).
+    fn fan(&mut self, req: &Json) -> Result<Vec<Json>, ServiceError> {
+        for i in 0..self.conns.len() {
+            if let Err(e) = self.conns[i].send(req) {
+                abort_all(&mut self.conns);
+                return Err(e);
+            }
+        }
+        let mut out = Vec::with_capacity(self.conns.len());
+        for i in 0..self.conns.len() {
+            match self.conns[i].recv() {
+                Ok(resp) => out.push(resp),
+                Err(e) => {
+                    abort_all(&mut self.conns);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// One ALS iteration, mirroring [`crate::parafac2::FitSession::step`]
+    /// checkpoint-for-checkpoint: cancel at entry, sweep, cancel (sweep
+    /// discarded — workers just repeat it from the unchanged factors),
+    /// then the CP step with each MTTKRP fanned out and merged.
+    pub fn step(&mut self) -> Result<StepOutcome, ServiceError> {
+        if self.converged || self.iters_done >= self.cfg.max_iters {
+            return Ok(StepOutcome::Done);
+        }
+        if self.cancel.load(Ordering::Relaxed) {
+            return Ok(StepOutcome::Cancelled);
+        }
+        let iter = self.iters_done;
+        let r = self.cfg.rank;
+
+        // --- step 1: fused Procrustes sweep, in the workers --------------
+        let sw = Stopwatch::start();
+        let replies = self.fan_sweep("sweep")?;
+        let mut m1_partials: Vec<(Mat, u64)> = Vec::new();
+        let mut y_bits: Vec<f64> = Vec::with_capacity(self.k);
+        for (i, resp) in replies.iter().enumerate() {
+            let parts = resp
+                .get("m1")
+                .ok_or("sweep reply missing m1")
+                .and_then(|p| m1_partials_from_json(p).map_err(|_| "bad m1 partials"));
+            let bits = resp
+                .get("y_norm_bits")
+                .ok_or("sweep reply missing y_norm_bits")
+                .and_then(|b| f64_list_from_json(b).map_err(|_| "bad y_norm_bits"));
+            match (parts, bits) {
+                (Ok(p), Ok(b)) => {
+                    m1_partials.extend(p);
+                    y_bits.extend(b);
+                }
+                _ => {
+                    abort_all(&mut self.conns);
+                    return Err(self.conns[i].lost("malformed sweep reply"));
+                }
+            }
+        }
+        let procrustes_secs = sw.elapsed_secs();
+
+        // Post-sweep cancellation checkpoint (sweep outputs + timing
+        // discarded, exactly like the local session).
+        if self.cancel.load(Ordering::Relaxed) {
+            return Ok(StepOutcome::Cancelled);
+        }
+        self.stats.procrustes_secs += procrustes_secs;
+
+        // --- step 2: one CP-ALS iteration, factor algebra local ----------
+        // The exact sequence of `cp_iteration_from_m1`, with each MTTKRP
+        // replaced by fan-out + the single-process merge.
+        let sw = Stopwatch::start();
+        self.y_norm_sq = y_bits.iter().sum();
+        let fused = merge_fused_partials(m1_partials, r);
+
+        // mode 1: H (M¹ was computed against the current V/W)
+        let g1 = blas::hadamard(&blas::gram(&self.factors.w), &blas::gram(&self.factors.v));
+        self.factors.h = solve::solve_gram_system(&fused.m1, &g1);
+        normalize_cols_safe(&mut self.factors.h);
+
+        // mode 2: V — workers consume the new H with their stored
+        // (pre-update) W rows; partials scatter in global chunk order.
+        let req = Json::obj(vec![
+            ("verb", Json::str("mode2")),
+            ("h", mat_to_json(&self.factors.h)),
+        ]);
+        let replies = self.fan(&req)?;
+        let mut m2_partials: Vec<(Vec<u32>, Vec<f64>)> = Vec::new();
+        for (i, resp) in replies.iter().enumerate() {
+            match resp
+                .get("m2")
+                .ok_or_else(|| "mode2 reply missing m2".to_string())
+                .and_then(|p| mode2_partials_from_json(p, r))
+            {
+                Ok(p) => m2_partials.extend(p),
+                Err(_) => {
+                    abort_all(&mut self.conns);
+                    return Err(self.conns[i].lost("malformed mode2 reply"));
+                }
+            }
+        }
+        let m2 = mode2_merge(self.j, r, m2_partials);
+        let g2 = blas::hadamard(&blas::gram(&self.factors.w), &blas::gram(&self.factors.h));
+        self.factors.v = solve_mode(&m2, &g2, self.cfg.nonneg);
+        normalize_cols_safe(&mut self.factors.v);
+
+        // mode 3: W — each shard returns its K_s×R block; concatenation
+        // is a pure row copy, so shard order = subject order suffices.
+        let req = Json::obj(vec![
+            ("verb", Json::str("mode3")),
+            ("v", mat_to_json(&self.factors.v)),
+        ]);
+        let replies = self.fan(&req)?;
+        let m3 = self.concat_m3(&replies, "m3")?;
+        let g3 = blas::hadamard(&blas::gram(&self.factors.v), &blas::gram(&self.factors.h));
+        self.factors.w = solve_mode(&m3, &g3, self.cfg.nonneg);
+
+        let mut cp_stats = residual_stats(&m3, &self.factors, self.y_norm_sq);
+        cp_stats.yv_products = fused.yv_products;
+        let cp_secs = sw.elapsed_secs();
+        self.stats.cp_secs += cp_secs;
+
+        let sse = sse_from_parts(self.x_norm_sq, self.y_norm_sq, cp_stats.y_residual_sq);
+        let fit = fit_from_sse(sse, self.x_norm);
+        self.stats.fit_history.push(fit);
+        self.iters_done = iter + 1;
+
+        if sse_converged(self.prev_sse, sse, self.cfg.tol) {
+            self.converged = true;
+        }
+        self.prev_sse = sse;
+
+        Ok(StepOutcome::Iterated(IterationRecord { iter, sse, fit, procrustes_secs, cp_secs }))
+    }
+
+    /// Fan out a verb that ships the full current factors (this shard's
+    /// `W` rows only — workers never see other shards' subjects).
+    fn fan_sweep(&mut self, verb: &'static str) -> Result<Vec<Json>, ServiceError> {
+        let r = self.cfg.rank;
+        for i in 0..self.conns.len() {
+            let subjects = self.conns[i].subjects.clone();
+            let w_shard = self.factors.w.block(subjects.start, subjects.end, 0, r);
+            let req = Json::obj(vec![
+                ("verb", Json::str(verb)),
+                ("v", mat_to_json(&self.factors.v)),
+                ("h", mat_to_json(&self.factors.h)),
+                ("w", mat_to_json(&w_shard)),
+            ]);
+            if let Err(e) = self.conns[i].send(&req) {
+                abort_all(&mut self.conns);
+                return Err(e);
+            }
+        }
+        let mut out = Vec::with_capacity(self.conns.len());
+        for i in 0..self.conns.len() {
+            match self.conns[i].recv() {
+                Ok(resp) => out.push(resp),
+                Err(e) => {
+                    abort_all(&mut self.conns);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Concatenate per-shard `K_s×R` blocks into the global `K×R` matrix
+    /// (row copy only — no arithmetic, so no merge-order seam).
+    fn concat_m3(&mut self, replies: &[Json], key: &str) -> Result<Mat, ServiceError> {
+        let r = self.cfg.rank;
+        let mut m3 = Mat::zeros(self.k, r);
+        for (i, resp) in replies.iter().enumerate() {
+            let block = match resp.get(key).map(mat_from_json) {
+                Some(Ok(b)) => b,
+                _ => {
+                    abort_all(&mut self.conns);
+                    return Err(self.conns[i].lost(&format!("malformed `{key}` block")));
+                }
+            };
+            let subjects = self.conns[i].subjects.clone();
+            if block.rows() != subjects.len() || block.cols() != r {
+                abort_all(&mut self.conns);
+                return Err(self.conns[i].lost(&format!(
+                    "`{key}` block is {}×{}, expected {}×{r}",
+                    block.rows(),
+                    block.cols(),
+                    subjects.len()
+                )));
+            }
+            for (local, kk) in subjects.enumerate() {
+                m3.row_mut(kk).copy_from_slice(block.row(local));
+            }
+        }
+        Ok(m3)
+    }
+
+    /// Final pass, mirroring [`crate::parafac2::FitSession::finish`]: the
+    /// workers refresh `Q_k` + `Y` from the fitted factors and report the
+    /// standalone mode-3 MTTKRP, post-repack norms, and their counters;
+    /// the coordinator recomputes the final SSE and assembles the model.
+    /// Valid after any number of steps, including zero or a cancellation.
+    pub fn finish(mut self) -> Result<Parafac2Model, ServiceError> {
+        let replies = self.fan_sweep("finish")?;
+        let mut qs: Vec<Mat> = Vec::with_capacity(self.k);
+        let mut y_bits: Vec<f64> = Vec::with_capacity(self.k);
+        let (mut yv, mut trav, mut xtrav, mut heap) = (0u64, 0u64, 0u64, 0u64);
+        for (i, resp) in replies.iter().enumerate() {
+            match parse_finish_reply(resp) {
+                Ok((q, bits)) => {
+                    if q.len() != self.conns[i].subjects.len() {
+                        abort_all(&mut self.conns);
+                        return Err(self.conns[i].lost("finish reply Q count mismatch"));
+                    }
+                    qs.extend(q);
+                    y_bits.extend(bits);
+                }
+                Err(_) => {
+                    abort_all(&mut self.conns);
+                    return Err(self.conns[i].lost("malformed finish reply"));
+                }
+            }
+            let counter = |k: &str| resp.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            yv += counter("yv_products");
+            trav += counter("traversals");
+            xtrav += counter("x_traversals");
+            heap += counter("heap_bytes");
+        }
+        self.y_norm_sq = y_bits.iter().sum();
+        let m3 = self.concat_m3(&replies, "m3")?;
+        let final_res = residual_stats(&m3, &self.factors, self.y_norm_sq);
+        let final_sse = sse_from_parts(self.x_norm_sq, self.y_norm_sq, final_res.y_residual_sq);
+
+        let mut stats = self.stats;
+        stats.yv_products = yv;
+        stats.traversals = trav;
+        stats.x_traversals = xtrav;
+        stats.heap_bytes = heap;
+        stats.iterations = self.iters_done;
+        stats.final_sse = final_sse;
+        stats.final_fit = fit_from_sse(final_sse, self.x_norm);
+        stats.total_secs = self.total_sw.elapsed_secs();
+        stats.secs_per_iter = if self.iters_done > 0 {
+            (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64
+        } else {
+            0.0
+        };
+
+        Ok(Parafac2Model {
+            rank: self.cfg.rank,
+            h: self.factors.h,
+            v: self.factors.v,
+            w: self.factors.w,
+            q: qs,
+            stats,
+        })
+    }
+
+    /// ALS iterations completed so far.
+    pub fn iterations(&self) -> usize {
+        self.iters_done
+    }
+
+    /// Whether the tol-based convergence test has fired.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// The session's cancel flag; setting it stops the fit within one ALS
+    /// iteration (and the workers with it — they are request-driven).
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.cancel)
+    }
+}
+
+fn connect_shard(
+    index: usize,
+    addr: &str,
+    subjects: Range<usize>,
+    spec: &ShardSpec,
+) -> Result<ShardConn, ServiceError> {
+    let stream = TcpStream::connect(addr).map_err(|e| {
+        ServiceError::ShardLost(format!("shard {index} ({addr}): connect failed: {e}"))
+    })?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(spec.read_timeout_secs.max(1))))
+        .map_err(|e| ServiceError::Io(e.to_string()))?;
+    let reader = BufReader::new(
+        stream.try_clone().map_err(|e| ServiceError::Io(e.to_string()))?,
+    );
+    let mut conn = ShardConn {
+        index,
+        addr: addr.to_string(),
+        subjects,
+        reader,
+        writer: BufWriter::new(stream),
+    };
+    let hello = Json::obj(vec![
+        ("verb", Json::str("hello")),
+        ("version", Json::num(PROTOCOL_VERSION as f64)),
+    ]);
+    conn.request(&hello)?;
+    Ok(conn)
+}
+
+/// Validate a `plan` reply against the coordinator's own view of the
+/// dataset and pull out the per-slice ‖X_k‖² bits.
+fn parse_plan_reply(
+    resp: &Json,
+    expect_k: usize,
+    expect_j: usize,
+    path: &str,
+) -> Result<Vec<f64>, String> {
+    let got_k = resp
+        .get("k")
+        .and_then(Json::as_usize)
+        .ok_or("plan reply missing k")?;
+    let got_j = resp
+        .get("j")
+        .and_then(Json::as_usize)
+        .ok_or("plan reply missing j")?;
+    if got_k != expect_k || got_j != expect_j {
+        return Err(format!(
+            "worker packed K={got_k}, J={got_j}; expected K={expect_k}, J={expect_j} — \
+             is `{path}` the same dataset?"
+        ));
+    }
+    f64_list_from_json(resp.get("x_norm_bits").ok_or("missing x_norm_bits")?)
+}
+
+/// Pull the per-subject `Q_k` factors and post-repack ‖Y_k‖² bits out of
+/// a `finish` reply.
+fn parse_finish_reply(resp: &Json) -> Result<(Vec<Mat>, Vec<f64>), String> {
+    let q = resp
+        .get("q")
+        .and_then(Json::as_arr)
+        .ok_or("finish reply missing q")?
+        .iter()
+        .map(mat_from_json)
+        .collect::<Result<Vec<Mat>, String>>()?;
+    let bits = f64_list_from_json(resp.get("y_norm_bits").ok_or("missing y_norm_bits")?)?;
+    Ok((q, bits))
+}
+
+/// Best-effort abort fan-out: tell every surviving worker to drop its
+/// per-fit state. Failures are ignored — the shard may be the one that
+/// just died.
+fn abort_all(conns: &mut [ShardConn]) {
+    let req = Json::obj(vec![("verb", Json::str("abort"))]);
+    for conn in conns.iter_mut() {
+        let _ = conn.request(&req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_defaults_timeout() {
+        let spec = ShardSpec::new(vec!["127.0.0.1:1".into()], "data.spt");
+        assert_eq!(spec.read_timeout_secs, DEFAULT_READ_TIMEOUT_SECS);
+        assert_eq!(spec.path, "data.spt");
+    }
+
+    #[test]
+    fn worker_rejects_out_of_order_and_unplanned_requests() {
+        let mut state: Option<WorkerFit> = None;
+        let (resp, quit) = dispatch_worker(&mut state, 1, r#"{"verb":"sweep"}"#);
+        assert!(!quit);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("invalid"));
+        let (resp, _) = dispatch_worker(&mut state, 1, r#"{"verb":"nope"}"#);
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("protocol"));
+    }
+
+    #[test]
+    fn hello_handshake_enforces_protocol_version() {
+        let mut state: Option<WorkerFit> = None;
+        let ok_line = format!(r#"{{"verb":"hello","version":{PROTOCOL_VERSION}}}"#);
+        let (resp, _) = dispatch_worker(&mut state, 1, &ok_line);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let bad_line = format!(r#"{{"verb":"hello","version":{}}}"#, PROTOCOL_VERSION + 1);
+        let (resp, _) = dispatch_worker(&mut state, 1, &bad_line);
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("invalid"));
+        assert!(resp
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .contains("version mismatch"));
+    }
+
+    #[test]
+    fn shard_split_requires_no_more_shards_than_chunks() {
+        use crate::datagen::synthetic::{generate, SyntheticSpec};
+        let data = generate(&SyntheticSpec {
+            k: 4,
+            j: 6,
+            max_i_k: 3,
+            target_nnz: 40,
+            rank: 2,
+            noise: 0.0,
+            seed: 5,
+        })
+        .tensor;
+        // 4 subjects → the plan has at most 4 chunks; 99 shards can't split.
+        let spec = ShardSpec::new(
+            (0..99).map(|i| format!("127.0.0.1:{}", 20_000 + i)).collect(),
+            "unused.spt",
+        );
+        let cfg = Parafac2Config { rank: 2, ..Default::default() };
+        match ShardedFitSession::new(data, &cfg, &spec, None) {
+            Err(ServiceError::Invalid(msg)) => assert!(msg.contains("chunks")),
+            other => panic!("expected Invalid, got {:?}", other.map(|_| ())),
+        }
+    }
+}

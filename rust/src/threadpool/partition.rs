@@ -102,6 +102,22 @@ impl ChunkPlan {
         ChunkPlan { ranges, items }
     }
 
+    /// Rebuild a plan from explicit ranges (the sharded coordinator rebases
+    /// a contiguous run of global chunks to a shard-local `0..K_s` plan).
+    /// The ranges must be a contiguous, disjoint, non-empty cover of
+    /// `0..items` — anything else would silently change the reduction
+    /// order the determinism contract pins.
+    pub fn from_ranges(ranges: Vec<Range<usize>>, items: usize) -> Result<ChunkPlan, String> {
+        let plan = ChunkPlan { ranges, items };
+        if !plan.covers(items) {
+            return Err(format!(
+                "ranges do not contiguously cover 0..{items}: {:?}",
+                plan.ranges
+            ));
+        }
+        Ok(plan)
+    }
+
     /// The frozen ranges, in subject order.
     pub fn ranges(&self) -> &[Range<usize>] {
         &self.ranges
@@ -219,6 +235,19 @@ mod tests {
         let u = ChunkPlan::balanced(&[3u64; 128]);
         assert!(u.covers(128));
         assert_eq!(u.n_chunks(), 2);
+    }
+
+    #[test]
+    fn from_ranges_validates_cover() {
+        let ok = ChunkPlan::from_ranges(vec![0..3, 3..7, 7..10], 10).unwrap();
+        assert!(ok.covers(10));
+        assert_eq!(ok.n_chunks(), 3);
+        assert!(ChunkPlan::from_ranges(vec![0..3, 4..10], 10).is_err());
+        assert!(ChunkPlan::from_ranges(vec![0..10], 11).is_err());
+        assert!(ChunkPlan::from_ranges(vec![0..3, 3..3, 3..10], 10).is_err());
+        // rebasing a run of global chunks: [10..14, 14..20) - 10 → local
+        let local = ChunkPlan::from_ranges(vec![0..4, 4..10], 10).unwrap();
+        assert_eq!(local.ranges(), &[0..4, 4..10]);
     }
 
     #[test]

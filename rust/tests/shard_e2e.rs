@@ -1,0 +1,350 @@
+//! End-to-end sharding tests: spawn real `spartan shard-worker`
+//! processes and drive them through the CLI coordinator paths
+//! (`decompose --shards …` and the daemon's `submit --shards …`),
+//! asserting the PR's three contracts:
+//!
+//! 1. a sharded fit is **bitwise identical** to a single-process
+//!    `spartan decompose` — for 1 shard and for 3 shards over an uneven
+//!    chunk split (CSV byte compare of every saved factor matrix);
+//! 2. killing a worker mid-fit surfaces a structured `shard lost` error
+//!    promptly — the coordinator neither hangs nor corrupts the
+//!    surviving workers, which keep serving new fits;
+//! 3. cancelling a sharded daemon job stops it within one ALS iteration
+//!    and still yields the partial model.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn spartan() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_spartan"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spartan_shard_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Parse `… listening on <addr> …` off a daemon's announce line.
+fn parse_announce(line: &str) -> String {
+    line.split("listening on ")
+        .nth(1)
+        .unwrap_or_else(|| panic!("bad announce line: {line:?}"))
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string()
+}
+
+/// Guard that kills a `spartan shard-worker` if a test panics before
+/// stopping it.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Worker {
+    /// Start a worker on a free port and parse its announced address.
+    fn start() -> Worker {
+        let mut child = spartan()
+            .args(["shard-worker", "--addr", "127.0.0.1:0", "--workers", "1"])
+            .stdout(Stdio::piped())
+            .spawn()
+            .unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = parse_announce(&line);
+        Worker { child, addr }
+    }
+
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Guard for the `spartan serve` daemon (the sharded-submit test).
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn start(extra: &[&str]) -> Daemon {
+        let mut cmd = spartan();
+        cmd.args(["serve", "--addr", "127.0.0.1:0"]).args(extra).stdout(Stdio::piped());
+        let mut child = cmd.spawn().unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = parse_announce(&line);
+        Daemon { child, addr }
+    }
+
+    fn stop(mut self) {
+        let out = spartan().args(["serve-stop", "--addr", &self.addr]).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let status = self.child.wait().unwrap();
+        assert!(status.success(), "daemon exited with {status}");
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// 200 subjects ⇒ the nnz-balanced `subject_plan` cuts 4 chunks
+/// (`K.div_ceil(64)`), so 3 shards get the **uneven** chunk deal
+/// `[0..1) [1..2) [2..4)` — the case that catches any merge that is only
+/// accidentally order-correct for even splits.
+fn generate(data: &Path, seed: &str) {
+    let out = spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", "200", "--variables", "20", "--max-obs", "8",
+            "--nnz", "12000", "--rank", "3", "--seed", seed,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+fn decompose(data: &Path, save: &Path, extra: &[&str]) {
+    let out = spartan()
+        .args([
+            "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--max-iters", "6", "--seed", "2",
+            "--save-model", save.to_str().unwrap(),
+        ])
+        .args(extra)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+fn read_model_csvs(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<String> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".csv"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 4, "expected factor CSVs in {dir:?}, got {files:?}");
+    files
+        .into_iter()
+        .map(|n| {
+            let body = std::fs::read(dir.join(&n)).unwrap();
+            (n, body)
+        })
+        .collect()
+}
+
+fn assert_models_identical(a_dir: &Path, b_dir: &Path, what: &str) {
+    let a = read_model_csvs(a_dir);
+    let b = read_model_csvs(b_dir);
+    assert_eq!(
+        a.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        b.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        "{what}: different factor files"
+    );
+    for ((name, ca), (_, cb)) in a.iter().zip(&b) {
+        assert_eq!(ca, cb, "{what}: factor CSV {name} differs byte-wise");
+    }
+}
+
+#[test]
+fn sharded_fits_are_bitwise_identical_to_direct_decompose() {
+    let dir = tmpdir("bitwise");
+    let data = dir.join("data.spt");
+    generate(&data, "6");
+
+    // ground truth: plain single-process decompose
+    let direct = dir.join("direct");
+    decompose(&data, &direct, &["--workers", "1"]);
+
+    // one shard: the whole chunk plan on a single worker process
+    let w1 = Worker::start();
+    let one = dir.join("one_shard");
+    decompose(&data, &one, &["--shards", &w1.addr]);
+    assert_models_identical(&direct, &one, "1-shard vs direct");
+
+    // three shards over 4 chunks — an uneven deal — reusing w1 (a worker
+    // outlives its first coordinator: per-fit state dropped at EOF)
+    let w2 = Worker::start();
+    let w3 = Worker::start();
+    let shards = format!("{},{},{}", w1.addr, w2.addr, w3.addr);
+    let three = dir.join("three_shards");
+    decompose(&data, &three, &["--shards", &shards]);
+    assert_models_identical(&direct, &three, "3-shard vs direct");
+
+    w1.kill();
+    w2.kill();
+    w3.kill();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killed_worker_surfaces_shard_lost_and_survivors_keep_serving() {
+    let dir = tmpdir("lost");
+    let data = dir.join("data.spt");
+    generate(&data, "9");
+
+    let w1 = Worker::start();
+    let w2 = Worker::start();
+    let shards = format!("{},{}", w1.addr, w2.addr);
+
+    // tol 0 never converges: the coordinator runs until the worker dies
+    let mut coord = spartan()
+        .args([
+            "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--max-iters", "1000000", "--tol", "0", "--shards", &shards,
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // let the fit make real progress, then kill one shard
+    std::thread::sleep(Duration::from_millis(1500));
+    w2.kill();
+
+    // the coordinator must fail promptly — a hang here means the lost
+    // shard was detected by nothing but the (10-minute) read timeout
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let status = loop {
+        if let Some(st) = coord.try_wait().unwrap() {
+            break st;
+        }
+        if Instant::now() >= deadline {
+            let _ = coord.kill();
+            let _ = coord.wait();
+            panic!("coordinator still running 60s after its worker died");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(!status.success(), "coordinator exited cleanly despite a dead shard");
+    let mut err = String::new();
+    BufReader::new(coord.stderr.take().unwrap()).read_to_string(&mut err).unwrap();
+    assert!(err.contains("shard lost"), "stderr lacks the structured error: {err:?}");
+
+    // the surviving worker was told to abort and is fully serviceable
+    let after = dir.join("after");
+    decompose(&data, &after, &["--shards", &w1.addr]);
+    assert!(after.join("H.csv").exists());
+
+    w1.kill();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cancelling_a_sharded_daemon_job_stops_within_one_iteration() {
+    let dir = tmpdir("cancel");
+    let data = dir.join("data.spt");
+    generate(&data, "11");
+
+    let daemon = Daemon::start(&["--workers", "1"]);
+    let w1 = Worker::start();
+    let w2 = Worker::start();
+    let shards = format!("{},{}", w1.addr, w2.addr);
+
+    let out = spartan()
+        .args([
+            "submit", "--addr", &daemon.addr, "--input", data.to_str().unwrap(),
+            "--rank", "3", "--max-iters", "1000000", "--tol", "0",
+            "--shards", &shards,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let id = text
+        .lines()
+        .find_map(|l| l.strip_prefix("submitted job "))
+        .unwrap_or_else(|| panic!("no job id in {text:?}"))
+        .trim()
+        .to_string();
+
+    let status = |id: &str| -> (String, usize) {
+        let out =
+            spartan().args(["status", "--addr", &daemon.addr, "--id", id]).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        let field = |key: &str| {
+            text.split_whitespace()
+                .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+                .unwrap_or_else(|| panic!("no {key} in {text:?}"))
+                .to_string()
+        };
+        (field("state"), field("iterations").parse().unwrap())
+    };
+
+    // let it make real progress first
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (state, iters) = status(&id);
+        assert_ne!(state, "failed");
+        if state == "running" && iters >= 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never reached 2 iterations");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let out = spartan().args(["cancel", "--addr", &daemon.addr, "--id", &id]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let at_cancel: usize = text
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("iterations_at_cancel="))
+        .unwrap_or_else(|| panic!("no iterations_at_cancel in {text:?}"))
+        .parse()
+        .unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let final_iters = loop {
+        let (state, iters) = status(&id);
+        if state == "cancelled" {
+            break iters;
+        }
+        assert_ne!(state, "failed");
+        assert!(Instant::now() < deadline, "job stuck in {state}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    // the coordinator checkpoints at the same boundaries as a local
+    // session: at most the iteration in flight at cancel time completes,
+    // and the workers (request-driven) stop with it.
+    assert!(
+        final_iters <= at_cancel + 1,
+        "cancelled at {at_cancel} but ran to {final_iters}"
+    );
+
+    // the partial model at the last completed iterate is available
+    let saved = dir.join("partial");
+    let out = spartan()
+        .args([
+            "result", "--addr", &daemon.addr, "--id", &id,
+            "--save-model", saved.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(saved.join("H.csv").exists());
+
+    daemon.stop();
+    w1.kill();
+    w2.kill();
+    std::fs::remove_dir_all(&dir).ok();
+}
