@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench micro_linalg`
 
 use spartan::bench::{bench, write_results, BenchConfig, Measurement};
-use spartan::linalg::kernels::{self, reference};
+use spartan::linalg::kernels::{self, KernelBackend};
 use spartan::linalg::{blas, nnls, svd, Mat};
 use spartan::util::json::Json;
 use spartan::util::rng::Pcg64;
@@ -114,12 +114,17 @@ fn main() {
         measurements.push(m);
     }
 
-    // ---- kernel layer A/B: register-blocked vs scalar reference ----------
-    // Shape A (sparse-support rows × dense panel): the `Y_k·V` kernel at
-    // per-slice shapes. Same inputs, bitwise-identical outputs (asserted
-    // in kernel_conformance.rs) — these cells measure the speed delta of
-    // the 4-wide / R-unrolled blocking alone.
-    println!("\n=== kernels: blocked vs scalar, shape A (Y_k·V support rows) ===");
+    // ---- kernel layer A/B: every detected ISA backend vs the scalar
+    // reference, at both hot shapes. One cell per backend per shape,
+    // tagged with `backend` so the trend differ keys them
+    // `micro_linalg/<name>@<backend>` — a machine gaining or losing an
+    // ISA adds/removes cells instead of corrupting the comparison.
+    // Same inputs per shape; the bitwise family's outputs are identical
+    // bits (asserted in kernel_conformance.rs), so these cells measure
+    // the speed delta of the lane widening alone.
+    let backends = KernelBackend::detected();
+    let backend_names: Vec<&str> = backends.iter().map(|b| b.name()).collect();
+    println!("\n=== kernels, shape A (Y_k·V support rows): {backend_names:?} ===");
     for &(r, c) in &[(4usize, 256usize), (8, 256), (16, 512), (40, 1024)] {
         let j = c + 7;
         let support: Vec<u32> = (0..c as u32).collect();
@@ -128,55 +133,42 @@ fn main() {
         let reps = (20_000_000 / (2 * r * r * c)).max(1);
         let fl = (reps * 2 * c * r * r) as f64;
         let mut out = Mat::zeros(r, r);
-        let m = bench(&format!("spmm_yt_v_blocked_r{r}_c{c}"), &cfg, || {
-            for _ in 0..reps {
-                out.fill_zero();
-                kernels::spmm_yt_v(&yt, &support, &v, &mut out);
-                std::hint::black_box(&out);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
-        measurements.push(m);
-        let m = bench(&format!("spmm_yt_v_scalar_r{r}_c{c}"), &cfg, || {
-            for _ in 0..reps {
-                out.fill_zero();
-                reference::spmm_yt_v(&yt, &support, &v, &mut out);
-                std::hint::black_box(&out);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
-        measurements.push(m);
+        for &backend in &backends {
+            let m = bench(&format!("spmm_yt_v_{}_r{r}_c{c}", backend.name()), &cfg, || {
+                for _ in 0..reps {
+                    out.fill_zero();
+                    kernels::spmm_yt_v_with(backend, &yt, &support, &v, &mut out);
+                    std::hint::black_box(&out);
+                }
+            })
+            .with_backend(backend.name());
+            println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+            measurements.push(m);
+        }
     }
 
     // Shape B (dense-transpose × dense panel): the `Z_k = Y_kᵀH` row
     // sweep plus the gram/AᵀB panels behind the normal equations.
-    println!("\n=== kernels: blocked vs scalar, shape B (Y_kᵀH / gram / AᵀB) ===");
+    println!("\n=== kernels, shape B (Y_kᵀH / gram / AᵀB): {backend_names:?} ===");
     for &(r, c) in &[(8usize, 256usize), (16, 512), (40, 512)] {
         let yt = Mat::rand_normal(c, r, &mut rng);
         let h = Mat::rand_normal(r, r, &mut rng);
         let mut z = Mat::zeros(c, r);
         let reps = (20_000_000 / (2 * r * r * c)).max(1);
         let fl = (reps * 2 * c * r * r) as f64;
-        let m = bench(&format!("zt_panel_blocked_r{r}_c{c}"), &cfg, || {
-            for _ in 0..reps {
-                for cc in 0..c {
-                    kernels::zt_row(yt.row(cc), &h, z.row_mut(cc));
+        for &backend in &backends {
+            let m = bench(&format!("zt_panel_{}_r{r}_c{c}", backend.name()), &cfg, || {
+                for _ in 0..reps {
+                    for cc in 0..c {
+                        kernels::zt_row_with(backend, yt.row(cc), &h, z.row_mut(cc));
+                    }
+                    std::hint::black_box(&z);
                 }
-                std::hint::black_box(&z);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
-        measurements.push(m);
-        let m = bench(&format!("zt_panel_scalar_r{r}_c{c}"), &cfg, || {
-            for _ in 0..reps {
-                for cc in 0..c {
-                    reference::zt_row(yt.row(cc), &h, z.row_mut(cc));
-                }
-                std::hint::black_box(&z);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
-        measurements.push(m);
+            })
+            .with_backend(backend.name());
+            println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl, m.mean_secs));
+            measurements.push(m);
+        }
     }
     for &(k, n) in &[(256usize, 8usize), (512, 16), (1024, 40)] {
         let a = Mat::rand_normal(k, n, &mut rng);
@@ -185,53 +177,87 @@ fn main() {
         let fl_gram = (reps * k * n * n) as f64; // upper triangle ≈ half
         let fl_atb = (reps * 2 * k * n * n) as f64;
         let mut g = Mat::zeros(n, n);
-        let m = bench(&format!("gram_blocked_k{k}_n{n}"), &cfg, || {
-            for _ in 0..reps {
-                g.fill_zero();
-                kernels::gram_into(&a, &mut g);
-                std::hint::black_box(&g);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_gram, m.mean_secs));
-        measurements.push(m);
-        let m = bench(&format!("gram_scalar_k{k}_n{n}"), &cfg, || {
-            for _ in 0..reps {
-                g.fill_zero();
-                reference::gram(&a, &mut g);
-                std::hint::black_box(&g);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_gram, m.mean_secs));
-        measurements.push(m);
         let mut c = Mat::zeros(n, n);
-        let m = bench(&format!("atb_blocked_k{k}_n{n}"), &cfg, || {
-            for _ in 0..reps {
-                c.fill_zero();
-                kernels::atb_into(&a, &b, &mut c);
-                std::hint::black_box(&c);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_atb, m.mean_secs));
-        measurements.push(m);
-        let m = bench(&format!("atb_scalar_k{k}_n{n}"), &cfg, || {
-            for _ in 0..reps {
-                c.fill_zero();
-                reference::atb(&a, &b, &mut c);
-                std::hint::black_box(&c);
-            }
-        });
-        println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_atb, m.mean_secs));
-        measurements.push(m);
+        for &backend in &backends {
+            let m = bench(&format!("gram_{}_k{k}_n{n}", backend.name()), &cfg, || {
+                for _ in 0..reps {
+                    g.fill_zero();
+                    kernels::gram_into_with(backend, &a, &mut g);
+                    std::hint::black_box(&g);
+                }
+            })
+            .with_backend(backend.name());
+            println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_gram, m.mean_secs));
+            measurements.push(m);
+            let m = bench(&format!("atb_{}_k{k}_n{n}", backend.name()), &cfg, || {
+                for _ in 0..reps {
+                    c.fill_zero();
+                    kernels::atb_into_with(backend, &a, &b, &mut c);
+                    std::hint::black_box(&c);
+                }
+            })
+            .with_backend(backend.name());
+            println!("{} → {:.2} GFLOP/s", m.summary(), gflops(fl_atb, m.mean_secs));
+            measurements.push(m);
+        }
+    }
+
+    // ---- end-to-end ALS, one cell per detected backend -------------------
+    // The whole-fit view of the same A/B: how much of the micro-kernel
+    // delta survives the full sweep (Procrustes, CP, packing overheads).
+    println!("\n=== end-to-end ALS per backend: {backend_names:?} ===");
+    {
+        use spartan::datagen::synthetic::{generate, SyntheticSpec};
+        use spartan::parafac2::{fit_parafac2, Backend, Parafac2Config};
+        let fast = std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1");
+        let data = generate(&SyntheticSpec {
+            k: if fast { 200 } else { 2_000 },
+            j: 500,
+            max_i_k: 40,
+            target_nnz: if fast { 40_000 } else { 400_000 },
+            rank: 10,
+            noise: 0.05,
+            seed: 17,
+        })
+        .tensor;
+        let fit_cfg = Parafac2Config {
+            rank: 10,
+            max_iters: if fast { 2 } else { 10 },
+            tol: 0.0,
+            nonneg: true,
+            workers: 0,
+            seed: 23,
+            backend: Backend::Spartan,
+            mem_budget: None,
+            ..Default::default()
+        };
+        let prior = kernels::active_backend();
+        for &backend in &backends {
+            kernels::set_backend(backend).expect("detected backend");
+            let m = bench(&format!("als_e2e_{}", backend.name()), &cfg, || {
+                std::hint::black_box(fit_parafac2(&data, &fit_cfg).expect("fit"));
+            })
+            .with_backend(backend.name());
+            println!("{}", m.summary());
+            measurements.push(m);
+        }
+        kernels::set_backend(prior).expect("restore backend");
     }
 
     let ctx = Json::obj(vec![
         ("bench", Json::str("micro_linalg")),
         (
             "config",
-            Json::obj(vec![(
-                "fast",
-                Json::Bool(std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1")),
-            )]),
+            Json::obj(vec![
+                (
+                    "fast",
+                    Json::Bool(std::env::var("SPARTAN_BENCH_FAST").as_deref() == Ok("1")),
+                ),
+                (
+                    "backends",
+                    Json::arr(backends.iter().map(|b| Json::str(b.name()))),
+                ),
+            ]),
         ),
     ]);
     let path = write_results("micro_linalg", ctx, &measurements);

@@ -15,6 +15,7 @@
 //!   "measurements": [
 //!     {
 //!       "name": "...", "iters": N,
+//!       "backend": "scalar|blocked|avx2|avx512|neon",
 //!       "mean_secs": ..., "std_secs": ..., "min_secs": ..., "max_secs": ...,
 //!       "iter_secs": [ ...wall-time of every measured iteration... ],
 //!       "counters": { "fit_iters": ..., "yv_products": ..., "traversals": ...,
@@ -37,6 +38,12 @@
 //! of the fit's data-plane arenas (the residency the arena trades for the
 //! halved X traffic). That makes the perf trajectory across PRs
 //! machine-checkable, not eyeballed.
+//!
+//! `backend` (optional) names the kernel backend the measurement ran on
+//! (`linalg::kernels::KernelBackend::name()`) — the per-ISA A/B cells.
+//! `trend::cells_from_json` folds it into the cell id
+//! (`<bench>/<name>@<backend>`), so a measurement that changes backend is
+//! a new cell, never a regression against the old one.
 
 pub mod als_runner;
 pub mod table;
@@ -60,6 +67,9 @@ pub struct Measurement {
     /// Exact work counters (e.g. `yv_products`, `traversals`) exported as
     /// the `counters` object; empty for pure wall-time measurements.
     pub counters: Vec<(String, u64)>,
+    /// Kernel backend the measurement ran on, exported as `backend`;
+    /// `None` for measurements that don't touch the kernel layer.
+    pub backend: Option<String>,
 }
 
 impl Measurement {
@@ -69,16 +79,26 @@ impl Measurement {
         self
     }
 
+    /// Record the kernel backend this cell ran on (builder-style). The
+    /// trend differ keys the cell as `<bench>/<name>@<backend>`.
+    pub fn with_backend(mut self, backend: &str) -> Measurement {
+        self.backend = Some(backend.to_string());
+        self
+    }
+
     pub fn to_json(&self) -> Json {
-        let mut fields = vec![
-            ("name", Json::str(self.name.clone())),
+        let mut fields = vec![("name", Json::str(self.name.clone()))];
+        if let Some(b) = &self.backend {
+            fields.push(("backend", Json::str(b.clone())));
+        }
+        fields.extend([
             ("iters", Json::num(self.iters as f64)),
             ("mean_secs", Json::num(self.mean_secs)),
             ("std_secs", Json::num(self.std_secs)),
             ("min_secs", Json::num(self.min_secs)),
             ("max_secs", Json::num(self.max_secs)),
             ("iter_secs", Json::arr(self.samples.iter().map(|&s| Json::num(s)))),
-        ];
+        ]);
         if !self.counters.is_empty() {
             fields.push((
                 "counters",
@@ -159,6 +179,7 @@ pub fn summarize(name: &str, samples: &[f64]) -> Measurement {
         max_secs: samples.iter().cloned().fold(0.0, f64::max),
         samples: samples.to_vec(),
         counters: Vec::new(),
+        backend: None,
     }
 }
 
@@ -227,6 +248,14 @@ mod tests {
         assert_eq!(c.get("yv_products").unwrap().as_usize().unwrap(), 120);
         assert_eq!(c.get("traversals").unwrap().as_usize().unwrap(), 60);
         assert_eq!(j.get("iter_secs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn json_backend_field_is_optional_and_round_trips() {
+        let plain = summarize("x", &[0.5]);
+        assert!(plain.to_json().get("backend").is_none(), "no backend unless attached");
+        let tagged = summarize("x", &[0.5]).with_backend("avx2");
+        assert_eq!(tagged.to_json().get("backend").unwrap().as_str().unwrap(), "avx2");
     }
 
     #[test]

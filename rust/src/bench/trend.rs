@@ -5,10 +5,14 @@
 //! in [`super`]): the *old* side is the previous run's
 //! `bench-results-<sha>` artifact (or the committed `BENCH_*.json`
 //! history seeds on a first run), the *new* side is the current run.
-//! Cells are keyed `<bench>/<measurement name>`; each cell's statistic is
-//! the **median** of its raw `iter_secs` samples (medians shrug off the
-//! single-iteration outliers that shared CI runners love to produce;
-//! `mean_secs` is the fallback for measurements without samples).
+//! Cells are keyed `<bench>/<measurement name>` — with `@<backend>`
+//! appended when the measurement records a `backend` (the SIMD A/B
+//! cells), so runs that differ only in a config field are treated as
+//! distinct cells (added/removed) instead of being mis-compared against
+//! each other. Each cell's statistic is the **median** of its raw
+//! `iter_secs` samples (medians shrug off the single-iteration outliers
+//! that shared CI runners love to produce; `mean_secs` is the fallback
+//! for measurements without samples).
 //!
 //! Classification per cell, with `max_regress` (CI: 0.10) and `min_iters`
 //! (CI: 5):
@@ -32,7 +36,8 @@ use std::path::Path;
 /// One comparable bench cell.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Cell {
-    /// `<bench>/<measurement name>`.
+    /// `<bench>/<measurement name>`, plus `@<backend>` when the
+    /// measurement carries a `backend` field.
     pub id: String,
     /// Median of the raw per-iteration wall times (or `mean_secs`).
     pub median_secs: f64,
@@ -78,7 +83,14 @@ pub fn cells_from_json(doc: &Json) -> Vec<Cell> {
         } else {
             (median(&samples), samples.len())
         };
-        out.push(Cell { id: format!("{bench}/{name}"), median_secs, iters });
+        // Config fields that change what a measurement *is* must split
+        // the cell id — otherwise an old `name` cell would be diffed
+        // against a new, differently-configured run of the same name.
+        let id = match m.get("backend").and_then(|j| j.as_str()) {
+            Some(backend) => format!("{bench}/{name}@{backend}"),
+            None => format!("{bench}/{name}"),
+        };
+        out.push(Cell { id, median_secs, iters });
     }
     out
 }
@@ -282,6 +294,33 @@ mod tests {
         assert_eq!(cells.len(), 2);
         assert_eq!(cells[0], cell("b/m", 2.0, 3)); // median, not the mean
         assert_eq!(cells[1], cell("b/no_samples", 0.5, 4)); // mean fallback
+    }
+
+    #[test]
+    fn backend_field_splits_the_cell_id() {
+        let doc = json::parse(
+            r#"{"bench": "b", "measurements": [
+                {"name": "m", "backend": "avx2", "iter_secs": [1.0]},
+                {"name": "m", "backend": "blocked", "iter_secs": [2.0]},
+                {"name": "m", "iter_secs": [3.0]}
+            ]}"#,
+        )
+        .unwrap();
+        let cells = cells_from_json(&doc);
+        assert_eq!(
+            cells,
+            vec![
+                cell("b/m@avx2", 1.0, 1),
+                cell("b/m@blocked", 2.0, 1),
+                cell("b/m", 3.0, 1),
+            ]
+        );
+        // a backend added to an existing measurement is a new cell, not
+        // a comparison against the un-suffixed old one
+        let rep = diff(&[cells[2].clone()], &cells[..2].to_vec(), 0.10, 1);
+        assert!(rep.regressions.is_empty(), "{rep:?}");
+        assert_eq!(rep.added.len(), 2);
+        assert_eq!(rep.removed, vec!["b/m".to_string()]);
     }
 
     #[test]

@@ -150,16 +150,35 @@
 //! sparse-support rows × dense panel (`Y_k·V`, `X_k·V`) and
 //! dense-transpose × dense panel (`Z_k = Y_kᵀH`, `gram`, `AᵀB`). Callers
 //! (`parafac2::intermediate`, `parafac2::mttkrp`, `sparse::csr`,
-//! `linalg::blas`) never select variants themselves. The determinism
-//! contract — which kernels are **bitwise** identical to their scalar
-//! references (the order-preserving blocked family) and which are
-//! **ULP-bounded** (the reordered `dot` family) — is documented in the
-//! module and pinned by the differential harness
+//! `linalg::blas`) never select variants themselves.
+//!
+//! Behind the dispatch point sit explicit SIMD backends
+//! ([`linalg::kernels::KernelBackend`]): portable `scalar`/`blocked`
+//! plus `core::arch` implementations for AVX2, AVX-512F, and NEON. The
+//! backend is selected **once per process** at the first kernel call —
+//! precedence: `--kernel` CLI flag (`decompose`/`serve`/`shard-worker`)
+//! > `SPARTAN_KERNEL` env var > auto-detection of the best *bitwise*
+//! backend (`avx2` → `neon` → `blocked`); an unknown or undetected name
+//! is a loud startup error, never a silent fallback.
+//!
+//! The determinism contract is stated **per lane family**:
+//! `scalar`/`blocked`/`avx2`/`neon` vectorize the panel-width axis with
+//! unfused multiply-then-add per lane, replaying the scalar reference's
+//! per-element FP order — **bitwise** identical, so the golden
+//! trajectory, serial≡parallel, and sharded≡local gates hold under any
+//! of them. `avx512` uses 8-wide fused multiply-add — a genuinely
+//! **reordered** family (like the pre-existing `dot`): ULP-bounded,
+//! opt-in only (never auto-selected), recorded in
+//! `FitStats::kernel_backend`, and refused by the shard `hello`
+//! handshake when coordinator and worker backends differ. All of this
+//! is pinned by the per-backend differential harness
 //! `rust/tests/kernel_conformance.rs`; a checked-in golden-trajectory
 //! fixture (`bench::als_runner::golden`) additionally pins the exact
-//! summation order of a full fit, and `cargo bench --bench micro_linalg`
-//! publishes blocked-vs-scalar A/B cells for both shapes. To add a kernel
-//! shape, see "Adding a kernel shape" in [`linalg::kernels`].
+//! summation order of a full fit; CI's `kernel-matrix` lane re-runs the
+//! whole suite under each runner-available backend; and `cargo bench
+//! --bench micro_linalg` publishes per-backend A/B cells for both
+//! shapes plus an end-to-end ALS cell per backend. To add a kernel
+//! shape or a backend, see the recipes in [`linalg::kernels`].
 
 pub mod bench;
 pub mod cli;

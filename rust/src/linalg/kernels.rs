@@ -1,5 +1,5 @@
 //! Register-blocked micro-kernels for the ALS hot loops, behind one
-//! dispatch point.
+//! dispatch point with runtime-selected ISA backends.
 //!
 //! Profiling after the PR 1–2 fusions leaves the iteration time inside two
 //! rank-1-update loop shapes, and this module owns both:
@@ -16,74 +16,299 @@
 //!   and `AᵀA` ([`gram_into`], `blas::gram`) that the normal equations and
 //!   Procrustes hit every iteration.
 //!
+//! ## Backends and selection
+//!
+//! Every public kernel dispatches through [`active_backend`], a
+//! process-wide choice resolved once and cached in an atomic:
+//!
+//! 1. an explicit [`set_backend`] call wins (the CLI's `--kernel` flag on
+//!    `decompose`/`serve`/`shard-worker`/bench binaries routes here);
+//! 2. else the `SPARTAN_KERNEL` env var (`scalar`, `blocked`, `avx2`,
+//!    `avx512`, `neon`) is honored — an unknown name or a backend the
+//!    host cannot run aborts loudly rather than silently falling back;
+//! 3. else auto-detection picks the widest **bitwise** backend the host
+//!    supports: `avx2` on x86-64 with AVX2, `neon` on AArch64, `blocked`
+//!    otherwise. Reordered backends are *never* auto-selected.
+//!
+//! | backend   | family    | how                                              | auto? |
+//! |-----------|-----------|--------------------------------------------------|-------|
+//! | `scalar`  | bitwise   | the [`reference`] loops (the contract itself)    | no    |
+//! | `blocked` | bitwise   | portable 4-wide register blocking ([`blocked`])  | fallback |
+//! | `avx2`    | bitwise   | 256-bit lanes, **unfused** mul then add          | yes   |
+//! | `neon`    | bitwise   | 128-bit lanes, **unfused** mul then add          | yes   |
+//! | `avx512`  | reordered | 512-bit lanes with 8-wide **FMA**                | never |
+//!
 //! ## Blocking schedule
 //!
-//! Every kernel blocks the **accumulation axis** by [`ACC_BLOCK`] = 4:
+//! Every backend blocks the **accumulation axis** by [`ACC_BLOCK`] = 4:
 //! four coefficient/row pairs are held in registers and applied to the
 //! destination row in one pass, quartering the destination's load/store
-//! round-trips (the bottleneck of the scalar form, which re-streams the
-//! output row once per accumulation step). The per-slice kernels
-//! additionally monomorphize the panel width for `R ≤` [`R_UNROLL_MAX`]
-//! (the `#[inline(always)]` body is instantiated with a `const` width, so
-//! LLVM fully unrolls and vectorizes the inner loop at the exact rank) —
-//! the R-unrolled fast path for the paper's R ∈ {5..40} sweet spot.
-//!
-//! The schedule is **fixed and data-only**: which variant runs depends
-//! only on operand shapes, never on values, worker counts, or timing, so
-//! kernel selection can never perturb the repo's bitwise-determinism
-//! contracts.
+//! round-trips. The `blocked` per-slice kernels additionally monomorphize
+//! the panel width for `R ≤` [`R_UNROLL_MAX`]; the SIMD backends instead
+//! vectorize the **panel-width axis j** — output elements are independent,
+//! so each lane owns one output element and replays the scalar chain for
+//! it. The schedule is **fixed and data-only**: which variant runs depends
+//! only on the selected backend and operand shapes, never on values,
+//! worker counts, or timing.
 //!
 //! ## Determinism contract
 //!
-//! Two families, asserted by `rust/tests/kernel_conformance.rs`:
+//! Two lane families, asserted by `rust/tests/kernel_conformance.rs`:
 //!
-//! * **Order-preserving (bitwise).** [`spmm_yt_v`], [`sparse_row_axpy`],
-//!   [`zt_row`], [`atb_into`], [`gram_into`] produce results **bitwise
-//!   identical** to their scalar references in [`reference`] for *every*
-//!   input (zeros, denormals, NaN propagation included): the 4-wide block
-//!   applies its terms left-to-right in the same accumulation-axis order
-//!   as the scalar loop, and exact-zero skips are preserved term-by-term,
-//!   so each output element sees the identical floating-point sequence.
-//!   Swapping the blocked and reference kernels can never move a
-//!   trajectory by even one ulp.
-//! * **Reordered (ULP-bounded).** [`dot`] keeps its 4 independent
-//!   accumulators (the dependency-chain break that lets FMAs overlap) and
-//!   is therefore *not* bitwise against the sequential
-//!   [`reference::dot_seq`]; conformance pins it to a tight ULP
-//!   envelope (and to exact equality on same-sign denormal inputs, where
-//!   every partial addition is exact).
+//! * **Order-preserving (bitwise): `scalar`, `blocked`, `avx2`, `neon`.**
+//!   All five kernels produce results **bitwise identical** to the scalar
+//!   references in [`reference`] for *every* input (zeros, denormals, NaN
+//!   propagation included). The trick is that vector lanes sit on the
+//!   panel-width axis, where elements are independent: lane `j` computes
+//!   `o_j + y₀·v₀[j] + y₁·v₁[j] + y₂·v₂[j] + y₃·v₃[j]` with separate
+//!   multiply and add instructions (Rust/LLVM never contracts FP by
+//!   default), which is the *identical* rounding sequence the scalar
+//!   reference applies to that element; exact-zero skips keep the same
+//!   branch structure (all-nonzero fast path vs per-coefficient skip), so
+//!   a zero coefficient never turns a skipped `0·NaN` into a NaN. Forcing
+//!   any backend in this family can never move a trajectory by one ulp —
+//!   the golden-trajectory fixture passes un-re-blessed under all of them.
+//! * **Reordered (ULP-bounded): `avx512`, [`dot`].** The `avx512` backend
+//!   uses 8-wide `fmadd` (one rounding per multiply-add instead of two),
+//!   and [`dot`] keeps 4 independent accumulators; both are *not* bitwise
+//!   against the references. Conformance pins them to a forward-error
+//!   envelope (`≲ n·ε·Σ|yᵢ·vᵢ[j]|` plus a subnormal absolute slack) and to
+//!   identical NaN placement / zero-skip semantics. `avx512` is opt-in
+//!   only (`--kernel avx512` / `SPARTAN_KERNEL=avx512`): it is never
+//!   auto-selected, and shard topologies mixing it with another backend
+//!   are rejected at the `hello` handshake (`service::shard`).
+//!
+//! The selected backend is recorded in `FitStats::kernel_backend`, the
+//! bench JSON `backend` field, and the shard `hello` handshake, so a
+//! trajectory can always be traced back to the lane family that made it.
 //!
 //! ## Adding a kernel shape
 //!
 //! 1. Write the scalar loop in [`reference`] first — its floating-point
 //!    order *is* the contract.
 //! 2. Add the blocked form with the same per-element term order (or
-//!    document it in the reordered family) and a single `pub fn` dispatch
-//!    that picks variants by shape only.
+//!    document it in the reordered family), extend each backend module
+//!    (they share the kernel skeletons; only `accum4`/`accum1` differ),
+//!    and dispatch through a single `pub fn` + `*_with` pair.
 //! 3. Extend `kernel_conformance.rs` with the new shape's differential
-//!    sweep (R sweep, ragged/empty operands, zero and denormal values),
-//!    `prop_invariants.rs` if the kernel feeds a pooled reduction, and a
-//!    blocked-vs-scalar A/B cell in `benches/micro_linalg.rs`.
+//!    sweep (R sweep, ragged/empty operands, zero / denormal / NaN
+//!    regimes) across `KernelBackend::detected()`, `prop_invariants.rs`
+//!    if the kernel feeds a pooled reduction, and per-backend A/B cells
+//!    in `benches/micro_linalg.rs`.
 //!
-//! Callers (`parafac2::intermediate`, `parafac2::mttkrp`,
-//! `sparse::csr`, `linalg::blas`) go through the dispatch functions and
-//! never select variants themselves.
+//! ## Adding a backend
+//!
+//! 1. Add the [`KernelBackend`] variant, its `name`/`parse` strings, and
+//!    its `is_supported` detection arm (`is_x86_feature_detected!` /
+//!    `is_aarch64_feature_detected!` — never compile-time only).
+//! 2. Implement the five kernels in a new `cfg(target_arch)` module: keep
+//!    the *exact* skeletons (block-of-4 loop, all-nonzero fast path,
+//!    per-coefficient skip path, ragged tails) and supply `accum4`/
+//!    `accum1`. Unfused mul+add on the j axis ⇒ bitwise family; anything
+//!    that fuses or re-associates ⇒ reordered family, opt-in only.
+//! 3. Wire the `*_with` dispatch arms, declare the family in
+//!    `is_bitwise`, and extend the conformance sweep + `micro_linalg`
+//!    cells. Auto-selection (`KernelBackend::auto`) may only ever pick
+//!    bitwise backends.
+//!
+//! Callers (`parafac2::intermediate`, `parafac2::mttkrp`, `sparse::csr`,
+//! `linalg::blas`) go through the dispatch functions and never select
+//! variants themselves.
 
 use super::dense::Mat;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Register block over the accumulation axis: 4 coefficient/row pairs in
 /// flight per destination-row pass.
 pub const ACC_BLOCK: usize = 4;
 
 /// Panel widths `1..=R_UNROLL_MAX` get a monomorphized (fully unrolled)
-/// inner loop in the per-slice kernels; wider panels take the same blocked
-/// body with a runtime width.
+/// inner loop in the `blocked` per-slice kernels; wider panels take the
+/// same blocked body with a runtime width.
 pub const R_UNROLL_MAX: usize = 16;
 
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// A kernel backend: one implementation of the five hot-shape kernels.
+///
+/// `Scalar`/`Blocked`/`Avx2`/`Neon` form the **bitwise** lane family
+/// (interchangeable without moving any trajectory by a single bit);
+/// `Avx512` is the **reordered** family (ULP-bounded, opt-in only). Named
+/// `KernelBackend` because `parafac2::Backend` already names the engine
+/// choice (SPARTan vs baseline).
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// The [`reference`] loops themselves — the contract, and the slow
+    /// baseline for the A/B bench cells.
+    Scalar = 0,
+    /// Portable 4-wide register blocking with width monomorphization.
+    Blocked = 1,
+    /// x86-64 AVX2: 4 × f64 lanes on the panel axis, unfused mul+add.
+    Avx2 = 2,
+    /// x86-64 AVX-512F: 8 × f64 lanes with fused multiply-add. Reordered
+    /// family — opt-in only, never auto-selected.
+    Avx512 = 3,
+    /// AArch64 NEON: 2 × f64 lanes on the panel axis, unfused mul+add.
+    Neon = 4,
+}
+
+/// Sentinel for "not yet resolved" in [`ACTIVE_BACKEND`].
+const BACKEND_UNSET: u8 = u8::MAX;
+
+/// The process-wide backend choice. Relaxed ordering suffices: the value
+/// is write-once-then-read (plus benign same-value races during lazy
+/// init), and every backend in play computes from the same inputs.
+static ACTIVE_BACKEND: AtomicU8 = AtomicU8::new(BACKEND_UNSET);
+
+impl KernelBackend {
+    /// Every backend, in discriminant order.
+    pub const ALL: [KernelBackend; 5] = [
+        KernelBackend::Scalar,
+        KernelBackend::Blocked,
+        KernelBackend::Avx2,
+        KernelBackend::Avx512,
+        KernelBackend::Neon,
+    ];
+
+    /// Stable lowercase name — the `SPARTAN_KERNEL`/`--kernel` spelling,
+    /// and the string recorded in `FitStats`, bench JSON, and the shard
+    /// `hello` handshake.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Blocked => "blocked",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Avx512 => "avx512",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn parse(s: &str) -> Result<KernelBackend, String> {
+        match s {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "blocked" => Ok(KernelBackend::Blocked),
+            "avx2" => Ok(KernelBackend::Avx2),
+            "avx512" => Ok(KernelBackend::Avx512),
+            "neon" => Ok(KernelBackend::Neon),
+            other => Err(format!(
+                "unknown kernel backend '{other}' (expected one of scalar, blocked, avx2, avx512, neon)"
+            )),
+        }
+    }
+
+    /// Whether this backend is in the order-preserving (bitwise) lane
+    /// family. Only bitwise backends may ever be auto-selected.
+    pub fn is_bitwise(self) -> bool {
+        !matches!(self, KernelBackend::Avx512)
+    }
+
+    /// Whether the running host can execute this backend (compile-target
+    /// architecture *and* runtime CPUID/feature detection).
+    pub fn is_supported(self) -> bool {
+        match self {
+            KernelBackend::Scalar | KernelBackend::Blocked => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelBackend::Avx2 | KernelBackend::Avx512 => false,
+            #[cfg(not(target_arch = "aarch64"))]
+            KernelBackend::Neon => false,
+        }
+    }
+
+    /// Every backend the running host supports, in [`Self::ALL`] order —
+    /// the sweep set for conformance tests and per-ISA bench cells.
+    pub fn detected() -> Vec<KernelBackend> {
+        Self::ALL.iter().copied().filter(|b| b.is_supported()).collect()
+    }
+
+    /// The auto-selection policy: the widest supported **bitwise**
+    /// backend. Reordered backends are never returned here.
+    pub fn auto() -> KernelBackend {
+        if KernelBackend::Avx2.is_supported() {
+            return KernelBackend::Avx2;
+        }
+        if KernelBackend::Neon.is_supported() {
+            return KernelBackend::Neon;
+        }
+        KernelBackend::Blocked
+    }
+
+    fn from_u8(v: u8) -> KernelBackend {
+        Self::ALL[v as usize]
+    }
+}
+
+/// The backend the dispatch functions route to, resolving it on first use
+/// (see the module docs for the precedence: `set_backend` > env > auto).
+///
+/// # Panics
+///
+/// On first use, if `SPARTAN_KERNEL` names an unknown backend or one the
+/// host cannot run — a misconfigured override must fail loudly, not
+/// silently fall back to a different lane family.
+pub fn active_backend() -> KernelBackend {
+    match ACTIVE_BACKEND.load(Ordering::Relaxed) {
+        BACKEND_UNSET => init_backend(),
+        b => KernelBackend::from_u8(b),
+    }
+}
+
+#[cold]
+fn init_backend() -> KernelBackend {
+    let b = match std::env::var("SPARTAN_KERNEL") {
+        Ok(s) if !s.is_empty() => {
+            let b = KernelBackend::parse(&s).unwrap_or_else(|e| panic!("SPARTAN_KERNEL: {e}"));
+            assert!(
+                b.is_supported(),
+                "SPARTAN_KERNEL={s}: backend not supported on this host (detected: {})",
+                detected_names()
+            );
+            b
+        }
+        _ => KernelBackend::auto(),
+    };
+    ACTIVE_BACKEND.store(b as u8, Ordering::Relaxed);
+    b
+}
+
+/// Force the process-wide backend (the `--kernel` CLI flag). Errors if
+/// the host cannot run it; callers surface the message instead of
+/// panicking. Overrides `SPARTAN_KERNEL` when called before first kernel
+/// use (the CLI parses flags before any fit work starts).
+pub fn set_backend(b: KernelBackend) -> Result<(), String> {
+    if !b.is_supported() {
+        return Err(format!(
+            "kernel backend '{}' is not supported on this host (detected: {})",
+            b.name(),
+            detected_names()
+        ));
+    }
+    ACTIVE_BACKEND.store(b as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+fn detected_names() -> String {
+    KernelBackend::detected()
+        .iter()
+        .map(|b| b.name())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
 /// Scalar reference kernels. Their loop order defines the floating-point
-/// sequence the order-preserving blocked kernels must reproduce bit for
-/// bit; they also serve as the slow-but-obvious implementations the
+/// sequence the order-preserving backends must reproduce bit for bit;
+/// they also serve as the slow-but-obvious implementations the
 /// conformance harness and the `micro_linalg` A/B cells diff against.
+/// Selecting `KernelBackend::Scalar` runs these directly.
 pub mod reference {
     use super::Mat;
 
@@ -222,272 +447,861 @@ macro_rules! dispatch_width {
     };
 }
 
-// ---------------------------------------------------------------------------
-// Shape A: sparse-support rows × dense panel
-// ---------------------------------------------------------------------------
+/// Portable register-blocked kernels (the pre-SIMD fast path, and the
+/// fallback backend on hosts without AVX2/NEON). Bitwise identical to
+/// [`reference`] for every input: the 4-wide block applies its terms
+/// left-to-right in scalar accumulation order, and exact-zero skips are
+/// preserved term-by-term.
+pub mod blocked {
+    use super::{Mat, ACC_BLOCK};
 
-/// `out += Y_k · V_c` where `Y_k` is held as its packed transpose `yt`
-/// (`c_k × R`) and `V_c` is the support-row gather of `v`. Bitwise
-/// identical to [`reference::spmm_yt_v`] for every input.
-pub fn spmm_yt_v(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
-    debug_assert_eq!(yt.rows(), support.len(), "support/yt row mismatch");
-    debug_assert_eq!(out.shape(), (yt.cols(), v.cols()), "spmm output shape");
-    dispatch_width!(v.cols(), spmm_mono, spmm_body, (yt, support, v, out));
-}
+    /// Shape A: `out += Y_k · V_c` with `Y_k` held as its packed
+    /// transpose `yt` (`c_k × R`). Bitwise vs [`super::reference::spmm_yt_v`].
+    pub fn spmm_yt_v(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+        dispatch_width!(v.cols(), spmm_mono, spmm_body, (yt, support, v, out));
+    }
 
-#[inline(always)]
-fn spmm_mono<const W: usize>(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
-    spmm_body(yt, support, v, out, W);
-}
+    #[inline(always)]
+    fn spmm_mono<const W: usize>(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+        spmm_body(yt, support, v, out, W);
+    }
 
-#[inline(always)]
-fn spmm_body(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat, w: usize) {
-    let r = yt.cols();
-    let n = support.len();
-    let mut c = 0usize;
-    while c + ACC_BLOCK <= n {
-        let v0 = &v.row(support[c] as usize)[..w];
-        let v1 = &v.row(support[c + 1] as usize)[..w];
-        let v2 = &v.row(support[c + 2] as usize)[..w];
-        let v3 = &v.row(support[c + 3] as usize)[..w];
-        for i in 0..r {
-            let y0 = yt[(c, i)];
-            let y1 = yt[(c + 1, i)];
-            let y2 = yt[(c + 2, i)];
-            let y3 = yt[(c + 3, i)];
-            let orow = &mut out.row_mut(i)[..w];
+    #[inline(always)]
+    fn spmm_body(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat, w: usize) {
+        let r = yt.cols();
+        let n = support.len();
+        let mut c = 0usize;
+        while c + ACC_BLOCK <= n {
+            let v0 = &v.row(support[c] as usize)[..w];
+            let v1 = &v.row(support[c + 1] as usize)[..w];
+            let v2 = &v.row(support[c + 2] as usize)[..w];
+            let v3 = &v.row(support[c + 3] as usize)[..w];
+            for i in 0..r {
+                let y0 = yt[(c, i)];
+                let y1 = yt[(c + 1, i)];
+                let y2 = yt[(c + 2, i)];
+                let y3 = yt[(c + 3, i)];
+                let orow = &mut out.row_mut(i)[..w];
+                if y0 != 0.0 && y1 != 0.0 && y2 != 0.0 && y3 != 0.0 {
+                    // Left-to-right: the identical per-element term order
+                    // the scalar reference produces with four sequential
+                    // `+=`.
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = *o + y0 * v0[j] + y1 * v1[j] + y2 * v2[j] + y3 * v3[j];
+                    }
+                } else {
+                    // Preserve the reference's exact-zero skip term-by-term.
+                    for (y, vr) in [(y0, v0), (y1, v1), (y2, v2), (y3, v3)] {
+                        if y == 0.0 {
+                            continue;
+                        }
+                        for (o, &vv) in orow.iter_mut().zip(vr) {
+                            *o += y * vv;
+                        }
+                    }
+                }
+            }
+            c += ACC_BLOCK;
+        }
+        // Ragged tail in reference order.
+        for cc in c..n {
+            let vrow = &v.row(support[cc] as usize)[..w];
+            let yrow = yt.row(cc);
+            for (i, &yv) in yrow.iter().enumerate() {
+                if yv == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.row_mut(i)[..w];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += yv * vv;
+                }
+            }
+        }
+    }
+
+    /// Shape A: `dst += Σ_p vals[p] · dense(cols[p],:)`. Bitwise vs
+    /// [`super::reference::sparse_row_axpy`].
+    pub fn sparse_row_axpy(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+        dispatch_width!(dense.cols(), sparse_row_mono, sparse_row_body, (vals, cols, dense, dst));
+    }
+
+    #[inline(always)]
+    fn sparse_row_mono<const W: usize>(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+        sparse_row_body(vals, cols, dense, dst, W);
+    }
+
+    #[inline(always)]
+    fn sparse_row_body(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64], w: usize) {
+        let dst = &mut dst[..w];
+        let n = vals.len();
+        let mut p = 0usize;
+        while p + ACC_BLOCK <= n {
+            let (x0, x1, x2, x3) = (vals[p], vals[p + 1], vals[p + 2], vals[p + 3]);
+            let d0 = &dense.row(cols[p] as usize)[..w];
+            let d1 = &dense.row(cols[p + 1] as usize)[..w];
+            let d2 = &dense.row(cols[p + 2] as usize)[..w];
+            let d3 = &dense.row(cols[p + 3] as usize)[..w];
+            // No zero skip here — the reference applies every stored
+            // entry — so the fast path is unconditional.
+            for (j, o) in dst.iter_mut().enumerate() {
+                *o = *o + x0 * d0[j] + x1 * d1[j] + x2 * d2[j] + x3 * d3[j];
+            }
+            p += ACC_BLOCK;
+        }
+        for pp in p..n {
+            let x = vals[pp];
+            let drow = &dense.row(cols[pp] as usize)[..w];
+            for (o, &d) in dst.iter_mut().zip(drow) {
+                *o += x * d;
+            }
+        }
+    }
+
+    /// Shape B: `out = yrowᵀ · H` (overwrites `out`). Bitwise vs
+    /// [`super::reference::zt_row`].
+    pub fn zt_row(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+        dispatch_width!(h.cols(), zt_row_mono, zt_row_body, (yrow, h, out));
+    }
+
+    #[inline(always)]
+    fn zt_row_mono<const W: usize>(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+        zt_row_body(yrow, h, out, W);
+    }
+
+    #[inline(always)]
+    fn zt_row_body(yrow: &[f64], h: &Mat, out: &mut [f64], w: usize) {
+        let out = &mut out[..w];
+        out.fill(0.0);
+        let n = yrow.len();
+        let mut i = 0usize;
+        while i + ACC_BLOCK <= n {
+            let (y0, y1, y2, y3) = (yrow[i], yrow[i + 1], yrow[i + 2], yrow[i + 3]);
+            let h0 = &h.row(i)[..w];
+            let h1 = &h.row(i + 1)[..w];
+            let h2 = &h.row(i + 2)[..w];
+            let h3 = &h.row(i + 3)[..w];
             if y0 != 0.0 && y1 != 0.0 && y2 != 0.0 && y3 != 0.0 {
-                // Left-to-right: the identical per-element term order the
-                // scalar reference produces with four sequential `+=`.
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o = *o + y0 * v0[j] + y1 * v1[j] + y2 * v2[j] + y3 * v3[j];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = *o + y0 * h0[j] + y1 * h1[j] + y2 * h2[j] + y3 * h3[j];
                 }
             } else {
-                // Preserve the reference's exact-zero skip term-by-term.
-                for (y, vr) in [(y0, v0), (y1, v1), (y2, v2), (y3, v3)] {
+                for (y, hr) in [(y0, h0), (y1, h1), (y2, h2), (y3, h3)] {
                     if y == 0.0 {
                         continue;
                     }
-                    for (o, &vv) in orow.iter_mut().zip(vr) {
-                        *o += y * vv;
+                    for (o, &hv) in out.iter_mut().zip(hr) {
+                        *o += y * hv;
                     }
                 }
             }
+            i += ACC_BLOCK;
         }
-        c += ACC_BLOCK;
-    }
-    // Ragged tail in reference order.
-    for cc in c..n {
-        let vrow = &v.row(support[cc] as usize)[..w];
-        let yrow = yt.row(cc);
-        for (i, &yv) in yrow.iter().enumerate() {
+        for ii in i..n {
+            let yv = yrow[ii];
             if yv == 0.0 {
                 continue;
             }
-            let orow = &mut out.row_mut(i)[..w];
-            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                *o += yv * vv;
+            let hrow = &h.row(ii)[..w];
+            for (o, &hv) in out.iter_mut().zip(hrow) {
+                *o += yv * hv;
             }
         }
+    }
+
+    /// Shape B: `c += AᵀB` without materializing `Aᵀ` (outer products
+    /// over rows of `A`, 4 rows in flight). Bitwise vs
+    /// [`super::reference::atb`].
+    pub fn atb_into(a: &Mat, b: &Mat, c: &mut Mat) {
+        let (ka, m) = a.shape();
+        let mut k = 0usize;
+        while k + ACC_BLOCK <= ka {
+            let a0 = a.row(k);
+            let a1 = a.row(k + 1);
+            let a2 = a.row(k + 2);
+            let a3 = a.row(k + 3);
+            let b0 = b.row(k);
+            let b1 = b.row(k + 1);
+            let b2 = b.row(k + 2);
+            let b3 = b.row(k + 3);
+            for i in 0..m {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                let crow = c.row_mut(i);
+                if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        *cv = *cv + x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+                    }
+                } else {
+                    for (x, br) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
+                        if x == 0.0 {
+                            continue;
+                        }
+                        for (cv, &bv) in crow.iter_mut().zip(br) {
+                            *cv += x * bv;
+                        }
+                    }
+                }
+            }
+            k += ACC_BLOCK;
+        }
+        for kk in k..ka {
+            let arow = a.row(kk);
+            let brow = b.row(kk);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aki * bv;
+                }
+            }
+        }
+    }
+
+    /// Shape B: `g += AᵀA` upper triangle with 4 rows of `A` in flight,
+    /// then mirror. Bitwise vs [`super::reference::gram`].
+    pub fn gram_into(a: &Mat, g: &mut Mat) {
+        let (k, n) = a.shape();
+        let mut r = 0usize;
+        while r + ACC_BLOCK <= k {
+            let r0 = a.row(r);
+            let r1 = a.row(r + 1);
+            let r2 = a.row(r + 2);
+            let r3 = a.row(r + 3);
+            for i in 0..n {
+                let (x0, x1, x2, x3) = (r0[i], r1[i], r2[i], r3[i]);
+                let grow = &mut g.row_mut(i)[i..];
+                let (t0, t1, t2, t3) = (&r0[i..], &r1[i..], &r2[i..], &r3[i..]);
+                if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                    for (j, gv) in grow.iter_mut().enumerate() {
+                        *gv = *gv + x0 * t0[j] + x1 * t1[j] + x2 * t2[j] + x3 * t3[j];
+                    }
+                } else {
+                    for (x, tr) in [(x0, t0), (x1, t1), (x2, t2), (x3, t3)] {
+                        if x == 0.0 {
+                            continue;
+                        }
+                        for (gv, &tv) in grow.iter_mut().zip(tr) {
+                            *gv += x * tv;
+                        }
+                    }
+                }
+            }
+            r += ACC_BLOCK;
+        }
+        for rr in r..k {
+            let row = a.row(rr);
+            for i in 0..n {
+                let ai = row[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for j in i..n {
+                    grow[j] += ai * row[j];
+                }
+            }
+        }
+        super::mirror_upper(g);
+    }
+}
+
+/// Generates the five kernel skeletons for a SIMD backend module. The
+/// skeletons are *identical* across backends — block-of-4 accumulation
+/// loop, all-nonzero fast path, per-coefficient exact-zero skip path,
+/// ragged tails in reference order — and only the two leaf primitives
+/// differ per module:
+///
+/// * `accum4(dst, [y;4], [row;4])` — `dst[j] (+)= y0·r0[j] + … + y3·r3[j]`
+///   with the module's lane width and rounding discipline;
+/// * `accum1(dst, y, row)` — `dst[j] += y·row[j]`.
+///
+/// A module whose `accum*` use separate mul+add per term (lane = one
+/// output element, scalar chain order) lands in the bitwise family; one
+/// that fuses (FMA) lands in the reordered family. Keeping the skeleton
+/// shared is what guarantees zero-skip/NaN semantics can never drift
+/// between backends.
+macro_rules! simd_panel_kernels {
+    ($feat:literal, $detect:expr) => {
+        /// Shape A: `out += Y_k · V_c` (packed transpose × support
+        /// gather). Same skeleton as `blocked::spmm_yt_v`.
+        pub fn spmm_yt_v(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+            assert!($detect, "kernel backend requires {}", $feat);
+            // SAFETY: the assert above proves the ISA is present.
+            unsafe { spmm_yt_v_tf(yt, support, v, out) }
+        }
+
+        #[target_feature(enable = $feat)]
+        unsafe fn spmm_yt_v_tf(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+            let w = v.cols();
+            let r = yt.cols();
+            let n = support.len();
+            let mut c = 0usize;
+            while c + ACC_BLOCK <= n {
+                let v0 = &v.row(support[c] as usize)[..w];
+                let v1 = &v.row(support[c + 1] as usize)[..w];
+                let v2 = &v.row(support[c + 2] as usize)[..w];
+                let v3 = &v.row(support[c + 3] as usize)[..w];
+                for i in 0..r {
+                    let y = [yt[(c, i)], yt[(c + 1, i)], yt[(c + 2, i)], yt[(c + 3, i)]];
+                    let orow = &mut out.row_mut(i)[..w];
+                    if y[0] != 0.0 && y[1] != 0.0 && y[2] != 0.0 && y[3] != 0.0 {
+                        accum4(orow, y, [v0, v1, v2, v3]);
+                    } else {
+                        // Preserve the reference's exact-zero skip
+                        // term-by-term (a skipped 0·NaN must stay skipped).
+                        for (k, &yv) in y.iter().enumerate() {
+                            if yv == 0.0 {
+                                continue;
+                            }
+                            accum1(orow, yv, [v0, v1, v2, v3][k]);
+                        }
+                    }
+                }
+                c += ACC_BLOCK;
+            }
+            // Ragged tail in reference order.
+            for cc in c..n {
+                let vrow = &v.row(support[cc] as usize)[..w];
+                let yrow = yt.row(cc);
+                for (i, &yv) in yrow.iter().enumerate() {
+                    if yv == 0.0 {
+                        continue;
+                    }
+                    accum1(&mut out.row_mut(i)[..w], yv, vrow);
+                }
+            }
+        }
+
+        /// Shape A: `dst += Σ_p vals[p] · dense(cols[p],:)`. Same
+        /// skeleton as `blocked::sparse_row_axpy` (no zero skip: the
+        /// reference applies every stored entry).
+        pub fn sparse_row_axpy(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+            assert!($detect, "kernel backend requires {}", $feat);
+            // SAFETY: the assert above proves the ISA is present.
+            unsafe { sparse_row_axpy_tf(vals, cols, dense, dst) }
+        }
+
+        #[target_feature(enable = $feat)]
+        unsafe fn sparse_row_axpy_tf(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+            let w = dense.cols();
+            let dst = &mut dst[..w];
+            let n = vals.len();
+            let mut p = 0usize;
+            while p + ACC_BLOCK <= n {
+                let x = [vals[p], vals[p + 1], vals[p + 2], vals[p + 3]];
+                let d0 = &dense.row(cols[p] as usize)[..w];
+                let d1 = &dense.row(cols[p + 1] as usize)[..w];
+                let d2 = &dense.row(cols[p + 2] as usize)[..w];
+                let d3 = &dense.row(cols[p + 3] as usize)[..w];
+                accum4(dst, x, [d0, d1, d2, d3]);
+                p += ACC_BLOCK;
+            }
+            for pp in p..n {
+                accum1(dst, vals[pp], &dense.row(cols[pp] as usize)[..w]);
+            }
+        }
+
+        /// Shape B: `out = yrowᵀ · H` (overwrites `out`). Same skeleton
+        /// as `blocked::zt_row`.
+        pub fn zt_row(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+            assert!($detect, "kernel backend requires {}", $feat);
+            // SAFETY: the assert above proves the ISA is present.
+            unsafe { zt_row_tf(yrow, h, out) }
+        }
+
+        #[target_feature(enable = $feat)]
+        unsafe fn zt_row_tf(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+            let w = h.cols();
+            let out = &mut out[..w];
+            out.fill(0.0);
+            let n = yrow.len();
+            let mut i = 0usize;
+            while i + ACC_BLOCK <= n {
+                let y = [yrow[i], yrow[i + 1], yrow[i + 2], yrow[i + 3]];
+                let h0 = &h.row(i)[..w];
+                let h1 = &h.row(i + 1)[..w];
+                let h2 = &h.row(i + 2)[..w];
+                let h3 = &h.row(i + 3)[..w];
+                if y[0] != 0.0 && y[1] != 0.0 && y[2] != 0.0 && y[3] != 0.0 {
+                    accum4(out, y, [h0, h1, h2, h3]);
+                } else {
+                    for (k, &yv) in y.iter().enumerate() {
+                        if yv == 0.0 {
+                            continue;
+                        }
+                        accum1(out, yv, [h0, h1, h2, h3][k]);
+                    }
+                }
+                i += ACC_BLOCK;
+            }
+            for ii in i..n {
+                let yv = yrow[ii];
+                if yv == 0.0 {
+                    continue;
+                }
+                accum1(out, yv, &h.row(ii)[..w]);
+            }
+        }
+
+        /// Shape B: `c += AᵀB` (outer products over rows of `A`, 4 rows
+        /// in flight). Same skeleton as `blocked::atb_into`.
+        pub fn atb_into(a: &Mat, b: &Mat, c: &mut Mat) {
+            assert!($detect, "kernel backend requires {}", $feat);
+            // SAFETY: the assert above proves the ISA is present.
+            unsafe { atb_into_tf(a, b, c) }
+        }
+
+        #[target_feature(enable = $feat)]
+        unsafe fn atb_into_tf(a: &Mat, b: &Mat, c: &mut Mat) {
+            let (ka, m) = a.shape();
+            let mut k = 0usize;
+            while k + ACC_BLOCK <= ka {
+                let a0 = a.row(k);
+                let a1 = a.row(k + 1);
+                let a2 = a.row(k + 2);
+                let a3 = a.row(k + 3);
+                let brows = [b.row(k), b.row(k + 1), b.row(k + 2), b.row(k + 3)];
+                for i in 0..m {
+                    let x = [a0[i], a1[i], a2[i], a3[i]];
+                    let crow = c.row_mut(i);
+                    if x[0] != 0.0 && x[1] != 0.0 && x[2] != 0.0 && x[3] != 0.0 {
+                        accum4(crow, x, brows);
+                    } else {
+                        for (kk, &xv) in x.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            accum1(crow, xv, brows[kk]);
+                        }
+                    }
+                }
+                k += ACC_BLOCK;
+            }
+            for kk in k..ka {
+                let arow = a.row(kk);
+                let brow = b.row(kk);
+                for (i, &aki) in arow.iter().enumerate() {
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    accum1(c.row_mut(i), aki, brow);
+                }
+            }
+        }
+
+        /// Shape B: `g += AᵀA` upper triangle, then mirror. Same skeleton
+        /// as `blocked::gram_into`.
+        pub fn gram_into(a: &Mat, g: &mut Mat) {
+            assert!($detect, "kernel backend requires {}", $feat);
+            // SAFETY: the assert above proves the ISA is present.
+            unsafe { gram_into_tf(a, g) }
+        }
+
+        #[target_feature(enable = $feat)]
+        unsafe fn gram_into_tf(a: &Mat, g: &mut Mat) {
+            let (k, n) = a.shape();
+            let mut r = 0usize;
+            while r + ACC_BLOCK <= k {
+                let rows = [a.row(r), a.row(r + 1), a.row(r + 2), a.row(r + 3)];
+                for i in 0..n {
+                    let x = [rows[0][i], rows[1][i], rows[2][i], rows[3][i]];
+                    let grow = &mut g.row_mut(i)[i..];
+                    if x[0] != 0.0 && x[1] != 0.0 && x[2] != 0.0 && x[3] != 0.0 {
+                        accum4(
+                            grow,
+                            x,
+                            [&rows[0][i..], &rows[1][i..], &rows[2][i..], &rows[3][i..]],
+                        );
+                    } else {
+                        for (kk, &xv) in x.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            accum1(grow, xv, &rows[kk][i..]);
+                        }
+                    }
+                }
+                r += ACC_BLOCK;
+            }
+            for rr in r..k {
+                let row = a.row(rr);
+                for i in 0..n {
+                    let ai = row[i];
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    accum1(&mut g.row_mut(i)[i..], ai, &row[i..]);
+                }
+            }
+            super::mirror_upper(g);
+        }
+    };
+}
+
+/// x86-64 AVX2 backend: 4 × f64 lanes on the panel-width axis with
+/// **separate** multiply and add per accumulation term. Each lane owns
+/// one output element and replays the scalar chain in identical order,
+/// so this backend is in the **bitwise** family (FMA is deliberately not
+/// used — fusing would change the rounding and eject it from the family).
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use super::{Mat, ACC_BLOCK};
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 4;
+
+    simd_panel_kernels!("avx2", is_x86_feature_detected!("avx2"));
+
+    /// `dst[j] = dst[j] + y0·r0[j] + y1·r1[j] + y2·r2[j] + y3·r3[j]`,
+    /// left to right with unfused mul+add — the scalar chain per lane.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn accum4(dst: &mut [f64], y: [f64; 4], rows: [&[f64]; 4]) {
+        let w = dst.len();
+        debug_assert!(rows.iter().all(|r| r.len() >= w));
+        let (y0, y1, y2, y3) = (
+            _mm256_set1_pd(y[0]),
+            _mm256_set1_pd(y[1]),
+            _mm256_set1_pd(y[2]),
+            _mm256_set1_pd(y[3]),
+        );
+        let (r0, r1, r2, r3) = (
+            rows[0].as_ptr(),
+            rows[1].as_ptr(),
+            rows[2].as_ptr(),
+            rows[3].as_ptr(),
+        );
+        let d = dst.as_mut_ptr();
+        let mut j = 0usize;
+        while j + LANES <= w {
+            let mut acc = _mm256_loadu_pd(d.add(j));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(y0, _mm256_loadu_pd(r0.add(j))));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(y1, _mm256_loadu_pd(r1.add(j))));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(y2, _mm256_loadu_pd(r2.add(j))));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(y3, _mm256_loadu_pd(r3.add(j))));
+            _mm256_storeu_pd(d.add(j), acc);
+            j += LANES;
+        }
+        while j < w {
+            dst[j] = dst[j] + y[0] * rows[0][j] + y[1] * rows[1][j] + y[2] * rows[2][j]
+                + y[3] * rows[3][j];
+            j += 1;
+        }
+    }
+
+    /// `dst[j] += y·src[j]` — one unfused mul+add per element.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn accum1(dst: &mut [f64], y: f64, src: &[f64]) {
+        let w = dst.len();
+        debug_assert!(src.len() >= w);
+        let yv = _mm256_set1_pd(y);
+        let s = src.as_ptr();
+        let d = dst.as_mut_ptr();
+        let mut j = 0usize;
+        while j + LANES <= w {
+            let acc = _mm256_add_pd(
+                _mm256_loadu_pd(d.add(j)),
+                _mm256_mul_pd(yv, _mm256_loadu_pd(s.add(j))),
+            );
+            _mm256_storeu_pd(d.add(j), acc);
+            j += LANES;
+        }
+        while j < w {
+            dst[j] += y * src[j];
+            j += 1;
+        }
+    }
+}
+
+/// x86-64 AVX-512F backend: 8 × f64 lanes with **fused** multiply-add
+/// (one rounding per term instead of two). **Reordered family**: results
+/// are ULP-bounded against the reference, not bitwise — opt-in only,
+/// never auto-selected, and rejected in mixed-backend shard topologies.
+/// The skeleton (zero-skip branches, term order, tails) is still shared,
+/// so NaN placement and zero-skip semantics match the reference exactly.
+#[cfg(target_arch = "x86_64")]
+pub mod avx512 {
+    use super::{Mat, ACC_BLOCK};
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 8;
+
+    simd_panel_kernels!("avx512f", is_x86_feature_detected!("avx512f"));
+
+    /// `dst[j] = fma(y3, r3[j], fma(y2, r2[j], fma(y1, r1[j],
+    /// fma(y0, r0[j], dst[j]))))` — fused per term (reordered family).
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn accum4(dst: &mut [f64], y: [f64; 4], rows: [&[f64]; 4]) {
+        let w = dst.len();
+        debug_assert!(rows.iter().all(|r| r.len() >= w));
+        let (y0, y1, y2, y3) = (
+            _mm512_set1_pd(y[0]),
+            _mm512_set1_pd(y[1]),
+            _mm512_set1_pd(y[2]),
+            _mm512_set1_pd(y[3]),
+        );
+        let (r0, r1, r2, r3) = (
+            rows[0].as_ptr(),
+            rows[1].as_ptr(),
+            rows[2].as_ptr(),
+            rows[3].as_ptr(),
+        );
+        let d = dst.as_mut_ptr();
+        let mut j = 0usize;
+        while j + LANES <= w {
+            let mut acc = _mm512_loadu_pd(d.add(j));
+            acc = _mm512_fmadd_pd(y0, _mm512_loadu_pd(r0.add(j)), acc);
+            acc = _mm512_fmadd_pd(y1, _mm512_loadu_pd(r1.add(j)), acc);
+            acc = _mm512_fmadd_pd(y2, _mm512_loadu_pd(r2.add(j)), acc);
+            acc = _mm512_fmadd_pd(y3, _mm512_loadu_pd(r3.add(j)), acc);
+            _mm512_storeu_pd(d.add(j), acc);
+            j += LANES;
+        }
+        while j < w {
+            dst[j] = y[3].mul_add(
+                rows[3][j],
+                y[2].mul_add(rows[2][j], y[1].mul_add(rows[1][j], y[0].mul_add(rows[0][j], dst[j]))),
+            );
+            j += 1;
+        }
+    }
+
+    /// `dst[j] = fma(y, src[j], dst[j])` — fused (reordered family).
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn accum1(dst: &mut [f64], y: f64, src: &[f64]) {
+        let w = dst.len();
+        debug_assert!(src.len() >= w);
+        let yv = _mm512_set1_pd(y);
+        let s = src.as_ptr();
+        let d = dst.as_mut_ptr();
+        let mut j = 0usize;
+        while j + LANES <= w {
+            let acc = _mm512_fmadd_pd(yv, _mm512_loadu_pd(s.add(j)), _mm512_loadu_pd(d.add(j)));
+            _mm512_storeu_pd(d.add(j), acc);
+            j += LANES;
+        }
+        while j < w {
+            dst[j] = y.mul_add(src[j], dst[j]);
+            j += 1;
+        }
+    }
+}
+
+/// AArch64 NEON backend: 2 × f64 lanes on the panel-width axis with
+/// **separate** multiply and add per term (`vfmaq_f64` is deliberately
+/// not used). Bitwise family, same reasoning as `avx2`.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use super::{Mat, ACC_BLOCK};
+    use core::arch::aarch64::*;
+
+    const LANES: usize = 2;
+
+    simd_panel_kernels!("neon", std::arch::is_aarch64_feature_detected!("neon"));
+
+    /// `dst[j] = dst[j] + y0·r0[j] + … + y3·r3[j]`, unfused, in order.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn accum4(dst: &mut [f64], y: [f64; 4], rows: [&[f64]; 4]) {
+        let w = dst.len();
+        debug_assert!(rows.iter().all(|r| r.len() >= w));
+        let (y0, y1, y2, y3) = (
+            vdupq_n_f64(y[0]),
+            vdupq_n_f64(y[1]),
+            vdupq_n_f64(y[2]),
+            vdupq_n_f64(y[3]),
+        );
+        let (r0, r1, r2, r3) = (
+            rows[0].as_ptr(),
+            rows[1].as_ptr(),
+            rows[2].as_ptr(),
+            rows[3].as_ptr(),
+        );
+        let d = dst.as_mut_ptr();
+        let mut j = 0usize;
+        while j + LANES <= w {
+            let mut acc = vld1q_f64(d.add(j));
+            acc = vaddq_f64(acc, vmulq_f64(y0, vld1q_f64(r0.add(j))));
+            acc = vaddq_f64(acc, vmulq_f64(y1, vld1q_f64(r1.add(j))));
+            acc = vaddq_f64(acc, vmulq_f64(y2, vld1q_f64(r2.add(j))));
+            acc = vaddq_f64(acc, vmulq_f64(y3, vld1q_f64(r3.add(j))));
+            vst1q_f64(d.add(j), acc);
+            j += LANES;
+        }
+        while j < w {
+            dst[j] = dst[j] + y[0] * rows[0][j] + y[1] * rows[1][j] + y[2] * rows[2][j]
+                + y[3] * rows[3][j];
+            j += 1;
+        }
+    }
+
+    /// `dst[j] += y·src[j]` — one unfused mul+add per element.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn accum1(dst: &mut [f64], y: f64, src: &[f64]) {
+        let w = dst.len();
+        debug_assert!(src.len() >= w);
+        let yv = vdupq_n_f64(y);
+        let s = src.as_ptr();
+        let d = dst.as_mut_ptr();
+        let mut j = 0usize;
+        while j + LANES <= w {
+            let acc = vaddq_f64(vld1q_f64(d.add(j)), vmulq_f64(yv, vld1q_f64(s.add(j))));
+            vst1q_f64(d.add(j), acc);
+            j += LANES;
+        }
+        while j < w {
+            dst[j] += y * src[j];
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+fn unsupported_arch(b: KernelBackend) -> ! {
+    panic!(
+        "kernel backend '{}' is not compiled for this architecture",
+        b.name()
+    )
+}
+
+/// `out += Y_k · V_c` where `Y_k` is held as its packed transpose `yt`
+/// (`c_k × R`) and `V_c` is the support-row gather of `v`, via the
+/// process-selected backend. Bitwise identical to
+/// [`reference::spmm_yt_v`] for every input under any backend in the
+/// bitwise family.
+pub fn spmm_yt_v(yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+    spmm_yt_v_with(active_backend(), yt, support, v, out);
+}
+
+/// [`spmm_yt_v`] through an explicit backend (conformance sweeps and
+/// per-ISA bench cells; production code uses the process-selected form).
+pub fn spmm_yt_v_with(backend: KernelBackend, yt: &Mat, support: &[u32], v: &Mat, out: &mut Mat) {
+    debug_assert_eq!(yt.rows(), support.len(), "support/yt row mismatch");
+    debug_assert_eq!(out.shape(), (yt.cols(), v.cols()), "spmm output shape");
+    match backend {
+        KernelBackend::Scalar => reference::spmm_yt_v(yt, support, v, out),
+        KernelBackend::Blocked => blocked::spmm_yt_v(yt, support, v, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => avx2::spmm_yt_v(yt, support, v, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => avx512::spmm_yt_v(yt, support, v, out),
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => neon::spmm_yt_v(yt, support, v, out),
+        other => unsupported_arch(other),
     }
 }
 
 /// `dst += Σ_p vals[p] · dense(cols[p],:)` — one CSR row against a dense
-/// panel. Bitwise identical to [`reference::sparse_row_axpy`].
+/// panel, via the process-selected backend. Bitwise identical to
+/// [`reference::sparse_row_axpy`] under any bitwise-family backend.
 pub fn sparse_row_axpy(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
+    sparse_row_axpy_with(active_backend(), vals, cols, dense, dst);
+}
+
+/// [`sparse_row_axpy`] through an explicit backend.
+pub fn sparse_row_axpy_with(
+    backend: KernelBackend,
+    vals: &[f64],
+    cols: &[u32],
+    dense: &Mat,
+    dst: &mut [f64],
+) {
     debug_assert_eq!(vals.len(), cols.len(), "vals/cols length mismatch");
     debug_assert_eq!(dst.len(), dense.cols(), "dst width mismatch");
-    dispatch_width!(dense.cols(), sparse_row_mono, sparse_row_body, (vals, cols, dense, dst));
-}
-
-#[inline(always)]
-fn sparse_row_mono<const W: usize>(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64]) {
-    sparse_row_body(vals, cols, dense, dst, W);
-}
-
-#[inline(always)]
-fn sparse_row_body(vals: &[f64], cols: &[u32], dense: &Mat, dst: &mut [f64], w: usize) {
-    let dst = &mut dst[..w];
-    let n = vals.len();
-    let mut p = 0usize;
-    while p + ACC_BLOCK <= n {
-        let (x0, x1, x2, x3) = (vals[p], vals[p + 1], vals[p + 2], vals[p + 3]);
-        let d0 = &dense.row(cols[p] as usize)[..w];
-        let d1 = &dense.row(cols[p + 1] as usize)[..w];
-        let d2 = &dense.row(cols[p + 2] as usize)[..w];
-        let d3 = &dense.row(cols[p + 3] as usize)[..w];
-        // No zero skip here — the reference applies every stored entry —
-        // so the fast path is unconditional.
-        for (j, o) in dst.iter_mut().enumerate() {
-            *o = *o + x0 * d0[j] + x1 * d1[j] + x2 * d2[j] + x3 * d3[j];
-        }
-        p += ACC_BLOCK;
-    }
-    for pp in p..n {
-        let x = vals[pp];
-        let drow = &dense.row(cols[pp] as usize)[..w];
-        for (o, &d) in dst.iter_mut().zip(drow) {
-            *o += x * d;
-        }
+    match backend {
+        KernelBackend::Scalar => reference::sparse_row_axpy(vals, cols, dense, dst),
+        KernelBackend::Blocked => blocked::sparse_row_axpy(vals, cols, dense, dst),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => avx2::sparse_row_axpy(vals, cols, dense, dst),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => avx512::sparse_row_axpy(vals, cols, dense, dst),
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => neon::sparse_row_axpy(vals, cols, dense, dst),
+        other => unsupported_arch(other),
     }
 }
-
-// ---------------------------------------------------------------------------
-// Shape B: dense-transpose × dense panel
-// ---------------------------------------------------------------------------
 
 /// `out = yrowᵀ · H` (overwrites `out`): one packed row of `Y_kᵀ` against
 /// the `R×R` factor — the `Z_k = Y_kᵀ H` row kernel of the mode-2/mode-3
-/// sweeps. Bitwise identical to [`reference::zt_row`].
+/// sweeps, via the process-selected backend. Bitwise identical to
+/// [`reference::zt_row`] under any bitwise-family backend.
 pub fn zt_row(yrow: &[f64], h: &Mat, out: &mut [f64]) {
+    zt_row_with(active_backend(), yrow, h, out);
+}
+
+/// [`zt_row`] through an explicit backend.
+pub fn zt_row_with(backend: KernelBackend, yrow: &[f64], h: &Mat, out: &mut [f64]) {
     debug_assert_eq!(yrow.len(), h.rows(), "yrow/H row mismatch");
     debug_assert_eq!(out.len(), h.cols(), "out width mismatch");
-    dispatch_width!(h.cols(), zt_row_mono, zt_row_body, (yrow, h, out));
-}
-
-#[inline(always)]
-fn zt_row_mono<const W: usize>(yrow: &[f64], h: &Mat, out: &mut [f64]) {
-    zt_row_body(yrow, h, out, W);
-}
-
-#[inline(always)]
-fn zt_row_body(yrow: &[f64], h: &Mat, out: &mut [f64], w: usize) {
-    let out = &mut out[..w];
-    out.fill(0.0);
-    let n = yrow.len();
-    let mut i = 0usize;
-    while i + ACC_BLOCK <= n {
-        let (y0, y1, y2, y3) = (yrow[i], yrow[i + 1], yrow[i + 2], yrow[i + 3]);
-        let h0 = &h.row(i)[..w];
-        let h1 = &h.row(i + 1)[..w];
-        let h2 = &h.row(i + 2)[..w];
-        let h3 = &h.row(i + 3)[..w];
-        if y0 != 0.0 && y1 != 0.0 && y2 != 0.0 && y3 != 0.0 {
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = *o + y0 * h0[j] + y1 * h1[j] + y2 * h2[j] + y3 * h3[j];
-            }
-        } else {
-            for (y, hr) in [(y0, h0), (y1, h1), (y2, h2), (y3, h3)] {
-                if y == 0.0 {
-                    continue;
-                }
-                for (o, &hv) in out.iter_mut().zip(hr) {
-                    *o += y * hv;
-                }
-            }
-        }
-        i += ACC_BLOCK;
-    }
-    for ii in i..n {
-        let yv = yrow[ii];
-        if yv == 0.0 {
-            continue;
-        }
-        let hrow = &h.row(ii)[..w];
-        for (o, &hv) in out.iter_mut().zip(hrow) {
-            *o += yv * hv;
-        }
+    match backend {
+        KernelBackend::Scalar => reference::zt_row(yrow, h, out),
+        KernelBackend::Blocked => blocked::zt_row(yrow, h, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => avx2::zt_row(yrow, h, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => avx512::zt_row(yrow, h, out),
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => neon::zt_row(yrow, h, out),
+        other => unsupported_arch(other),
     }
 }
 
-/// `c += AᵀB` without materializing `Aᵀ` (outer products over rows of
-/// `A`, 4 rows in flight). Bitwise identical to [`reference::atb`].
+/// `c += AᵀB` without materializing `Aᵀ`, via the process-selected
+/// backend. Bitwise identical to [`reference::atb`] under any
+/// bitwise-family backend.
 pub fn atb_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    atb_into_with(active_backend(), a, b, c);
+}
+
+/// [`atb_into`] through an explicit backend.
+pub fn atb_into_with(backend: KernelBackend, a: &Mat, b: &Mat, c: &mut Mat) {
     let (ka, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "atb inner-dim mismatch");
     assert_eq!(c.shape(), (m, n), "atb output shape mismatch");
-    let mut k = 0usize;
-    while k + ACC_BLOCK <= ka {
-        let a0 = a.row(k);
-        let a1 = a.row(k + 1);
-        let a2 = a.row(k + 2);
-        let a3 = a.row(k + 3);
-        let b0 = b.row(k);
-        let b1 = b.row(k + 1);
-        let b2 = b.row(k + 2);
-        let b3 = b.row(k + 3);
-        for i in 0..m {
-            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
-            let crow = c.row_mut(i);
-            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
-                for (j, cv) in crow.iter_mut().enumerate() {
-                    *cv = *cv + x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
-                }
-            } else {
-                for (x, br) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
-                    if x == 0.0 {
-                        continue;
-                    }
-                    for (cv, &bv) in crow.iter_mut().zip(br) {
-                        *cv += x * bv;
-                    }
-                }
-            }
-        }
-        k += ACC_BLOCK;
-    }
-    for kk in k..ka {
-        let arow = a.row(kk);
-        let brow = b.row(kk);
-        for (i, &aki) in arow.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aki * bv;
-            }
-        }
+    match backend {
+        KernelBackend::Scalar => reference::atb(a, b, c),
+        KernelBackend::Blocked => blocked::atb_into(a, b, c),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => avx2::atb_into(a, b, c),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => avx512::atb_into(a, b, c),
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => neon::atb_into(a, b, c),
+        other => unsupported_arch(other),
     }
 }
 
-/// `g += AᵀA`: upper triangle with 4 rows of `A` in flight, then mirror.
-/// Bitwise identical to [`reference::gram`].
+/// `g += AᵀA`: upper triangle then mirror, via the process-selected
+/// backend. Bitwise identical to [`reference::gram`] under any
+/// bitwise-family backend.
 pub fn gram_into(a: &Mat, g: &mut Mat) {
-    let (k, n) = a.shape();
+    gram_into_with(active_backend(), a, g);
+}
+
+/// [`gram_into`] through an explicit backend.
+pub fn gram_into_with(backend: KernelBackend, a: &Mat, g: &mut Mat) {
+    let (_, n) = a.shape();
     assert_eq!(g.shape(), (n, n), "gram output shape mismatch");
-    let mut r = 0usize;
-    while r + ACC_BLOCK <= k {
-        let r0 = a.row(r);
-        let r1 = a.row(r + 1);
-        let r2 = a.row(r + 2);
-        let r3 = a.row(r + 3);
-        for i in 0..n {
-            let (x0, x1, x2, x3) = (r0[i], r1[i], r2[i], r3[i]);
-            let grow = &mut g.row_mut(i)[i..];
-            let (t0, t1, t2, t3) = (&r0[i..], &r1[i..], &r2[i..], &r3[i..]);
-            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
-                for (j, gv) in grow.iter_mut().enumerate() {
-                    *gv = *gv + x0 * t0[j] + x1 * t1[j] + x2 * t2[j] + x3 * t3[j];
-                }
-            } else {
-                for (x, tr) in [(x0, t0), (x1, t1), (x2, t2), (x3, t3)] {
-                    if x == 0.0 {
-                        continue;
-                    }
-                    for (gv, &tv) in grow.iter_mut().zip(tr) {
-                        *gv += x * tv;
-                    }
-                }
-            }
-        }
-        r += ACC_BLOCK;
+    match backend {
+        KernelBackend::Scalar => reference::gram(a, g),
+        KernelBackend::Blocked => blocked::gram_into(a, g),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => avx2::gram_into(a, g),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx512 => avx512::gram_into(a, g),
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => neon::gram_into(a, g),
+        other => unsupported_arch(other),
     }
-    for rr in r..k {
-        let row = a.row(rr);
-        for i in 0..n {
-            let ai = row[i];
-            if ai == 0.0 {
-                continue;
-            }
-            let grow = g.row_mut(i);
-            for j in i..n {
-                grow[j] += ai * row[j];
-            }
-        }
-    }
-    mirror_upper(g);
 }
 
 // ---------------------------------------------------------------------------
@@ -497,7 +1311,8 @@ pub fn gram_into(a: &Mat, g: &mut Mat) {
 /// Dot product with 4 independent accumulators (breaks the dependency
 /// chain so several FMAs stay in flight). **Reordered** relative to
 /// [`reference::dot_seq`]: ULP-bounded, not bitwise — see the module
-/// docs' determinism contract.
+/// docs' determinism contract. Not backend-dispatched: its schedule is
+/// already portable and identical on every host.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
@@ -542,12 +1357,17 @@ mod tests {
         Mat::from_fn(c, r, |_, _| if rng.chance(0.2) { 0.0 } else { rng.normal() })
     }
 
-    /// One fast unit-level guard per kernel. The *exhaustive* differential
-    /// sweeps (R ∈ {1..=16, 17, 32}, ragged/empty operands, zero /
-    /// denormal / NaN regimes) live in `rust/tests/kernel_conformance.rs`
-    /// — this smoke test only keeps `cargo test --lib` self-contained.
+    /// One fast unit-level guard per kernel, run through the
+    /// process-selected backend (whatever auto-detection picked on this
+    /// host — any bitwise-family member must pass these assertions
+    /// unchanged). The *exhaustive* per-backend differential sweeps
+    /// (every detected ISA × R ∈ {1..=16, 17, 32} × ragged/empty
+    /// operands × zero / denormal / NaN regimes) live in
+    /// `rust/tests/kernel_conformance.rs` — this smoke test only keeps
+    /// `cargo test --lib` self-contained.
     #[test]
-    fn blocked_kernels_smoke_bitwise() {
+    fn selected_backend_smoke_bitwise() {
+        assert!(active_backend().is_bitwise(), "auto-selection must stay bitwise");
         let mut rng = Pcg64::seed(601);
         let (r, c) = (7usize, 9usize); // block + ragged tail, unrolled width
         let j = c + 5;
@@ -593,6 +1413,69 @@ mod tests {
         reference::sparse_row_axpy(&vals, &cols, &dense, &mut s_ref);
         for (x, y) in s_blocked.iter().zip(&s_ref) {
             assert_eq!(x.to_bits(), y.to_bits(), "sparse_row_axpy");
+        }
+    }
+
+    /// Every *bitwise* backend the host supports agrees bit-for-bit with
+    /// the reference on a block+tail shape (the deep grid lives in the
+    /// conformance suite; this keeps `--lib` covering each ISA at all).
+    #[test]
+    fn detected_bitwise_backends_smoke_bitwise() {
+        let mut rng = Pcg64::seed(602);
+        let (r, c) = (6usize, 11usize);
+        let j = c + 3;
+        let support = random_support(&mut rng, c, j);
+        let yt = random_yt(&mut rng, c, r);
+        let v = Mat::rand_normal(j, r, &mut rng);
+        let mut want = Mat::zeros(r, r);
+        reference::spmm_yt_v(&yt, &support, &v, &mut want);
+        for backend in KernelBackend::detected() {
+            if !backend.is_bitwise() {
+                continue;
+            }
+            let mut got = Mat::zeros(r, r);
+            spmm_yt_v_with(backend, &yt, &support, &v, &mut got);
+            assert!(bits_eq(&got, &want), "spmm via {}", backend.name());
+        }
+    }
+
+    #[test]
+    fn backend_names_parse_roundtrip() {
+        for b in KernelBackend::ALL {
+            assert_eq!(KernelBackend::parse(b.name()), Ok(b));
+        }
+        assert!(KernelBackend::parse("sse9").is_err());
+        assert!(KernelBackend::parse("").is_err());
+    }
+
+    #[test]
+    fn scalar_and_blocked_always_supported_and_auto_is_bitwise() {
+        assert!(KernelBackend::Scalar.is_supported());
+        assert!(KernelBackend::Blocked.is_supported());
+        let auto = KernelBackend::auto();
+        assert!(auto.is_bitwise(), "auto-selection may never pick a reordered backend");
+        assert!(auto.is_supported());
+        assert!(KernelBackend::detected().contains(&auto));
+        // The reordered family is exactly avx512 (+ the free-standing dot).
+        for b in KernelBackend::ALL {
+            assert_eq!(b.is_bitwise(), b != KernelBackend::Avx512);
+        }
+    }
+
+    #[test]
+    fn set_backend_roundtrips_and_rejects_unsupported() {
+        let prior = active_backend();
+        set_backend(KernelBackend::Scalar).unwrap();
+        assert_eq!(active_backend(), KernelBackend::Scalar);
+        // Restore so parallel lib tests keep their (bitwise) selection.
+        set_backend(prior).unwrap();
+        assert_eq!(active_backend(), prior);
+        for b in KernelBackend::ALL {
+            if !b.is_supported() {
+                let err = set_backend(b).unwrap_err();
+                assert!(err.contains(b.name()), "error names the backend: {err}");
+                assert_eq!(active_backend(), prior, "failed set must not change selection");
+            }
         }
     }
 

@@ -18,6 +18,7 @@ use spartan::cli::Args;
 use spartan::config::{schema::Engine, RunConfig};
 use spartan::coordinator::{PjrtDriver, PjrtFitConfig};
 use spartan::datagen::{ehr, movielens, synthetic, vocab::Feature};
+use spartan::linalg::kernels::{self, KernelBackend};
 use spartan::parafac2::{fit_parafac2, FitError, Parafac2Model};
 use spartan::runtime::{ArtifactRegistry, PjrtContext};
 use spartan::sparse::{io as tio, IrregularTensor};
@@ -82,6 +83,7 @@ USAGE: spartan <subcommand> [options]
            [--max-iters N] [--tol T] [--nonneg] [--unconstrained]
            [--workers N] [--seed S] [--restarts N] [--mem-budget 4GiB]
            [--artifacts DIR] [--save-model DIR]
+           [--kernel scalar|blocked|avx2|avx512|neon]
            [--shards host:port,host:port,...]
            (--shards runs the fit as a coordinator over `shard-worker`
             processes — bitwise identical to the local fit; FILE must be
@@ -103,12 +105,12 @@ USAGE: spartan <subcommand> [options]
             CI's bench-trend job)
 
   serve    [--addr 127.0.0.1:7473] [--workers N] [--mem-budget 4GiB]
-           [--max-pending N] [--warm-cache N]
+           [--max-pending N] [--warm-cache N] [--kernel BACKEND]
            (resident fit daemon: many concurrent fits on one shared pool,
             membudget admission control, warm-started cohort re-fits;
             newline-delimited JSON over TCP)
 
-  shard-worker [--addr 127.0.0.1:0] [--workers N]
+  shard-worker [--addr 127.0.0.1:0] [--workers N] [--kernel BACKEND]
            (own one contiguous subject range of a sharded fit; announces
             its resolved address on stdout, serves coordinators until
             shut down — protocol in docs/PROTOCOL.md)
@@ -127,10 +129,29 @@ USAGE: spartan <subcommand> [options]
   result   --id N [--addr A] [--save-model DIR]
   serve-stop [--addr A]            (ask the daemon to shut down)
 
+Kernels: --kernel (or SPARTAN_KERNEL) pins the linear-algebra backend for
+the process: scalar|blocked|avx2|avx512|neon. Unset → best detected
+*bitwise* backend (avx2 → neon → blocked). scalar/blocked/avx2/neon
+reproduce each other's fit trajectories bit-for-bit; avx512 uses fused
+multiply-add and is opt-in only (never auto-selected). Sharded fits
+require coordinator and every worker to run the same backend.
+
 Environment: SPARTAN_LOG=debug|info|warn|error
+             SPARTAN_KERNEL=scalar|blocked|avx2|avx512|neon
 "#;
 
 // ---------------------------------------------------------------------------
+
+/// Apply `--kernel BACKEND` (if present) before any kernel runs. The
+/// CLI flag outranks `SPARTAN_KERNEL`; an unsupported backend is a
+/// startup error, not a silent fallback.
+fn apply_kernel_flag(args: &Args) -> Result<()> {
+    if let Some(name) = args.get("kernel") {
+        let backend = KernelBackend::parse(name).map_err(|e| anyhow!("bad --kernel: {e}"))?;
+        kernels::set_backend(backend).map_err(|e| anyhow!("bad --kernel: {e}"))?;
+    }
+    Ok(())
+}
 
 fn cmd_generate(args: &Args) -> Result<()> {
     args.reject_unknown(&[
@@ -195,8 +216,10 @@ fn cmd_decompose(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "input", "rank", "engine", "config", "max-iters", "tol", "nonneg", "unconstrained",
         "workers", "seed", "restarts", "mem-budget", "artifacts", "save-model", "shards",
+        "kernel",
     ])
     .map_err(|e| anyhow!(e))?;
+    apply_kernel_flag(args)?;
     let input = PathBuf::from(args.get("input").context("--input required")?);
     let data = load_data(&input)?;
     let mut cfg = match args.get("config") {
@@ -327,8 +350,9 @@ fn cmd_decompose(args: &Args) -> Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
-    args.reject_unknown(&["input", "rank", "max-iters", "workers", "seed", "artifacts"])
+    args.reject_unknown(&["input", "rank", "max-iters", "workers", "seed", "artifacts", "kernel"])
         .map_err(|e| anyhow!(e))?;
+    apply_kernel_flag(args)?;
     let input = PathBuf::from(args.get("input").context("--input required")?);
     let data = load_data(&input)?;
     let rank = args.get_usize("rank").map_err(|e| anyhow!(e))?.unwrap_or(10);
@@ -512,8 +536,9 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use spartan::service::server::ServeConfig;
-    args.reject_unknown(&["addr", "workers", "mem-budget", "max-pending", "warm-cache"])
+    args.reject_unknown(&["addr", "workers", "mem-budget", "max-pending", "warm-cache", "kernel"])
         .map_err(|e| anyhow!(e))?;
+    apply_kernel_flag(args)?;
     let mut cfg = ServeConfig::default();
     if let Some(a) = args.get("addr") {
         cfg.addr = a.to_string();
@@ -534,7 +559,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_shard_worker(args: &Args) -> Result<()> {
-    args.reject_unknown(&["addr", "workers"]).map_err(|e| anyhow!(e))?;
+    args.reject_unknown(&["addr", "workers", "kernel"]).map_err(|e| anyhow!(e))?;
+    apply_kernel_flag(args)?;
     let addr = args.get_or("addr", "127.0.0.1:0");
     let workers = args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(0);
     spartan::service::shard::run_worker(addr, workers).map_err(|e| anyhow!("{e}"))
@@ -765,8 +791,13 @@ fn read_vocab_csv(path: &Path) -> Result<Vec<Feature>> {
 
 fn print_fit_summary(model: &Parafac2Model) {
     let s = &model.stats;
+    let backend = if s.kernel_backend.is_empty() {
+        String::new()
+    } else {
+        format!(" [kernel {}]", s.kernel_backend)
+    };
     println!(
-        "fit: {:.4} (SSE {:.4e}) after {} iterations — {:.2}s total ({:.2}s/iter; procrustes {:.2}s, cp {:.2}s)",
+        "fit: {:.4} (SSE {:.4e}) after {} iterations — {:.2}s total ({:.2}s/iter; procrustes {:.2}s, cp {:.2}s){backend}",
         s.final_fit, s.final_sse, s.iterations, s.total_secs, s.secs_per_iter, s.procrustes_secs, s.cp_secs
     );
 }

@@ -542,6 +542,7 @@ impl<'d> FitSession<'d> {
         stats.iterations = self.iters_done;
         stats.final_sse = final_sse;
         stats.final_fit = fit_from_sse(final_sse, self.x_norm);
+        stats.kernel_backend = crate::linalg::kernels::active_backend().name().to_string();
         stats.total_secs = self.total_sw.elapsed_secs();
         stats.secs_per_iter = if self.iters_done > 0 {
             (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64

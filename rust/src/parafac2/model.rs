@@ -58,6 +58,12 @@ pub struct FitStats {
     /// halved X memory traffic, so benches publish it next to the
     /// counters.
     pub heap_bytes: u64,
+    /// The kernel backend the fit ran on (`linalg::kernels::
+    /// KernelBackend::name()`: `scalar`/`blocked`/`avx2`/`avx512`/`neon`)
+    /// — records which lane family produced the trajectory, so a result
+    /// from the reordered `avx512` family can never be mistaken for a
+    /// bitwise one. Empty on models that predate backend recording.
+    pub kernel_backend: String,
 }
 
 impl Parafac2Model {

@@ -49,7 +49,14 @@ pub const DEFAULT_ADDR: &str = "127.0.0.1:7473";
 /// bitwise contract instead of failing loudly. Bump on any change to a
 /// shard payload schema or to the documented merge/fold order
 /// (`docs/PROTOCOL.md` keeps the version history).
-pub const PROTOCOL_VERSION: u64 = 1;
+///
+/// Version 2 added the mandatory `kernel_backend` field to the shard
+/// `hello` exchange: coordinator and worker each name their selected
+/// kernel backend and the connection is refused on mismatch, so a
+/// mixed-ISA topology (e.g. an `avx512` worker under an `avx2`
+/// coordinator) fails loudly instead of silently merging trajectories
+/// from different lane families.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 // ---------------------------------------------------------------------------
 // f64 bit-exact transport (golden-fixture idiom)
@@ -186,6 +193,7 @@ pub fn model_to_json(m: &Parafac2Model) -> Json {
                 ("traversals", Json::num(s.traversals as f64)),
                 ("x_traversals", Json::num(s.x_traversals as f64)),
                 ("heap_bytes", Json::num(s.heap_bytes as f64)),
+                ("kernel_backend", Json::str(s.kernel_backend.clone())),
             ]),
         ),
     ])
@@ -221,6 +229,11 @@ pub fn model_from_json(j: &Json) -> Result<Parafac2Model, String> {
         traversals: num("traversals") as u64,
         x_traversals: num("x_traversals") as u64,
         heap_bytes: num("heap_bytes") as u64,
+        kernel_backend: sj
+            .get("kernel_backend")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
     };
     Ok(Parafac2Model { rank, h, v, w, q, stats })
 }
@@ -387,6 +400,8 @@ mod tests {
         assert_eq!(back.stats.final_sse.to_bits(), model.stats.final_sse.to_bits());
         assert_eq!(back.stats.final_fit.to_bits(), model.stats.final_fit.to_bits());
         assert_eq!(back.stats.iterations, model.stats.iterations);
+        assert!(!model.stats.kernel_backend.is_empty(), "fit must record its backend");
+        assert_eq!(back.stats.kernel_backend, model.stats.kernel_backend);
     }
 
     #[test]

@@ -46,7 +46,7 @@
 //! entry and post-sweep), so a cancel reaches every shard within one
 //! iteration — workers are request-driven and simply stop being asked.
 
-use crate::linalg::{blas, solve, Mat};
+use crate::linalg::{blas, kernels, solve, Mat};
 use crate::parafac2::als::{fit_from_sse, sse_converged, sse_from_parts};
 use crate::parafac2::cp_als::{normalize_cols_safe, residual_stats, solve_mode, CpFactors};
 use crate::parafac2::init::initialize;
@@ -222,14 +222,31 @@ fn dispatch_worker(state: &mut Option<WorkerFit>, workers: usize, line: &str) ->
 fn handle_hello(req: &Json) -> Result<Json, ServiceError> {
     let theirs = req.get("version").and_then(Json::as_f64).map(|x| x as u64);
     match theirs {
-        Some(v) if v == PROTOCOL_VERSION => Ok(ok_response(vec![
+        Some(v) if v == PROTOCOL_VERSION => {}
+        Some(v) => {
+            return Err(ServiceError::Invalid(format!(
+                "protocol version mismatch: coordinator speaks {v}, worker speaks {PROTOCOL_VERSION}"
+            )))
+        }
+        None => return Err(ServiceError::Protocol("hello requires `version`".into())),
+    }
+    // Same-version peers must also be in the same kernel lane family — a
+    // worker running a different backend than the coordinator (e.g. the
+    // reordered `avx512` under a bitwise coordinator, or mixed ISAs on
+    // heterogeneous hosts) would merge partials from a different FP
+    // trajectory. Reject loudly instead of silently diverging.
+    let ours = kernels::active_backend().name();
+    match req.get("kernel_backend").and_then(Json::as_str) {
+        Some(k) if k == ours => Ok(ok_response(vec![
             ("service", Json::str("spartan-shard")),
             ("version", Json::num(PROTOCOL_VERSION as f64)),
+            ("kernel_backend", Json::str(ours)),
         ])),
-        Some(v) => Err(ServiceError::Invalid(format!(
-            "protocol version mismatch: coordinator speaks {v}, worker speaks {PROTOCOL_VERSION}"
+        Some(k) => Err(ServiceError::Invalid(format!(
+            "kernel backend mismatch: coordinator runs `{k}`, worker runs `{ours}` \
+             (force a common backend with --kernel/SPARTAN_KERNEL)"
         ))),
-        None => Err(ServiceError::Protocol("hello requires `version`".into())),
+        None => Err(ServiceError::Protocol("hello requires `kernel_backend`".into())),
     }
 }
 
@@ -873,6 +890,9 @@ impl ShardedFitSession {
         stats.iterations = self.iters_done;
         stats.final_sse = final_sse;
         stats.final_fit = fit_from_sse(final_sse, self.x_norm);
+        // The handshake pinned every worker to the coordinator's backend,
+        // so the coordinator's name describes the whole topology.
+        stats.kernel_backend = kernels::active_backend().name().to_string();
         stats.total_secs = self.total_sw.elapsed_secs();
         stats.secs_per_iter = if self.iters_done > 0 {
             (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64
@@ -929,12 +949,25 @@ fn connect_shard(
         reader,
         writer: BufWriter::new(stream),
     };
+    let ours = kernels::active_backend().name();
     let hello = Json::obj(vec![
         ("verb", Json::str("hello")),
         ("version", Json::num(PROTOCOL_VERSION as f64)),
+        ("kernel_backend", Json::str(ours)),
     ]);
-    conn.request(&hello)?;
-    Ok(conn)
+    let resp = conn.request(&hello)?;
+    // The worker rejects a mismatch itself; re-checking its echo here
+    // also catches a worker that answered without naming its backend.
+    match resp.get("kernel_backend").and_then(Json::as_str) {
+        Some(k) if k == ours => Ok(conn),
+        Some(k) => Err(ServiceError::Invalid(format!(
+            "shard {index} ({addr}): kernel backend mismatch: coordinator runs `{ours}`, \
+             worker runs `{k}` (force a common backend with --kernel/SPARTAN_KERNEL)"
+        ))),
+        None => Err(ServiceError::Protocol(format!(
+            "shard {index} ({addr}): hello reply missing `kernel_backend`"
+        ))),
+    }
 }
 
 /// Validate a `plan` reply against the coordinator's own view of the
@@ -1011,10 +1044,17 @@ mod tests {
     #[test]
     fn hello_handshake_enforces_protocol_version() {
         let mut state: Option<WorkerFit> = None;
-        let ok_line = format!(r#"{{"verb":"hello","version":{PROTOCOL_VERSION}}}"#);
+        let ours = kernels::active_backend().name();
+        let ok_line = format!(
+            r#"{{"verb":"hello","version":{PROTOCOL_VERSION},"kernel_backend":"{ours}"}}"#
+        );
         let (resp, _) = dispatch_worker(&mut state, 1, &ok_line);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
-        let bad_line = format!(r#"{{"verb":"hello","version":{}}}"#, PROTOCOL_VERSION + 1);
+        assert_eq!(resp.get("kernel_backend").and_then(Json::as_str), Some(ours));
+        let bad_line = format!(
+            r#"{{"verb":"hello","version":{},"kernel_backend":"{ours}"}}"#,
+            PROTOCOL_VERSION + 1
+        );
         let (resp, _) = dispatch_worker(&mut state, 1, &bad_line);
         assert_eq!(resp.get("kind").and_then(Json::as_str), Some("invalid"));
         assert!(resp
@@ -1022,6 +1062,31 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap_or("")
             .contains("version mismatch"));
+    }
+
+    #[test]
+    fn hello_handshake_rejects_mixed_kernel_backends() {
+        let mut state: Option<WorkerFit> = None;
+        // A coordinator on a backend this worker is not running (any name
+        // that differs from the worker's active one — the active backend
+        // is never the scalar reference under auto-selection, and if it
+        // were forced to scalar, `avx512` still differs).
+        let theirs =
+            if kernels::active_backend() == kernels::KernelBackend::Scalar { "avx512" } else { "scalar" };
+        let line = format!(
+            r#"{{"verb":"hello","version":{PROTOCOL_VERSION},"kernel_backend":"{theirs}"}}"#
+        );
+        let (resp, _) = dispatch_worker(&mut state, 1, &line);
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("invalid"));
+        assert!(resp
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .contains("kernel backend mismatch"));
+        // And a hello that omits the field entirely is a protocol error.
+        let line = format!(r#"{{"verb":"hello","version":{PROTOCOL_VERSION}}}"#);
+        let (resp, _) = dispatch_worker(&mut state, 1, &line);
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("protocol"));
     }
 
     #[test]
