@@ -73,6 +73,14 @@ pub struct AlsRun {
     /// Steady-state resident footprint of the fit's data-plane arenas
     /// (see `FitStats::heap_bytes`).
     pub heap_bytes: u64,
+    /// Successful mid-fit shard re-attaches (see
+    /// `FitStats::shard_reconnects`). Local bench fits never shard, so
+    /// this is 0 — published anyway so the chaos/recovery counters share
+    /// the one bench JSON schema.
+    pub shard_reconnects: u64,
+    /// Reconnect attempts while recovering lost shards (see
+    /// `FitStats::shard_retries`). 0 for local bench fits.
+    pub shard_retries: u64,
 }
 
 impl AlsRun {
@@ -93,6 +101,8 @@ impl AlsRun {
             ("traversals".to_string(), self.traversals),
             ("x_traversals".to_string(), self.x_traversals),
             ("heap_bytes".to_string(), self.heap_bytes),
+            ("shard_reconnects".to_string(), self.shard_reconnects),
+            ("shard_retries".to_string(), self.shard_retries),
         ]))
     }
 }
@@ -145,6 +155,8 @@ pub fn time_als_detailed(
                 traversals: model.stats.traversals,
                 x_traversals: model.stats.x_traversals,
                 heap_bytes: model.stats.heap_bytes,
+                shard_reconnects: model.stats.shard_reconnects,
+                shard_retries: model.stats.shard_retries,
             }
         }
         Err(crate::parafac2::FitError::OutOfMemory(_)) => AlsRun {
@@ -155,6 +167,8 @@ pub fn time_als_detailed(
             traversals: 0,
             x_traversals: 0,
             heap_bytes: 0,
+            shard_reconnects: 0,
+            shard_retries: 0,
         },
         Err(e) => panic!("bench fit failed: {e}"),
     }
@@ -345,8 +359,11 @@ mod tests {
         // arena, plus the pack and the final report pass
         assert_eq!(run.x_traversals, (run.fit_iters + 2) * k);
         assert!(run.heap_bytes > 0);
+        // local fits never shard — the recovery counters publish as 0
+        assert_eq!(run.shard_reconnects, 0);
+        assert_eq!(run.shard_retries, 0);
         let m = run.measurement("cell").expect("timed run summarizes");
-        assert_eq!(m.counters.len(), 5);
+        assert_eq!(m.counters.len(), 7);
 
         // OoM cells summarize to None
         let oom = time_als_detailed(&data, 2, Backend::Baseline, Some(64));

@@ -19,7 +19,8 @@
 //!       "mean_secs": ..., "std_secs": ..., "min_secs": ..., "max_secs": ...,
 //!       "iter_secs": [ ...wall-time of every measured iteration... ],
 //!       "counters": { "fit_iters": ..., "yv_products": ..., "traversals": ...,
-//!                     "x_traversals": ..., "heap_bytes": ... }
+//!                     "x_traversals": ..., "heap_bytes": ...,
+//!                     "shard_reconnects": ..., "shard_retries": ... }
 //!     }
 //!   ]
 //! }
@@ -36,8 +37,11 @@
 //! one-time pack and the final report pass) for the SPARTan engine — see
 //! `metrics::flops`. `heap_bytes` is the steady-state resident footprint
 //! of the fit's data-plane arenas (the residency the arena trades for the
-//! halved X traffic). That makes the perf trajectory across PRs
-//! machine-checkable, not eyeballed.
+//! halved X traffic). `shard_reconnects`/`shard_retries` count the
+//! sharded-fit recovery path (successful mid-fit re-attaches and the
+//! reconnect attempts behind them — see `FitStats`); local bench fits
+//! never shard, so both are 0 here. That makes the perf trajectory across
+//! PRs machine-checkable, not eyeballed.
 //!
 //! `backend` (optional) names the kernel backend the measurement ran on
 //! (`linalg::kernels::KernelBackend::name()`) — the per-ISA A/B cells.

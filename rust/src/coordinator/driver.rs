@@ -132,6 +132,9 @@ impl<'a> PjrtDriver<'a> {
             .collect();
         let mut fallback_scratch = SubjectScratch::new();
 
+        // Default stats: PJRT fits run in-process and never shard, so the
+        // `shard_reconnects`/`shard_retries` recovery counters stay 0
+        // (the sharded coordinator in `service::shard` owns that path).
         let mut stats = FitStats::default();
         let mut prev_sse = f64::INFINITY;
         let mut iters_done = 0;

@@ -85,9 +85,13 @@ USAGE: spartan <subcommand> [options]
            [--artifacts DIR] [--save-model DIR]
            [--kernel scalar|blocked|avx2|avx512|neon]
            [--shards host:port,host:port,...]
+           [--shard-retries N] [--shard-backoff-ms MS]
            (--shards runs the fit as a coordinator over `shard-worker`
             processes — bitwise identical to the local fit; FILE must be
-            readable by every worker)
+            readable by every worker. A lost worker is reconnected and
+            re-attached mid-fit under --shard-retries attempts per
+            incident with capped exponential backoff starting at
+            --shard-backoff-ms; retries exhausted → shard_lost abort)
 
   compare  --input FILE --rank R [--max-iters N] [--workers N] [--seed S]
            (times one ALS iteration under every engine and prints speedups)
@@ -119,10 +123,12 @@ USAGE: spartan <subcommand> [options]
            [--max-iters N] [--tol T] [--nonneg] [--unconstrained]
            [--seed S] [--cohort ID] [--wait]
            [--shards host:port,host:port,...]
+           [--shard-retries N] [--shard-backoff-ms MS]
            (queue a fit on the daemon; --cohort opts into warm-starting
             from that cohort's previous factors; --wait polls to completion;
             --shards makes the daemon coordinate shard-workers instead of
-            fitting locally)
+            fitting locally, with the same retry/backoff recovery as
+            decompose --shards)
 
   status   --id N [--addr A]
   cancel   --id N [--addr A]       (stops within one ALS iteration)
@@ -216,7 +222,7 @@ fn cmd_decompose(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "input", "rank", "engine", "config", "max-iters", "tol", "nonneg", "unconstrained",
         "workers", "seed", "restarts", "mem-budget", "artifacts", "save-model", "shards",
-        "kernel",
+        "shard-retries", "shard-backoff-ms", "kernel",
     ])
     .map_err(|e| anyhow!(e))?;
     apply_kernel_flag(args)?;
@@ -268,20 +274,19 @@ fn cmd_decompose(args: &Args) -> Result<()> {
         if matches!(cfg.engine, Engine::Pjrt) {
             bail!("--shards is incompatible with --engine pjrt");
         }
-        let addrs: Vec<String> = list
-            .split(',')
-            .map(|a| a.trim().to_string())
-            .filter(|a| !a.is_empty())
-            .collect();
-        if addrs.is_empty() {
-            bail!("--shards needs at least one host:port");
-        }
         let mut fit_cfg = cfg.fit.clone();
         fit_cfg.backend = cfg.native_backend();
-        let spec = spartan::service::shard::ShardSpec::new(
-            addrs,
+        let mut spec = spartan::service::shard::ShardSpec::from_list(
+            list,
             input.to_string_lossy().into_owned(),
-        );
+        )
+        .map_err(|e| anyhow!("--shards: {e}"))?;
+        if let Some(n) = args.get_u64("shard-retries").map_err(|e| anyhow!(e))? {
+            spec.max_retries = u32::try_from(n).context("--shard-retries out of range")?;
+        }
+        if let Some(ms) = args.get_u64("shard-backoff-ms").map_err(|e| anyhow!(e))? {
+            spec.backoff_ms = ms;
+        }
         println!("sharding over {} worker(s): {}", spec.addrs.len(), spec.addrs.join(", "));
         let model = run_sharded_fit(data, &fit_cfg, &spec)?;
         print_fit_summary(&model);
@@ -597,7 +602,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
     use spartan::service::server::{self, SubmitRequest};
     args.reject_unknown(&[
         "input", "rank", "addr", "engine", "max-iters", "tol", "nonneg", "unconstrained",
-        "seed", "cohort", "wait", "shards",
+        "seed", "cohort", "wait", "shards", "shard-retries", "shard-backoff-ms",
     ])
     .map_err(|e| anyhow!(e))?;
     let addr = args.get_or("addr", spartan::service::protocol::DEFAULT_ADDR);
@@ -628,6 +633,12 @@ fn cmd_submit(args: &Args) -> Result<()> {
                     .collect()
             })
             .unwrap_or_default(),
+        shard_retries: args
+            .get_u64("shard-retries")
+            .map_err(|e| anyhow!(e))?
+            .map(|n| u32::try_from(n).context("--shard-retries out of range"))
+            .transpose()?,
+        shard_backoff_ms: args.get_u64("shard-backoff-ms").map_err(|e| anyhow!(e))?,
     };
     let id = server::submit(addr, &req).map_err(|e| anyhow!("{e}"))?;
     println!("submitted job {id}");

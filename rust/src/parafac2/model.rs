@@ -58,6 +58,16 @@ pub struct FitStats {
     /// halved X memory traffic, so benches publish it next to the
     /// counters.
     pub heap_bytes: u64,
+    /// Successful mid-fit shard re-attaches: a lost worker connection was
+    /// re-established, the worker re-packed its subject range via the
+    /// `reattach` verb, and the interrupted iteration was replayed from
+    /// the frozen factor snapshot (bitwise identical to an uninterrupted
+    /// fit). Always 0 for local fits.
+    pub shard_reconnects: u64,
+    /// Reconnect attempts made while recovering lost shards (every
+    /// connect+hello+reattach try counts, including the ones that failed).
+    /// `shard_retries ≥ shard_reconnects`; always 0 for local fits.
+    pub shard_retries: u64,
     /// The kernel backend the fit ran on (`linalg::kernels::
     /// KernelBackend::name()`: `scalar`/`blocked`/`avx2`/`avx512`/`neon`)
     /// — records which lane family produced the trajectory, so a result

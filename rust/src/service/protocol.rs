@@ -56,7 +56,16 @@ pub const DEFAULT_ADDR: &str = "127.0.0.1:7473";
 /// mixed-ISA topology (e.g. an `avx512` worker under an `avx2`
 /// coordinator) fails loudly instead of silently merging trajectories
 /// from different lane families.
-pub const PROTOCOL_VERSION: u64 = 2;
+///
+/// Version 3 added the `reattach` verb: a coordinator that lost a worker
+/// mid-fit reconnects (capped exponential backoff), replays `hello`, and
+/// sends `reattach` — the `plan` fields plus the fit id, the current
+/// iteration number, and the frozen pre-iteration `H`/`V`/`W` (this
+/// shard's rows) — so a fresh worker process re-packs the same arena and
+/// the fit resumes at the iteration boundary, bitwise identical to an
+/// uninterrupted run. `shard_lost` now means *retries exhausted*, not
+/// first failure.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 // ---------------------------------------------------------------------------
 // f64 bit-exact transport (golden-fixture idiom)
@@ -167,6 +176,86 @@ pub fn mode2_partials_from_json(j: &Json, r: usize) -> Result<Vec<(Vec<u32>, Vec
 }
 
 // ---------------------------------------------------------------------------
+// Shard re-attach transport
+
+/// Chunk ranges as `[[start,end], …]` — the same shape `plan` ships.
+pub fn ranges_to_json(ranges: &[(usize, usize)]) -> Json {
+    Json::arr(ranges.iter().map(|&(s, e)| {
+        Json::arr(vec![Json::num(s as f64), Json::num(e as f64)])
+    }))
+}
+
+/// Inverse of [`ranges_to_json`].
+pub fn ranges_from_json(j: &Json) -> Result<Vec<(usize, usize)>, String> {
+    j.as_arr()
+        .ok_or("expected range array")?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().filter(|p| p.len() == 2).ok_or("range must be [start,end]")?;
+            let s = p[0].as_usize().ok_or("bad range start")?;
+            let e = p[1].as_usize().ok_or("bad range end")?;
+            Ok((s, e))
+        })
+        .collect()
+}
+
+/// Everything a `reattach` request carries (protocol v3): the `plan`
+/// fields that rebuild the worker's arena, plus the fit identity and the
+/// frozen pre-iteration factors (`w` holds only this shard's rows). The
+/// factors travel bit-exactly — the replayed iteration must start from
+/// the same snapshot the surviving shards replay from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReattachPayload {
+    pub fit_id: String,
+    /// ALS iterations completed before the incident — the fit resumes at
+    /// this iteration boundary.
+    pub iter: u64,
+    pub path: String,
+    pub lo: usize,
+    pub hi: usize,
+    /// Rebased local chunk ranges (tile `0..hi-lo` exactly).
+    pub ranges: Vec<(usize, usize)>,
+    pub h: Mat,
+    pub v: Mat,
+    pub w: Mat,
+}
+
+/// Encode a `reattach` request line (includes the verb).
+pub fn reattach_to_json(p: &ReattachPayload) -> Json {
+    Json::obj(vec![
+        ("verb", Json::str("reattach")),
+        ("fit_id", Json::str(p.fit_id.clone())),
+        ("iter", Json::num(p.iter as f64)),
+        ("path", Json::str(p.path.clone())),
+        ("lo", Json::num(p.lo as f64)),
+        ("hi", Json::num(p.hi as f64)),
+        ("ranges", ranges_to_json(&p.ranges)),
+        ("h", mat_to_json(&p.h)),
+        ("v", mat_to_json(&p.v)),
+        ("w", mat_to_json(&p.w)),
+    ])
+}
+
+/// Inverse of [`reattach_to_json`] (factors bit-exact).
+pub fn reattach_from_json(j: &Json) -> Result<ReattachPayload, String> {
+    Ok(ReattachPayload {
+        fit_id: j
+            .get("fit_id")
+            .and_then(Json::as_str)
+            .ok_or("reattach missing fit_id")?
+            .to_string(),
+        iter: j.get("iter").and_then(Json::as_f64).ok_or("reattach missing iter")? as u64,
+        path: j.get("path").and_then(Json::as_str).ok_or("reattach missing path")?.to_string(),
+        lo: j.get("lo").and_then(Json::as_usize).ok_or("reattach missing lo")?,
+        hi: j.get("hi").and_then(Json::as_usize).ok_or("reattach missing hi")?,
+        ranges: ranges_from_json(j.get("ranges").ok_or("reattach missing ranges")?)?,
+        h: mat_from_json(j.get("h").ok_or("reattach missing h")?)?,
+        v: mat_from_json(j.get("v").ok_or("reattach missing v")?)?,
+        w: mat_from_json(j.get("w").ok_or("reattach missing w")?)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Model transport
 
 pub fn model_to_json(m: &Parafac2Model) -> Json {
@@ -193,6 +282,8 @@ pub fn model_to_json(m: &Parafac2Model) -> Json {
                 ("traversals", Json::num(s.traversals as f64)),
                 ("x_traversals", Json::num(s.x_traversals as f64)),
                 ("heap_bytes", Json::num(s.heap_bytes as f64)),
+                ("shard_reconnects", Json::num(s.shard_reconnects as f64)),
+                ("shard_retries", Json::num(s.shard_retries as f64)),
                 ("kernel_backend", Json::str(s.kernel_backend.clone())),
             ]),
         ),
@@ -229,6 +320,8 @@ pub fn model_from_json(j: &Json) -> Result<Parafac2Model, String> {
         traversals: num("traversals") as u64,
         x_traversals: num("x_traversals") as u64,
         heap_bytes: num("heap_bytes") as u64,
+        shard_reconnects: num("shard_reconnects") as u64,
+        shard_retries: num("shard_retries") as u64,
         kernel_backend: sj
             .get("kernel_backend")
             .and_then(Json::as_str)
@@ -434,6 +527,32 @@ mod tests {
         }
         // wrong rank → length validation trips
         assert!(mode2_partials_from_json(&json::parse(&text).unwrap(), 3).is_err());
+    }
+
+    #[test]
+    fn reattach_roundtrip_is_bitwise() {
+        let p = ReattachPayload {
+            fit_id: "fit-1234-0".into(),
+            iter: 5,
+            path: "/data/shared.spt".into(),
+            lo: 64,
+            hi: 192,
+            ranges: vec![(0, 64), (64, 128)],
+            h: Mat::from_vec(2, 2, vec![0.1 + 0.2, -0.0, 1.0 / 3.0, 1e-300]),
+            v: Mat::from_vec(3, 2, vec![1.5, -2.5, f64::MIN_POSITIVE, 0.0, 6.02e23, -1.0]),
+            w: Mat::from_vec(2, 2, vec![0.25, 0.5, 0.75, 1.0]),
+        };
+        let line = reattach_to_json(&p).to_string();
+        let parsed = json::parse(&line).unwrap();
+        assert_eq!(parsed.get("verb").and_then(Json::as_str), Some("reattach"));
+        let back = reattach_from_json(&parsed).unwrap();
+        assert_eq!(back, p);
+        // `==` on f64 treats -0.0 == 0.0; the factors must survive *bitwise*.
+        for (m, bm) in [(&p.h, &back.h), (&p.v, &back.v), (&p.w, &back.w)] {
+            for (a, b) in m.data().iter().zip(bm.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -210,7 +210,17 @@ fn handle_submit(service: &Service, req: &Json) -> Result<Json, ServiceError> {
                 .ok_or_else(|| {
                     ServiceError::Protocol("`shards` must be an array of addresses".into())
                 })?;
-            Some(super::shard::ShardSpec::new(addrs, input))
+            let mut spec = super::shard::ShardSpec::new(addrs, input);
+            spec.validate().map_err(ServiceError::Invalid)?;
+            // Optional recovery policy overrides (defaults mirror the
+            // `--shard-retries`/`--shard-backoff-ms` CLI defaults).
+            if let Some(n) = req.get("shard_retries").and_then(Json::as_f64) {
+                spec.max_retries = n as u32;
+            }
+            if let Some(ms) = req.get("shard_backoff_ms").and_then(Json::as_f64) {
+                spec.backoff_ms = ms as u64;
+            }
+            Some(spec)
         }
         _ => None,
     };
@@ -289,6 +299,12 @@ pub struct SubmitRequest {
     /// Shard-worker addresses; non-empty runs the job as a sharded
     /// coordinator over them (dataset path = `input` on every worker).
     pub shards: Vec<String>,
+    /// Reconnect attempts per lost-shard incident (see
+    /// `shard::ShardSpec::max_retries`); `None` keeps the server default.
+    pub shard_retries: Option<u32>,
+    /// Base backoff delay in ms between reconnect attempts (see
+    /// `shard::ShardSpec::backoff_ms`); `None` keeps the server default.
+    pub shard_backoff_ms: Option<u64>,
 }
 
 pub fn submit(addr: &str, req: &SubmitRequest) -> Result<u64, ServiceError> {
@@ -317,6 +333,12 @@ pub fn submit(addr: &str, req: &SubmitRequest) -> Result<u64, ServiceError> {
     }
     if !req.shards.is_empty() {
         fields.push(("shards", Json::arr(req.shards.iter().map(|a| Json::str(a.clone())))));
+    }
+    if let Some(n) = req.shard_retries {
+        fields.push(("shard_retries", Json::num(n as f64)));
+    }
+    if let Some(ms) = req.shard_backoff_ms {
+        fields.push(("shard_backoff_ms", Json::num(ms as f64)));
     }
     let resp = request(addr, &Json::obj(fields))?;
     resp.get("id")

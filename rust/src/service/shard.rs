@@ -39,12 +39,26 @@
 //! functions the local path uses.
 //!
 //! **Robustness.** Every worker connection carries a read timeout; a
-//! refused connect, EOF, timeout, or structured worker error surfaces as
-//! [`ServiceError::ShardLost`] naming the shard, after a best-effort
-//! `abort` fan-out to the surviving workers. Cancellation is observed at
-//! the same checkpoints as a local [`crate::parafac2::FitSession`] (step
-//! entry and post-sweep), so a cancel reaches every shard within one
-//! iteration — workers are request-driven and simply stop being asked.
+//! refused connect, EOF, timeout, or structured worker error marks the
+//! shard *lost*. Losing a shard is no longer fatal: the coordinator rolls
+//! the factors back to the iteration-boundary snapshot, drains the
+//! responses surviving workers still owe from the interrupted fan-out,
+//! reconnects the lost shard under a capped exponential backoff
+//! ([`backoff_delay_ms`]), replays the `hello` handshake, and sends a
+//! `reattach` (protocol v3) so a fresh worker process re-packs the same
+//! subject range; the interrupted iteration is then replayed in full.
+//! The replay is bitwise safe for the same reason the post-sweep cancel
+//! discard is: workers are request-driven and every FP fold happens
+//! coordinator-side, so identical requests produce identical partials.
+//! Only after [`ShardSpec::max_retries`] reconnect attempts does the fit
+//! degrade to the old behaviour — [`ServiceError::ShardLost`] naming the
+//! shard, after a best-effort `abort` fan-out to the survivors.
+//! Cancellation is observed at the same checkpoints as a local
+//! [`crate::parafac2::FitSession`] (step entry and post-sweep), so a
+//! cancel reaches every shard within one iteration. Fault injection for
+//! all of this lives worker-side in [`FaultPlan`] (armed by the
+//! `SPARTAN_FAULT` env var) and is exercised by
+//! `rust/tests/shard_fault_injection.rs` and the CI `chaos-smoke` lane.
 
 use crate::linalg::{blas, kernels, solve, Mat};
 use crate::parafac2::als::{fit_from_sse, sse_converged, sse_from_parts};
@@ -65,7 +79,8 @@ use crate::parafac2::{
 use crate::service::protocol::{
     error_to_response, f64_list_from_json, f64_list_to_json, m1_partials_from_json,
     m1_partials_to_json, mat_from_json, mat_to_json, mode2_partials_from_json,
-    mode2_partials_to_json, ok_response, PROTOCOL_VERSION,
+    mode2_partials_to_json, ok_response, ranges_from_json, ranges_to_json, reattach_from_json,
+    reattach_to_json, ReattachPayload, PROTOCOL_VERSION,
 };
 use crate::service::ServiceError;
 use crate::sparse::{CompactX, IrregularTensor};
@@ -75,17 +90,48 @@ use crate::util::timer::Stopwatch;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 /// Default per-response read timeout on coordinator→worker connections.
 /// Generous — a worker phase is a fraction of a local iteration — but
-/// finite, so a hung worker becomes [`ServiceError::ShardLost`] instead
-/// of a hung coordinator.
+/// finite, so a hung worker becomes a lost shard (and a reconnect
+/// attempt) instead of a hung coordinator.
 pub const DEFAULT_READ_TIMEOUT_SECS: u64 = 600;
 
-/// Where the shards are and what they should load.
+/// Default reconnect attempts per lost-shard incident before the fit
+/// degrades to a `shard_lost` abort. Small by design: connect-refused
+/// fails fast, so a permanently dead worker costs well under a second of
+/// retrying at the default backoff.
+pub const DEFAULT_SHARD_RETRIES: u32 = 3;
+
+/// Default base delay (ms) of the capped exponential reconnect backoff.
+pub const DEFAULT_BACKOFF_MS: u64 = 200;
+
+/// Ceiling of the reconnect backoff: delays double from
+/// [`ShardSpec::backoff_ms`] and saturate here.
+pub const BACKOFF_CAP_MS: u64 = 5_000;
+
+/// One iteration (or finish pass) tolerates at most this many recovery
+/// incidents before the coordinator stops believing the topology will
+/// hold and degrades to `shard_lost` — a backstop against a flapping
+/// worker replaying the same iteration forever.
+const MAX_RECOVERIES_PER_STEP: usize = 8;
+
+/// Delay in ms before reconnect attempt `attempt + 1` (0-based): the
+/// capped exponential `min(max(base_ms,1)·2^attempt, BACKOFF_CAP_MS)`.
+/// Pure and total, so the schedule is deterministic for a given base,
+/// monotone non-decreasing in `attempt`, and never exceeds the cap
+/// (property-tested in `rust/tests/prop_invariants.rs`).
+pub fn backoff_delay_ms(base_ms: u64, attempt: u32) -> u64 {
+    let base = base_ms.max(1);
+    let factor = 1u64.checked_shl(attempt.min(63)).unwrap_or(u64::MAX);
+    base.saturating_mul(factor).min(BACKOFF_CAP_MS)
+}
+
+/// Where the shards are, what they should load, and how hard to fight
+/// for them when they fail.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardSpec {
     /// Worker addresses (`host:port`), one per shard, in subject order:
@@ -94,13 +140,150 @@ pub struct ShardSpec {
     /// Dataset path, resolvable by **every worker** (shared filesystem —
     /// the same convention as `submit`'s `input`).
     pub path: String,
-    /// Per-response read timeout (seconds) on worker connections.
+    /// Per-response read timeout (seconds) on worker connections; 0 is
+    /// clamped to 1 (see [`ShardSpec::read_timeout`]).
     pub read_timeout_secs: u64,
+    /// Reconnect attempts per lost-shard incident (each is a fresh
+    /// connect + `hello` + `reattach`); 0 disables recovery entirely and
+    /// restores the pre-v3 fail-on-first-loss behaviour.
+    pub max_retries: u32,
+    /// Base delay (ms) of the capped exponential backoff between
+    /// reconnect attempts (see [`backoff_delay_ms`]).
+    pub backoff_ms: u64,
 }
 
 impl ShardSpec {
     pub fn new(addrs: Vec<String>, path: impl Into<String>) -> ShardSpec {
-        ShardSpec { addrs, path: path.into(), read_timeout_secs: DEFAULT_READ_TIMEOUT_SECS }
+        ShardSpec {
+            addrs,
+            path: path.into(),
+            read_timeout_secs: DEFAULT_READ_TIMEOUT_SECS,
+            max_retries: DEFAULT_SHARD_RETRIES,
+            backoff_ms: DEFAULT_BACKOFF_MS,
+        }
+    }
+
+    /// Parse a comma-separated `host:port` list — the `--shards` CLI flag
+    /// and the daemon's `shards` array agree on this shape. Empty entries
+    /// are dropped; an empty list and duplicate addresses are rejected
+    /// ([`ShardSpec::validate`]).
+    pub fn from_list(list: &str, path: impl Into<String>) -> Result<ShardSpec, String> {
+        let addrs: Vec<String> = list
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        let spec = ShardSpec::new(addrs, path);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural validation shared by every construction path: at least
+    /// one address, no duplicates (two shards dialing one worker would
+    /// fight over its single per-connection fit state).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.addrs.is_empty() {
+            return Err("no shard addresses".into());
+        }
+        for (i, a) in self.addrs.iter().enumerate() {
+            if self.addrs[..i].contains(a) {
+                return Err(format!("duplicate shard address `{a}`"));
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-response read timeout as a [`Duration`]; a configured 0 is
+    /// clamped to 1 s, because passing a zero timeout to
+    /// `set_read_timeout` would mean *no* timeout — the opposite of what
+    /// a caller asking for "0 seconds" wants.
+    pub fn read_timeout(&self) -> Duration {
+        Duration::from_secs(self.read_timeout_secs.max(1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection (worker side)
+// ---------------------------------------------------------------------------
+
+/// A one-shot fault a worker injects into itself, armed by the
+/// `SPARTAN_FAULT` env var — the chaos hook behind
+/// `rust/tests/shard_fault_injection.rs` and the CI `chaos-smoke` lane.
+/// Grammar (`N` counts responses served by this worker process, across
+/// connections):
+///
+/// * `drop-after:N` — close the coordinator connection right after
+///   writing the N-th response.
+/// * `stall-after:N:MS` — sleep `MS` milliseconds before writing response
+///   `N+1` (long enough and the coordinator's read timeout fires).
+/// * `exit-after:N` — exit the whole worker process right after writing
+///   the N-th response (mid-iteration from the coordinator's view).
+///
+/// Every plan fires exactly once, then disarms — the worker serves
+/// cleanly afterwards, which is precisely the scenario the coordinator's
+/// retry/`reattach` path must turn into a bitwise-identical fit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// Trigger threshold in responses served by this process.
+    pub after: u64,
+}
+
+/// What [`FaultPlan`] does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    Drop,
+    Stall(u64),
+    Exit,
+}
+
+impl FaultPlan {
+    /// Parse the `SPARTAN_FAULT` grammar (see the type docs).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let after = parts
+            .next()
+            .ok_or_else(|| format!("`{s}`: missing response count"))?
+            .parse::<u64>()
+            .map_err(|_| format!("`{s}`: bad response count"))?;
+        let plan = match kind {
+            "drop-after" => FaultPlan { kind: FaultKind::Drop, after },
+            "exit-after" => FaultPlan { kind: FaultKind::Exit, after },
+            "stall-after" => {
+                let ms = parts
+                    .next()
+                    .ok_or_else(|| format!("`{s}`: stall-after needs `:MS`"))?
+                    .parse::<u64>()
+                    .map_err(|_| format!("`{s}`: bad stall millis"))?;
+                FaultPlan { kind: FaultKind::Stall(ms), after }
+            }
+            other => return Err(format!("`{s}`: unknown fault kind `{other}`")),
+        };
+        if parts.next().is_some() {
+            return Err(format!("`{s}`: trailing fields"));
+        }
+        Ok(plan)
+    }
+
+    /// Arm from `SPARTAN_FAULT` (worker startup). A typo'd plan is
+    /// reported and ignored — a chaos lane that silently tests nothing is
+    /// worse than no lane, so the warning is loud.
+    fn from_env() -> Option<FaultPlan> {
+        let s = std::env::var("SPARTAN_FAULT").ok()?;
+        if s.is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&s) {
+            Ok(p) => {
+                eprintln!("spartan shard-worker: fault armed: {s}");
+                Some(p)
+            }
+            Err(e) => {
+                eprintln!("spartan shard-worker: ignoring SPARTAN_FAULT: {e}");
+                None
+            }
+        }
     }
 }
 
@@ -134,7 +317,7 @@ struct WorkerFit {
 /// coordinators until a `shutdown` request. One coordinator connection at
 /// a time — the fit protocol is strictly sequential — with per-connection
 /// state dropped at EOF, so a worker survives its coordinator and can
-/// serve the next fit.
+/// serve the next fit (or the same fit's `reattach`).
 pub fn run_worker(addr: &str, workers: usize) -> Result<(), ServiceError> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| ServiceError::Io(format!("bind {addr}: {e}")))?;
@@ -145,12 +328,14 @@ pub fn run_worker(addr: &str, workers: usize) -> Result<(), ServiceError> {
         let _ = writeln!(out, "spartan shard-worker: listening on {local} (workers {workers})");
         let _ = out.flush();
     }
+    let mut fault = FaultPlan::from_env();
+    let mut served: u64 = 0;
     for conn in listener.incoming() {
         let stream = match conn {
             Ok(s) => s,
             Err(_) => continue,
         };
-        if !serve_coordinator(stream, workers) {
+        if !serve_coordinator(stream, workers, &mut fault, &mut served) {
             return Ok(());
         }
     }
@@ -158,8 +343,15 @@ pub fn run_worker(addr: &str, workers: usize) -> Result<(), ServiceError> {
 }
 
 /// Serve one coordinator connection to EOF. Returns `false` when a
-/// `shutdown` request asks the whole worker process to exit.
-fn serve_coordinator(stream: TcpStream, workers: usize) -> bool {
+/// `shutdown` request asks the whole worker process to exit. `served`
+/// counts responses across the process lifetime (the [`FaultPlan`]
+/// trigger counter).
+fn serve_coordinator(
+    stream: TcpStream,
+    workers: usize,
+    fault: &mut Option<FaultPlan>,
+    served: &mut u64,
+) -> bool {
     let reader_stream = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return true,
@@ -172,14 +364,50 @@ fn serve_coordinator(stream: TcpStream, workers: usize) -> bool {
         line.clear();
         match reader.read_line(&mut line) {
             Ok(0) | Err(_) => return true,
+            // A line without its terminating newline is a request the
+            // coordinator died mid-write (NDJSON frames end in `\n`; EOF
+            // inside a frame is a torn write). That is connection loss —
+            // the peer retries on a fresh connection — not a request to
+            // answer with a protocol error.
+            Ok(_) if !line.ends_with('\n') => return true,
             Ok(_) => {}
         }
         if line.trim().is_empty() {
             continue;
         }
         let (resp, quit) = dispatch_worker(&mut state, workers, line.trim());
+        if fault
+            .as_ref()
+            .map_or(false, |f| matches!(f.kind, FaultKind::Stall(_)) && *served >= f.after)
+        {
+            if let Some(FaultPlan { kind: FaultKind::Stall(ms), .. }) = fault.take() {
+                eprintln!("spartan shard-worker: fault: stalling response {} by {ms}ms", *served + 1);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
         if writeln!(writer, "{}", resp.to_string()).is_err() || writer.flush().is_err() {
             return true;
+        }
+        *served += 1;
+        if fault
+            .as_ref()
+            .map_or(false, |f| !matches!(f.kind, FaultKind::Stall(_)) && *served >= f.after)
+        {
+            match fault.take().map(|f| f.kind) {
+                Some(FaultKind::Drop) => {
+                    eprintln!(
+                        "spartan shard-worker: fault: dropping connection after {served} responses"
+                    );
+                    return true;
+                }
+                Some(FaultKind::Exit) => {
+                    eprintln!(
+                        "spartan shard-worker: fault: exiting after {served} responses"
+                    );
+                    std::process::exit(17);
+                }
+                _ => {}
+            }
         }
         if quit {
             return false;
@@ -203,6 +431,7 @@ fn dispatch_worker(state: &mut Option<WorkerFit>, workers: usize, line: &str) ->
         "ping" => Ok(ok_response(vec![("service", Json::str("spartan-shard"))])),
         "hello" => handle_hello(&req),
         "plan" => handle_plan(state, workers, &req),
+        "reattach" => handle_reattach(state, workers, &req),
         "sweep" => handle_sweep(state, &req),
         "mode2" => handle_mode2(state, &req),
         "mode3" => handle_mode3(state, &req),
@@ -250,11 +479,15 @@ fn handle_hello(req: &Json) -> Result<Json, ServiceError> {
     }
 }
 
-fn handle_plan(
-    state: &mut Option<WorkerFit>,
-    workers: usize,
-    req: &Json,
-) -> Result<Json, ServiceError> {
+/// The `plan`/`reattach` fields that rebuild a worker's arena.
+struct PlanArgs {
+    path: String,
+    lo: usize,
+    hi: usize,
+    ranges: Vec<Range<usize>>,
+}
+
+fn parse_plan_args(req: &Json) -> Result<PlanArgs, ServiceError> {
     let path = req
         .get("path")
         .and_then(Json::as_str)
@@ -267,31 +500,40 @@ fn handle_plan(
         .get("hi")
         .and_then(Json::as_usize)
         .ok_or_else(|| ServiceError::Protocol("plan requires `hi`".into()))?;
-    let ranges = req
-        .get("ranges")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| ServiceError::Protocol("plan requires `ranges`".into()))?
-        .iter()
-        .map(|pair| {
-            let p = pair.as_arr().filter(|p| p.len() == 2).ok_or("range must be [start,end]")?;
-            let s = p[0].as_usize().ok_or("bad range start")?;
-            let e = p[1].as_usize().ok_or("bad range end")?;
-            Ok(s..e)
-        })
-        .collect::<Result<Vec<Range<usize>>, &str>>()
-        .map_err(|e| ServiceError::Protocol(e.into()))?;
+    let ranges = ranges_from_json(
+        req.get("ranges")
+            .ok_or_else(|| ServiceError::Protocol("plan requires `ranges`".into()))?,
+    )
+    .map_err(ServiceError::Protocol)?
+    .into_iter()
+    .map(|(s, e)| s..e)
+    .collect();
+    Ok(PlanArgs { path: path.to_string(), lo, hi, ranges })
+}
 
-    let full = super::server::load_tensor(path)?;
-    if lo >= hi || hi > full.k() {
+/// Load + slice + pack one subject range — the shared machinery behind
+/// `plan` and `reattach` (the DPar2 observation: per-range pack state is
+/// cheaply and *deterministically* re-derivable, which is what makes a
+/// lost shard restartable mid-fit). Returns the fit state plus the
+/// per-slice ‖X_k‖² bits, `J`, and `nnz` for the reply.
+fn build_worker_fit(
+    args: &PlanArgs,
+    workers: usize,
+) -> Result<(WorkerFit, Vec<f64>, usize, usize), ServiceError> {
+    let full = super::server::load_tensor(&args.path)?;
+    if args.lo >= args.hi || args.hi > full.k() {
         return Err(ServiceError::Invalid(format!(
-            "subject range {lo}..{hi} out of bounds for K={}",
+            "subject range {}..{} out of bounds for K={}",
+            args.lo,
+            args.hi,
             full.k()
         )));
     }
     // Contiguous subject range, local indices 0..(hi-lo). The rebased
     // chunk ranges must tile it exactly — `from_ranges` validates.
-    let local = IrregularTensor::new_unchecked(full.slices()[lo..hi].to_vec());
-    let plan = ChunkPlan::from_ranges(ranges, hi - lo).map_err(ServiceError::Invalid)?;
+    let local = IrregularTensor::new_unchecked(full.slices()[args.lo..args.hi].to_vec());
+    let plan = ChunkPlan::from_ranges(args.ranges.clone(), args.hi - args.lo)
+        .map_err(ServiceError::Invalid)?;
     let pool = Pool::new(workers);
     let cx = CompactX::pack(&local, &pool, &plan);
     let x_norm_bits: Vec<f64> = cx.slices.iter().map(|s| s.norm_sq()).collect();
@@ -300,7 +542,7 @@ fn handle_plan(
     let sweep_scratch = SubjectScratch::for_plan(&plan);
     // The original CSR slices drop here — every fit-path read below is
     // served by the arena, the same memory diet as an owned FitSession.
-    *state = Some(WorkerFit {
+    let fit = WorkerFit {
         pool,
         plan,
         cx,
@@ -310,12 +552,74 @@ fn handle_plan(
         w: Mat::zeros(0, 0),
         swept: false,
         mode2_done: false,
-    });
+    };
+    Ok((fit, x_norm_bits, j, nnz))
+}
+
+fn handle_plan(
+    state: &mut Option<WorkerFit>,
+    workers: usize,
+    req: &Json,
+) -> Result<Json, ServiceError> {
+    let args = parse_plan_args(req)?;
+    let (fit, x_norm_bits, j, nnz) = build_worker_fit(&args, workers)?;
+    *state = Some(fit);
     Ok(ok_response(vec![
-        ("k", Json::num((hi - lo) as f64)),
+        ("k", Json::num((args.hi - args.lo) as f64)),
         ("j", Json::num(j as f64)),
         ("nnz", Json::num(nnz as f64)),
         ("x_norm_bits", f64_list_to_json(&x_norm_bits)),
+    ]))
+}
+
+/// Protocol v3 `reattach`: a coordinator that lost this shard mid-fit
+/// reconnected and wants the worker back at the current iteration
+/// boundary. Runs the exact `plan` packing machinery (same path, same
+/// range, same chunk tiling → bitwise-identical arena), then restores the
+/// frozen pre-iteration `W` rows. `swept`/`mode2_done` stay false: the
+/// coordinator replays the interrupted iteration from its own snapshot,
+/// so the next request is always a fresh `sweep`.
+fn handle_reattach(
+    state: &mut Option<WorkerFit>,
+    workers: usize,
+    req: &Json,
+) -> Result<Json, ServiceError> {
+    let p = reattach_from_json(req).map_err(ServiceError::Protocol)?;
+    let args = PlanArgs {
+        path: p.path.clone(),
+        lo: p.lo,
+        hi: p.hi,
+        ranges: p.ranges.iter().map(|&(s, e)| s..e).collect(),
+    };
+    let (mut fit, x_norm_bits, j, nnz) = build_worker_fit(&args, workers)?;
+    let k_local = p.hi - p.lo;
+    let r = p.h.rows();
+    if p.h.cols() != r || p.v.cols() != r || p.w.cols() != r {
+        return Err(ServiceError::Invalid(format!(
+            "reattach factor ranks disagree: H {:?}, V {:?}, W {:?}",
+            p.h.shape(),
+            p.v.shape(),
+            p.w.shape()
+        )));
+    }
+    if p.v.rows() != j || p.w.rows() != k_local {
+        return Err(ServiceError::Invalid(format!(
+            "reattach factors (V {}×{}, W {}×{}) do not match the shard (J={j}, K={k_local})",
+            p.v.rows(),
+            p.v.cols(),
+            p.w.rows(),
+            p.w.cols()
+        )));
+    }
+    fit.w = p.w;
+    *state = Some(fit);
+    Ok(ok_response(vec![
+        ("k", Json::num(k_local as f64)),
+        ("j", Json::num(j as f64)),
+        ("nnz", Json::num(nnz as f64)),
+        ("x_norm_bits", f64_list_to_json(&x_norm_bits)),
+        ("fit_id", Json::str(p.fit_id.clone())),
+        ("iter", Json::num(p.iter as f64)),
     ]))
 }
 
@@ -456,11 +760,23 @@ fn handle_finish(state: &mut Option<WorkerFit>, req: &Json) -> Result<Json, Serv
 // ---------------------------------------------------------------------------
 
 /// One persistent coordinator→worker connection, carrying this shard's
-/// subject range and its run of global plan chunks.
+/// subject range, its run of global plan chunks, and enough to rebuild
+/// itself (`reattach`) after a loss.
 struct ShardConn {
     index: usize,
     addr: String,
     subjects: Range<usize>,
+    /// Rebased local chunk ranges — the `plan` payload, replayed verbatim
+    /// by `reattach`.
+    ranges: Vec<(usize, usize)>,
+    /// Per-slice ‖X_k‖² bits from the original `plan`. A `reattach` must
+    /// re-pack to exactly these bits, or the worker loaded different data
+    /// than the fit started from.
+    x_norm_bits: Vec<f64>,
+    /// Requests written whose responses have not been read yet — recovery
+    /// drains exactly this many stale responses from a surviving shard to
+    /// resynchronize the framing before the iteration replay.
+    inflight: usize,
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
@@ -470,24 +786,43 @@ impl ShardConn {
         ServiceError::ShardLost(format!("shard {} ({}): {what}", self.index, self.addr))
     }
 
+    /// Tear the socket down NOW (both directions), without waiting for
+    /// the struct to drop. Recovery calls this on every lost connection
+    /// before reconnecting: a worker that is merely *stalled* (not dead)
+    /// may still be blocked writing or reading on this connection, and it
+    /// only returns to its accept loop — where the reconnect is waiting —
+    /// once the old socket observes EOF/RST.
+    fn poison(&mut self) {
+        let _ = self.writer.get_ref().shutdown(std::net::Shutdown::Both);
+    }
+
     /// Fan-out half: write one request line.
     fn send(&mut self, req: &Json) -> Result<(), ServiceError> {
         writeln!(self.writer, "{}", req.to_string())
             .and_then(|_| self.writer.flush())
-            .map_err(|e| self.lost(&format!("write failed: {e}")))
+            .map_err(|e| self.lost(&format!("write failed: {e}")))?;
+        self.inflight += 1;
+        Ok(())
     }
 
-    /// Fan-in half: read one response line (bounded by the read timeout),
-    /// surfacing worker-side errors typed.
-    fn recv(&mut self) -> Result<Json, ServiceError> {
+    /// Read one raw response line (bounded by the read timeout). Errors
+    /// here are connection-level only — an `ok:false` payload still comes
+    /// back `Ok` (recovery's drain counts it as a consumed response).
+    fn recv_raw(&mut self) -> Result<Json, ServiceError> {
         let mut line = String::new();
         match self.reader.read_line(&mut line) {
             Ok(0) => return Err(self.lost("connection closed (worker died?)")),
             Err(e) => return Err(self.lost(&format!("read failed: {e}"))),
             Ok(_) => {}
         }
-        let resp = json::parse(line.trim())
-            .map_err(|e| self.lost(&format!("bad response: {e}")))?;
+        self.inflight = self.inflight.saturating_sub(1);
+        json::parse(line.trim()).map_err(|e| self.lost(&format!("bad response: {e}")))
+    }
+
+    /// Fan-in half: read one response line, surfacing worker-side errors
+    /// typed.
+    fn recv(&mut self) -> Result<Json, ServiceError> {
+        let resp = self.recv_raw()?;
         if resp.get("ok").and_then(Json::as_bool) == Some(true) {
             Ok(resp)
         } else {
@@ -501,13 +836,33 @@ impl ShardConn {
     }
 }
 
+/// A shard interaction failure, naming the shard so the recovery path
+/// knows which connection to rebuild first.
+struct ShardFailure {
+    shard: usize,
+    error: ServiceError,
+}
+
+impl ShardFailure {
+    fn new(shard: usize, error: ServiceError) -> ShardFailure {
+        ShardFailure { shard, error }
+    }
+}
+
+/// Source of coordinator-unique fit ids (echoed through `reattach` so
+/// worker logs can be correlated with the fit that adopted them).
+static NEXT_FIT_ID: AtomicU64 = AtomicU64::new(0);
+
 /// The sharded counterpart of [`crate::parafac2::FitSession`]: same
 /// step/finish surface, same `IterationRecord`s, but every per-subject
 /// phase runs in the shard workers and the coordinator replays the
 /// deterministic merge (module docs). Trajectory is bitwise identical to
-/// a local fit of the same config.
+/// a local fit of the same config — including across mid-fit worker
+/// losses recovered through the retry/`reattach` path.
 pub struct ShardedFitSession {
     cfg: Parafac2Config,
+    spec: ShardSpec,
+    fit_id: String,
     conns: Vec<ShardConn>,
     factors: CpFactors,
     j: usize,
@@ -529,7 +884,8 @@ impl ShardedFitSession {
     /// each shard load + pack its subject range. `data` is only read for
     /// its shape, per-subject nnz (the global plan), and init — it is
     /// dropped before the first iteration; the workers load their ranges
-    /// from `spec.path`.
+    /// from `spec.path`. Initial connects honour the same
+    /// retry/backoff budget as mid-fit recovery.
     pub fn new(
         data: IrregularTensor,
         cfg: &Parafac2Config,
@@ -546,9 +902,7 @@ impl ShardedFitSession {
                 data.j()
             )));
         }
-        if spec.addrs.is_empty() {
-            return Err(ServiceError::Invalid("no shard addresses".into()));
-        }
+        spec.validate().map_err(ServiceError::Invalid)?;
         if !matches!(cfg.backend, Backend::Spartan) {
             return Err(ServiceError::Invalid(
                 "sharded fitting requires the spartan engine (the workers run the fused sweep)"
@@ -556,6 +910,7 @@ impl ShardedFitSession {
             ));
         }
         let total_sw = Stopwatch::start();
+        let mut stats = FitStats::default();
 
         // The same global plan a local fit would build; shard boundaries
         // align to its chunk boundaries (module docs, invariant 1).
@@ -584,26 +939,25 @@ impl ShardedFitSession {
         let mut x_norm_parts: Vec<Vec<f64>> = Vec::with_capacity(ns);
         for (index, (addr, run)) in spec.addrs.iter().zip(&chunk_runs).enumerate() {
             let subjects = plan.ranges()[run.start].start..plan.ranges()[run.end - 1].end;
-            let mut conn = match connect_shard(index, addr, subjects.clone(), spec) {
-                Ok(c) => c,
-                Err(e) => {
-                    abort_all(&mut conns);
-                    return Err(e);
-                }
-            };
+            let mut conn =
+                match connect_with_retry(index, addr, subjects.clone(), spec, &mut stats) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        abort_all(&mut conns);
+                        return Err(e);
+                    }
+                };
             let lo = subjects.start;
-            let ranges = Json::arr(plan.ranges()[run.clone()].iter().map(|r| {
-                Json::arr(vec![
-                    Json::num((r.start - lo) as f64),
-                    Json::num((r.end - lo) as f64),
-                ])
-            }));
+            let ranges: Vec<(usize, usize)> = plan.ranges()[run.clone()]
+                .iter()
+                .map(|r| (r.start - lo, r.end - lo))
+                .collect();
             let req = Json::obj(vec![
                 ("verb", Json::str("plan")),
                 ("path", Json::str(spec.path.clone())),
                 ("lo", Json::num(lo as f64)),
                 ("hi", Json::num(subjects.end as f64)),
-                ("ranges", ranges),
+                ("ranges", ranges_to_json(&ranges)),
             ]);
             let resp = match conn.request(&req) {
                 Ok(r) => r,
@@ -613,7 +967,11 @@ impl ShardedFitSession {
                 }
             };
             match parse_plan_reply(&resp, subjects.len(), j, &spec.path) {
-                Ok(bits) => x_norm_parts.push(bits),
+                Ok(bits) => {
+                    conn.ranges = ranges;
+                    conn.x_norm_bits = bits.clone();
+                    x_norm_parts.push(bits);
+                }
                 Err(msg) => {
                     abort_all(&mut conns);
                     let _ = conn.request(&Json::obj(vec![("verb", Json::str("abort"))]));
@@ -628,8 +986,12 @@ impl ShardedFitSession {
         let x_norm_sq: f64 = x_norm_parts.iter().flatten().sum();
         let x_norm = x_norm_sq.sqrt();
 
+        let fit_id =
+            format!("fit-{}-{}", std::process::id(), NEXT_FIT_ID.fetch_add(1, Ordering::Relaxed));
         Ok(ShardedFitSession {
             cfg: cfg.clone(),
+            spec: spec.clone(),
+            fit_id,
             conns,
             factors,
             j,
@@ -637,7 +999,7 @@ impl ShardedFitSession {
             x_norm_sq,
             x_norm,
             y_norm_sq: 0.0,
-            stats: FitStats::default(),
+            stats,
             total_sw,
             prev_sse: f64::INFINITY,
             iters_done: 0,
@@ -647,33 +1009,32 @@ impl ShardedFitSession {
     }
 
     /// Fan a request out to every shard, then collect the responses in
-    /// shard order (which *is* global subject/chunk order). Any failure
-    /// aborts the surviving shards and surfaces [`ServiceError::ShardLost`]
-    /// (or the worker's own typed error).
-    fn fan(&mut self, req: &Json) -> Result<Vec<Json>, ServiceError> {
+    /// shard order (which *is* global subject/chunk order). A failure
+    /// names the shard so [`ShardedFitSession::recover`] knows which
+    /// connection to rebuild — nothing is aborted here.
+    fn fan(&mut self, req: &Json) -> Result<Vec<Json>, ShardFailure> {
         for i in 0..self.conns.len() {
             if let Err(e) = self.conns[i].send(req) {
-                abort_all(&mut self.conns);
-                return Err(e);
+                return Err(ShardFailure::new(i, e));
             }
         }
         let mut out = Vec::with_capacity(self.conns.len());
         for i in 0..self.conns.len() {
             match self.conns[i].recv() {
                 Ok(resp) => out.push(resp),
-                Err(e) => {
-                    abort_all(&mut self.conns);
-                    return Err(e);
-                }
+                Err(e) => return Err(ShardFailure::new(i, e)),
             }
         }
         Ok(out)
     }
 
     /// One ALS iteration, mirroring [`crate::parafac2::FitSession::step`]
-    /// checkpoint-for-checkpoint: cancel at entry, sweep, cancel (sweep
-    /// discarded — workers just repeat it from the unchanged factors),
-    /// then the CP step with each MTTKRP fanned out and merged.
+    /// checkpoint-for-checkpoint — plus the recovery loop: on a lost
+    /// shard the factors roll back to the iteration-boundary snapshot,
+    /// the shard is reconnected + `reattach`ed under the capped-backoff
+    /// budget, and the whole iteration replays (bitwise identical, module
+    /// docs). Only exhausted retries — or a flapping topology exceeding
+    /// the per-step incident backstop — surface `ShardLost`.
     pub fn step(&mut self) -> Result<StepOutcome, ServiceError> {
         if self.converged || self.iters_done >= self.cfg.max_iters {
             return Ok(StepOutcome::Done);
@@ -681,6 +1042,43 @@ impl ShardedFitSession {
         if self.cancel.load(Ordering::Relaxed) {
             return Ok(StepOutcome::Cancelled);
         }
+        // `run_iteration` mutates H/V/W mid-flight, so recovery must
+        // restart the iteration from this snapshot on ALL shards — the
+        // sweep outputs of the interrupted attempt are discarded exactly
+        // like the post-sweep cancel discard, and for the same reason it
+        // is bitwise-safe: workers are request-driven, all FP folds run
+        // coordinator-side.
+        let snapshot = self.factors.clone();
+        let mut incidents = 0usize;
+        loop {
+            match self.run_iteration() {
+                Ok(out) => return Ok(out),
+                Err(fail) => {
+                    incidents += 1;
+                    if incidents > MAX_RECOVERIES_PER_STEP {
+                        let msg = format!(
+                            "shard {} ({}): {} ({incidents} recovery incidents in one iteration — flapping topology)",
+                            fail.shard, self.conns[fail.shard].addr, fail.error
+                        );
+                        abort_all(&mut self.conns);
+                        return Err(ServiceError::ShardLost(msg));
+                    }
+                    self.factors = snapshot.clone();
+                    self.recover(fail)?;
+                    if self.cancel.load(Ordering::Relaxed) {
+                        return Ok(StepOutcome::Cancelled);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The body of one iteration attempt: sweep, then the CP step with
+    /// each MTTKRP fanned out and merged. Failures carry the shard index;
+    /// state mutations before a failure are all either replay-safe
+    /// (factors roll back via the caller's snapshot) or cumulative
+    /// wall-clock timings.
+    fn run_iteration(&mut self) -> Result<StepOutcome, ShardFailure> {
         let iter = self.iters_done;
         let r = self.cfg.rank;
 
@@ -704,8 +1102,7 @@ impl ShardedFitSession {
                     y_bits.extend(b);
                 }
                 _ => {
-                    abort_all(&mut self.conns);
-                    return Err(self.conns[i].lost("malformed sweep reply"));
+                    return Err(ShardFailure::new(i, self.conns[i].lost("malformed sweep reply")))
                 }
             }
         }
@@ -746,8 +1143,7 @@ impl ShardedFitSession {
             {
                 Ok(p) => m2_partials.extend(p),
                 Err(_) => {
-                    abort_all(&mut self.conns);
-                    return Err(self.conns[i].lost("malformed mode2 reply"));
+                    return Err(ShardFailure::new(i, self.conns[i].lost("malformed mode2 reply")))
                 }
             }
         }
@@ -787,7 +1183,7 @@ impl ShardedFitSession {
 
     /// Fan out a verb that ships the full current factors (this shard's
     /// `W` rows only — workers never see other shards' subjects).
-    fn fan_sweep(&mut self, verb: &'static str) -> Result<Vec<Json>, ServiceError> {
+    fn fan_sweep(&mut self, verb: &'static str) -> Result<Vec<Json>, ShardFailure> {
         let r = self.cfg.rank;
         for i in 0..self.conns.len() {
             let subjects = self.conns[i].subjects.clone();
@@ -799,18 +1195,14 @@ impl ShardedFitSession {
                 ("w", mat_to_json(&w_shard)),
             ]);
             if let Err(e) = self.conns[i].send(&req) {
-                abort_all(&mut self.conns);
-                return Err(e);
+                return Err(ShardFailure::new(i, e));
             }
         }
         let mut out = Vec::with_capacity(self.conns.len());
         for i in 0..self.conns.len() {
             match self.conns[i].recv() {
                 Ok(resp) => out.push(resp),
-                Err(e) => {
-                    abort_all(&mut self.conns);
-                    return Err(e);
-                }
+                Err(e) => return Err(ShardFailure::new(i, e)),
             }
         }
         Ok(out)
@@ -818,26 +1210,30 @@ impl ShardedFitSession {
 
     /// Concatenate per-shard `K_s×R` blocks into the global `K×R` matrix
     /// (row copy only — no arithmetic, so no merge-order seam).
-    fn concat_m3(&mut self, replies: &[Json], key: &str) -> Result<Mat, ServiceError> {
+    fn concat_m3(&self, replies: &[Json], key: &str) -> Result<Mat, ShardFailure> {
         let r = self.cfg.rank;
         let mut m3 = Mat::zeros(self.k, r);
         for (i, resp) in replies.iter().enumerate() {
             let block = match resp.get(key).map(mat_from_json) {
                 Some(Ok(b)) => b,
                 _ => {
-                    abort_all(&mut self.conns);
-                    return Err(self.conns[i].lost(&format!("malformed `{key}` block")));
+                    return Err(ShardFailure::new(
+                        i,
+                        self.conns[i].lost(&format!("malformed `{key}` block")),
+                    ))
                 }
             };
             let subjects = self.conns[i].subjects.clone();
             if block.rows() != subjects.len() || block.cols() != r {
-                abort_all(&mut self.conns);
-                return Err(self.conns[i].lost(&format!(
-                    "`{key}` block is {}×{}, expected {}×{r}",
-                    block.rows(),
-                    block.cols(),
-                    subjects.len()
-                )));
+                return Err(ShardFailure::new(
+                    i,
+                    self.conns[i].lost(&format!(
+                        "`{key}` block is {}×{}, expected {}×{r}",
+                        block.rows(),
+                        block.cols(),
+                        subjects.len()
+                    )),
+                ));
             }
             for (local, kk) in subjects.enumerate() {
                 m3.row_mut(kk).copy_from_slice(block.row(local));
@@ -846,12 +1242,96 @@ impl ShardedFitSession {
         Ok(m3)
     }
 
-    /// Final pass, mirroring [`crate::parafac2::FitSession::finish`]: the
-    /// workers refresh `Q_k` + `Y` from the fitted factors and report the
-    /// standalone mode-3 MTTKRP, post-repack norms, and their counters;
-    /// the coordinator recomputes the final SSE and assembles the model.
-    /// Valid after any number of steps, including zero or a cancellation.
-    pub fn finish(mut self) -> Result<Parafac2Model, ServiceError> {
+    /// Mid-fit recovery. The caller has already rolled `self.factors`
+    /// back to the iteration-boundary snapshot, so a reattached worker
+    /// and a surviving worker end up in the same state: planned arena,
+    /// boundary factors, next request a fresh `sweep` (or `finish`).
+    ///
+    /// 1. Resynchronize the survivors: drain the responses each still
+    ///    owes from the interrupted fan-out (a survivor that fails the
+    ///    drain joins the lost set).
+    /// 2. For every lost shard: reconnect (fresh TCP + `hello` v3) and
+    ///    `reattach`, under [`backoff_delay_ms`]'s schedule, at most
+    ///    [`ShardSpec::max_retries`] attempts per shard.
+    /// 3. Exhausted retries degrade to the legacy behaviour: best-effort
+    ///    `abort` fan-out, [`ServiceError::ShardLost`].
+    fn recover(&mut self, fail: ShardFailure) -> Result<(), ServiceError> {
+        crate::warn!(
+            "shard {} lost mid-fit ({}); attempting recovery",
+            fail.shard,
+            fail.error
+        );
+        let mut lost: Vec<usize> = vec![fail.shard];
+        for i in 0..self.conns.len() {
+            if i == fail.shard {
+                self.conns[i].inflight = 0;
+                continue;
+            }
+            while self.conns[i].inflight > 0 {
+                if self.conns[i].recv_raw().is_err() {
+                    // Died during the same incident — rebuild it too.
+                    self.conns[i].inflight = 0;
+                    lost.push(i);
+                    break;
+                }
+            }
+        }
+        for &i in &lost {
+            // Close the dead/stalled connection before reconnecting, so a
+            // worker still blocked on it gets EOF and returns to accept.
+            self.conns[i].poison();
+            let mut last = ServiceError::ShardLost(format!(
+                "shard {} ({}): lost",
+                self.conns[i].index, self.conns[i].addr
+            ));
+            let mut attempt: u32 = 0;
+            loop {
+                if attempt >= self.spec.max_retries {
+                    let msg = format!(
+                        "shard {} ({}): retries exhausted after {attempt} reconnect attempts; last error: {last}",
+                        self.conns[i].index, self.conns[i].addr
+                    );
+                    abort_all(&mut self.conns);
+                    return Err(ServiceError::ShardLost(msg));
+                }
+                if attempt > 0 {
+                    std::thread::sleep(Duration::from_millis(backoff_delay_ms(
+                        self.spec.backoff_ms,
+                        attempt - 1,
+                    )));
+                }
+                attempt += 1;
+                self.stats.shard_retries += 1;
+                match reattach_shard(
+                    &mut self.conns[i],
+                    &self.spec,
+                    &self.factors,
+                    &self.fit_id,
+                    self.iters_done,
+                    self.j,
+                ) {
+                    Ok(()) => {
+                        self.stats.shard_reconnects += 1;
+                        crate::warn!(
+                            "shard {} reattached on attempt {attempt}; replaying iteration {}",
+                            i,
+                            self.iters_done
+                        );
+                        break;
+                    }
+                    Err(e) => last = e,
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One finish attempt: fan `finish`, parse every reply. Like
+    /// [`ShardedFitSession::run_iteration`] this mutates nothing the
+    /// recovery replay can't redo — `finish` is a pure function of the
+    /// fitted factors on every worker.
+    #[allow(clippy::type_complexity)]
+    fn run_finish(&mut self) -> Result<(Vec<Mat>, Vec<f64>, Mat, [u64; 4]), ShardFailure> {
         let replies = self.fan_sweep("finish")?;
         let mut qs: Vec<Mat> = Vec::with_capacity(self.k);
         let mut y_bits: Vec<f64> = Vec::with_capacity(self.k);
@@ -860,15 +1340,19 @@ impl ShardedFitSession {
             match parse_finish_reply(resp) {
                 Ok((q, bits)) => {
                     if q.len() != self.conns[i].subjects.len() {
-                        abort_all(&mut self.conns);
-                        return Err(self.conns[i].lost("finish reply Q count mismatch"));
+                        return Err(ShardFailure::new(
+                            i,
+                            self.conns[i].lost("finish reply Q count mismatch"),
+                        ));
                     }
                     qs.extend(q);
                     y_bits.extend(bits);
                 }
                 Err(_) => {
-                    abort_all(&mut self.conns);
-                    return Err(self.conns[i].lost("malformed finish reply"));
+                    return Err(ShardFailure::new(
+                        i,
+                        self.conns[i].lost("malformed finish reply"),
+                    ))
                 }
             }
             let counter = |k: &str| resp.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
@@ -877,8 +1361,37 @@ impl ShardedFitSession {
             xtrav += counter("x_traversals");
             heap += counter("heap_bytes");
         }
-        self.y_norm_sq = y_bits.iter().sum();
         let m3 = self.concat_m3(&replies, "m3")?;
+        Ok((qs, y_bits, m3, [yv, trav, xtrav, heap]))
+    }
+
+    /// Final pass, mirroring [`crate::parafac2::FitSession::finish`]: the
+    /// workers refresh `Q_k` + `Y` from the fitted factors and report the
+    /// standalone mode-3 MTTKRP, post-repack norms, and their counters;
+    /// the coordinator recomputes the final SSE and assembles the model.
+    /// Valid after any number of steps, including zero or a cancellation.
+    /// Worker losses recover exactly like `step`'s (`finish` does not
+    /// mutate the factors, so the replay needs no rollback).
+    pub fn finish(mut self) -> Result<Parafac2Model, ServiceError> {
+        let mut incidents = 0usize;
+        let (qs, y_bits, m3, [yv, trav, xtrav, heap]) = loop {
+            match self.run_finish() {
+                Ok(parts) => break parts,
+                Err(fail) => {
+                    incidents += 1;
+                    if incidents > MAX_RECOVERIES_PER_STEP {
+                        let msg = format!(
+                            "shard {} ({}): {} ({incidents} recovery incidents in one finish pass — flapping topology)",
+                            fail.shard, self.conns[fail.shard].addr, fail.error
+                        );
+                        abort_all(&mut self.conns);
+                        return Err(ServiceError::ShardLost(msg));
+                    }
+                    self.recover(fail)?;
+                }
+            }
+        };
+        self.y_norm_sq = y_bits.iter().sum();
         let final_res = residual_stats(&m3, &self.factors, self.y_norm_sq);
         let final_sse = sse_from_parts(self.x_norm_sq, self.y_norm_sq, final_res.y_residual_sq);
 
@@ -920,6 +1433,13 @@ impl ShardedFitSession {
         self.converged
     }
 
+    /// Recovery counters so far: (successful re-attaches, reconnect
+    /// attempts) — the same values `finish` publishes in
+    /// [`FitStats::shard_reconnects`]/[`FitStats::shard_retries`].
+    pub fn recovery_counters(&self) -> (u64, u64) {
+        (self.stats.shard_reconnects, self.stats.shard_retries)
+    }
+
     /// The session's cancel flag; setting it stops the fit within one ALS
     /// iteration (and the workers with it — they are request-driven).
     pub fn cancel_flag(&self) -> Arc<AtomicBool> {
@@ -937,7 +1457,7 @@ fn connect_shard(
         ServiceError::ShardLost(format!("shard {index} ({addr}): connect failed: {e}"))
     })?;
     stream
-        .set_read_timeout(Some(Duration::from_secs(spec.read_timeout_secs.max(1))))
+        .set_read_timeout(Some(spec.read_timeout()))
         .map_err(|e| ServiceError::Io(e.to_string()))?;
     let reader = BufReader::new(
         stream.try_clone().map_err(|e| ServiceError::Io(e.to_string()))?,
@@ -946,6 +1466,9 @@ fn connect_shard(
         index,
         addr: addr.to_string(),
         subjects,
+        ranges: Vec::new(),
+        x_norm_bits: Vec::new(),
+        inflight: 0,
         reader,
         writer: BufWriter::new(stream),
     };
@@ -970,8 +1493,81 @@ fn connect_shard(
     }
 }
 
-/// Validate a `plan` reply against the coordinator's own view of the
-/// dataset and pull out the per-slice ‖X_k‖² bits.
+/// Initial connect + `hello` under the same capped-backoff budget as
+/// mid-fit recovery — a connect-refused at startup (worker still coming
+/// up) is retried, not fatal. Retry attempts are tallied into
+/// `stats.shard_retries`.
+fn connect_with_retry(
+    index: usize,
+    addr: &str,
+    subjects: Range<usize>,
+    spec: &ShardSpec,
+    stats: &mut FitStats,
+) -> Result<ShardConn, ServiceError> {
+    let mut attempt: u32 = 0;
+    loop {
+        match connect_shard(index, addr, subjects.clone(), spec) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                attempt += 1;
+                if attempt > spec.max_retries {
+                    return Err(e);
+                }
+                stats.shard_retries += 1;
+                std::thread::sleep(Duration::from_millis(backoff_delay_ms(
+                    spec.backoff_ms,
+                    attempt - 1,
+                )));
+            }
+        }
+    }
+}
+
+/// Rebuild one lost shard connection: fresh TCP + `hello`, then a
+/// `reattach` carrying the plan fields and the frozen boundary factors.
+/// The worker replies with the same payload as `plan`; the coordinator
+/// insists the re-packed ‖X_k‖² bits match the originals bit-for-bit —
+/// same file, same range, same arena — before trusting the shard again.
+fn reattach_shard(
+    conn: &mut ShardConn,
+    spec: &ShardSpec,
+    factors: &CpFactors,
+    fit_id: &str,
+    iter: usize,
+    j: usize,
+) -> Result<(), ServiceError> {
+    let r = factors.h.cols();
+    let mut fresh = connect_shard(conn.index, &conn.addr, conn.subjects.clone(), spec)?;
+    fresh.ranges = conn.ranges.clone();
+    fresh.x_norm_bits = conn.x_norm_bits.clone();
+    let payload = ReattachPayload {
+        fit_id: fit_id.to_string(),
+        iter: iter as u64,
+        path: spec.path.clone(),
+        lo: conn.subjects.start,
+        hi: conn.subjects.end,
+        ranges: conn.ranges.clone(),
+        h: factors.h.clone(),
+        v: factors.v.clone(),
+        w: factors.w.block(conn.subjects.start, conn.subjects.end, 0, r),
+    };
+    let resp = fresh.request(&reattach_to_json(&payload))?;
+    let bits =
+        parse_plan_reply(&resp, conn.subjects.len(), j, &spec.path).map_err(|m| fresh.lost(&m))?;
+    if bits.len() != conn.x_norm_bits.len()
+        || bits.iter().zip(&conn.x_norm_bits).any(|(a, b)| a.to_bits() != b.to_bits())
+    {
+        return Err(fresh.lost(
+            "reattach re-packed a different arena (‖X_k‖² bits diverge) — \
+             did the dataset file change mid-fit?",
+        ));
+    }
+    *conn = fresh;
+    Ok(())
+}
+
+/// Validate a `plan`/`reattach` reply against the coordinator's own view
+/// of the dataset and pull out the per-slice ‖X_k‖² bits.
 fn parse_plan_reply(
     resp: &Json,
     expect_k: usize,
@@ -1024,10 +1620,76 @@ mod tests {
     use super::*;
 
     #[test]
-    fn shard_spec_defaults_timeout() {
+    fn shard_spec_defaults_timeout_and_retry_policy() {
         let spec = ShardSpec::new(vec!["127.0.0.1:1".into()], "data.spt");
         assert_eq!(spec.read_timeout_secs, DEFAULT_READ_TIMEOUT_SECS);
+        assert_eq!(spec.max_retries, DEFAULT_SHARD_RETRIES);
+        assert_eq!(spec.backoff_ms, DEFAULT_BACKOFF_MS);
         assert_eq!(spec.path, "data.spt");
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn shard_spec_from_list_parses_and_rejects_edge_cases() {
+        // Whitespace and empty entries are tolerated; order is preserved.
+        let spec = ShardSpec::from_list(" a:1 , b:2 ,, c:3 ", "d.spt").unwrap();
+        assert_eq!(spec.addrs, vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(spec.path, "d.spt");
+        // Zero shards: an empty list (or one that trims away) is an error.
+        assert!(ShardSpec::from_list("", "d.spt").unwrap_err().contains("no shard addresses"));
+        assert!(ShardSpec::from_list(" , ,", "d.spt").unwrap_err().contains("no shard addresses"));
+        // Duplicate addresses are rejected — two shards on one worker
+        // would fight over its single per-connection fit state.
+        let err = ShardSpec::from_list("a:1,b:2,a:1", "d.spt").unwrap_err();
+        assert!(err.contains("duplicate shard address `a:1`"), "{err}");
+    }
+
+    #[test]
+    fn shard_spec_read_timeout_clamps_zero_to_one_second() {
+        let mut spec = ShardSpec::new(vec!["a:1".into()], "d.spt");
+        spec.read_timeout_secs = 0;
+        // 0 would mean "no timeout" at the socket layer — clamp, never
+        // disable.
+        assert_eq!(spec.read_timeout(), Duration::from_secs(1));
+        spec.read_timeout_secs = 7;
+        assert_eq!(spec.read_timeout(), Duration::from_secs(7));
+    }
+
+    #[test]
+    fn backoff_schedule_is_monotone_capped_and_deterministic() {
+        let mut prev = 0;
+        for attempt in 0..80 {
+            let d = backoff_delay_ms(DEFAULT_BACKOFF_MS, attempt);
+            assert!(d >= prev, "attempt {attempt} shrank the delay");
+            assert!(d <= BACKOFF_CAP_MS);
+            assert_eq!(d, backoff_delay_ms(DEFAULT_BACKOFF_MS, attempt));
+            prev = d;
+        }
+        assert_eq!(backoff_delay_ms(200, 0), 200);
+        assert_eq!(backoff_delay_ms(200, 1), 400);
+        assert_eq!(backoff_delay_ms(200, 10), BACKOFF_CAP_MS);
+        // A zero base must still make progress (and stay capped).
+        assert_eq!(backoff_delay_ms(0, 0), 1);
+        assert!(backoff_delay_ms(0, 70) <= BACKOFF_CAP_MS);
+    }
+
+    #[test]
+    fn fault_plan_parses_the_documented_grammar() {
+        assert_eq!(
+            FaultPlan::parse("drop-after:5").unwrap(),
+            FaultPlan { kind: FaultKind::Drop, after: 5 }
+        );
+        assert_eq!(
+            FaultPlan::parse("stall-after:3:1500").unwrap(),
+            FaultPlan { kind: FaultKind::Stall(1500), after: 3 }
+        );
+        assert_eq!(
+            FaultPlan::parse("exit-after:0").unwrap(),
+            FaultPlan { kind: FaultKind::Exit, after: 0 }
+        );
+        for bad in ["", "nope", "drop-after", "drop-after:x", "drop-after:1:2", "stall-after:1"] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
     }
 
     #[test]
@@ -1112,5 +1774,95 @@ mod tests {
             Err(ServiceError::Invalid(msg)) => assert!(msg.contains("chunks")),
             other => panic!("expected Invalid, got {:?}", other.map(|_| ())),
         }
+    }
+
+    /// Regression (PR 9): a half-written NDJSON request at EOF used to be
+    /// dispatched and answered with a `protocol` error; it must be
+    /// classified as connection loss — no response bytes, connection
+    /// dropped, worker alive for the coordinator's retry path.
+    #[test]
+    fn half_written_request_line_is_connection_loss_not_protocol_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut fault = None;
+            let mut served = 0u64;
+            serve_coordinator(stream, 1, &mut fault, &mut served)
+        });
+        let client = TcpStream::connect(addr).unwrap();
+        let mut writer = BufWriter::new(client.try_clone().unwrap());
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        // A complete request first — the worker answers it…
+        writer.write_all(b"{\"verb\":\"ping\"}\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("spartan-shard"), "{line:?}");
+        // …then a torn frame: half a request, no newline, then "death".
+        writer.write_all(b"{\"verb\":\"pi").unwrap();
+        writer.flush().unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut rest = String::new();
+        reader.read_line(&mut rest).unwrap();
+        assert_eq!(rest, "", "worker answered a truncated line: {rest:?}");
+        assert!(server.join().unwrap(), "worker must stay up for the next coordinator");
+    }
+
+    /// `reattach` rebuilds worker state through the exact `plan` packing
+    /// machinery and restores the frozen `W` rows at the iteration
+    /// boundary (swept/mode2 phase flags cleared — the coordinator
+    /// replays the iteration from the top).
+    #[test]
+    fn reattach_rebuilds_worker_state_like_plan() {
+        use crate::datagen::synthetic::{generate, SyntheticSpec};
+        use crate::util::rng::Pcg64;
+        let data = generate(&SyntheticSpec {
+            k: 6,
+            j: 5,
+            max_i_k: 4,
+            target_nnz: 80,
+            rank: 2,
+            noise: 0.0,
+            seed: 9,
+        })
+        .tensor;
+        let dir = std::env::temp_dir().join(format!("spartan_reattach_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("reattach.spt");
+        crate::sparse::io::save_binary(&data, &path).unwrap();
+
+        let mut rng = Pcg64::seed(77);
+        let payload = ReattachPayload {
+            fit_id: "fit-test-0".into(),
+            iter: 2,
+            path: path.to_string_lossy().into_owned(),
+            lo: 0,
+            hi: 6,
+            ranges: vec![(0, 6)],
+            h: Mat::rand_normal(2, 2, &mut rng),
+            v: Mat::rand_normal(5, 2, &mut rng),
+            w: Mat::rand_normal(6, 2, &mut rng),
+        };
+        let line = reattach_to_json(&payload).to_string();
+        let mut state: Option<WorkerFit> = None;
+        let (resp, quit) = dispatch_worker(&mut state, 1, &line);
+        assert!(!quit);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        assert_eq!(resp.get("k").and_then(Json::as_usize), Some(6));
+        assert_eq!(resp.get("j").and_then(Json::as_usize), Some(5));
+        assert_eq!(resp.get("fit_id").and_then(Json::as_str), Some("fit-test-0"));
+        assert_eq!(resp.get("iter").and_then(Json::as_usize), Some(2));
+        let st = state.as_ref().unwrap();
+        assert!(!st.swept && !st.mode2_done);
+        assert_eq!(st.w.rows(), 6);
+        assert_eq!(st.w.data(), payload.w.data());
+        // Mismatched factor shapes are rejected before state is adopted.
+        let mut bad = payload.clone();
+        bad.w = Mat::rand_normal(4, 2, &mut rng);
+        let (resp, _) = dispatch_worker(&mut state, 1, &reattach_to_json(&bad).to_string());
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("invalid"));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
     }
 }

@@ -321,3 +321,98 @@ fn prop_procrustes_optimality() {
         assert!(obj(&q) <= obj(&cand) + 1e-8, "seed {seed}");
     }
 }
+
+/// Property: the shard-reconnect backoff schedule is monotone
+/// non-decreasing in the attempt number, never exceeds the cap, always
+/// positive (progress even for a 0ms base), and deterministic — the same
+/// (base, attempt) pair always yields the same delay, so a recovery's
+/// timing is reproducible from its inputs.
+#[test]
+fn prop_backoff_schedule_monotone_capped_deterministic() {
+    use spartan::service::shard::{backoff_delay_ms, BACKOFF_CAP_MS};
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(8000 + seed);
+        let base = rng.range(0, 10_000) as u64;
+        let mut prev = 0u64;
+        for attempt in 0..100u32 {
+            let d = backoff_delay_ms(base, attempt);
+            assert!(d >= 1, "seed {seed}: base {base} attempt {attempt} made no progress");
+            assert!(d <= BACKOFF_CAP_MS, "seed {seed}: base {base} attempt {attempt} over cap");
+            assert!(d >= prev, "seed {seed}: base {base} attempt {attempt} shrank");
+            assert_eq!(
+                d,
+                backoff_delay_ms(base, attempt),
+                "seed {seed}: nondeterministic delay"
+            );
+            prev = d;
+        }
+        // First delay is the (clamped) base itself, capped.
+        assert_eq!(backoff_delay_ms(base, 0), base.max(1).min(BACKOFF_CAP_MS), "seed {seed}");
+    }
+}
+
+/// Property: the `reattach` wire codec round-trips bitwise — every f64 in
+/// the frozen H/V/W survives encode → NDJSON text → parse → decode with
+/// identical bits (the recovery path's bitwise-identity claim starts
+/// here), and the plan fields (fit id, iteration, path, subject range,
+/// chunk ranges) survive exactly, including escape-worthy characters.
+#[test]
+fn prop_reattach_roundtrip_bitwise() {
+    use spartan::service::protocol::{reattach_from_json, reattach_to_json, ReattachPayload};
+    use spartan::util::json;
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(9000 + seed);
+        let r = rng.range(1, 5);
+        let j = rng.range(r, r + 9);
+        let k = rng.range(1, 12);
+        let lo = rng.range(0, 50);
+        let hi = lo + k;
+        // Chunk ranges tiling 0..k, split at random boundaries.
+        let mut ranges = Vec::new();
+        let mut start = 0;
+        while start < k {
+            let end = (start + rng.range(1, 4)).min(k);
+            ranges.push((start, end));
+            start = end;
+        }
+        let mut h = Mat::rand_normal(r, r, &mut rng);
+        // Seed values a float-text codec would mangle: signed zero, a
+        // denormal, a non-terminating binary fraction.
+        h[(0, 0)] = -0.0;
+        if r > 1 {
+            h[(1, 1)] = 5e-324;
+            h[(0, 1)] = 0.1 + 0.2;
+        }
+        let p = ReattachPayload {
+            fit_id: format!("fit-{}-{seed}", rng.range(0, 1_000_000)),
+            iter: rng.range(0, 10_000) as u64,
+            // Escape-worthy path characters must survive the JSON layer.
+            path: format!("/tmp/\"data\\{seed}\"/run {seed}.spt"),
+            lo,
+            hi,
+            ranges,
+            h,
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_normal(k, r, &mut rng),
+        };
+        let text = reattach_to_json(&p).to_string();
+        let back = reattach_from_json(&json::parse(&text).unwrap_or_else(|e| {
+            panic!("seed {seed}: reattach JSON failed to parse: {e}")
+        }))
+        .unwrap_or_else(|e| panic!("seed {seed}: reattach decode failed: {e}"));
+        assert_eq!(back.fit_id, p.fit_id, "seed {seed}");
+        assert_eq!(back.iter, p.iter, "seed {seed}");
+        assert_eq!(back.path, p.path, "seed {seed}");
+        assert_eq!(back.lo, p.lo, "seed {seed}");
+        assert_eq!(back.hi, p.hi, "seed {seed}");
+        assert_eq!(back.ranges, p.ranges, "seed {seed}");
+        for (name, a, b) in
+            [("h", &p.h, &back.h), ("v", &p.v, &back.v), ("w", &p.w, &back.w)]
+        {
+            assert_eq!(a.shape(), b.shape(), "seed {seed} {name}");
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} {name} bits");
+            }
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! Fault-injection suite for the sharded fit (ISSUE 9).
+//!
+//! Each scenario wounds a shard worker mid-fit — dropped connection,
+//! stall past the read timeout, or a hard process exit — and asserts the
+//! coordinator recovers through the retry/`reattach` path with a
+//! trajectory **bitwise identical** to an uninterrupted local fit of the
+//! same config. The retries-exhausted scenario asserts the structured
+//! `shard_lost` abort instead: a prompt error (no hung coordinator) and a
+//! survivor that keeps serving.
+//!
+//! Workers are the real `spartan shard-worker` binary; faults are armed
+//! through the `SPARTAN_FAULT` environment variable (`service::shard`
+//! docs), except the flaky-proxy scenario which wounds the wire itself
+//! from an in-process TCP forwarder.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use spartan::datagen::synthetic::{generate, SyntheticSpec};
+use spartan::linalg::Mat;
+use spartan::parafac2::als::{fit_parafac2, Parafac2Config, StepOutcome};
+use spartan::parafac2::Parafac2Model;
+use spartan::service::shard::{ShardSpec, ShardedFitSession};
+use spartan::service::ServiceError;
+use spartan::sparse::IrregularTensor;
+
+fn spartan() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_spartan"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("spartan_fault_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn parse_announce(line: &str) -> String {
+    // "spartan shard-worker: listening on 127.0.0.1:PORT (workers N)"
+    line.split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unparseable announce line: {line:?}"))
+        .to_string()
+}
+
+/// A shard-worker child process; killed on drop so a panicking test never
+/// leaks processes.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Worker {
+    /// Spawn on an ephemeral port with an optional `SPARTAN_FAULT` plan.
+    fn start(fault: Option<&str>) -> Worker {
+        Worker::start_at("127.0.0.1:0", fault)
+    }
+
+    /// Spawn on a specific address (respawn-on-same-port path). Retries
+    /// briefly: right after a worker dies, the OS may not have released
+    /// the port to a fresh `bind` yet.
+    fn start_at(addr: &str, fault: Option<&str>) -> Worker {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let mut cmd = spartan();
+            cmd.args(["shard-worker", "--addr", addr, "--workers", "1"])
+                .stdout(Stdio::piped());
+            if let Some(f) = fault {
+                cmd.env("SPARTAN_FAULT", f);
+            }
+            let mut child = cmd.spawn().expect("spawning shard worker");
+            let mut line = String::new();
+            let mut out = BufReader::new(child.stdout.take().expect("worker stdout"));
+            out.read_line(&mut line).expect("reading worker announce");
+            if line.contains("listening on ") {
+                let addr = parse_announce(&line);
+                child.stdout = Some(out.into_inner());
+                return Worker { child, addr };
+            }
+            // Bind failed (empty/short read: the process exited) — retry.
+            let _ = child.kill();
+            let _ = child.wait();
+            assert!(Instant::now() < deadline, "worker never bound {addr}");
+            thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    /// Wait for the worker to exit on its own (the `exit-after` fault)
+    /// and return its status without killing it.
+    fn wait_exit(mut self) -> std::process::ExitStatus {
+        let status = self.child.wait().expect("waiting for worker exit");
+        std::mem::forget(self);
+        status
+    }
+
+    fn stop(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The shared scenario fixture: one synthetic tensor (K=80 ⇒ two global
+/// chunks, so a two-worker topology gets one chunk each), saved to disk
+/// for the workers, plus the uninterrupted local reference fit.
+struct Fixture {
+    dir: PathBuf,
+    path: PathBuf,
+    tensor: IrregularTensor,
+    cfg: Parafac2Config,
+    local: Parafac2Model,
+}
+
+impl Fixture {
+    fn new(name: &str, data_seed: u64) -> Fixture {
+        let spec = SyntheticSpec {
+            k: 80,
+            j: 12,
+            max_i_k: 6,
+            target_nnz: 4000,
+            rank: 3,
+            noise: 0.05,
+            seed: data_seed,
+        };
+        let tensor = generate(&spec).tensor;
+        let dir = tmpdir(name);
+        let path = dir.join("data.spt");
+        spartan::sparse::io::save_binary(&tensor, &path).expect("saving tensor");
+        let cfg = Parafac2Config {
+            rank: 3,
+            max_iters: 4,
+            tol: 0.0, // run all 4 iterations: deterministic response schedule
+            seed: 11,
+            workers: 1,
+            ..Parafac2Config::default()
+        };
+        let local = fit_parafac2(&tensor, &cfg).expect("local reference fit");
+        Fixture { dir, path, tensor, cfg, local }
+    }
+
+    fn spec(&self, addrs: Vec<String>) -> ShardSpec {
+        ShardSpec::new(addrs, self.path.to_string_lossy().into_owned())
+    }
+
+    fn cleanup(self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Drive a sharded session to completion and hand back the model.
+fn drive(mut session: ShardedFitSession) -> Parafac2Model {
+    loop {
+        match session.step().expect("sharded step") {
+            StepOutcome::Iterated(_) => {}
+            StepOutcome::Done => break,
+            StepOutcome::Cancelled => panic!("unexpected cancellation"),
+        }
+    }
+    session.finish().expect("sharded finish")
+}
+
+fn assert_mat_bits(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data().iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x:e} != {y:e}");
+    }
+}
+
+/// The acceptance bar: factors, orthonormal bases, SSE, and the whole
+/// per-iteration fit history must match the local fit **bitwise**.
+fn assert_models_bitwise(sharded: &Parafac2Model, local: &Parafac2Model) {
+    assert_mat_bits(&sharded.h, &local.h, "H");
+    assert_mat_bits(&sharded.v, &local.v, "V");
+    assert_mat_bits(&sharded.w, &local.w, "W");
+    assert_eq!(sharded.q.len(), local.q.len(), "Q count");
+    for (k, (a, b)) in sharded.q.iter().zip(local.q.iter()).enumerate() {
+        assert_mat_bits(a, b, &format!("Q[{k}]"));
+    }
+    assert_eq!(sharded.stats.iterations, local.stats.iterations, "iterations");
+    assert_eq!(
+        sharded.stats.final_sse.to_bits(),
+        local.stats.final_sse.to_bits(),
+        "final_sse: {:e} != {:e}",
+        sharded.stats.final_sse,
+        local.stats.final_sse
+    );
+    assert_eq!(
+        sharded.stats.final_fit.to_bits(),
+        local.stats.final_fit.to_bits(),
+        "final_fit"
+    );
+    assert_eq!(
+        sharded.stats.fit_history.len(),
+        local.stats.fit_history.len(),
+        "fit_history length"
+    );
+    for (i, (a, b)) in sharded
+        .stats
+        .fit_history
+        .iter()
+        .zip(local.stats.fit_history.iter())
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "fit_history[{i}]: {a:e} != {b:e}");
+    }
+}
+
+/// Response schedule per worker connection (max_iters=4, tol=0):
+///   1 hello · 2 plan · 3-5 iter1 · 6-8 iter2 · 9-11 iter3 · 12-14 iter4
+///   · 15 finish.
+///
+/// Scenario: worker 1 drops its connection right after the 7th response
+/// (mode2 of iteration 2). The coordinator must roll back, drain the
+/// survivor, reconnect + `reattach`, replay iteration 2, and still land
+/// bitwise on the local trajectory — with the recovery visible in
+/// `FitStats.shard_reconnects` end-to-end.
+#[test]
+fn drop_after_n_responses_recovers_bitwise() {
+    let fx = Fixture::new("drop", 7);
+    let w1 = Worker::start(Some("drop-after:7"));
+    let w2 = Worker::start(None);
+
+    let mut spec = fx.spec(vec![w1.addr.clone(), w2.addr.clone()]);
+    spec.max_retries = 5;
+    spec.backoff_ms = 50;
+    let session =
+        ShardedFitSession::new(fx.tensor.clone(), &fx.cfg, &spec, None).expect("connect");
+    let model = drive(session);
+
+    assert_models_bitwise(&model, &fx.local);
+    assert_eq!(
+        model.stats.shard_reconnects, 1,
+        "exactly one recovery expected, got stats {:?}",
+        (model.stats.shard_reconnects, model.stats.shard_retries)
+    );
+    assert!(model.stats.shard_retries >= 1, "retries feed reconnects");
+
+    w1.stop();
+    w2.stop();
+    fx.cleanup();
+}
+
+/// Scenario: worker 1 stalls for 2.5 s before its 5th response (mode3 of
+/// iteration 1) while the coordinator's read timeout is 1 s. The timeout
+/// must be classified as a connection loss; recovery tears down the old
+/// socket (so the stalled worker unblocks into its accept loop), then
+/// re-attaches and replays iteration 1.
+#[test]
+fn stall_past_timeout_recovers_bitwise() {
+    let fx = Fixture::new("stall", 8);
+    let w1 = Worker::start(Some("stall-after:4:2500"));
+    let w2 = Worker::start(None);
+
+    let mut spec = fx.spec(vec![w1.addr.clone(), w2.addr.clone()]);
+    spec.read_timeout_secs = 1;
+    spec.max_retries = 8;
+    spec.backoff_ms = 100;
+    let session =
+        ShardedFitSession::new(fx.tensor.clone(), &fx.cfg, &spec, None).expect("connect");
+    let model = drive(session);
+
+    assert_models_bitwise(&model, &fx.local);
+    assert_eq!(model.stats.shard_reconnects, 1, "one recovery after the stall");
+
+    w1.stop();
+    w2.stop();
+    fx.cleanup();
+}
+
+/// Scenario: worker 1 exits the whole process (`exit-after:6`, i.e. right
+/// after the sweep response of iteration 2). The test observes the exit
+/// (status 17), respawns a worker on the *same* address while the
+/// coordinator is inside its backoff loop, and the fit must re-attach to
+/// the fresh process and finish bitwise-identical.
+#[test]
+fn exit_mid_iteration_reattaches_to_respawned_worker() {
+    let fx = Fixture::new("exit", 9);
+    let w1 = Worker::start(Some("exit-after:6"));
+    let w2 = Worker::start(None);
+    let w1_addr = w1.addr.clone();
+
+    let mut spec = fx.spec(vec![w1_addr.clone(), w2.addr.clone()]);
+    spec.max_retries = 10;
+    spec.backoff_ms = 100;
+    let cfg = fx.cfg.clone();
+    let tensor = fx.tensor.clone();
+    let fitter = thread::spawn(move || {
+        let session = ShardedFitSession::new(tensor, &cfg, &spec, None).expect("connect");
+        drive(session)
+    });
+
+    // The fault kills the worker a few requests into the fit; respawn it
+    // on the same port while the coordinator retries.
+    let status = w1.wait_exit();
+    assert_eq!(status.code(), Some(17), "exit-after fault exits with code 17");
+    let w1b = Worker::start_at(&w1_addr, None);
+
+    let model = fitter.join().expect("fit thread");
+    assert_models_bitwise(&model, &fx.local);
+    assert_eq!(model.stats.shard_reconnects, 1, "one re-attach to the respawn");
+
+    w1b.stop();
+    w2.stop();
+    fx.cleanup();
+}
+
+/// An in-process flaky TCP proxy: forwards client⇄upstream byte streams,
+/// but the first time `kill_after_lines` response lines have crossed in
+/// the upstream→client direction it severs both sockets. Later
+/// connections forward cleanly. Returns the listen address.
+fn flaky_proxy(upstream: String, kill_after_lines: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("proxy bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let armed = Arc::new(AtomicBool::new(true));
+    thread::spawn(move || {
+        for client in listener.incoming() {
+            let client = match client {
+                Ok(c) => c,
+                Err(_) => break,
+            };
+            let upstream = match TcpStream::connect(&upstream) {
+                Ok(u) => u,
+                Err(_) => continue,
+            };
+            let c_in = client.try_clone().expect("clone client");
+            let u_out = upstream.try_clone().expect("clone upstream");
+            // client → upstream: plain byte copy.
+            thread::spawn(move || {
+                let _ = std::io::copy(&mut &c_in, &mut &u_out);
+                let _ = u_out.shutdown(Shutdown::Write);
+            });
+            // upstream → client: count response lines; sever once.
+            let armed = Arc::clone(&armed);
+            thread::spawn(move || {
+                let mut reader = BufReader::new(upstream);
+                let mut writer = client;
+                let mut lines = 0usize;
+                let mut buf = String::new();
+                loop {
+                    buf.clear();
+                    match reader.read_line(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                    if writer.write_all(buf.as_bytes()).is_err() || writer.flush().is_err() {
+                        break;
+                    }
+                    lines += 1;
+                    if lines >= kill_after_lines && armed.swap(false, Ordering::SeqCst) {
+                        let _ = writer.shutdown(Shutdown::Both);
+                        let _ = reader.get_ref().shutdown(Shutdown::Both);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+/// Scenario: the worker itself is healthy, but the wire is not — a flaky
+/// proxy between coordinator and worker severs the first connection after
+/// 5 response lines (right after mode3 of iteration 1). The reconnect
+/// runs through the same proxy (now clean) back to the same live worker,
+/// which must drop its stale per-fit state and re-pack via `reattach`.
+#[test]
+fn flaky_proxy_severed_connection_recovers_bitwise() {
+    let fx = Fixture::new("proxy", 10);
+    let w1 = Worker::start(None);
+    let proxy_addr = flaky_proxy(w1.addr.clone(), 5);
+
+    let mut spec = fx.spec(vec![proxy_addr]);
+    spec.max_retries = 5;
+    spec.backoff_ms = 50;
+    let session =
+        ShardedFitSession::new(fx.tensor.clone(), &fx.cfg, &spec, None).expect("connect");
+    let model = drive(session);
+
+    assert_models_bitwise(&model, &fx.local);
+    assert_eq!(model.stats.shard_reconnects, 1, "one recovery through the proxy");
+
+    w1.stop();
+    fx.cleanup();
+}
+
+/// Scenario: worker 2 dies permanently (`exit-after:4`, no respawn) under
+/// a small retry budget. The fit must fail *promptly* with the structured
+/// `shard_lost` error — retries exhausted, no hung coordinator — and the
+/// abort must fan out cleanly: the survivor serves a fresh, bitwise-exact
+/// fit immediately afterwards.
+#[test]
+fn retries_exhausted_aborts_with_structured_shard_lost() {
+    let fx = Fixture::new("exhausted", 11);
+    let w1 = Worker::start(None);
+    let w2 = Worker::start(Some("exit-after:4"));
+
+    let mut spec = fx.spec(vec![w1.addr.clone(), w2.addr.clone()]);
+    spec.max_retries = 2;
+    spec.backoff_ms = 50;
+    let start = Instant::now();
+    let mut session =
+        ShardedFitSession::new(fx.tensor.clone(), &fx.cfg, &spec, None).expect("connect");
+    let err = loop {
+        match session.step() {
+            Ok(StepOutcome::Iterated(_)) => {}
+            Ok(StepOutcome::Done) => panic!("fit completed despite a dead shard"),
+            Ok(StepOutcome::Cancelled) => panic!("unexpected cancellation"),
+            Err(e) => break e,
+        }
+    };
+    let elapsed = start.elapsed();
+
+    assert!(
+        matches!(err, ServiceError::ShardLost(_)),
+        "expected ShardLost, got: {err}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("shard lost"), "structured prefix, got: {msg}");
+    assert!(
+        msg.contains("retries exhausted"),
+        "message names the exhausted budget, got: {msg}"
+    );
+    // 2 retries × (≤5 s backoff cap + connect) — far under this bound; a
+    // hang here is the regression this asserts against.
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "abort must be prompt, took {elapsed:?}"
+    );
+    let (reconnects, retries) = session.recovery_counters();
+    assert_eq!(reconnects, 0, "no reconnect ever succeeded");
+    assert_eq!(retries, 2, "exactly the configured retry budget was spent");
+    drop(session);
+
+    // Clean abort fan-out: the survivor must still serve a full fit.
+    let solo = fx.spec(vec![w1.addr.clone()]);
+    let session =
+        ShardedFitSession::new(fx.tensor.clone(), &fx.cfg, &solo, None).expect("reconnect");
+    let model = drive(session);
+    assert_models_bitwise(&model, &fx.local);
+    assert_eq!(model.stats.shard_reconnects, 0, "clean fit needs no recovery");
+
+    w1.stop();
+    w2.stop();
+    fx.cleanup();
+}
