@@ -3,6 +3,7 @@
 //! Subcommands:
 //! * `generate`        synthesize a dataset (synthetic | ehr | movielens)
 //! * `decompose`       fit PARAFAC2 (native SPARTan | baseline | pjrt)
+//! * `resume`          continue a checkpointed fit after a crash, bitwise
 //! * `phenotype`       fit + emit Table-4/Fig-8 style phenotyping reports
 //! * `inspect`         print dataset summary statistics
 //! * `artifacts-check` validate + smoke-execute the AOT artifacts
@@ -49,6 +50,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("generate") => cmd_generate(args),
         Some("decompose") => cmd_decompose(args),
+        Some("resume") => cmd_resume(args),
         Some("compare") => cmd_compare(args),
         Some("phenotype") => cmd_phenotype(args),
         Some("inspect") => cmd_inspect(args),
@@ -86,12 +88,28 @@ USAGE: spartan <subcommand> [options]
            [--kernel scalar|blocked|avx2|avx512|neon]
            [--shards host:port,host:port,...]
            [--shard-retries N] [--shard-backoff-ms MS]
+           [--checkpoint FILE] [--checkpoint-every N] [--resume-from FILE]
            (--shards runs the fit as a coordinator over `shard-worker`
             processes — bitwise identical to the local fit; FILE must be
             readable by every worker. A lost worker is reconnected and
             re-attached mid-fit under --shard-retries attempts per
             incident with capped exponential backoff starting at
-            --shard-backoff-ms; retries exhausted → shard_lost abort)
+            --shard-backoff-ms; retries exhausted → shard_lost abort.
+            --checkpoint commits a crash-safe snapshot every N completed
+            iterations — default 1, atomic tmp+fsync+rename — that
+            `spartan resume` or --resume-from continues bitwise)
+
+  resume   CKPT [--input FILE] [--save-model DIR]
+           [--checkpoint FILE] [--checkpoint-every N] [--workers N]
+           [--shards host:port,...] [--shard-retries N]
+           [--shard-backoff-ms MS] [--kernel BACKEND]
+           (continue a checkpointed fit — local or sharded — after a
+            crash, bitwise identical to the uninterrupted run. Re-packs
+            the dataset (the checkpoint's recorded path unless --input)
+            and refuses to continue when its per-slice ‖X_k‖² bits no
+            longer match the checkpoint; requires the checkpoint's
+            kernel backend. Keeps checkpointing to CKPT unless
+            --checkpoint redirects it)
 
   compare  --input FILE --rank R [--max-iters N] [--workers N] [--seed S]
            (times one ALS iteration under every engine and prints speedups)
@@ -109,10 +127,15 @@ USAGE: spartan <subcommand> [options]
             CI's bench-trend job)
 
   serve    [--addr 127.0.0.1:7473] [--workers N] [--mem-budget 4GiB]
-           [--max-pending N] [--warm-cache N] [--kernel BACKEND]
+           [--max-pending N] [--warm-cache N] [--journal DIR]
+           [--kernel BACKEND]
            (resident fit daemon: many concurrent fits on one shared pool,
             membudget admission control, warm-started cohort re-fits;
-            newline-delimited JSON over TCP)
+            newline-delimited JSON over TCP. --journal makes jobs durable:
+            an append-only journal + per-iteration checkpoints under DIR
+            let a restarted daemon re-admit queued jobs and resume running
+            ones bitwise; SIGTERM drains gracefully — running fits are
+            checkpointed, nothing is lost)
 
   shard-worker [--addr 127.0.0.1:0] [--workers N] [--kernel BACKEND]
            (own one contiguous subject range of a sharded fit; announces
@@ -222,10 +245,26 @@ fn cmd_decompose(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "input", "rank", "engine", "config", "max-iters", "tol", "nonneg", "unconstrained",
         "workers", "seed", "restarts", "mem-budget", "artifacts", "save-model", "shards",
-        "shard-retries", "shard-backoff-ms", "kernel",
+        "shard-retries", "shard-backoff-ms", "kernel", "checkpoint", "checkpoint-every",
+        "resume-from",
     ])
     .map_err(|e| anyhow!(e))?;
     apply_kernel_flag(args)?;
+    if let Some(ck) = args.get("resume-from") {
+        // The checkpoint *is* the fit configuration — a resumed trajectory
+        // is only bitwise if nothing about the fit changes mid-flight.
+        for opt in ["rank", "engine", "config", "max-iters", "tol", "seed", "restarts"] {
+            if args.get(opt).is_some() {
+                bail!(
+                    "--resume-from takes the fit configuration from the checkpoint; drop --{opt}"
+                );
+            }
+        }
+        if args.has_flag("nonneg") || args.has_flag("unconstrained") {
+            bail!("--resume-from takes the constraint mode from the checkpoint");
+        }
+        return resume_fit(args, Path::new(ck));
+    }
     let input = PathBuf::from(args.get("input").context("--input required")?);
     let data = load_data(&input)?;
     let mut cfg = match args.get("config") {
@@ -265,6 +304,15 @@ fn cmd_decompose(args: &Args) -> Result<()> {
     }
     cfg.validate()?;
 
+    let every = args.get_usize("checkpoint-every").map_err(|e| anyhow!(e))?.unwrap_or(1).max(1);
+    let plan = args.get("checkpoint").map(|p| CheckpointPlan { path: PathBuf::from(p), every });
+    if plan.is_none() && args.get("checkpoint-every").is_some() {
+        bail!("--checkpoint-every requires --checkpoint");
+    }
+    if plan.is_some() && matches!(cfg.engine, Engine::Pjrt) {
+        bail!("--checkpoint is incompatible with --engine pjrt");
+    }
+
     println!("data: {}", data.summary());
 
     // Sharded coordinator path: the subject-heavy phases run in
@@ -288,7 +336,7 @@ fn cmd_decompose(args: &Args) -> Result<()> {
             spec.backoff_ms = ms;
         }
         println!("sharding over {} worker(s): {}", spec.addrs.len(), spec.addrs.join(", "));
-        let model = run_sharded_fit(data, &fit_cfg, &spec)?;
+        let model = run_sharded_fit(data, &fit_cfg, &spec, None, plan.as_ref())?;
         print_fit_summary(&model);
         if let Some(dir) = args.get("save-model") {
             save_model(&model, Path::new(dir))?;
@@ -320,6 +368,21 @@ fn cmd_decompose(args: &Args) -> Result<()> {
                 driver.metrics.native_fallback_subjects,
             );
             model
+        }
+        _ if plan.is_some() => {
+            let mut fit_cfg = cfg.fit.clone();
+            fit_cfg.backend = cfg.native_backend();
+            let restarts = args.get_usize("restarts").map_err(|e| anyhow!(e))?.unwrap_or(1);
+            if restarts > 1 {
+                bail!("--checkpoint records one trajectory; drop --restarts");
+            }
+            // Same construction as the batch driver (`FitSession::new` is
+            // exactly what `fit_parafac2` performs), so the checkpointed
+            // run's trajectory is the uncheckpointed run's, bitwise.
+            let session = spartan::parafac2::FitSession::new(&data, &fit_cfg)
+                .map_err(|e| anyhow!("{e}"))?;
+            let input_str = input.to_string_lossy().into_owned();
+            run_local_fit_loop(session, &input_str, &fit_cfg, plan.as_ref())?
         }
         _ => {
             let mut fit_cfg = cfg.fit.clone();
@@ -541,8 +604,10 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use spartan::service::server::ServeConfig;
-    args.reject_unknown(&["addr", "workers", "mem-budget", "max-pending", "warm-cache", "kernel"])
-        .map_err(|e| anyhow!(e))?;
+    args.reject_unknown(&[
+        "addr", "workers", "mem-budget", "max-pending", "warm-cache", "journal", "kernel",
+    ])
+    .map_err(|e| anyhow!(e))?;
     apply_kernel_flag(args)?;
     let mut cfg = ServeConfig::default();
     if let Some(a) = args.get("addr") {
@@ -560,6 +625,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get_usize("warm-cache").map_err(|e| anyhow!(e))? {
         cfg.service.warm_cache = n;
     }
+    if let Some(d) = args.get("journal") {
+        cfg.service.journal = Some(PathBuf::from(d));
+    }
     spartan::service::server::serve(&cfg).map_err(|e| anyhow!("{e}"))
 }
 
@@ -571,23 +639,234 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     spartan::service::shard::run_worker(addr, workers).map_err(|e| anyhow!("{e}"))
 }
 
+/// Where and how often a checkpointed fit persists its state.
+struct CheckpointPlan {
+    path: PathBuf,
+    every: usize,
+}
+
+/// Assemble a durable checkpoint from a session's current iteration
+/// boundary (factors + loop state + the re-pack identity bits).
+fn build_checkpoint(
+    input: &str,
+    cfg: &spartan::parafac2::Parafac2Config,
+    factors: (&spartan::linalg::Mat, &spartan::linalg::Mat, &spartan::linalg::Mat),
+    state: spartan::parafac2::ResumeState,
+    x_norm_bits: Vec<f64>,
+    shards: Option<&spartan::service::shard::ShardSpec>,
+) -> spartan::service::checkpoint::Checkpoint {
+    spartan::service::checkpoint::Checkpoint {
+        input: input.to_string(),
+        cfg: cfg.clone(),
+        kernel_backend: kernels::active_backend().name().to_string(),
+        h: factors.0.clone(),
+        v: factors.1.clone(),
+        w: factors.2.clone(),
+        state,
+        x_norm_bits,
+        shards: shards.map(spartan::service::checkpoint::ShardLayout::from_spec),
+    }
+}
+
+/// `SPARTAN_FAULT=crash-after-iter:N` drill: once the checkpoint at
+/// completed iteration N is committed, abort the coordinator with exit
+/// code 86 — the chaos harness then proves `spartan resume` reproduces
+/// the uninterrupted trajectory bitwise.
+fn maybe_crash_after(crash_after: Option<u64>, done: usize) {
+    if let Some(n) = crash_after {
+        if done as u64 >= n {
+            eprintln!("SPARTAN_FAULT: crash-after-iter:{n} — exiting 86 (checkpoint committed)");
+            std::process::exit(86);
+        }
+    }
+}
+
+/// Drive a local [`FitSession`](spartan::parafac2::FitSession) to
+/// completion, committing a checkpoint every `plan.every` completed
+/// iterations and honoring the crash-after-iter drill.
+fn run_local_fit_loop(
+    mut session: spartan::parafac2::FitSession<'_>,
+    input: &str,
+    cfg: &spartan::parafac2::Parafac2Config,
+    plan: Option<&CheckpointPlan>,
+) -> Result<Parafac2Model> {
+    use spartan::parafac2::StepOutcome;
+    let crash_after = spartan::service::shard::coordinator_crash_iter_from_env();
+    loop {
+        match session.step().map_err(|e| anyhow!("{e}"))? {
+            StepOutcome::Iterated(rec) => {
+                let done = rec.iter + 1; // `rec.iter` is 0-based
+                if let Some(p) = plan.filter(|p| done % p.every == 0) {
+                    let ckpt = build_checkpoint(
+                        input,
+                        cfg,
+                        session.factors(),
+                        session.resume_state(),
+                        session.slice_norm_sq(),
+                        None,
+                    );
+                    spartan::service::checkpoint::save_checkpoint(&p.path, &ckpt)
+                        .map_err(|e| anyhow!("checkpoint {}: {e}", p.path.display()))?;
+                    maybe_crash_after(crash_after, done);
+                }
+            }
+            StepOutcome::Done | StepOutcome::Cancelled => break,
+        }
+    }
+    Ok(session.finish())
+}
+
 /// Drive a [`ShardedFitSession`](spartan::service::shard::ShardedFitSession)
-/// to completion — the sharded counterpart of `fit_parafac2`.
+/// to completion — the sharded counterpart of `fit_parafac2`, with the
+/// same optional checkpoint cadence and crash drill as the local loop.
 fn run_sharded_fit(
     data: IrregularTensor,
     cfg: &spartan::parafac2::Parafac2Config,
     spec: &spartan::service::shard::ShardSpec,
+    resume: Option<spartan::service::shard::ShardedResume>,
+    plan: Option<&CheckpointPlan>,
 ) -> Result<Parafac2Model> {
     use spartan::parafac2::StepOutcome;
-    let mut session = spartan::service::shard::ShardedFitSession::new(data, cfg, spec, None)
-        .map_err(|e| anyhow!("{e}"))?;
+    use spartan::service::shard::ShardedFitSession;
+    let mut session = match resume {
+        Some(from) => ShardedFitSession::resume(data, cfg, spec, None, from),
+        None => ShardedFitSession::new(data, cfg, spec, None),
+    }
+    .map_err(|e| anyhow!("{e}"))?;
+    let crash_after = spartan::service::shard::coordinator_crash_iter_from_env();
     loop {
         match session.step().map_err(|e| anyhow!("{e}"))? {
-            StepOutcome::Iterated(_) => {}
+            StepOutcome::Iterated(rec) => {
+                let done = rec.iter + 1;
+                if let Some(p) = plan.filter(|p| done % p.every == 0) {
+                    let ckpt = build_checkpoint(
+                        &spec.path,
+                        cfg,
+                        session.factors(),
+                        session.resume_state(),
+                        session.slice_norm_sq(),
+                        Some(spec),
+                    );
+                    spartan::service::checkpoint::save_checkpoint(&p.path, &ckpt)
+                        .map_err(|e| anyhow!("checkpoint {}: {e}", p.path.display()))?;
+                    maybe_crash_after(crash_after, done);
+                }
+            }
             StepOutcome::Done | StepOutcome::Cancelled => break,
         }
     }
     session.finish().map_err(|e| anyhow!("{e}"))
+}
+
+/// `spartan resume CKPT` — continue a checkpointed fit after a crash.
+fn cmd_resume(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "input", "save-model", "checkpoint", "checkpoint-every", "workers", "shards",
+        "shard-retries", "shard-backoff-ms", "kernel",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    apply_kernel_flag(args)?;
+    let ck = args
+        .positional
+        .first()
+        .context("usage: spartan resume <checkpoint> [options] (see `spartan help`)")?;
+    resume_fit(args, Path::new(ck))
+}
+
+/// Shared by `spartan resume` and `decompose --resume-from`: load the
+/// checkpoint, re-pack the dataset, verify the per-slice `‖X_k‖²` bits
+/// (reattach contract — divergent data is rejected, never silently
+/// refit), restore the loop state, and continue to completion.
+fn resume_fit(args: &Args, ck_path: &Path) -> Result<()> {
+    use spartan::service::checkpoint::load_checkpoint;
+    let ckpt = load_checkpoint(ck_path)
+        .map_err(|e| anyhow!("checkpoint {}: {e}", ck_path.display()))?;
+    let ours = kernels::active_backend().name();
+    if ckpt.kernel_backend != ours {
+        bail!(
+            "checkpoint was written under kernel backend `{}` but this process runs `{ours}` — \
+             rerun with --kernel {} (trajectories are only bitwise within one backend)",
+            ckpt.kernel_backend,
+            ckpt.kernel_backend
+        );
+    }
+    let mut cfg = ckpt.cfg.clone();
+    if let Some(w) = args.get_usize("workers").map_err(|e| anyhow!(e))? {
+        cfg.workers = w; // the worker count never affects the trajectory
+    }
+    let input = args.get("input").unwrap_or(&ckpt.input).to_string();
+    let every = args.get_usize("checkpoint-every").map_err(|e| anyhow!(e))?.unwrap_or(1).max(1);
+    // Keep checkpointing where the run left off unless redirected, so a
+    // second crash is covered too.
+    let path = args.get("checkpoint").map(PathBuf::from).unwrap_or_else(|| ck_path.to_path_buf());
+    let plan = CheckpointPlan { path, every };
+    println!(
+        "resuming {} from iteration {} (input {input}, kernel {ours})",
+        ck_path.display(),
+        ckpt.state.iter
+    );
+    let data = load_data(Path::new(&input))?;
+
+    // Shard topology: --shards overrides, else the checkpoint's layout
+    // (the subject deal and the trajectory are shard-count invariant).
+    let mut spec = match args.get("shards") {
+        Some(list) => Some(
+            spartan::service::shard::ShardSpec::from_list(list, input.clone())
+                .map_err(|e| anyhow!("--shards: {e}"))?,
+        ),
+        None => ckpt.shards.as_ref().map(|l| l.to_spec(input.clone())),
+    };
+    if let Some(s) = spec.as_mut() {
+        if let Some(n) = args.get_u64("shard-retries").map_err(|e| anyhow!(e))? {
+            s.max_retries = u32::try_from(n).context("--shard-retries out of range")?;
+        }
+        if let Some(ms) = args.get_u64("shard-backoff-ms").map_err(|e| anyhow!(e))? {
+            s.backoff_ms = ms;
+        }
+    }
+
+    let from = spartan::service::shard::ShardedResume {
+        h: ckpt.h,
+        v: ckpt.v,
+        w: ckpt.w,
+        state: ckpt.state,
+        x_norm_bits: ckpt.x_norm_bits,
+    };
+    let model = match spec {
+        Some(spec) => {
+            println!("sharding over {} worker(s): {}", spec.addrs.len(), spec.addrs.join(", "));
+            run_sharded_fit(data, &cfg, &spec, Some(from), Some(&plan))?
+        }
+        None => {
+            use spartan::parafac2::{DataHandle, FitSession, SessionOptions, WarmStart};
+            let warm = WarmStart { h: from.h, v: from.v, w: from.w };
+            let mut session = FitSession::with_options(
+                DataHandle::Borrowed(&data),
+                &cfg,
+                SessionOptions { warm: Some(warm), ..Default::default() },
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            let got = session.slice_norm_sq();
+            let want = &from.x_norm_bits;
+            if got.len() != want.len()
+                || got.iter().zip(want).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                bail!(
+                    "resume re-packed a different arena (per-slice ‖X_k‖² bits diverge) — has \
+                     `{input}` changed since the checkpoint? Refusing to continue: a silent \
+                     refit would not be the checkpointed trajectory"
+                );
+            }
+            session.restore(from.state);
+            run_local_fit_loop(session, &input, &cfg, Some(&plan))?
+        }
+    };
+    print_fit_summary(&model);
+    if let Some(dir) = args.get("save-model") {
+        save_model(&model, Path::new(dir))?;
+        println!("model saved to {dir}/");
+    }
+    Ok(())
 }
 
 fn cmd_serve_stop(args: &Args) -> Result<()> {

@@ -198,6 +198,51 @@ impl WarmStart {
     }
 }
 
+/// Loop state beyond the factors, captured at an iteration boundary —
+/// together with a [`WarmStart`] of H/V/W this is everything a durable
+/// checkpoint needs to continue a fit **bitwise identically** to one that
+/// never stopped (the factors determine the remaining trajectory; the
+/// fields here restore the convergence test, the history, and the
+/// already-spent counters). Produced by [`FitSession::resume_state`] and
+/// consumed by [`FitSession::restore`]; the on-disk encoding lives in
+/// `service::checkpoint`, keeping the engine codec-free.
+#[derive(Clone, Debug, Default)]
+pub struct ResumeState {
+    /// Completed ALS iterations at the boundary.
+    pub iter: usize,
+    /// IEEE-754 bits of the tracked `prev_sse` (feeds `sse_converged`;
+    /// `f64::INFINITY` bits before the first iteration). Transported as
+    /// bits because the value must survive serialization exactly.
+    pub prev_sse_bits: u64,
+    /// Whether the tol test had already fired.
+    pub converged: bool,
+    /// Per-iteration fit values so far.
+    pub fit_history: Vec<f64>,
+    /// Work counters accumulated before the boundary (a restored session
+    /// adds them to its own arena tallies at finish).
+    pub yv_products: u64,
+    pub traversals: u64,
+    pub x_traversals: u64,
+    /// Wall-clock already spent (summed into the final stats).
+    pub procrustes_secs: f64,
+    pub cp_secs: f64,
+    pub total_secs: f64,
+    /// Recovery counters carried across the interruption.
+    pub shard_reconnects: u64,
+    pub shard_retries: u64,
+}
+
+/// Counters spent before a [`FitSession::restore`], added on top of the
+/// live arena tallies when [`FitSession::finish`] publishes `FitStats`
+/// (which otherwise *overwrites* the stats counters from the arenas).
+#[derive(Clone, Copy, Debug, Default)]
+struct CarriedCounters {
+    yv_products: u64,
+    traversals: u64,
+    x_traversals: u64,
+    total_secs: f64,
+}
+
 /// Per-session knobs beyond [`Parafac2Config`]. `Default` reproduces the
 /// batch drivers exactly: private pool, budget from `cfg.mem_budget`, cold
 /// init, data kept, no cancellation.
@@ -278,6 +323,7 @@ pub struct FitSession<'d> {
     y: PackedY,
     scratch: FusedScratch,
     sweep_scratch: Vec<SubjectScratch>,
+    carried: CarriedCounters,
 }
 
 impl<'d> FitSession<'d> {
@@ -399,7 +445,70 @@ impl<'d> FitSession<'d> {
             y,
             scratch: FusedScratch::new(),
             sweep_scratch,
+            carried: CarriedCounters::default(),
         })
+    }
+
+    /// Restore the loop state captured by [`FitSession::resume_state`] on
+    /// a freshly constructed session (whose `SessionOptions::warm` carried
+    /// the checkpoint's H/V/W). The next [`FitSession::step`] then runs
+    /// iteration `rs.iter` exactly as the uninterrupted fit would have:
+    /// the factors determine the sweep, `prev_sse` feeds the convergence
+    /// test bit-for-bit, and the carried counters are added back at
+    /// [`FitSession::finish`]. Callers revalidate the re-packed arena via
+    /// [`FitSession::slice_norm_sq`] *before* trusting the restore.
+    pub fn restore(&mut self, rs: ResumeState) {
+        self.iters_done = rs.iter;
+        self.prev_sse = f64::from_bits(rs.prev_sse_bits);
+        self.converged = rs.converged;
+        self.stats.fit_history = rs.fit_history;
+        self.stats.procrustes_secs = rs.procrustes_secs;
+        self.stats.cp_secs = rs.cp_secs;
+        self.stats.shard_reconnects = rs.shard_reconnects;
+        self.stats.shard_retries = rs.shard_retries;
+        self.stats.resumed_from_iter = rs.iter as u64;
+        self.carried = CarriedCounters {
+            yv_products: rs.yv_products,
+            traversals: rs.traversals,
+            x_traversals: rs.x_traversals,
+            total_secs: rs.total_secs,
+        };
+    }
+
+    /// Snapshot the loop state at the current iteration boundary — the
+    /// non-factor half of a checkpoint (the factor half is
+    /// [`FitSession::factors`]). Counters include anything carried from an
+    /// earlier restore, so checkpoint-of-a-resumed-fit composes.
+    pub fn resume_state(&self) -> ResumeState {
+        ResumeState {
+            iter: self.iters_done,
+            prev_sse_bits: self.prev_sse.to_bits(),
+            converged: self.converged,
+            fit_history: self.stats.fit_history.clone(),
+            yv_products: self.carried.yv_products + self.y.yv_products(),
+            traversals: self.carried.traversals + self.y.traversals(),
+            x_traversals: self.carried.x_traversals + self.cx.x_traversals(),
+            procrustes_secs: self.stats.procrustes_secs,
+            cp_secs: self.stats.cp_secs,
+            total_secs: self.carried.total_secs + self.total_sw.elapsed_secs(),
+            shard_reconnects: self.stats.shard_reconnects,
+            shard_retries: self.stats.shard_retries,
+        }
+    }
+
+    /// The current factor iterate `(H, V, W)` — at an iteration boundary
+    /// this is everything the remaining trajectory depends on.
+    pub fn factors(&self) -> (&Mat, &Mat, &Mat) {
+        (&self.factors.h, &self.factors.v, &self.factors.w)
+    }
+
+    /// Per-slice `‖X_k‖²` in subject order, read from the packed arena's
+    /// pack-time caches. A resume compares these bits against the
+    /// checkpoint's — the same data-identity contract the shard `reattach`
+    /// verb enforces — so silently diverging data is rejected, never
+    /// refit.
+    pub fn slice_norm_sq(&self) -> Vec<f64> {
+        self.cx.slices.iter().map(|s| s.norm_sq()).collect()
     }
 
     /// Run **one** ALS iteration. Returns [`StepOutcome::Done`] once
@@ -531,9 +640,9 @@ impl<'d> FitSession<'d> {
         let final_res = super::cp_als::residual_stats(&m3, &self.factors, self.y.norm_sq());
         let final_sse = sse_from_parts(self.x_norm_sq, self.y.norm_sq(), final_res.y_residual_sq);
         let mut stats = self.stats;
-        stats.yv_products = self.y.yv_products();
-        stats.traversals = self.y.traversals();
-        stats.x_traversals = self.cx.x_traversals();
+        stats.yv_products = self.carried.yv_products + self.y.yv_products();
+        stats.traversals = self.carried.traversals + self.y.traversals();
+        stats.x_traversals = self.carried.x_traversals + self.cx.x_traversals();
         stats.heap_bytes = self.cx.heap_bytes()
             + self.y.heap_bytes()
             + scratch_heap_bytes(&self.sweep_scratch)
@@ -543,7 +652,7 @@ impl<'d> FitSession<'d> {
         stats.final_sse = final_sse;
         stats.final_fit = fit_from_sse(final_sse, self.x_norm);
         stats.kernel_backend = crate::linalg::kernels::active_backend().name().to_string();
-        stats.total_secs = self.total_sw.elapsed_secs();
+        stats.total_secs = self.carried.total_secs + self.total_sw.elapsed_secs();
         stats.secs_per_iter = if self.iters_done > 0 {
             (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64
         } else {
@@ -999,6 +1108,73 @@ mod tests {
             SessionOptions { warm: Some(bad), ..Default::default() },
         );
         assert!(matches!(err, Err(FitError::Config(_))));
+    }
+
+    #[test]
+    fn restore_reproduces_uninterrupted_fit_bitwise() {
+        // Checkpoint at iteration 3 of 6 (factors + resume_state), rebuild
+        // a fresh session from the snapshot, and finish: the trajectory,
+        // yv_products, and traversals must match the uninterrupted fit
+        // exactly — the only counter signature of the resume is one extra
+        // K of x_traversals (the restore's arena re-pack).
+        let mut rng = Pcg64::seed(189);
+        let k = 9;
+        let (data, _, _) = planted(&mut rng, k, 8, 2);
+        let cfg = Parafac2Config {
+            rank: 2,
+            max_iters: 6,
+            tol: 0.0,
+            workers: 2,
+            ..Default::default()
+        };
+
+        let mut full = FitSession::new(&data, &cfg).unwrap();
+        while let StepOutcome::Iterated(_) = full.step().unwrap() {}
+        let full = full.finish();
+
+        let mut first = FitSession::new(&data, &cfg).unwrap();
+        for _ in 0..3 {
+            assert!(matches!(first.step().unwrap(), StepOutcome::Iterated(_)));
+        }
+        let rs = first.resume_state();
+        assert_eq!(rs.iter, 3);
+        let (h, v, w) = first.factors();
+        let warm = WarmStart { h: h.clone(), v: v.clone(), w: w.clone() };
+        let norms = first.slice_norm_sq();
+        drop(first);
+
+        let mut resumed = FitSession::with_options(
+            DataHandle::Borrowed(&data),
+            &cfg,
+            SessionOptions { warm: Some(warm), ..Default::default() },
+        )
+        .unwrap();
+        // the data-identity gate a real resume enforces before restore
+        for (a, b) in resumed.slice_norm_sq().iter().zip(&norms) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        resumed.restore(rs);
+        assert_eq!(resumed.iterations(), 3);
+        while let StepOutcome::Iterated(_) = resumed.step().unwrap() {}
+        let resumed = resumed.finish();
+
+        assert_eq!(resumed.h.data(), full.h.data());
+        assert_eq!(resumed.v.data(), full.v.data());
+        assert_eq!(resumed.w.data(), full.w.data());
+        for (a, b) in resumed.q.iter().zip(&full.q) {
+            assert_eq!(a.data(), b.data());
+        }
+        assert_eq!(resumed.stats.fit_history.len(), full.stats.fit_history.len());
+        for (a, b) in resumed.stats.fit_history.iter().zip(&full.stats.fit_history) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(resumed.stats.final_sse.to_bits(), full.stats.final_sse.to_bits());
+        assert_eq!(resumed.stats.iterations, full.stats.iterations);
+        assert_eq!(resumed.stats.resumed_from_iter, 3);
+        assert_eq!(full.stats.resumed_from_iter, 0);
+        assert_eq!(resumed.stats.yv_products, full.stats.yv_products);
+        assert_eq!(resumed.stats.traversals, full.stats.traversals);
+        assert_eq!(resumed.stats.x_traversals, full.stats.x_traversals + k as u64);
     }
 
     #[test]

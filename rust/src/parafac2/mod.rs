@@ -14,7 +14,7 @@ pub mod restarts;
 
 pub use als::{
     fit_parafac2, Backend, DataHandle, FitError, FitSession, IterationRecord, Parafac2Config,
-    SessionOptions, StepOutcome, WarmStart,
+    ResumeState, SessionOptions, StepOutcome, WarmStart,
 };
 pub use model::{FitStats, Parafac2Model};
 pub use restarts::fit_parafac2_restarts;

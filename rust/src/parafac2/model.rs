@@ -68,6 +68,14 @@ pub struct FitStats {
     /// connect+hello+reattach try counts, including the ones that failed).
     /// `shard_retries ≥ shard_reconnects`; always 0 for local fits.
     pub shard_retries: u64,
+    /// The iteration boundary this fit was resumed from (durable
+    /// checkpoint/resume): 0 for a fit that started cold or warm in this
+    /// process; `i > 0` means iterations `0..i` were restored from a
+    /// checkpoint and only `i..iterations` executed here. The recovered
+    /// trajectory is bitwise identical to an uninterrupted fit; the only
+    /// counter signature of a resume is one extra `K` of `x_traversals`
+    /// (the re-pack of the arena on restore).
+    pub resumed_from_iter: u64,
     /// The kernel backend the fit ran on (`linalg::kernels::
     /// KernelBackend::name()`: `scalar`/`blocked`/`avx2`/`avx512`/`neon`)
     /// — records which lane family produced the trajectory, so a result

@@ -1,0 +1,462 @@
+//! Durable fit checkpoints: the on-disk state a crashed coordinator (or
+//! daemon) resumes from, **bitwise**.
+//!
+//! A checkpoint is one JSON document capturing everything iteration `i`'s
+//! boundary determines: the factor iterate `H`/`V`/`W`, the loop state
+//! ([`ResumeState`]: `prev_sse` bits, convergence flag, fit history,
+//! spent counters/timings), the full [`Parafac2Config`], the kernel
+//! backend the trajectory ran on, the dataset path, the per-slice
+//! `‖X_k‖²` bits (the data-identity contract — a resume re-packs the
+//! arena and insists these match bit-for-bit, exactly like the shard
+//! `reattach` verb), and for sharded fits the shard layout. Every
+//! trajectory-relevant float travels as 16-hex-digit IEEE-754 bits via
+//! the [`crate::service::protocol`] helpers — JSON decimal syntax never
+//! touches them; only wall-clock timings are plain numbers.
+//!
+//! Files are committed with [`crate::util::atomicfile::write_atomic`]
+//! (write-temp → fsync → rename), so a crash mid-write leaves either the
+//! previous complete checkpoint or the new one — never a torn file. A
+//! torn or truncated file handed to [`load_checkpoint`] fails JSON
+//! parsing or field validation and is rejected with a structured
+//! [`ServiceError::InvalidData`], never silently refit. The normative
+//! file-format spec lives in `docs/PROTOCOL.md` § checkpoint files.
+
+use crate::linalg::Mat;
+use crate::parafac2::init::InitMethod;
+use crate::parafac2::{Backend, Parafac2Config, ResumeState};
+use crate::service::protocol::{
+    f64_from_bits_str, f64_list_from_json, f64_list_to_json, f64_to_bits_str, mat_from_json,
+    mat_to_json,
+};
+use crate::service::shard::ShardSpec;
+use crate::service::ServiceError;
+use crate::util::atomicfile::write_atomic;
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// Identifies a checkpoint document (vs any other JSON lying around).
+pub const CHECKPOINT_FORMAT: &str = "spartan-checkpoint";
+
+/// Schema version; bump on any change to the checkpoint layout. A loader
+/// at a different version rejects the file loudly — resuming through a
+/// misread schema could corrupt the bitwise contract.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// Where a sharded fit's workers were, plus the retry policy — enough to
+/// rebuild the [`ShardSpec`] (the dataset path is stored once, top-level,
+/// shared with the local-resume path).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardLayout {
+    pub addrs: Vec<String>,
+    pub max_retries: u32,
+    pub backoff_ms: u64,
+    pub read_timeout_secs: u64,
+}
+
+impl ShardLayout {
+    pub fn from_spec(spec: &ShardSpec) -> ShardLayout {
+        ShardLayout {
+            addrs: spec.addrs.clone(),
+            max_retries: spec.max_retries,
+            backoff_ms: spec.backoff_ms,
+            read_timeout_secs: spec.read_timeout_secs,
+        }
+    }
+
+    /// Rebuild the spec for a resume. `path` comes from the checkpoint's
+    /// top-level `input` (or a caller override).
+    pub fn to_spec(&self, path: impl Into<String>) -> ShardSpec {
+        ShardSpec {
+            addrs: self.addrs.clone(),
+            path: path.into(),
+            read_timeout_secs: self.read_timeout_secs,
+            max_retries: self.max_retries,
+            backoff_ms: self.backoff_ms,
+        }
+    }
+}
+
+/// One durable checkpoint (see the module docs for what each part pins).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Dataset path the fit was (and the resume must be) packed from.
+    pub input: String,
+    pub cfg: Parafac2Config,
+    /// Kernel backend name the trajectory ran on. A resume requires exact
+    /// equality — the same rule the shard `hello` handshake enforces — so
+    /// a checkpoint from an `avx2` box never continues on `avx512` bits.
+    pub kernel_backend: String,
+    pub h: Mat,
+    pub v: Mat,
+    pub w: Mat,
+    /// Loop state at the boundary (iter, prev_sse bits, history,
+    /// counters).
+    pub state: ResumeState,
+    /// Per-slice `‖X_k‖²`, flat in subject order — the data-identity
+    /// bits a resume revalidates against the re-packed arena.
+    pub x_norm_bits: Vec<f64>,
+    /// Present iff the fit was sharded.
+    pub shards: Option<ShardLayout>,
+}
+
+fn init_name(init: InitMethod) -> &'static str {
+    match init {
+        InitMethod::Random => "random",
+        InitMethod::SvdWarm => "svd-warm",
+    }
+}
+
+fn backend_name(backend: Backend) -> &'static str {
+    match backend {
+        Backend::Spartan => "spartan",
+        Backend::Baseline => "baseline",
+    }
+}
+
+pub(crate) fn config_to_json(cfg: &Parafac2Config) -> Json {
+    let mut fields = vec![
+        ("rank", Json::num(cfg.rank as f64)),
+        ("max_iters", Json::num(cfg.max_iters as f64)),
+        // tol feeds `sse_converged` — it must survive exactly.
+        ("tol_bits", f64_to_bits_str(cfg.tol)),
+        ("nonneg", Json::Bool(cfg.nonneg)),
+        ("init", Json::str(init_name(cfg.init))),
+        ("workers", Json::num(cfg.workers as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("backend", Json::str(backend_name(cfg.backend))),
+    ];
+    if let Some(b) = cfg.mem_budget {
+        fields.push(("mem_budget", Json::num(b as f64)));
+    }
+    Json::obj(fields)
+}
+
+pub(crate) fn config_from_json(j: &Json) -> Result<Parafac2Config, String> {
+    let usize_of = |k: &str| j.get(k).and_then(Json::as_usize).ok_or(format!("config missing {k}"));
+    let init_s = j.get("init").and_then(Json::as_str).ok_or("config missing init")?;
+    let backend_s = j.get("backend").and_then(Json::as_str).ok_or("config missing backend")?;
+    Ok(Parafac2Config {
+        rank: usize_of("rank")?,
+        max_iters: usize_of("max_iters")?,
+        tol: f64_from_bits_str(j.get("tol_bits").ok_or("config missing tol_bits")?)?,
+        nonneg: j.get("nonneg").and_then(Json::as_bool).ok_or("config missing nonneg")?,
+        init: InitMethod::parse(init_s).ok_or_else(|| format!("bad init `{init_s}`"))?,
+        workers: usize_of("workers")?,
+        seed: j.get("seed").and_then(Json::as_f64).ok_or("config missing seed")? as u64,
+        backend: Backend::parse(backend_s).ok_or_else(|| format!("bad backend `{backend_s}`"))?,
+        mem_budget: j.get("mem_budget").and_then(Json::as_f64).map(|b| b as u64),
+    })
+}
+
+pub(crate) fn shards_to_json(s: &ShardLayout) -> Json {
+    Json::obj(vec![
+        ("addrs", Json::arr(s.addrs.iter().map(|a| Json::str(a.clone())))),
+        ("max_retries", Json::num(s.max_retries as f64)),
+        ("backoff_ms", Json::num(s.backoff_ms as f64)),
+        ("read_timeout_secs", Json::num(s.read_timeout_secs as f64)),
+    ])
+}
+
+pub(crate) fn shards_from_json(j: &Json) -> Result<ShardLayout, String> {
+    let addrs = j
+        .get("addrs")
+        .and_then(Json::as_arr)
+        .ok_or("shards missing addrs")?
+        .iter()
+        .map(|a| a.as_str().map(str::to_string).ok_or("bad shard addr"))
+        .collect::<Result<Vec<String>, _>>()?;
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).ok_or(format!("shards missing {k}"));
+    Ok(ShardLayout {
+        addrs,
+        max_retries: num("max_retries")? as u32,
+        backoff_ms: num("backoff_ms")? as u64,
+        read_timeout_secs: num("read_timeout_secs")? as u64,
+    })
+}
+
+pub fn checkpoint_to_json(c: &Checkpoint) -> Json {
+    let s = &c.state;
+    let mut fields = vec![
+        ("format", Json::str(CHECKPOINT_FORMAT)),
+        ("version", Json::num(CHECKPOINT_VERSION as f64)),
+        ("input", Json::str(c.input.clone())),
+        ("kernel_backend", Json::str(c.kernel_backend.clone())),
+        ("config", config_to_json(&c.cfg)),
+        ("iter", Json::num(s.iter as f64)),
+        ("converged", Json::Bool(s.converged)),
+        ("prev_sse_bits", f64_to_bits_str(f64::from_bits(s.prev_sse_bits))),
+        ("fit_history_bits", f64_list_to_json(&s.fit_history)),
+        ("h", mat_to_json(&c.h)),
+        ("v", mat_to_json(&c.v)),
+        ("w", mat_to_json(&c.w)),
+        ("x_norm_bits", f64_list_to_json(&c.x_norm_bits)),
+        (
+            "counters",
+            Json::obj(vec![
+                ("yv_products", Json::num(s.yv_products as f64)),
+                ("traversals", Json::num(s.traversals as f64)),
+                ("x_traversals", Json::num(s.x_traversals as f64)),
+                ("shard_reconnects", Json::num(s.shard_reconnects as f64)),
+                ("shard_retries", Json::num(s.shard_retries as f64)),
+                ("procrustes_secs", Json::num(s.procrustes_secs)),
+                ("cp_secs", Json::num(s.cp_secs)),
+                ("total_secs", Json::num(s.total_secs)),
+            ]),
+        ),
+    ];
+    if let Some(sh) = &c.shards {
+        fields.push(("shards", shards_to_json(sh)));
+    }
+    Json::obj(fields)
+}
+
+pub fn checkpoint_from_json(j: &Json) -> Result<Checkpoint, String> {
+    match j.get("format").and_then(Json::as_str) {
+        Some(CHECKPOINT_FORMAT) => {}
+        Some(f) => return Err(format!("not a checkpoint (format `{f}`)")),
+        None => return Err("not a checkpoint (missing format)".into()),
+    }
+    match j.get("version").and_then(Json::as_f64).map(|v| v as u64) {
+        Some(CHECKPOINT_VERSION) => {}
+        Some(v) => {
+            return Err(format!(
+                "checkpoint version {v} (this build reads {CHECKPOINT_VERSION})"
+            ))
+        }
+        None => return Err("checkpoint missing version".into()),
+    }
+    let input = j.get("input").and_then(Json::as_str).ok_or("checkpoint missing input")?;
+    let kernel_backend = j
+        .get("kernel_backend")
+        .and_then(Json::as_str)
+        .ok_or("checkpoint missing kernel_backend")?;
+    let cfg = config_from_json(j.get("config").ok_or("checkpoint missing config")?)?;
+    let iter = j.get("iter").and_then(Json::as_usize).ok_or("checkpoint missing iter")?;
+    let converged =
+        j.get("converged").and_then(Json::as_bool).ok_or("checkpoint missing converged")?;
+    let prev_sse_bits =
+        f64_from_bits_str(j.get("prev_sse_bits").ok_or("checkpoint missing prev_sse_bits")?)?
+            .to_bits();
+    let fit_history = f64_list_from_json(
+        j.get("fit_history_bits").ok_or("checkpoint missing fit_history_bits")?,
+    )?;
+    let h = mat_from_json(j.get("h").ok_or("checkpoint missing h")?)?;
+    let v = mat_from_json(j.get("v").ok_or("checkpoint missing v")?)?;
+    let w = mat_from_json(j.get("w").ok_or("checkpoint missing w")?)?;
+    let x_norm_bits =
+        f64_list_from_json(j.get("x_norm_bits").ok_or("checkpoint missing x_norm_bits")?)?;
+    let cj = j.get("counters").ok_or("checkpoint missing counters")?;
+    let cnum = |k: &str| cj.get(k).and_then(Json::as_f64).ok_or(format!("counters missing {k}"));
+    let state = ResumeState {
+        iter,
+        prev_sse_bits,
+        converged,
+        fit_history,
+        yv_products: cnum("yv_products")? as u64,
+        traversals: cnum("traversals")? as u64,
+        x_traversals: cnum("x_traversals")? as u64,
+        procrustes_secs: cnum("procrustes_secs")?,
+        cp_secs: cnum("cp_secs")?,
+        total_secs: cnum("total_secs")?,
+        shard_reconnects: cnum("shard_reconnects")? as u64,
+        shard_retries: cnum("shard_retries")? as u64,
+    };
+    let shards = match j.get("shards") {
+        Some(sj) => Some(shards_from_json(sj)?),
+        None => None,
+    };
+
+    // Structural validation — a checkpoint that passes decodes into a
+    // self-consistent boundary; anything else is a torn/corrupt file.
+    let r = cfg.rank;
+    if h.shape() != (r, r) || v.cols() != r || w.cols() != r {
+        return Err(format!(
+            "checkpoint factor shapes {:?}/{:?}/{:?} do not match rank {r}",
+            h.shape(),
+            v.shape(),
+            w.shape()
+        ));
+    }
+    if w.rows() != x_norm_bits.len() {
+        return Err(format!(
+            "checkpoint W has {} rows but {} slice norms",
+            w.rows(),
+            x_norm_bits.len()
+        ));
+    }
+    if state.fit_history.len() != iter {
+        return Err(format!(
+            "checkpoint fit_history has {} entries at iteration {iter}",
+            state.fit_history.len()
+        ));
+    }
+    Ok(Checkpoint {
+        input: input.to_string(),
+        cfg,
+        kernel_backend: kernel_backend.to_string(),
+        h,
+        v,
+        w,
+        state,
+        x_norm_bits,
+        shards,
+    })
+}
+
+/// Commit a checkpoint to `path` atomically (write-temp → fsync →
+/// rename): a crash at any instant leaves the previous complete
+/// checkpoint or the new one, never a torn file.
+pub fn save_checkpoint(path: &Path, c: &Checkpoint) -> Result<(), ServiceError> {
+    let mut text = checkpoint_to_json(c).pretty();
+    text.push('\n');
+    write_atomic(path, text.as_bytes())
+        .map_err(|e| ServiceError::Io(format!("writing checkpoint {}: {e}", path.display())))
+}
+
+/// Load and validate a checkpoint. Unreadable files are [`ServiceError::
+/// Io`]; anything that parses or validates wrong — including a torn
+/// partial write — is a structured [`ServiceError::InvalidData`].
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint, ServiceError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ServiceError::Io(format!("reading checkpoint {}: {e}", path.display())))?;
+    let parsed = json::parse(&text).map_err(|e| {
+        ServiceError::InvalidData(format!("checkpoint {}: not valid JSON: {e}", path.display()))
+    })?;
+    checkpoint_from_json(&parsed)
+        .map_err(|e| ServiceError::InvalidData(format!("checkpoint {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(shards: bool) -> Checkpoint {
+        Checkpoint {
+            input: "/tmp/data dir/run 7.spt".into(),
+            cfg: Parafac2Config {
+                rank: 2,
+                max_iters: 9,
+                tol: 1e-7,
+                nonneg: false,
+                init: InitMethod::SvdWarm,
+                workers: 3,
+                seed: 99,
+                backend: Backend::Spartan,
+                mem_budget: Some(1 << 30),
+            },
+            kernel_backend: "blocked".into(),
+            h: Mat::from_vec(2, 2, vec![0.1 + 0.2, -0.0, 5e-324, 1.0 / 3.0]),
+            v: Mat::from_vec(3, 2, vec![1.5, -2.5, f64::MIN_POSITIVE, 0.0, 6.02e23, -1e-300]),
+            w: Mat::from_vec(2, 2, vec![0.25, 0.5, 0.75, 1.0]),
+            state: ResumeState {
+                iter: 2,
+                prev_sse_bits: (42.125f64).to_bits(),
+                converged: false,
+                fit_history: vec![0.5, 0.75],
+                yv_products: 18,
+                traversals: 18,
+                x_traversals: 27,
+                procrustes_secs: 0.125,
+                cp_secs: 0.25,
+                total_secs: 0.5,
+                shard_reconnects: 1,
+                shard_retries: 2,
+            },
+            x_norm_bits: vec![3.25, -0.0],
+            shards: if shards {
+                Some(ShardLayout {
+                    addrs: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
+                    max_retries: 5,
+                    backoff_ms: 100,
+                    read_timeout_secs: 30,
+                })
+            } else {
+                None
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_local_and_sharded() {
+        for shards in [false, true] {
+            let c = sample(shards);
+            let text = checkpoint_to_json(&c).to_string();
+            let back = checkpoint_from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.input, c.input);
+            assert_eq!(back.kernel_backend, c.kernel_backend);
+            assert_eq!(back.cfg.rank, c.cfg.rank);
+            assert_eq!(back.cfg.tol.to_bits(), c.cfg.tol.to_bits());
+            assert_eq!(back.cfg.init, c.cfg.init);
+            assert_eq!(back.cfg.mem_budget, c.cfg.mem_budget);
+            for (m, bm) in [(&c.h, &back.h), (&c.v, &back.v), (&c.w, &back.w)] {
+                for (a, b) in m.data().iter().zip(bm.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            assert_eq!(back.state.iter, c.state.iter);
+            assert_eq!(back.state.prev_sse_bits, c.state.prev_sse_bits);
+            for (a, b) in back.state.fit_history.iter().zip(&c.state.fit_history) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in back.x_norm_bits.iter().zip(&c.x_norm_bits) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(back.state.yv_products, c.state.yv_products);
+            assert_eq!(back.state.x_traversals, c.state.x_traversals);
+            assert_eq!(back.shards, c.shards);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_torn_file_rejection() {
+        let dir = std::env::temp_dir().join(format!("spartan_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fit.ckpt");
+        let c = sample(true);
+        save_checkpoint(&path, &c).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.state.iter, c.state.iter);
+        assert_eq!(back.h.data(), c.h.data());
+
+        // Every strict prefix of the committed document must be rejected
+        // (the atomic commit makes torn files impossible, but a loader
+        // must still never trust one from a foreign writer).
+        let full = std::fs::read(&path).unwrap();
+        let torn = dir.join("torn.ckpt");
+        for frac in [1, 3, 7, 9] {
+            let cut = full.len() * frac / 10;
+            std::fs::write(&torn, &full[..cut]).unwrap();
+            match load_checkpoint(&torn) {
+                Err(ServiceError::InvalidData(_)) => {}
+                other => panic!("torn prefix ({cut} bytes) accepted: {:?}", other.map(|_| ())),
+            }
+        }
+        std::fs::remove_file(&torn).ok();
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
+    }
+
+    #[test]
+    fn version_and_format_gates_reject_foreign_documents() {
+        let c = sample(false);
+        let good = checkpoint_to_json(&c);
+        // wrong format marker
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("format".into(), Json::str("other"));
+        }
+        assert!(checkpoint_from_json(&j).unwrap_err().contains("not a checkpoint"));
+        // future version
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::num((CHECKPOINT_VERSION + 1) as f64));
+        }
+        assert!(checkpoint_from_json(&j).unwrap_err().contains("version"));
+        // inconsistent boundary: history length ≠ iter
+        let mut j = good;
+        if let Json::Obj(m) = &mut j {
+            m.insert("iter".into(), Json::num(5.0));
+        }
+        assert!(checkpoint_from_json(&j).unwrap_err().contains("fit_history"));
+    }
+}

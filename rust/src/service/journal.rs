@@ -1,0 +1,372 @@
+//! The daemon's append-only job journal: the record a restarted
+//! `spartan serve --journal <dir>` folds to pick up exactly where the
+//! dead one stopped.
+//!
+//! Layout under the journal directory:
+//!
+//! * `journal.ndjson` — one JSON record per line, append-only, fsynced
+//!   per append. Four record kinds: `submitted` (everything needed to
+//!   rebuild the [`crate::service::JobSpec`] — the tensor itself is
+//!   reloaded from the recorded `input` path), `started`, `checkpointed`
+//!   (informational; the checkpoint *file* is authoritative), and `done`
+//!   (terminal state + failure reason).
+//! * `checkpoints/job-<id>.ckpt` — the job's latest durable checkpoint
+//!   ([`crate::service::checkpoint`]), atomically replaced each
+//!   iteration and removed once the job's terminal record lands.
+//! * `results/job-<id>.json` — the finished model
+//!   ([`crate::service::protocol::model_to_json`]), written atomically
+//!   before the `done` record so a restart never claims a result it
+//!   cannot serve.
+//!
+//! [`replay`] folds the records per job id: `submitted` alone replays as
+//! queued, `started` without `done` replays as running (resumed from its
+//! checkpoint when one exists), `done` is terminal. A crash mid-append
+//! leaves at most one torn **trailing** line — every earlier record was
+//! written and fsynced whole — so replay drops a malformed final line
+//! and rejects a malformed interior one loudly
+//! ([`crate::service::ServiceError::InvalidData`]). The normative record
+//! format lives in `docs/PROTOCOL.md` § the job journal.
+
+use crate::parafac2::Parafac2Config;
+use crate::service::checkpoint::{
+    config_from_json, config_to_json, shards_from_json, shards_to_json, ShardLayout,
+};
+use crate::service::{JobState, ServiceError};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// File name of the NDJSON record stream inside the journal directory.
+pub const JOURNAL_FILE: &str = "journal.ndjson";
+
+/// An open journal: the directory plus the append handle. All appends
+/// are serialized and fsynced, so every record before a crash point is
+/// intact on replay.
+pub struct Journal {
+    dir: PathBuf,
+    file: Mutex<File>,
+}
+
+/// Everything a `submitted` record carries — enough to rebuild the job
+/// on replay without the original process's memory.
+#[derive(Clone, Debug)]
+pub struct SubmitRecord {
+    /// Dataset path the tensor is reloaded from on re-admission.
+    pub input: String,
+    pub cfg: Parafac2Config,
+    pub cohort: Option<String>,
+    /// Present iff the job runs as a sharded coordinator.
+    pub shards: Option<ShardLayout>,
+    pub estimate: u64,
+    pub subjects: usize,
+    pub variables: usize,
+    pub nnz: usize,
+}
+
+/// A job's folded lifecycle after [`replay`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplayState {
+    /// Submitted, never started: re-admit from scratch.
+    Queued,
+    /// Started but no terminal record: re-admit, resuming from the job's
+    /// checkpoint file when one was committed.
+    Running,
+    /// Finished; the result (if any) is under `results/`.
+    Terminal(JobState),
+}
+
+/// One journaled job as [`replay`] reconstructs it.
+#[derive(Clone, Debug)]
+pub struct ReplayJob {
+    pub id: u64,
+    pub submit: SubmitRecord,
+    pub state: ReplayState,
+}
+
+impl Journal {
+    /// Open (creating as needed) the journal directory and its record
+    /// stream. Idempotent: an existing journal is appended to, never
+    /// truncated.
+    pub fn open(dir: &Path) -> Result<Journal, ServiceError> {
+        for sub in [dir.to_path_buf(), dir.join("checkpoints"), dir.join("results")] {
+            std::fs::create_dir_all(&sub).map_err(|e| {
+                ServiceError::Io(format!("creating journal dir {}: {e}", sub.display()))
+            })?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(JOURNAL_FILE))
+            .map_err(|e| {
+                ServiceError::Io(format!("opening journal in {}: {e}", dir.display()))
+            })?;
+        Ok(Journal { dir: dir.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Where job `id`'s latest durable checkpoint lives.
+    pub fn checkpoint_path(&self, id: u64) -> PathBuf {
+        self.dir.join("checkpoints").join(format!("job-{id}.ckpt"))
+    }
+
+    /// Where job `id`'s persisted result lives once it concludes.
+    pub fn result_path(&self, id: u64) -> PathBuf {
+        self.dir.join("results").join(format!("job-{id}.json"))
+    }
+
+    /// Append one record and fsync it. Failures are logged, not fatal —
+    /// a journal that stops advancing degrades durability, never the
+    /// fit itself.
+    fn append(&self, record: Json) {
+        let line = record.to_string();
+        let mut f = self.file.lock().unwrap();
+        if let Err(e) = writeln!(f, "{line}").and_then(|()| f.sync_data()) {
+            eprintln!("spartan serve: journal append failed: {e}");
+        }
+    }
+
+    pub fn submitted(&self, id: u64, r: &SubmitRecord) {
+        let mut fields = vec![
+            ("event", Json::str("submitted")),
+            ("id", Json::num(id as f64)),
+            ("input", Json::str(r.input.clone())),
+            ("config", config_to_json(&r.cfg)),
+            ("estimate", Json::num(r.estimate as f64)),
+            ("subjects", Json::num(r.subjects as f64)),
+            ("variables", Json::num(r.variables as f64)),
+            ("nnz", Json::num(r.nnz as f64)),
+        ];
+        if let Some(c) = &r.cohort {
+            fields.push(("cohort", Json::str(c.clone())));
+        }
+        if let Some(s) = &r.shards {
+            fields.push(("shards", shards_to_json(s)));
+        }
+        self.append(Json::obj(fields));
+    }
+
+    pub fn started(&self, id: u64) {
+        self.append(Json::obj(vec![
+            ("event", Json::str("started")),
+            ("id", Json::num(id as f64)),
+        ]));
+    }
+
+    pub fn checkpointed(&self, id: u64, iter: usize) {
+        self.append(Json::obj(vec![
+            ("event", Json::str("checkpointed")),
+            ("id", Json::num(id as f64)),
+            ("iter", Json::num(iter as f64)),
+        ]));
+    }
+
+    pub fn done(&self, id: u64, state: &JobState) {
+        let mut fields = vec![
+            ("event", Json::str("done")),
+            ("id", Json::num(id as f64)),
+            ("state", Json::str(state.as_str())),
+        ];
+        if let JobState::Failed(reason) = state {
+            fields.push(("reason", Json::str(reason.clone())));
+        }
+        self.append(Json::obj(fields));
+    }
+}
+
+fn submit_from_json(ev: &Json) -> Result<SubmitRecord, String> {
+    let input =
+        ev.get("input").and_then(Json::as_str).ok_or("submitted record missing input")?;
+    let cfg = config_from_json(ev.get("config").ok_or("submitted record missing config")?)?;
+    let num = |k: &str| {
+        ev.get(k).and_then(Json::as_f64).ok_or(format!("submitted record missing {k}"))
+    };
+    let shards = match ev.get("shards") {
+        Some(s) => Some(shards_from_json(s)?),
+        None => None,
+    };
+    Ok(SubmitRecord {
+        input: input.to_string(),
+        cfg,
+        cohort: ev.get("cohort").and_then(Json::as_str).map(str::to_string),
+        shards,
+        estimate: num("estimate")? as u64,
+        subjects: num("subjects")? as usize,
+        variables: num("variables")? as usize,
+        nnz: num("nnz")? as usize,
+    })
+}
+
+fn apply(jobs: &mut BTreeMap<u64, ReplayJob>, ev: &Json) -> Result<(), String> {
+    let kind = ev.get("event").and_then(Json::as_str).ok_or("record missing event")?;
+    let id = ev.get("id").and_then(Json::as_f64).ok_or("record missing id")? as u64;
+    match kind {
+        "submitted" => {
+            let submit = submit_from_json(ev)?;
+            jobs.insert(id, ReplayJob { id, submit, state: ReplayState::Queued });
+        }
+        "started" => {
+            let job = jobs.get_mut(&id).ok_or(format!("job {id} started before submitted"))?;
+            job.state = ReplayState::Running;
+        }
+        // The checkpoint file itself is authoritative — nothing to fold.
+        "checkpointed" => {}
+        "done" => {
+            let job = jobs.get_mut(&id).ok_or(format!("job {id} done before submitted"))?;
+            let state = ev.get("state").and_then(Json::as_str).ok_or("done record missing state")?;
+            job.state = ReplayState::Terminal(match state {
+                "done" => JobState::Done,
+                "cancelled" => JobState::Cancelled,
+                "failed" => JobState::Failed(
+                    ev.get("reason").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+                ),
+                other => return Err(format!("job {id}: bad terminal state `{other}`")),
+            });
+        }
+        other => return Err(format!("unknown journal record `{other}`")),
+    }
+    Ok(())
+}
+
+/// Fold the record stream under `dir` into per-job states, id order. A
+/// missing journal file replays as empty (first boot); a torn trailing
+/// line (crash mid-append) is dropped; any other malformed record is a
+/// loud [`ServiceError::InvalidData`] — a journal we cannot read exactly
+/// is not one to rebuild jobs from.
+pub fn replay(dir: &Path) -> Result<Vec<ReplayJob>, ServiceError> {
+    let path = dir.join(JOURNAL_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(ServiceError::Io(format!("reading journal {}: {e}", path.display())))
+        }
+    };
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut jobs = BTreeMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        let fold = json::parse(line)
+            .map_err(|e| e.to_string())
+            .and_then(|ev| apply(&mut jobs, &ev));
+        if let Err(e) = fold {
+            if i + 1 == lines.len() && json::parse(line).is_err() {
+                // Crash mid-append: every earlier record was fsynced
+                // whole, so only the final line can be torn.
+                eprintln!("spartan serve: journal: dropping torn trailing record");
+                break;
+            }
+            return Err(ServiceError::InvalidData(format!(
+                "journal {}: record {}: {e}",
+                path.display(),
+                i + 1
+            )));
+        }
+    }
+    Ok(jobs.into_values().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("spartan_journal_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn record(k: usize, j: usize) -> SubmitRecord {
+        SubmitRecord {
+            input: "/tmp/data dir/week 3.spt".into(),
+            cfg: Parafac2Config { rank: 3, max_iters: 7, seed: 5, ..Default::default() },
+            cohort: Some("ehr-weekly".into()),
+            shards: None,
+            estimate: 4096,
+            subjects: k,
+            variables: j,
+            nnz: 99,
+        }
+    }
+
+    #[test]
+    fn replay_folds_lifecycles_in_id_order() {
+        let dir = tmpdir("fold");
+        let jr = Journal::open(&dir).unwrap();
+        jr.submitted(1, &record(8, 4));
+        jr.submitted(2, &record(9, 5));
+        jr.submitted(3, &record(10, 6));
+        jr.started(1);
+        jr.checkpointed(1, 1);
+        jr.started(2);
+        jr.done(2, &JobState::Failed("boom".into()));
+        jr.done(1, &JobState::Done);
+        drop(jr);
+        let jobs = replay(&dir).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].id, 1);
+        assert_eq!(jobs[0].state, ReplayState::Terminal(JobState::Done));
+        assert_eq!(jobs[0].submit.cohort.as_deref(), Some("ehr-weekly"));
+        assert_eq!(jobs[0].submit.cfg.rank, 3);
+        assert_eq!(jobs[0].submit.subjects, 8);
+        assert_eq!(jobs[1].state, ReplayState::Terminal(JobState::Failed("boom".into())));
+        assert_eq!(jobs[2].state, ReplayState::Queued);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn started_without_done_replays_as_running() {
+        let dir = tmpdir("running");
+        let jr = Journal::open(&dir).unwrap();
+        jr.submitted(7, &record(4, 4));
+        jr.started(7);
+        jr.checkpointed(7, 2);
+        drop(jr);
+        let jobs = replay(&dir).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].id, 7);
+        assert_eq!(jobs[0].state, ReplayState::Running);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_trailing_record_is_dropped_but_interior_corruption_rejected() {
+        let dir = tmpdir("torn");
+        let jr = Journal::open(&dir).unwrap();
+        jr.submitted(1, &record(4, 4));
+        jr.started(1);
+        drop(jr);
+        let path = dir.join(JOURNAL_FILE);
+        // Crash mid-append: a torn final line replays cleanly.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"event\":\"done\",\"id\":1,\"sta");
+        std::fs::write(&path, &text).unwrap();
+        let jobs = replay(&dir).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].state, ReplayState::Running);
+        // Corruption anywhere else is not a crash artifact: reject.
+        let interior = text.replace("\"event\":\"started\"", "\"event\":\"sta");
+        std::fs::write(&path, interior).unwrap();
+        match replay(&dir) {
+            Err(ServiceError::InvalidData(_)) => {}
+            other => panic!("interior corruption accepted: {:?}", other.map(|_| ())),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_journal_replays_empty_and_paths_are_stable() {
+        let dir = tmpdir("paths");
+        assert!(replay(&dir).unwrap().is_empty());
+        let jr = Journal::open(&dir).unwrap();
+        assert_eq!(jr.checkpoint_path(3), dir.join("checkpoints").join("job-3.ckpt"));
+        assert_eq!(jr.result_path(3), dir.join("results").join("job-3.json"));
+        assert!(replay(&dir).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

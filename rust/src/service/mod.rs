@@ -46,6 +46,8 @@
 //! Naming a cohort opts into warm-starting, which by design changes the
 //! trajectory; omit it for runs that must reproduce `spartan decompose`.
 
+pub mod checkpoint;
+pub mod journal;
 pub mod protocol;
 pub mod server;
 pub mod shard;
@@ -59,6 +61,7 @@ use crate::sparse::{CompactX, IrregularTensor};
 use crate::threadpool::Pool;
 use crate::util::membudget::MemBudget;
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -80,6 +83,11 @@ pub enum ServiceError {
     JobFailed { id: u64, reason: String },
     /// Invalid submission (rank bounds, empty data, bad options).
     Invalid(String),
+    /// The data itself is unusable: malformed on disk (non-finite
+    /// values, non-monotone `row_ptr`), or it no longer matches what a
+    /// checkpoint/reattach recorded (`‖X_k‖²` bits diverge). Rejected
+    /// with structure before any fitting — never silently refit.
+    InvalidData(String),
     /// The service is shutting down and no longer accepts jobs.
     ShuttingDown,
     /// A shard worker died mid-fit (connection refused, EOF, read
@@ -107,6 +115,7 @@ impl std::fmt::Display for ServiceError {
             ServiceError::UnknownJob(id) => write!(f, "unknown job id {id}"),
             ServiceError::JobFailed { id, reason } => write!(f, "job {id} failed: {reason}"),
             ServiceError::Invalid(msg) => write!(f, "invalid submission: {msg}"),
+            ServiceError::InvalidData(msg) => write!(f, "invalid data: {msg}"),
             ServiceError::ShuttingDown => write!(f, "service is shutting down"),
             ServiceError::ShardLost(msg) => write!(f, "shard lost: {msg}"),
             ServiceError::Io(msg) => write!(f, "service i/o error: {msg}"),
@@ -131,11 +140,24 @@ pub struct ServiceConfig {
     pub max_pending: usize,
     /// Warm-model cache capacity in cohorts (0 disables warm-starting).
     pub warm_cache: usize,
+    /// Durable-journal directory (`None` disables journaling). When set,
+    /// every job submitted **with a dataset path** appends lifecycle
+    /// records and per-iteration checkpoints under this directory (see
+    /// [`journal`]), and [`Service::try_start`] replays it on boot:
+    /// persisted results are restored, unfinished jobs are re-admitted
+    /// and resumed from their last checkpoint, bitwise.
+    pub journal: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> ServiceConfig {
-        ServiceConfig { workers: 0, mem_budget: None, max_pending: 16, warm_cache: 8 }
+        ServiceConfig {
+            workers: 0,
+            mem_budget: None,
+            max_pending: 16,
+            warm_cache: 8,
+            journal: None,
+        }
     }
 }
 
@@ -155,6 +177,25 @@ pub struct JobSpec {
     pub cfg: Parafac2Config,
     pub cohort: Option<String>,
     pub shards: Option<shard::ShardSpec>,
+    /// Dataset path `data` was loaded from. Journaled services persist
+    /// it so a restarted daemon can re-pack the arena; a job without a
+    /// source path is served normally but never journaled (there is
+    /// nothing to reload it from).
+    pub source: Option<String>,
+    /// Resume from a durable checkpoint instead of initializing: the
+    /// re-packed arena is revalidated bitwise against the checkpoint's
+    /// `‖X_k‖²` bits, then the fit continues at the recorded iteration
+    /// (any divergence fails the job with
+    /// [`ServiceError::InvalidData`]'s rendering — never a silent
+    /// refit).
+    pub resume_from: Option<checkpoint::Checkpoint>,
+}
+
+impl JobSpec {
+    /// A plain local fit of `data`: no cohort, no shards, no journaling.
+    pub fn new(data: IrregularTensor, cfg: Parafac2Config) -> JobSpec {
+        JobSpec { data, cfg, cohort: None, shards: None, source: None, resume_from: None }
+    }
 }
 
 /// Lifecycle of a job. `Starting` is the brief session-construction
@@ -226,6 +267,9 @@ struct JobEntry {
     subjects: usize,
     variables: usize,
     nnz: usize,
+    /// True when the job's lifecycle is persisted to the journal (the
+    /// service has one and the job carries a source path).
+    journaled: bool,
 }
 
 impl JobEntry {
@@ -271,6 +315,11 @@ struct Inner {
     progress: Condvar,
     warm: Mutex<warm::WarmCache>,
     shutdown: AtomicBool,
+    /// The durable journal, when this service runs with one.
+    journal: Option<journal::Journal>,
+    /// Set by [`Service::shutdown_draining`]: suppress terminal journal
+    /// records for drain-cancelled jobs so a restart resumes them.
+    draining: AtomicBool,
 }
 
 /// The resident fit service. Dropping it cancels everything in flight
@@ -281,10 +330,28 @@ pub struct Service {
 }
 
 impl Service {
+    /// [`Service::try_start`] for services without a journal (which
+    /// cannot fail to start). Panics if `cfg.journal` is set and the
+    /// journal cannot be opened or replayed — daemons should call
+    /// [`Service::try_start`] and surface the error instead.
     pub fn start(cfg: &ServiceConfig) -> Service {
+        Service::try_start(cfg).expect("service start")
+    }
+
+    /// Stand the service up. With [`ServiceConfig::journal`] set, opens
+    /// (or creates) the journal directory and replays it: terminal jobs
+    /// come back with their persisted results, unfinished jobs are
+    /// re-admitted in id order — resuming from their last durable
+    /// checkpoint when one was committed — so a daemon restart loses no
+    /// accepted work.
+    pub fn try_start(cfg: &ServiceConfig) -> Result<Service, ServiceError> {
         let budget = match cfg.mem_budget {
             Some(limit) => MemBudget::limited(limit),
             None => MemBudget::unlimited(),
+        };
+        let journal = match &cfg.journal {
+            Some(dir) => Some(journal::Journal::open(dir)?),
+            None => None,
         };
         let inner = Arc::new(Inner {
             pool: Pool::new(cfg.workers),
@@ -301,7 +368,12 @@ impl Service {
             progress: Condvar::new(),
             warm: Mutex::new(warm::WarmCache::new(cfg.warm_cache)),
             shutdown: AtomicBool::new(false),
+            journal,
+            draining: AtomicBool::new(false),
         });
+        if inner.journal.is_some() {
+            replay_journal(&inner)?;
+        }
         let sched = {
             let inner = Arc::clone(&inner);
             std::thread::Builder::new()
@@ -309,7 +381,7 @@ impl Service {
                 .spawn(move || scheduler_loop(inner))
                 .expect("spawn scheduler thread")
         };
-        Service { inner, scheduler: Some(sched) }
+        Ok(Service { inner, scheduler: Some(sched) })
     }
 
     /// Queue a fit. Fails fast with a structured error when the queue is
@@ -344,6 +416,7 @@ impl Service {
         }
         let id = st.next_id;
         st.next_id += 1;
+        let journaled = self.inner.journal.is_some() && spec.source.is_some();
         st.jobs.insert(
             id,
             JobEntry {
@@ -356,8 +429,25 @@ impl Service {
                 subjects: k,
                 variables: j,
                 nnz,
+                journaled,
             },
         );
+        if journaled {
+            let jr = self.inner.journal.as_ref().expect("journaled service");
+            jr.submitted(
+                id,
+                &journal::SubmitRecord {
+                    input: spec.source.clone().expect("journaled job has a source"),
+                    cfg: spec.cfg.clone(),
+                    cohort: spec.cohort.clone(),
+                    shards: spec.shards.as_ref().map(checkpoint::ShardLayout::from_spec),
+                    estimate,
+                    subjects: k,
+                    variables: j,
+                    nnz,
+                },
+            );
+        }
         st.pending.push_back(Pending { id, spec, estimate });
         self.inner.wake.notify_all();
         self.inner.progress.notify_all();
@@ -381,6 +471,9 @@ impl Service {
         match entry.state {
             JobState::Queued => {
                 entry.state = JobState::Cancelled;
+                if entry.journaled {
+                    journal_terminal(&self.inner, id, &JobState::Cancelled, None);
+                }
                 let snap = entry.snapshot(id);
                 st.pending.retain(|p| p.id != id);
                 self.inner.wake.notify_all();
@@ -442,6 +535,18 @@ impl Service {
         self.inner.wake.notify_all();
         self.inner.progress.notify_all();
     }
+
+    /// SIGTERM-style shutdown: like [`Service::shutdown`], but terminal
+    /// journal records for the jobs the drain itself interrupts are
+    /// suppressed — in the journal they stay queued/running, each running
+    /// fit's last per-iteration checkpoint stays on disk, and the next
+    /// [`Service::try_start`] re-admits and resumes them bitwise. A
+    /// daemon roll therefore loses zero accepted work. Jobs that finish
+    /// (`Done`) during the drain are journaled normally.
+    pub fn shutdown_draining(&self) {
+        self.inner.draining.store(true, Ordering::SeqCst);
+        self.shutdown();
+    }
 }
 
 impl Drop for Service {
@@ -465,6 +570,9 @@ fn scheduler_loop(inner: Arc<Inner>) {
             while let Some(p) = st.pending.pop_front() {
                 if let Some(e) = st.jobs.get_mut(&p.id) {
                     e.state = JobState::Cancelled;
+                    if e.journaled {
+                        journal_terminal(&inner, p.id, &JobState::Cancelled, None);
+                    }
                 }
             }
             inner.progress.notify_all();
@@ -496,8 +604,17 @@ fn scheduler_loop(inner: Arc<Inner>) {
             continue;
         }
         let p = st.pending.pop_front().expect("admitted front job");
-        if let Some(e) = st.jobs.get_mut(&p.id) {
-            e.state = JobState::Starting;
+        let journaled = match st.jobs.get_mut(&p.id) {
+            Some(e) => {
+                e.state = JobState::Starting;
+                e.journaled
+            }
+            None => false,
+        };
+        if journaled {
+            if let Some(jr) = &inner.journal {
+                jr.started(p.id);
+            }
         }
         st.starting = true;
         st.running += 1;
@@ -525,6 +642,9 @@ fn conclude(
     }
     st.running -= 1;
     if let Some(e) = st.jobs.get_mut(&id) {
+        if e.journaled {
+            journal_terminal(inner, id, &state, model.as_ref());
+        }
         e.state = state;
         e.model = model;
     }
@@ -532,20 +652,188 @@ fn conclude(
     inner.progress.notify_all();
 }
 
+/// Persist a journaled job's terminal record — result first (atomically,
+/// so a `done` record never points at a missing or torn result), then
+/// the `done` line, then the now-obsolete checkpoint is retired.
+///
+/// Suppressed while draining for every state but `Done`: a SIGTERM'd
+/// daemon leaves drain-cancelled jobs *running* in the journal so the
+/// restarted daemon resumes them from their last checkpoint instead of
+/// surfacing a cancellation nobody asked for.
+fn journal_terminal(inner: &Inner, id: u64, state: &JobState, model: Option<&Parafac2Model>) {
+    let Some(jr) = &inner.journal else { return };
+    if inner.draining.load(Ordering::SeqCst) && *state != JobState::Done {
+        return;
+    }
+    if let Some(m) = model {
+        let mut text = protocol::model_to_json(m).pretty();
+        text.push('\n');
+        if let Err(e) = crate::util::atomicfile::write_atomic(&jr.result_path(id), text.as_bytes())
+        {
+            eprintln!("spartan serve: job {id}: persisting result failed: {e}");
+        }
+    }
+    jr.done(id, state);
+    std::fs::remove_file(jr.checkpoint_path(id)).ok();
+}
+
+/// Commit job `id`'s checkpoint for the boundary just reached and append
+/// the `checkpointed` journal record. Failures are logged and do not
+/// interrupt the fit — the previous checkpoint (atomically replaced,
+/// never torn) stays valid, so durability degrades by one boundary at
+/// worst.
+fn journal_checkpoint(inner: &Inner, id: u64, iter: usize, ckpt: &checkpoint::Checkpoint) {
+    let Some(jr) = &inner.journal else { return };
+    match checkpoint::save_checkpoint(&jr.checkpoint_path(id), ckpt) {
+        Ok(()) => jr.checkpointed(id, iter),
+        Err(e) => eprintln!("spartan serve: job {id}: checkpoint failed: {e}"),
+    }
+}
+
+/// Register a replayed job as failed (dataset missing, checkpoint
+/// unreadable, …) and journal the terminal record so the *next* restart
+/// sees it settled.
+fn restore_failed(
+    st: &mut RegistryState,
+    jr: &journal::Journal,
+    id: u64,
+    submit: &journal::SubmitRecord,
+    reason: String,
+) {
+    jr.done(id, &JobState::Failed(reason.clone()));
+    st.jobs.insert(
+        id,
+        JobEntry {
+            state: JobState::Failed(reason),
+            cancel: Arc::new(AtomicBool::new(false)),
+            records: Vec::new(),
+            model: None,
+            warm_started: false,
+            estimate: submit.estimate,
+            subjects: submit.subjects,
+            variables: submit.variables,
+            nnz: submit.nnz,
+            journaled: true,
+        },
+    );
+}
+
+/// Fold the journal into a fresh registry (no scheduler is running yet):
+/// terminal jobs are restored with their persisted results; queued and
+/// interrupted jobs are re-admitted under their original ids, the latter
+/// resuming from their last durable checkpoint.
+fn replay_journal(inner: &Arc<Inner>) -> Result<(), ServiceError> {
+    let jr = inner.journal.as_ref().expect("journaled service");
+    let replayed = journal::replay(jr.dir())?;
+    let mut st = inner.state.lock().unwrap();
+    for job in replayed {
+        let journal::ReplayJob { id, submit, state } = job;
+        st.next_id = st.next_id.max(id + 1);
+        match state {
+            journal::ReplayState::Terminal(term) => {
+                let model = std::fs::read_to_string(jr.result_path(id))
+                    .ok()
+                    .and_then(|t| crate::util::json::parse(&t).ok())
+                    .and_then(|j| protocol::model_from_json(&j).ok());
+                st.jobs.insert(
+                    id,
+                    JobEntry {
+                        state: term,
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        records: Vec::new(),
+                        model,
+                        warm_started: false,
+                        estimate: submit.estimate,
+                        subjects: submit.subjects,
+                        variables: submit.variables,
+                        nnz: submit.nnz,
+                        journaled: true,
+                    },
+                );
+            }
+            journal::ReplayState::Queued | journal::ReplayState::Running => {
+                let cpath = jr.checkpoint_path(id);
+                let resume = if state == journal::ReplayState::Running && cpath.exists() {
+                    match checkpoint::load_checkpoint(&cpath) {
+                        Ok(c) => Some(c),
+                        Err(e) => {
+                            restore_failed(&mut st, jr, id, &submit, e.to_string());
+                            continue;
+                        }
+                    }
+                } else {
+                    None
+                };
+                let data = match server::load_tensor(&submit.input) {
+                    Ok(d) => d,
+                    Err(e) => {
+                        restore_failed(&mut st, jr, id, &submit, e.to_string());
+                        continue;
+                    }
+                };
+                let estimate = estimate_job_bytes(&data);
+                let (k, j, nnz) = (data.k(), data.j(), data.nnz());
+                let spec = JobSpec {
+                    data,
+                    cfg: submit.cfg,
+                    cohort: submit.cohort,
+                    shards: submit.shards.map(|l| l.to_spec(submit.input.clone())),
+                    source: Some(submit.input),
+                    resume_from: resume,
+                };
+                st.jobs.insert(
+                    id,
+                    JobEntry {
+                        state: JobState::Queued,
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        records: Vec::new(),
+                        model: None,
+                        warm_started: false,
+                        estimate,
+                        subjects: k,
+                        variables: j,
+                        nnz,
+                        journaled: true,
+                    },
+                );
+                st.pending.push_back(Pending { id, spec, estimate });
+            }
+        }
+    }
+    Ok(())
+}
+
 fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
-    let JobSpec { data, cfg, cohort, shards } = spec;
     let cancel = {
         let st = inner.state.lock().unwrap();
         st.jobs.get(&id).expect("registered job").cancel.clone()
     };
-    if let Some(shard_spec) = shards {
-        run_sharded_job(inner, id, data, cfg, shard_spec, cancel);
+    if spec.shards.is_some() {
+        run_sharded_job(inner, id, spec, cancel);
         return;
     }
-    let warm = cohort
-        .as_deref()
-        .and_then(|c| inner.warm.lock().unwrap().get(c, cfg.rank, data.j(), data.k()));
-    let warm_started = warm.is_some();
+    let JobSpec { data, cfg, cohort, source, resume_from, .. } = spec;
+    let journaled = inner.journal.is_some() && source.is_some();
+    if let Some(ckpt) = &resume_from {
+        let ours = crate::linalg::kernels::active_backend().name();
+        if ckpt.kernel_backend != ours {
+            let e = ServiceError::InvalidData(format!(
+                "checkpoint ran on kernel backend `{}` but this daemon runs `{ours}`",
+                ckpt.kernel_backend
+            ));
+            conclude(&inner, id, JobState::Failed(e.to_string()), None, true);
+            return;
+        }
+    }
+    let warm = match &resume_from {
+        // A resume *is* a warm start at the checkpoint's iterate — the
+        // cohort cache must never override the recorded trajectory.
+        Some(c) => Some(WarmStart { h: c.h.clone(), v: c.v.clone(), w: c.w.clone() }),
+        None => cohort
+            .as_deref()
+            .and_then(|c| inner.warm.lock().unwrap().get(c, cfg.rank, data.j(), data.k())),
+    };
+    let warm_started = resume_from.is_none() && warm.is_some();
     let options = SessionOptions {
         pool: Some(inner.pool.clone()),
         budget: Some(Arc::clone(&inner.budget)),
@@ -560,6 +848,22 @@ fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
             return;
         }
     };
+    if let Some(ckpt) = resume_from {
+        let got = session.slice_norm_sq();
+        let same = got.len() == ckpt.x_norm_bits.len()
+            && got.iter().zip(&ckpt.x_norm_bits).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            drop(session);
+            let e = ServiceError::InvalidData(format!(
+                "resume re-packed a different arena (‖X_k‖² bits diverge) — has `{}` changed \
+                 since the checkpoint?",
+                ckpt.input
+            ));
+            conclude(&inner, id, JobState::Failed(e.to_string()), None, true);
+            return;
+        }
+        session.restore(ckpt.state);
+    }
     {
         // Construction ack: the charge has landed, admission may resume.
         let mut st = inner.state.lock().unwrap();
@@ -579,11 +883,31 @@ fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
     let end = loop {
         match session.step() {
             Ok(StepOutcome::Iterated(rec)) => {
-                let mut st = inner.state.lock().unwrap();
-                if let Some(e) = st.jobs.get_mut(&id) {
-                    e.records.push(rec);
+                let iter = rec.iter;
+                {
+                    let mut st = inner.state.lock().unwrap();
+                    if let Some(e) = st.jobs.get_mut(&id) {
+                        e.records.push(rec);
+                    }
+                    inner.progress.notify_all();
                 }
-                inner.progress.notify_all();
+                if journaled {
+                    let (h, v, w) = session.factors();
+                    let ckpt = checkpoint::Checkpoint {
+                        input: source.clone().expect("journaled job has a source"),
+                        cfg: cfg.clone(),
+                        kernel_backend: crate::linalg::kernels::active_backend()
+                            .name()
+                            .to_string(),
+                        h: h.clone(),
+                        v: v.clone(),
+                        w: w.clone(),
+                        state: session.resume_state(),
+                        x_norm_bits: session.slice_norm_sq(),
+                        shards: None,
+                    };
+                    journal_checkpoint(&inner, id, iter, &ckpt);
+                }
             }
             Ok(StepOutcome::Done) => break End::Done,
             Ok(StepOutcome::Cancelled) => break End::Cancelled,
@@ -616,15 +940,27 @@ fn run_job(inner: Arc<Inner>, id: u64, spec: JobSpec) {
 /// trajectory must stay bitwise identical to a cold local fit), and does
 /// not feed the warm cache. State transitions, per-iteration records, and
 /// cancellation semantics are identical to a local job.
-fn run_sharded_job(
-    inner: Arc<Inner>,
-    id: u64,
-    data: IrregularTensor,
-    cfg: Parafac2Config,
-    spec: shard::ShardSpec,
-    cancel: Arc<AtomicBool>,
-) {
-    let mut session = match shard::ShardedFitSession::new(data, &cfg, &spec, Some(cancel)) {
+fn run_sharded_job(inner: Arc<Inner>, id: u64, spec: JobSpec, cancel: Arc<AtomicBool>) {
+    let JobSpec { data, cfg, shards, source, resume_from, .. } = spec;
+    let shard_spec = shards.expect("sharded job");
+    let journaled = inner.journal.is_some() && source.is_some();
+    let built = match resume_from {
+        Some(c) => shard::ShardedFitSession::resume(
+            data,
+            &cfg,
+            &shard_spec,
+            Some(cancel),
+            shard::ShardedResume {
+                h: c.h,
+                v: c.v,
+                w: c.w,
+                state: c.state,
+                x_norm_bits: c.x_norm_bits,
+            },
+        ),
+        None => shard::ShardedFitSession::new(data, &cfg, &shard_spec, Some(cancel)),
+    };
+    let mut session = match built {
         Ok(s) => s,
         Err(e) => {
             conclude(&inner, id, JobState::Failed(e.to_string()), None, true);
@@ -650,11 +986,31 @@ fn run_sharded_job(
     let end = loop {
         match session.step() {
             Ok(StepOutcome::Iterated(rec)) => {
-                let mut st = inner.state.lock().unwrap();
-                if let Some(e) = st.jobs.get_mut(&id) {
-                    e.records.push(rec);
+                let iter = rec.iter;
+                {
+                    let mut st = inner.state.lock().unwrap();
+                    if let Some(e) = st.jobs.get_mut(&id) {
+                        e.records.push(rec);
+                    }
+                    inner.progress.notify_all();
                 }
-                inner.progress.notify_all();
+                if journaled {
+                    let (h, v, w) = session.factors();
+                    let ckpt = checkpoint::Checkpoint {
+                        input: source.clone().expect("journaled job has a source"),
+                        cfg: cfg.clone(),
+                        kernel_backend: crate::linalg::kernels::active_backend()
+                            .name()
+                            .to_string(),
+                        h: h.clone(),
+                        v: v.clone(),
+                        w: w.clone(),
+                        state: session.resume_state(),
+                        x_norm_bits: session.slice_norm_sq(),
+                        shards: Some(checkpoint::ShardLayout::from_spec(&shard_spec)),
+                    };
+                    journal_checkpoint(&inner, id, iter, &ckpt);
+                }
             }
             Ok(StepOutcome::Done) => break End::Done,
             Ok(StepOutcome::Cancelled) => break End::Cancelled,
@@ -708,10 +1064,10 @@ mod tests {
         let c1 = cfg(3, 8);
         let c2 = cfg(2, 10);
         let id1 = svc
-            .submit(JobSpec { data: d1.clone(), cfg: c1.clone(), cohort: None, shards: None })
+            .submit(JobSpec::new(d1.clone(), c1.clone()))
             .unwrap();
         let id2 = svc
-            .submit(JobSpec { data: d2.clone(), cfg: c2.clone(), cohort: None, shards: None })
+            .submit(JobSpec::new(d2.clone(), c2.clone()))
             .unwrap();
         assert_eq!(svc.wait(id1).unwrap().state, JobState::Done);
         assert_eq!(svc.wait(id2).unwrap().state, JobState::Done);
@@ -750,7 +1106,7 @@ mod tests {
         let mut long = cfg(2, 1_000_000);
         long.tol = 0.0;
         let id1 = svc
-            .submit(JobSpec { data: d.clone(), cfg: long, cohort: None, shards: None })
+            .submit(JobSpec::new(d.clone(), long))
             .unwrap();
         // Let the scheduler claim job 1 so the bounded queue is empty.
         while matches!(svc.status(id1).unwrap().state, JobState::Queued) {
@@ -758,10 +1114,10 @@ mod tests {
         }
         // Job 2 fits the limit but not the current headroom → stays queued.
         let id2 = svc
-            .submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None })
+            .submit(JobSpec::new(d.clone(), cfg(2, 3)))
             .unwrap();
         // Queue is bounded: a third submit is a structured reject.
-        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None }) {
+        match svc.submit(JobSpec::new(d.clone(), cfg(2, 3))) {
             Err(ServiceError::QueueFull { pending: 1, max: 1 }) => {}
             other => panic!("expected QueueFull, got {other:?}"),
         }
@@ -787,7 +1143,7 @@ mod tests {
             mem_budget: Some(est / 2),
             ..Default::default()
         });
-        match svc.submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None }) {
+        match svc.submit(JobSpec::new(d.clone(), cfg(2, 3))) {
             Err(ServiceError::BudgetExceeded { estimate, limit }) => {
                 assert_eq!(estimate, est);
                 assert_eq!(limit, est / 2);
@@ -809,7 +1165,7 @@ mod tests {
         .tensor;
         assert!(estimate_job_bytes(&tiny) <= est / 2, "test premise: tiny job fits");
         let id = svc
-            .submit(JobSpec { data: tiny, cfg: cfg(2, 3), cohort: None, shards: None })
+            .submit(JobSpec::new(tiny, cfg(2, 3)))
             .unwrap();
         assert_eq!(svc.wait(id).unwrap().state, JobState::Done);
     }
@@ -826,13 +1182,13 @@ mod tests {
         let mut long = cfg(2, 1_000_000);
         long.tol = 0.0;
         let id1 = svc
-            .submit(JobSpec { data: d.clone(), cfg: long, cohort: None, shards: None })
+            .submit(JobSpec::new(d.clone(), long))
             .unwrap();
         while !matches!(svc.status(id1).unwrap().state, JobState::Running) {
             std::thread::yield_now();
         }
         let id2 = svc
-            .submit(JobSpec { data: d.clone(), cfg: cfg(2, 3), cohort: None, shards: None })
+            .submit(JobSpec::new(d.clone(), cfg(2, 3)))
             .unwrap();
         let snap = svc.cancel(id2).unwrap();
         assert_eq!(snap.state, JobState::Cancelled);
@@ -848,10 +1204,8 @@ mod tests {
         let d = data(51);
         let id1 = svc
             .submit(JobSpec {
-                data: d.clone(),
-                cfg: cfg(3, 5),
                 cohort: Some("ehr-weekly".into()),
-                shards: None,
+                ..JobSpec::new(d.clone(), cfg(3, 5))
             })
             .unwrap();
         let s1 = svc.wait(id1).unwrap();
@@ -860,10 +1214,8 @@ mod tests {
         // Same cohort, same shape → warm-started from the cached factors.
         let id2 = svc
             .submit(JobSpec {
-                data: d.clone(),
-                cfg: cfg(3, 5),
                 cohort: Some("ehr-weekly".into()),
-                shards: None,
+                ..JobSpec::new(d.clone(), cfg(3, 5))
             })
             .unwrap();
         let s2 = svc.wait(id2).unwrap();
@@ -872,10 +1224,8 @@ mod tests {
         // Different rank → shape miss, silent cold start.
         let id3 = svc
             .submit(JobSpec {
-                data: d.clone(),
-                cfg: cfg(2, 5),
                 cohort: Some("ehr-weekly".into()),
-                shards: None,
+                ..JobSpec::new(d.clone(), cfg(2, 5))
             })
             .unwrap();
         let s3 = svc.wait(id3).unwrap();
@@ -888,11 +1238,11 @@ mod tests {
         let svc = Service::start(&ServiceConfig { workers: 1, ..Default::default() });
         let d = data(61);
         assert!(matches!(
-            svc.submit(JobSpec { data: d.clone(), cfg: cfg(0, 3), cohort: None, shards: None }),
+            svc.submit(JobSpec::new(d.clone(), cfg(0, 3))),
             Err(ServiceError::Invalid(_))
         ));
         assert!(matches!(
-            svc.submit(JobSpec { data: d.clone(), cfg: cfg(999, 3), cohort: None, shards: None }),
+            svc.submit(JobSpec::new(d.clone(), cfg(999, 3))),
             Err(ServiceError::Invalid(_))
         ));
         assert!(matches!(svc.status(42), Err(ServiceError::UnknownJob(42))));
@@ -908,10 +1258,82 @@ mod tests {
             Box::new(ServiceError::UnknownJob(7)),
             Box::new(ServiceError::JobFailed { id: 7, reason: "boom".into() }),
             Box::new(ServiceError::Invalid("rank".into())),
+            Box::new(ServiceError::InvalidData("value at slice 3 row 1 is not finite".into())),
             Box::new(ServiceError::ShuttingDown),
         ];
         for e in errs {
             assert!(!e.to_string().is_empty());
         }
+    }
+
+    #[test]
+    fn journaled_restart_restores_results_and_drain_resumes_bitwise() {
+        let dir = std::env::temp_dir().join(format!("spartan_svc_journal_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("data.spt");
+        crate::sparse::io::save_binary(&data(71), &input).unwrap();
+        // Use the tensor exactly as a restarted daemon will re-load it.
+        let d = server::load_tensor(input.to_str().unwrap()).unwrap();
+        let fit_cfg = cfg(2, 6);
+        let want = fit_parafac2(&d, &fit_cfg).unwrap();
+        let svc_cfg = ServiceConfig {
+            workers: 1,
+            journal: Some(dir.join("journal")),
+            ..Default::default()
+        };
+        // Run a journaled job to completion, then roll the daemon: the
+        // restarted service serves the persisted result, bitwise.
+        let svc = Service::start(&svc_cfg);
+        let id = svc
+            .submit(JobSpec {
+                source: Some(input.to_string_lossy().into_owned()),
+                ..JobSpec::new(d.clone(), fit_cfg.clone())
+            })
+            .unwrap();
+        assert_eq!(svc.wait(id).unwrap().state, JobState::Done);
+        drop(svc);
+        let svc = Service::start(&svc_cfg);
+        assert_eq!(svc.status(id).unwrap().state, JobState::Done);
+        let m = svc.result(id).unwrap().expect("restart serves the persisted result");
+        assert_eq!(m.h.data(), want.h.data());
+        assert_eq!(m.v.data(), want.v.data());
+        assert_eq!(m.w.data(), want.w.data());
+        assert_eq!(m.stats.final_sse.to_bits(), want.stats.final_sse.to_bits());
+        // Interrupt a running job with a drain: the restarted service
+        // re-admits it, resumes from its last per-iteration checkpoint,
+        // and finishes on the uninterrupted trajectory, bitwise.
+        let mut slow = fit_cfg.clone();
+        slow.tol = 0.0; // never converges early: 30 full iterations
+        slow.max_iters = 30;
+        let want2 = fit_parafac2(&d, &slow).unwrap();
+        let id2 = svc
+            .submit(JobSpec {
+                source: Some(input.to_string_lossy().into_owned()),
+                ..JobSpec::new(d.clone(), slow)
+            })
+            .unwrap();
+        loop {
+            let s = svc.status(id2).unwrap();
+            if !s.records.is_empty() || s.state.is_terminal() {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        svc.shutdown_draining();
+        drop(svc);
+        let svc = Service::start(&svc_cfg);
+        assert_eq!(svc.wait(id2).unwrap().state, JobState::Done);
+        let m2 = svc.result(id2).unwrap().expect("resumed job finishes");
+        assert_eq!(m2.h.data(), want2.h.data());
+        assert_eq!(m2.v.data(), want2.v.data());
+        assert_eq!(m2.w.data(), want2.w.data());
+        assert_eq!(m2.stats.final_sse.to_bits(), want2.stats.final_sse.to_bits());
+        assert_eq!(m2.stats.fit_history.len(), want2.stats.fit_history.len());
+        for (a, b) in m2.stats.fit_history.iter().zip(&want2.stats.fit_history) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        drop(svc);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -284,6 +284,7 @@ pub fn model_to_json(m: &Parafac2Model) -> Json {
                 ("heap_bytes", Json::num(s.heap_bytes as f64)),
                 ("shard_reconnects", Json::num(s.shard_reconnects as f64)),
                 ("shard_retries", Json::num(s.shard_retries as f64)),
+                ("resumed_from_iter", Json::num(s.resumed_from_iter as f64)),
                 ("kernel_backend", Json::str(s.kernel_backend.clone())),
             ]),
         ),
@@ -322,6 +323,7 @@ pub fn model_from_json(j: &Json) -> Result<Parafac2Model, String> {
         heap_bytes: num("heap_bytes") as u64,
         shard_reconnects: num("shard_reconnects") as u64,
         shard_retries: num("shard_retries") as u64,
+        resumed_from_iter: num("resumed_from_iter") as u64,
         kernel_backend: sj
             .get("kernel_backend")
             .and_then(Json::as_str)
@@ -384,6 +386,7 @@ pub fn error_kind(e: &ServiceError) -> &'static str {
         ServiceError::UnknownJob(_) => "unknown_job",
         ServiceError::JobFailed { .. } => "job_failed",
         ServiceError::Invalid(_) => "invalid",
+        ServiceError::InvalidData(_) => "invalid_data",
         ServiceError::ShuttingDown => "shutting_down",
         ServiceError::ShardLost(_) => "shard_lost",
         ServiceError::Io(_) => "io",
@@ -435,6 +438,7 @@ pub fn error_from_response(j: &Json) -> ServiceError {
         "unknown_job" => ServiceError::UnknownJob(u64_of("id")),
         "job_failed" => ServiceError::JobFailed { id: u64_of("id"), reason: msg },
         "invalid" => ServiceError::Invalid(msg),
+        "invalid_data" => ServiceError::InvalidData(msg),
         "shutting_down" => ServiceError::ShuttingDown,
         "shard_lost" => ServiceError::ShardLost(
             j.get("shard").and_then(Json::as_str).map(str::to_string).unwrap_or(msg),
@@ -562,6 +566,7 @@ mod tests {
             ServiceError::BudgetExceeded { estimate: 123_456, limit: 99 },
             ServiceError::UnknownJob(41),
             ServiceError::JobFailed { id: 6, reason: "job 6 failed: boom".into() },
+            ServiceError::InvalidData("slice 3: value at row 1 is not finite".into()),
             ServiceError::ShuttingDown,
             ServiceError::ShardLost("shard 1 (127.0.0.1:9) died: eof".into()),
         ];
@@ -582,6 +587,7 @@ mod tests {
                 (ServiceError::JobFailed { id: a, .. }, ServiceError::JobFailed { id: b, .. }) => {
                     assert_eq!(a, b)
                 }
+                (ServiceError::InvalidData(_), ServiceError::InvalidData(_)) => {}
                 (ServiceError::ShuttingDown, ServiceError::ShuttingDown) => {}
                 (ServiceError::ShardLost(a), ServiceError::ShardLost(b)) => assert_eq!(a, b),
                 other => panic!("variant changed across the wire: {other:?}"),

@@ -11,6 +11,13 @@
 //! daemon and its clients share a filesystem (the `spartan generate` /
 //! `decompose` workflow), so the tensor itself never travels; only the
 //! fitted factors do, bit-exactly (see [`super::protocol`]).
+//!
+//! With `--journal <dir>` the daemon runs durably: job lifecycles and
+//! per-iteration checkpoints land under the journal directory
+//! ([`super::journal`]), a restart replays them (results survive,
+//! interrupted fits resume bitwise), and SIGTERM drains gracefully —
+//! stop accepting, checkpoint running fits, exit — so a daemon roll
+//! loses zero accepted work.
 
 use crate::parafac2::{Backend, Parafac2Config, Parafac2Model};
 use crate::service::protocol::{
@@ -58,9 +65,13 @@ pub fn serve(cfg: &ServeConfig) -> Result<(), ServiceError> {
             Some(b) => crate::util::humansize::bytes(b),
             None => "unlimited".to_string(),
         };
+        let journal = match &cfg.service.journal {
+            Some(dir) => format!(", journal {}", dir.display()),
+            None => String::new(),
+        };
         let _ = writeln!(
             out,
-            "spartan serve: listening on {local} (workers {}, budget {budget}, queue {})",
+            "spartan serve: listening on {local} (workers {}, budget {budget}, queue {}{journal})",
             cfg.service.workers, cfg.service.max_pending,
         );
         let _ = out.flush();
@@ -72,8 +83,31 @@ pub fn serve(cfg: &ServeConfig) -> Result<(), ServiceError> {
 /// the port). Returns after a `shutdown` request drains the service.
 pub fn serve_listener(listener: TcpListener, cfg: &ServiceConfig) -> Result<(), ServiceError> {
     let local = listener.local_addr().map_err(|e| ServiceError::Io(e.to_string()))?;
-    let service = Arc::new(Service::start(cfg));
+    let service = Arc::new(Service::try_start(cfg)?);
     let stop = Arc::new(AtomicBool::new(false));
+    #[cfg(unix)]
+    {
+        // Graceful SIGTERM: stop accepting, drain with checkpoints (the
+        // journal keeps interrupted jobs resumable), unblock the accept
+        // loop, exit. The watcher also exits quietly once the server
+        // stops for any other reason.
+        sigterm::install();
+        let stop = Arc::clone(&stop);
+        let service = Arc::clone(&service);
+        std::thread::spawn(move || loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            if sigterm::received() {
+                eprintln!("spartan serve: SIGTERM — draining (running fits stay resumable)");
+                stop.store(true, Ordering::SeqCst);
+                service.shutdown_draining();
+                let _ = TcpStream::connect(local);
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        });
+    }
     for conn in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -224,7 +258,12 @@ fn handle_submit(service: &Service, req: &Json) -> Result<Json, ServiceError> {
         }
         _ => None,
     };
-    let id = service.submit(JobSpec { data, cfg, cohort, shards })?;
+    let id = service.submit(JobSpec {
+        cohort,
+        shards,
+        source: Some(input.to_string()),
+        ..JobSpec::new(data, cfg)
+    })?;
     Ok(ok_response(vec![("id", Json::num(id as f64))]))
 }
 
@@ -251,7 +290,36 @@ pub(crate) fn load_tensor(path: &str) -> Result<IrregularTensor, ServiceError> {
     } else {
         crate::sparse::io::load_binary(p)
     };
-    loaded.map_err(|e| ServiceError::Invalid(format!("loading {path}: {e}")))
+    loaded.map_err(|e| ServiceError::InvalidData(format!("loading {path}: {e}")))
+}
+
+/// Process-wide SIGTERM latch, installed by [`serve_listener`]. Uses the
+/// C `signal` symbol libstd already links — no new dependency — and only
+/// flips an `AtomicBool` in the handler (the async-signal-safe subset);
+/// the watcher thread does all real work outside signal context.
+#[cfg(unix)]
+mod sigterm {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+        }
+    }
+
+    pub fn received() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
 }
 
 // ---------------------------------------------------------------------------

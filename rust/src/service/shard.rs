@@ -218,6 +218,12 @@ impl ShardSpec {
 ///   `N+1` (long enough and the coordinator's read timeout fires).
 /// * `exit-after:N` — exit the whole worker process right after writing
 ///   the N-th response (mid-iteration from the coordinator's view).
+/// * `crash-after-iter:N` — **coordinator-side**: a checkpointing fit
+///   driver exits the whole process (code 86) right after committing the
+///   checkpoint at iteration boundary `N` — the crash drill `spartan
+///   resume` is tested against. Workers ignore this plan (and the
+///   coordinator ignores the worker plans), so one env var can arm either
+///   side of a drill without cross-firing.
 ///
 /// Every plan fires exactly once, then disarms — the worker serves
 /// cleanly afterwards, which is precisely the scenario the coordinator's
@@ -235,6 +241,9 @@ pub enum FaultKind {
     Drop,
     Stall(u64),
     Exit,
+    /// Coordinator-side plan (see the [`FaultPlan`] docs); never fires in
+    /// a worker.
+    CrashAfterIter,
 }
 
 impl FaultPlan {
@@ -250,6 +259,7 @@ impl FaultPlan {
         let plan = match kind {
             "drop-after" => FaultPlan { kind: FaultKind::Drop, after },
             "exit-after" => FaultPlan { kind: FaultKind::Exit, after },
+            "crash-after-iter" => FaultPlan { kind: FaultKind::CrashAfterIter, after },
             "stall-after" => {
                 let ms = parts
                     .next()
@@ -275,6 +285,10 @@ impl FaultPlan {
             return None;
         }
         match FaultPlan::parse(&s) {
+            Ok(FaultPlan { kind: FaultKind::CrashAfterIter, .. }) => {
+                eprintln!("spartan shard-worker: SPARTAN_FAULT `{s}` is coordinator-side; ignoring");
+                None
+            }
             Ok(p) => {
                 eprintln!("spartan shard-worker: fault armed: {s}");
                 Some(p)
@@ -284,6 +298,20 @@ impl FaultPlan {
                 None
             }
         }
+    }
+}
+
+/// Coordinator-side fault arming: `SPARTAN_FAULT=crash-after-iter:N`
+/// tells a checkpointing fit driver to exit the whole process right after
+/// committing the checkpoint at iteration boundary `N` (the checkpoint is
+/// already fsynced; no destructors run — as close to kill -9 as a
+/// self-inflicted crash gets). Worker-grammar plans are ignored here,
+/// exactly as workers ignore this one.
+pub fn coordinator_crash_iter_from_env() -> Option<u64> {
+    let s = std::env::var("SPARTAN_FAULT").ok()?;
+    match FaultPlan::parse(&s) {
+        Ok(FaultPlan { kind: FaultKind::CrashAfterIter, after }) => Some(after),
+        _ => None,
     }
 }
 
@@ -877,6 +905,75 @@ pub struct ShardedFitSession {
     iters_done: usize,
     converged: bool,
     cancel: Arc<AtomicBool>,
+    /// Counters a resumed fit carries from its checkpoint, added to the
+    /// worker-reported tallies when `finish` publishes `FitStats` (the
+    /// post-resume workers only know about their own post-resume work).
+    carried: CarriedTotals,
+}
+
+/// The checkpointed portion of a resumed sharded fit's counters/timings
+/// (closed-form at the boundary — see `resume_state`).
+#[derive(Clone, Copy, Debug, Default)]
+struct CarriedTotals {
+    yv_products: u64,
+    traversals: u64,
+    x_traversals: u64,
+    total_secs: f64,
+}
+
+/// Everything a sharded resume needs beyond the live topology: the
+/// checkpointed factor iterate, the loop state, and the data-identity
+/// bits every re-packed worker arena must reproduce exactly.
+pub struct ShardedResume {
+    pub h: Mat,
+    pub v: Mat,
+    pub w: Mat,
+    pub state: crate::parafac2::ResumeState,
+    /// Per-slice `‖X_k‖²` from the checkpoint, flat in subject order.
+    pub x_norm_bits: Vec<f64>,
+}
+
+/// Shared head of [`ShardedFitSession::new`] and
+/// [`ShardedFitSession::resume`]: structural validation plus the
+/// deterministic chunk deal (global plan → one contiguous run of whole
+/// chunks per shard) — both constructions must derive the identical deal
+/// from the dataset, or a resumed shard would pack a different range.
+fn validate_and_deal(
+    data: &IrregularTensor,
+    cfg: &Parafac2Config,
+    spec: &ShardSpec,
+) -> Result<(ChunkPlan, Vec<Range<usize>>), ServiceError> {
+    if cfg.rank == 0 {
+        return Err(ServiceError::Invalid("rank must be ≥ 1".into()));
+    }
+    if cfg.rank > data.j() {
+        return Err(ServiceError::Invalid(format!(
+            "rank {} exceeds variable count J={}",
+            cfg.rank,
+            data.j()
+        )));
+    }
+    spec.validate().map_err(ServiceError::Invalid)?;
+    if !matches!(cfg.backend, Backend::Spartan) {
+        return Err(ServiceError::Invalid(
+            "sharded fitting requires the spartan engine (the workers run the fused sweep)"
+                .into(),
+        ));
+    }
+    // The same global plan a local fit would build; shard boundaries
+    // align to its chunk boundaries (module docs, invariant 1).
+    let plan = subject_plan(data);
+    let nc = plan.n_chunks();
+    let ns = spec.addrs.len();
+    if ns > nc {
+        return Err(ServiceError::Invalid(format!(
+            "{ns} shards but the plan has only {nc} chunks (fewer subjects than shards?)"
+        )));
+    }
+    // Shard s owns the contiguous chunk run [s·nc/ns, (s+1)·nc/ns).
+    let chunk_runs: Vec<Range<usize>> =
+        (0..ns).map(|s| (s * nc / ns)..((s + 1) * nc / ns)).collect();
+    Ok((plan, chunk_runs))
 }
 
 impl ShardedFitSession {
@@ -892,39 +989,9 @@ impl ShardedFitSession {
         spec: &ShardSpec,
         cancel: Option<Arc<AtomicBool>>,
     ) -> Result<ShardedFitSession, ServiceError> {
-        if cfg.rank == 0 {
-            return Err(ServiceError::Invalid("rank must be ≥ 1".into()));
-        }
-        if cfg.rank > data.j() {
-            return Err(ServiceError::Invalid(format!(
-                "rank {} exceeds variable count J={}",
-                cfg.rank,
-                data.j()
-            )));
-        }
-        spec.validate().map_err(ServiceError::Invalid)?;
-        if !matches!(cfg.backend, Backend::Spartan) {
-            return Err(ServiceError::Invalid(
-                "sharded fitting requires the spartan engine (the workers run the fused sweep)"
-                    .into(),
-            ));
-        }
+        let (plan, chunk_runs) = validate_and_deal(&data, cfg, spec)?;
         let total_sw = Stopwatch::start();
         let mut stats = FitStats::default();
-
-        // The same global plan a local fit would build; shard boundaries
-        // align to its chunk boundaries (module docs, invariant 1).
-        let plan = subject_plan(&data);
-        let nc = plan.n_chunks();
-        let ns = spec.addrs.len();
-        if ns > nc {
-            return Err(ServiceError::Invalid(format!(
-                "{ns} shards but the plan has only {nc} chunks (fewer subjects than shards?)"
-            )));
-        }
-        // Shard s owns the contiguous chunk run [s·nc/ns, (s+1)·nc/ns).
-        let chunk_runs: Vec<Range<usize>> =
-            (0..ns).map(|s| (s * nc / ns)..((s + 1) * nc / ns)).collect();
 
         // Init on the coordinator — bitwise identical to the local fit's
         // (the determinism contract covers pool-size independence).
@@ -1005,6 +1072,152 @@ impl ShardedFitSession {
             iters_done: 0,
             converged: false,
             cancel: cancel.unwrap_or_else(|| Arc::new(AtomicBool::new(false))),
+            carried: CarriedTotals::default(),
+        })
+    }
+
+    /// Resume a sharded fit from a durable checkpoint: the same
+    /// validation and deterministic chunk deal as
+    /// [`ShardedFitSession::new`], but instead of init + `plan` the
+    /// coordinator replays `hello` + `reattach` against every worker —
+    /// under a fresh fit id, carrying the checkpointed boundary factors —
+    /// and insists each re-packed arena reproduces the checkpoint's
+    /// `‖X_k‖²` bits exactly. Diverging data is rejected with a
+    /// structured [`ServiceError::InvalidData`], never silently refit.
+    /// The recovered trajectory is bitwise identical to a fit that never
+    /// crashed; the only counter signature is one extra `K` of
+    /// `x_traversals` (the resume re-pack), and pre-crash recovery
+    /// inflation (replays of lost-shard incidents) is not carried.
+    pub fn resume(
+        data: IrregularTensor,
+        cfg: &Parafac2Config,
+        spec: &ShardSpec,
+        cancel: Option<Arc<AtomicBool>>,
+        from: ShardedResume,
+    ) -> Result<ShardedFitSession, ServiceError> {
+        let (plan, chunk_runs) = validate_and_deal(&data, cfg, spec)?;
+        let total_sw = Stopwatch::start();
+        let mut stats = FitStats::default();
+        let (j, k) = (data.j(), data.k());
+        drop(data);
+
+        let r = cfg.rank;
+        if from.h.shape() != (r, r) || from.v.shape() != (j, r) || from.w.shape() != (k, r) {
+            return Err(ServiceError::InvalidData(format!(
+                "checkpoint factors {:?}/{:?}/{:?} do not match rank {r}, J={j}, K={k} — \
+                 is `{}` the dataset this checkpoint was taken from?",
+                from.h.shape(),
+                from.v.shape(),
+                from.w.shape(),
+                spec.path
+            )));
+        }
+        if from.x_norm_bits.len() != k {
+            return Err(ServiceError::InvalidData(format!(
+                "checkpoint has {} slice norms but `{}` has K={k} subjects",
+                from.x_norm_bits.len(),
+                spec.path
+            )));
+        }
+        let factors = CpFactors { h: from.h, v: from.v, w: from.w };
+
+        let fit_id =
+            format!("fit-{}-{}", std::process::id(), NEXT_FIT_ID.fetch_add(1, Ordering::Relaxed));
+        let mut conns: Vec<ShardConn> = Vec::with_capacity(spec.addrs.len());
+        for (index, (addr, run)) in spec.addrs.iter().zip(&chunk_runs).enumerate() {
+            let subjects = plan.ranges()[run.start].start..plan.ranges()[run.end - 1].end;
+            let mut conn =
+                match connect_with_retry(index, addr, subjects.clone(), spec, &mut stats) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        abort_all(&mut conns);
+                        return Err(e);
+                    }
+                };
+            let lo = subjects.start;
+            let ranges: Vec<(usize, usize)> = plan.ranges()[run.clone()]
+                .iter()
+                .map(|r| (r.start - lo, r.end - lo))
+                .collect();
+            let payload = ReattachPayload {
+                fit_id: fit_id.clone(),
+                iter: from.state.iter as u64,
+                path: spec.path.clone(),
+                lo,
+                hi: subjects.end,
+                ranges: ranges.clone(),
+                h: factors.h.clone(),
+                v: factors.v.clone(),
+                w: factors.w.block(lo, subjects.end, 0, r),
+            };
+            let resp = match conn.request(&reattach_to_json(&payload)) {
+                Ok(resp) => resp,
+                Err(e) => {
+                    abort_all(&mut conns);
+                    return Err(e);
+                }
+            };
+            let bits = match parse_plan_reply(&resp, subjects.len(), j, &spec.path) {
+                Ok(bits) => bits,
+                Err(msg) => {
+                    abort_all(&mut conns);
+                    let _ = conn.request(&Json::obj(vec![("verb", Json::str("abort"))]));
+                    return Err(ServiceError::InvalidData(format!(
+                        "shard {index} ({addr}): {msg}"
+                    )));
+                }
+            };
+            let expected = &from.x_norm_bits[subjects.clone()];
+            if bits.len() != expected.len()
+                || bits.iter().zip(expected).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                abort_all(&mut conns);
+                let _ = conn.request(&Json::obj(vec![("verb", Json::str("abort"))]));
+                return Err(ServiceError::InvalidData(format!(
+                    "shard {index} ({addr}): resume re-packed a different arena \
+                     (‖X_k‖² bits diverge) — has `{}` changed since the checkpoint?",
+                    spec.path
+                )));
+            }
+            conn.ranges = ranges;
+            conn.x_norm_bits = bits;
+            conns.push(conn);
+        }
+
+        // Same flat subject-order fold as `new` — over bits just proven
+        // identical to the original pack's, so ‖X‖² matches bitwise.
+        let x_norm_sq: f64 = from.x_norm_bits.iter().sum();
+        let x_norm = x_norm_sq.sqrt();
+
+        stats.fit_history = from.state.fit_history;
+        stats.procrustes_secs = from.state.procrustes_secs;
+        stats.cp_secs = from.state.cp_secs;
+        stats.shard_reconnects += from.state.shard_reconnects;
+        stats.shard_retries += from.state.shard_retries;
+        stats.resumed_from_iter = from.state.iter as u64;
+        Ok(ShardedFitSession {
+            cfg: cfg.clone(),
+            spec: spec.clone(),
+            fit_id,
+            conns,
+            factors,
+            j,
+            k,
+            x_norm_sq,
+            x_norm,
+            y_norm_sq: 0.0,
+            stats,
+            total_sw,
+            prev_sse: f64::from_bits(from.state.prev_sse_bits),
+            iters_done: from.state.iter,
+            converged: from.state.converged,
+            cancel: cancel.unwrap_or_else(|| Arc::new(AtomicBool::new(false))),
+            carried: CarriedTotals {
+                yv_products: from.state.yv_products,
+                traversals: from.state.traversals,
+                x_traversals: from.state.x_traversals,
+                total_secs: from.state.total_secs,
+            },
         })
     }
 
@@ -1396,9 +1609,9 @@ impl ShardedFitSession {
         let final_sse = sse_from_parts(self.x_norm_sq, self.y_norm_sq, final_res.y_residual_sq);
 
         let mut stats = self.stats;
-        stats.yv_products = yv;
-        stats.traversals = trav;
-        stats.x_traversals = xtrav;
+        stats.yv_products = self.carried.yv_products + yv;
+        stats.traversals = self.carried.traversals + trav;
+        stats.x_traversals = self.carried.x_traversals + xtrav;
         stats.heap_bytes = heap;
         stats.iterations = self.iters_done;
         stats.final_sse = final_sse;
@@ -1406,7 +1619,7 @@ impl ShardedFitSession {
         // The handshake pinned every worker to the coordinator's backend,
         // so the coordinator's name describes the whole topology.
         stats.kernel_backend = kernels::active_backend().name().to_string();
-        stats.total_secs = self.total_sw.elapsed_secs();
+        stats.total_secs = self.carried.total_secs + self.total_sw.elapsed_secs();
         stats.secs_per_iter = if self.iters_done > 0 {
             (stats.procrustes_secs + stats.cp_secs) / self.iters_done as f64
         } else {
@@ -1444,6 +1657,48 @@ impl ShardedFitSession {
     /// iteration (and the workers with it — they are request-driven).
     pub fn cancel_flag(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.cancel)
+    }
+
+    /// The current factor iterate `(H, V, W)` — at an iteration boundary
+    /// this is everything the remaining trajectory depends on.
+    pub fn factors(&self) -> (&Mat, &Mat, &Mat) {
+        (&self.factors.h, &self.factors.v, &self.factors.w)
+    }
+
+    /// Per-slice `‖X_k‖²` bits, flat in subject order (each shard's
+    /// `plan`/`reattach` reply concatenated) — the data-identity half of
+    /// a checkpoint, same contract as the local session's.
+    pub fn slice_norm_sq(&self) -> Vec<f64> {
+        self.conns.iter().flat_map(|c| c.x_norm_bits.iter().copied()).collect()
+    }
+
+    /// Snapshot the loop state at the current iteration boundary — the
+    /// non-factor half of a checkpoint. The coordinator cannot see worker
+    /// counter tallies mid-fit (only `finish` reports them), so the
+    /// counters here are the **closed forms** of the per-iteration work
+    /// invariant — exactly what an uninterrupted fit has spent at this
+    /// boundary (`K` yv-products and traversals per iteration, plus the
+    /// one-time pack of `K` x-traversals). Replay inflation from
+    /// recovered lost-shard incidents is deliberately not carried: a
+    /// resumed fit reports the uninterrupted fit's counters (modulo the
+    /// resume's own `+K` re-pack), keeping the counter contract
+    /// trajectory-shaped rather than history-shaped.
+    pub fn resume_state(&self) -> crate::parafac2::ResumeState {
+        let (i, k) = (self.iters_done as u64, self.k as u64);
+        crate::parafac2::ResumeState {
+            iter: self.iters_done,
+            prev_sse_bits: self.prev_sse.to_bits(),
+            converged: self.converged,
+            fit_history: self.stats.fit_history.clone(),
+            yv_products: i * k,
+            traversals: i * k,
+            x_traversals: (i + 1) * k,
+            procrustes_secs: self.stats.procrustes_secs,
+            cp_secs: self.stats.cp_secs,
+            total_secs: self.carried.total_secs + self.total_sw.elapsed_secs(),
+            shard_reconnects: self.stats.shard_reconnects,
+            shard_retries: self.stats.shard_retries,
+        }
     }
 }
 
@@ -1686,6 +1941,10 @@ mod tests {
         assert_eq!(
             FaultPlan::parse("exit-after:0").unwrap(),
             FaultPlan { kind: FaultKind::Exit, after: 0 }
+        );
+        assert_eq!(
+            FaultPlan::parse("crash-after-iter:2").unwrap(),
+            FaultPlan { kind: FaultKind::CrashAfterIter, after: 2 }
         );
         for bad in ["", "nope", "drop-after", "drop-after:x", "drop-after:1:2", "stall-after:1"] {
             assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");

@@ -81,22 +81,73 @@ impl Csr {
         self.values = values;
     }
 
-    /// Build directly from raw CSR arrays (validated).
-    pub fn from_raw(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f64>) -> Csr {
-        assert_eq!(indptr.len(), rows + 1);
-        assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
-        assert_eq!(indices.len(), values.len());
+    /// Build directly from raw CSR arrays, validating structure *and*
+    /// values. Rejects a wrong-length or non-monotone `indptr`, unsorted
+    /// or out-of-bounds column indices, and non-finite values — a NaN
+    /// entering the fit would silently poison every factor, so it is
+    /// refused at the trust boundary instead (the loaders surface this
+    /// as an input error; the daemon as `invalid_data` on the wire).
+    pub fn try_from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Csr, String> {
+        if indptr.len() != rows + 1 {
+            return Err(format!("indptr has {} entries, want rows+1 = {}", indptr.len(), rows + 1));
+        }
+        if indptr[0] != 0 {
+            return Err(format!("indptr[0] = {} (want 0)", indptr[0]));
+        }
+        if *indptr.last().unwrap() != indices.len() {
+            return Err(format!(
+                "indptr ends at {} but there are {} column indices",
+                indptr.last().unwrap(),
+                indices.len()
+            ));
+        }
+        if indices.len() != values.len() {
+            return Err(format!("{} column indices vs {} values", indices.len(), values.len()));
+        }
+        // monotonicity first: it bounds every row slice taken below
         for r in 0..rows {
-            assert!(indptr[r] <= indptr[r + 1], "indptr not monotone at row {r}");
-            let row = &indices[indptr[r]..indptr[r + 1]];
-            for w in row.windows(2) {
-                assert!(w[0] < w[1], "columns not strictly sorted in row {r}");
-            }
-            if let Some(&last) = row.last() {
-                assert!((last as usize) < cols, "col out of bounds in row {r}");
+            if indptr[r] > indptr[r + 1] {
+                return Err(format!("indptr not monotone at row {r}"));
             }
         }
-        Csr { rows, cols, indptr, indices, values }
+        for r in 0..rows {
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("columns not strictly sorted in row {r}"));
+                }
+            }
+            if let Some(&last) = row.last() {
+                if (last as usize) >= cols {
+                    return Err(format!("column {last} out of bounds (J = {cols}) in row {r}"));
+                }
+            }
+        }
+        if let Some(p) = values.iter().position(|v| !v.is_finite()) {
+            return Err(format!("value at nonzero {p} is not finite ({})", values[p]));
+        }
+        Ok(Csr { rows, cols, indptr, indices, values })
+    }
+
+    /// Build directly from raw CSR arrays; panics on invalid input — use
+    /// [`Csr::try_from_raw`] for untrusted data.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Csr {
+        match Csr::try_from_raw(rows, cols, indptr, indices, values) {
+            Ok(m) => m,
+            Err(e) => panic!("Csr::from_raw: {e}"),
+        }
     }
 
     /// Dense → CSR (tests and small examples).
@@ -339,6 +390,38 @@ mod tests {
     #[should_panic]
     fn from_raw_rejects_unsorted() {
         Csr::from_raw(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn try_from_raw_rejects_structurally_bad_arrays() {
+        // non-monotone indptr (terminal entry still matches nnz)
+        let e = Csr::try_from_raw(2, 3, vec![0, 2, 1], vec![0], vec![1.0]).unwrap_err();
+        assert!(e.contains("monotone"), "{e}");
+        // wrong indptr length
+        assert!(Csr::try_from_raw(2, 3, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // nonzero first entry
+        assert!(Csr::try_from_raw(1, 3, vec![1, 1], vec![], vec![]).is_err());
+        // terminal entry disagrees with nnz
+        let e = Csr::try_from_raw(1, 3, vec![0, 2], vec![0], vec![1.0]).unwrap_err();
+        assert!(e.contains("column indices"), "{e}");
+        // indices/values length mismatch
+        assert!(Csr::try_from_raw(1, 3, vec![0, 2], vec![0, 1], vec![1.0]).is_err());
+        // column out of bounds
+        let e = Csr::try_from_raw(1, 2, vec![0, 1], vec![5], vec![1.0]).unwrap_err();
+        assert!(e.contains("out of bounds"), "{e}");
+    }
+
+    #[test]
+    fn try_from_raw_rejects_non_finite_values() {
+        let e = Csr::try_from_raw(1, 2, vec![0, 2], vec![0, 1], vec![1.0, f64::NAN]).unwrap_err();
+        assert!(e.contains("not finite"), "{e}");
+        let e = Csr::try_from_raw(1, 2, vec![0, 1], vec![0], vec![f64::INFINITY]).unwrap_err();
+        assert!(e.contains("not finite"), "{e}");
+        let e = Csr::try_from_raw(1, 2, vec![0, 1], vec![1], vec![f64::NEG_INFINITY]);
+        assert!(e.is_err());
+        // -0.0 and subnormals are finite — they must pass
+        let ok = Csr::try_from_raw(1, 2, vec![0, 2], vec![0, 1], vec![-0.0, 5e-324]);
+        assert!(ok.is_ok());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 
 use super::csr::Csr;
 use super::irregular::IrregularTensor;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -88,7 +88,12 @@ pub fn load_binary(path: &Path) -> Result<IrregularTensor> {
         if *indptr.last().unwrap_or(&0) != nnz {
             bail!("{}: slice {idx} indptr/nnz mismatch", path.display());
         }
-        slices.push(Csr::from_raw(rows, j, indptr, indices, values));
+        // full structural + value validation: non-monotone indptr,
+        // unsorted/out-of-range columns, and NaN/Inf values are load
+        // errors here, never a corrupted fit later
+        let slice = Csr::try_from_raw(rows, j, indptr, indices, values)
+            .map_err(|e| anyhow!("{}: slice {idx}: {e}", path.display()))?;
+        slices.push(slice);
     }
     Ok(IrregularTensor::new_unchecked(slices))
 }
@@ -124,6 +129,9 @@ pub fn load_triplets_text(path: &Path) -> Result<IrregularTensor> {
         let i = parse(it.next(), "row")? as usize;
         let j = parse(it.next(), "col")? as usize;
         let v = parse(it.next(), "value")?;
+        if !v.is_finite() {
+            bail!("{}: line {}: value {v} is not finite", path.display(), lineno + 1);
+        }
         if k >= per_subject.len() {
             per_subject.resize_with(k + 1, Vec::new);
         }
@@ -227,6 +235,60 @@ mod tests {
         let path = dir.join("spartan_io_bad.spt");
         std::fs::write(&path, b"NOPE123456").unwrap();
         assert!(load_binary(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_load_rejects_nan_values() {
+        // corrupt a valid file: overwrite slice 0's first value with NaN
+        let t = IrregularTensor::new(vec![Csr::from_triplets(
+            2,
+            3,
+            vec![(0, 0, 1.0), (1, 2, 2.0)],
+        )]);
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_nan.spt");
+        save_binary(&t, &path).unwrap();
+        // layout: magic 4 + K 8 + J 8 + rows 8 + nnz 8 + indptr 3×8 + indices 2×4
+        let off = 4 + 8 + 8 + 8 + 8 + 3 * 8 + 2 * 4;
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off..off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("not finite"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_load_rejects_non_monotone_indptr() {
+        let t = IrregularTensor::new(vec![Csr::from_triplets(
+            2,
+            3,
+            vec![(0, 0, 1.0), (1, 2, 2.0)],
+        )]);
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_indptr.spt");
+        save_binary(&t, &path).unwrap();
+        // indptr starts after magic 4 + K 8 + J 8 + rows 8 + nnz 8; bump
+        // the middle entry above the terminal one → non-monotone
+        let off = 4 + 8 + 8 + 8 + 8 + 8;
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off..off + 8].copy_from_slice(&5u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("monotone"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn text_load_rejects_non_finite_values() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("spartan_io_nonfinite.txt");
+        std::fs::write(&path, "0 0 0 1.0\n0 1 1 nan\n").unwrap();
+        let err = load_triplets_text(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("not finite"), "{err}");
+        std::fs::write(&path, "0 0 0 inf\n").unwrap();
+        assert!(load_triplets_text(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

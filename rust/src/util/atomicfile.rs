@@ -1,0 +1,96 @@
+//! Crash-safe file commits: write-to-temp → fsync → rename.
+//!
+//! The durability layer (checkpoints, journal results) must never leave a
+//! torn file behind — a reader either sees the previous complete version
+//! or the new complete version, even if the process dies mid-write. POSIX
+//! gives exactly that from `rename(2)` within one filesystem, provided
+//! the temp file's contents are flushed to disk *before* the rename and
+//! the containing directory entry is flushed *after* it.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Atomically replace `path` with `bytes`.
+///
+/// The temp file lives next to `path` (same directory ⇒ same filesystem ⇒
+/// `rename` is atomic) and carries the pid so concurrent writers of
+/// *different* targets never collide; concurrent writers of the *same*
+/// target last-write-win with each version complete. On any error the
+/// temp file is removed and `path` is untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let tmp = path.with_file_name(format!(
+        ".{}.tmp.{}",
+        file_name.to_string_lossy(),
+        std::process::id()
+    ));
+    let commit = (|| -> io::Result<()> {
+        let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+        f.write_all(bytes)?;
+        // Data must be durable before the rename makes it reachable —
+        // otherwise a crash could publish a name pointing at torn bytes.
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    })();
+    if let Err(e) = commit {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // Make the rename itself durable: fsync the directory entry. Best
+    // effort on platforms where directories cannot be opened for sync.
+    if let Some(dir) = dir {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("spartan_atomic_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let p = tmp("basic");
+        write_atomic(&p, b"one").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"one");
+        write_atomic(&p, b"two-longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"two-longer");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn leaves_no_temp_on_success() {
+        let p = tmp("clean");
+        write_atomic(&p, b"x").unwrap();
+        let dir = p.parent().unwrap();
+        let stem = format!(".{}.tmp", p.file_name().unwrap().to_string_lossy());
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(!name.starts_with(&stem), "temp file leaked: {name}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn failed_write_preserves_previous_version() {
+        let p = tmp("preserve");
+        write_atomic(&p, b"stable").unwrap();
+        // Writing *through* the file as if it were a directory must fail
+        // without touching the committed version.
+        let bad = p.join("child");
+        assert!(write_atomic(&bad, b"x").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"stable");
+        std::fs::remove_file(&p).ok();
+    }
+}

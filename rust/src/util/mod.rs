@@ -2,6 +2,7 @@
 //! accounting. Everything here is dependency-free substrate the rest of
 //! the crate builds on.
 
+pub mod atomicfile;
 pub mod humansize;
 pub mod json;
 pub mod logger;

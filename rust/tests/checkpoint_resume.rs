@@ -1,0 +1,589 @@
+//! Durable checkpoint/resume chaos suite (ISSUE 10).
+//!
+//! Every scenario kills a real process mid-fit — a `crash-after-iter`
+//! drill (exit 86 right after a checkpoint commits), a genuine `kill -9`,
+//! a coordinator crash over live shard workers, or a SIGTERM'd journaled
+//! daemon — and asserts `spartan resume` (or the daemon's journal replay)
+//! continues to a model **byte-identical** to the uninterrupted run: the
+//! saved factor CSVs are compared verbatim. The negative path is equally
+//! load-bearing: a checkpoint resumed against changed data must be
+//! refused with the structured `bits diverge` error, never silently
+//! refit.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn spartan() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_spartan"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spartan_ckpt_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// `spartan generate` a synthetic tensor to `data`.
+fn gen_data(data: &Path, subjects: &str, variables: &str, max_obs: &str, nnz: &str, seed: &str) {
+    let out = spartan()
+        .args([
+            "generate", "--kind", "synthetic", "--out", data.to_str().unwrap(),
+            "--subjects", subjects, "--variables", variables, "--max-obs", max_obs,
+            "--nnz", nnz, "--rank", "3", "--seed", seed,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+/// A `spartan decompose` command with the suite's fixed fit config
+/// (rank 3, tol 0, seed 11, one worker) — every run of the same
+/// `max_iters` over the same data is one deterministic trajectory.
+fn decompose_cmd(data: &Path, save: &Path, max_iters: &str, extra: &[&str]) -> Command {
+    let mut cmd = spartan();
+    cmd.args([
+        "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+        "--max-iters", max_iters, "--tol", "0", "--seed", "11", "--workers", "1",
+        "--save-model", save.to_str().unwrap(),
+    ])
+    .args(extra);
+    cmd
+}
+
+fn resume(ck: &Path, save: &Path) -> std::process::Output {
+    spartan()
+        .args(["resume", ck.to_str().unwrap(), "--save-model", save.to_str().unwrap()])
+        .output()
+        .unwrap()
+}
+
+fn read_model_csvs(dir: &Path) -> Vec<(String, String)> {
+    let mut files: Vec<String> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("reading model dir {dir:?}: {e}"))
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".csv"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 4, "expected factor CSVs in {dir:?}, got {files:?}");
+    files
+        .into_iter()
+        .map(|n| {
+            let body = std::fs::read_to_string(dir.join(&n)).unwrap();
+            (n, body)
+        })
+        .collect()
+}
+
+/// Byte-identical CSVs ⇒ bitwise-identical factors: the `{:.9e}` CSV
+/// format is a lossy projection, so equality here is necessary (and the
+/// engine-level suites prove the stronger bitwise contract).
+fn assert_same_model_dirs(a: &Path, b: &Path) {
+    let aa = read_model_csvs(a);
+    let bb = read_model_csvs(b);
+    assert_eq!(aa.len(), bb.len(), "{a:?} vs {b:?}: file counts differ");
+    for ((na, ca), (nb, cb)) in aa.iter().zip(&bb) {
+        assert_eq!(na, nb);
+        assert_eq!(ca, cb, "factor CSV {na} differs between {a:?} and {b:?}");
+    }
+}
+
+/// Scenario: checkpointing must not perturb the trajectory, and the
+/// `crash-after-iter` drill — the process exits 86 immediately after the
+/// iteration-2 checkpoint is fsynced, no destructors — must leave a file
+/// that `spartan resume` continues to the exact uninterrupted model.
+/// Resuming the (now final-iteration) checkpoint a second time is a
+/// no-op fit that reproduces the same model again.
+#[test]
+fn crash_drill_resume_is_byte_identical_to_uninterrupted() {
+    let dir = tmpdir("drill");
+    let data = dir.join("data.spt");
+    gen_data(&data, "40", "20", "8", "3000", "21");
+
+    let reference = dir.join("reference");
+    let out = decompose_cmd(&data, &reference, "6", &[]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // checkpointing on: same trajectory, bit for bit
+    let full = dir.join("full");
+    let ck_full = dir.join("full.ckpt");
+    let out = decompose_cmd(&data, &full, "6", &["--checkpoint", ck_full.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_same_model_dirs(&reference, &full);
+
+    // the drill: exit 86 right after committing the iteration-2 snapshot
+    let never = dir.join("never");
+    let ck = dir.join("crash.ckpt");
+    let out = decompose_cmd(&data, &never, "6", &["--checkpoint", ck.to_str().unwrap()])
+        .env("SPARTAN_FAULT", "crash-after-iter:2")
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(86), "drill exits 86 after the commit");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("crash-after-iter"), "stderr names the drill: {err}");
+    assert!(ck.exists(), "the committed checkpoint survives the crash");
+    assert!(!never.join("H.csv").exists(), "the crashed run saved no model");
+
+    let resumed = dir.join("resumed");
+    let out = resume(&ck, &resumed);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resuming"), "stdout announces the resume: {text}");
+    assert!(text.contains("from iteration 2"), "resume starts at the crash point: {text}");
+    assert_same_model_dirs(&reference, &resumed);
+
+    // resume keeps checkpointing to the same file; a second resume sees
+    // the final-iteration snapshot and reproduces the model once more
+    let again = dir.join("again");
+    let out = resume(&ck, &again);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_same_model_dirs(&reference, &again);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Scenario: a genuine `kill -9` (SIGKILL, no drill cooperation) lands at
+/// an arbitrary point after the first checkpoint commit. Atomic
+/// tmp+fsync+rename means the file on disk is always a *complete*
+/// snapshot of some iteration boundary, so the resume lands bitwise on
+/// the uninterrupted 40-iteration trajectory — even if the kill raced
+/// the fit finishing (resuming a final checkpoint is a no-op fit).
+#[test]
+fn kill_nine_mid_fit_resume_is_byte_identical() {
+    let dir = tmpdir("kill9");
+    let data = dir.join("data.spt");
+    gen_data(&data, "40", "20", "8", "3000", "22");
+
+    let reference = dir.join("reference");
+    let out = decompose_cmd(&data, &reference, "40", &[]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let crashed = dir.join("crashed");
+    let ck = dir.join("kill.ckpt");
+    let mut child = decompose_cmd(&data, &crashed, "40", &["--checkpoint", ck.to_str().unwrap()])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if ck.exists() {
+            break;
+        }
+        if let Some(status) = child.try_wait().unwrap() {
+            panic!("decompose exited ({status}) before its first checkpoint");
+        }
+        assert!(Instant::now() < deadline, "no checkpoint appeared within 60s");
+        thread::sleep(Duration::from_millis(2));
+    }
+    child.kill().unwrap();
+    let _ = child.wait();
+
+    let resumed = dir.join("resumed");
+    let out = resume(&ck, &resumed);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_same_model_dirs(&reference, &resumed);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard-worker child process; killed on drop so a panicking test
+/// never leaks processes.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Worker {
+    fn start() -> Worker {
+        let mut child = spartan()
+            .args(["shard-worker", "--addr", "127.0.0.1:0", "--workers", "1"])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawning shard worker");
+        let mut line = String::new();
+        let mut out = BufReader::new(child.stdout.take().expect("worker stdout"));
+        out.read_line(&mut line).expect("reading worker announce");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable announce line: {line:?}"))
+            .to_string();
+        child.stdout = Some(out.into_inner());
+        Worker { child, addr }
+    }
+
+    fn stop(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Scenario: the *coordinator* of a two-worker sharded fit crashes after
+/// the iteration-2 checkpoint. The workers survive (the dead socket just
+/// returns them to their accept loop); `spartan resume` rebuilds the
+/// topology from the checkpoint's recorded shard layout, replays
+/// `hello` + `reattach`, and must land on the local reference trajectory
+/// byte for byte.
+#[test]
+fn sharded_coordinator_crash_resume_reattaches_bitwise() {
+    let dir = tmpdir("sharded");
+    let data = dir.join("data.spt");
+    gen_data(&data, "80", "12", "6", "4000", "23");
+
+    let reference = dir.join("reference");
+    let out = decompose_cmd(&data, &reference, "4", &[]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let w1 = Worker::start();
+    let w2 = Worker::start();
+    let shards = format!("{},{}", w1.addr, w2.addr);
+    let never = dir.join("never");
+    let ck = dir.join("sharded.ckpt");
+    let out = decompose_cmd(
+        &data,
+        &never,
+        "4",
+        &[
+            "--shards", &shards, "--shard-retries", "5", "--shard-backoff-ms", "50",
+            "--checkpoint", ck.to_str().unwrap(),
+        ],
+    )
+    .env("SPARTAN_FAULT", "crash-after-iter:2")
+    .output()
+    .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(86),
+        "coordinator drill exits 86: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(ck.exists());
+
+    let resumed = dir.join("resumed");
+    let out = resume(&ck, &resumed);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resuming"), "stdout announces the resume: {text}");
+    assert_same_model_dirs(&reference, &resumed);
+
+    w1.stop();
+    w2.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Scenario: the dataset changed underneath the checkpoint (regenerated
+/// with a different seed at the same path). The resume re-packs the
+/// arena, compares per-slice `‖X_k‖²` bits against the checkpoint, and
+/// must refuse with the structured divergence error — a silent refit
+/// would not be the checkpointed trajectory.
+#[test]
+fn resume_rejects_checkpoint_when_data_changed() {
+    let dir = tmpdir("diverge");
+    let data = dir.join("data.spt");
+    gen_data(&data, "40", "20", "8", "3000", "24");
+
+    let never = dir.join("never");
+    let ck = dir.join("stale.ckpt");
+    let out = decompose_cmd(&data, &never, "6", &["--checkpoint", ck.to_str().unwrap()])
+        .env("SPARTAN_FAULT", "crash-after-iter:1")
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(86));
+    assert!(ck.exists());
+
+    // same shape, different bits
+    gen_data(&data, "40", "20", "8", "3000", "25");
+
+    let resumed = dir.join("resumed");
+    let out = resume(&ck, &resumed);
+    assert!(!out.status.success(), "resume against changed data must fail");
+    assert_ne!(out.status.code(), Some(86), "failure is a refusal, not the drill");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bits diverge"), "structured divergence error, got: {err}");
+    assert!(!resumed.join("H.csv").exists(), "no model from a refused resume");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Library-level contract: a checkpoint pushed through the *file* format
+/// (save → load) restores the fit to a session whose remaining
+/// trajectory, fit history, and op counters match the uninterrupted fit
+/// exactly — the only counter signature of the resume being
+/// `resumed_from_iter` and one extra K of `x_traversals` (the re-pack).
+#[test]
+fn checkpoint_file_roundtrip_restores_counters_and_trajectory() {
+    use spartan::datagen::synthetic::{generate, SyntheticSpec};
+    use spartan::parafac2::{
+        DataHandle, FitSession, Parafac2Config, SessionOptions, StepOutcome, WarmStart,
+    };
+    use spartan::service::checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+
+    let spec = SyntheticSpec {
+        k: 12,
+        j: 10,
+        max_i_k: 6,
+        target_nnz: 600,
+        rank: 2,
+        noise: 0.05,
+        seed: 77,
+    };
+    let data = generate(&spec).tensor;
+    let cfg = Parafac2Config {
+        rank: 2,
+        max_iters: 6,
+        tol: 0.0,
+        seed: 5,
+        workers: 1,
+        ..Parafac2Config::default()
+    };
+
+    let mut full = FitSession::new(&data, &cfg).unwrap();
+    while let StepOutcome::Iterated(_) = full.step().unwrap() {}
+    let full = full.finish();
+
+    let mut first = FitSession::new(&data, &cfg).unwrap();
+    for _ in 0..3 {
+        assert!(matches!(first.step().unwrap(), StepOutcome::Iterated(_)));
+    }
+    let (h, v, w) = first.factors();
+    let ckpt = Checkpoint {
+        input: "in-memory".to_string(),
+        cfg: cfg.clone(),
+        kernel_backend: spartan::linalg::kernels::active_backend().name().to_string(),
+        h: h.clone(),
+        v: v.clone(),
+        w: w.clone(),
+        state: first.resume_state(),
+        x_norm_bits: first.slice_norm_sq(),
+        shards: None,
+    };
+    drop(first);
+
+    let dir = tmpdir("lib_roundtrip");
+    let path = dir.join("fit.ckpt");
+    save_checkpoint(&path, &ckpt).unwrap();
+    let loaded = load_checkpoint(&path).unwrap();
+    assert_eq!(loaded.state.iter, 3);
+
+    let mut resumed = FitSession::with_options(
+        DataHandle::Borrowed(&data),
+        &cfg,
+        SessionOptions {
+            warm: Some(WarmStart { h: loaded.h, v: loaded.v, w: loaded.w }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // the data-identity gate a real resume enforces before restore
+    let norms = resumed.slice_norm_sq();
+    assert_eq!(norms.len(), loaded.x_norm_bits.len());
+    for (a, b) in norms.iter().zip(&loaded.x_norm_bits) {
+        assert_eq!(a.to_bits(), b.to_bits(), "‖X_k‖² bits must survive the file");
+    }
+    resumed.restore(loaded.state);
+    while let StepOutcome::Iterated(_) = resumed.step().unwrap() {}
+    let resumed = resumed.finish();
+
+    assert_eq!(resumed.h.data(), full.h.data());
+    assert_eq!(resumed.v.data(), full.v.data());
+    assert_eq!(resumed.w.data(), full.w.data());
+    assert_eq!(resumed.stats.fit_history.len(), full.stats.fit_history.len());
+    for (a, b) in resumed.stats.fit_history.iter().zip(&full.stats.fit_history) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(resumed.stats.final_sse.to_bits(), full.stats.final_sse.to_bits());
+    assert_eq!(resumed.stats.iterations, full.stats.iterations);
+    assert_eq!(resumed.stats.resumed_from_iter, 3);
+    assert_eq!(full.stats.resumed_from_iter, 0);
+    assert_eq!(resumed.stats.yv_products, full.stats.yv_products);
+    assert_eq!(resumed.stats.traversals, full.stats.traversals);
+    assert_eq!(resumed.stats.x_traversals, full.stats.x_traversals + spec.k as u64);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Guard that kills the daemon if a test panics before stopping it.
+#[cfg(unix)]
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+#[cfg(unix)]
+impl Daemon {
+    fn start(extra: &[&str]) -> Daemon {
+        let mut cmd = spartan();
+        cmd.args(["serve", "--addr", "127.0.0.1:0"]).args(extra).stdout(Stdio::piped());
+        let mut child = cmd.spawn().unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad announce line: {line:?}"))
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .to_string();
+        Daemon { child, addr }
+    }
+
+    /// Graceful SIGTERM: the daemon drains (checkpointing running fits)
+    /// and must exit cleanly.
+    fn sigterm_and_wait(mut self) -> std::process::ExitStatus {
+        let pid = self.child.id();
+        let kill = format!("kill -TERM {pid}");
+        let out = Command::new("sh").args(["-c", &kill]).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let status = self.child.wait().unwrap();
+        std::mem::forget(self);
+        status
+    }
+
+    fn stop(mut self) {
+        let out = spartan().args(["serve-stop", "--addr", &self.addr]).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let status = self.child.wait().unwrap();
+        assert!(status.success(), "daemon exited with {status}");
+        std::mem::forget(self);
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[cfg(unix)]
+fn job_status(addr: &str, id: &str) -> (String, usize) {
+    let out = spartan().args(["status", "--addr", addr, "--id", id]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let field = |key: &str| {
+        text.split_whitespace()
+            .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+            .unwrap_or_else(|| panic!("no {key} in {text:?}"))
+            .to_string()
+    };
+    (field("state"), field("iterations").parse().unwrap())
+}
+
+#[cfg(unix)]
+fn wait_done(addr: &str, id: &str) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (state, _) = job_status(addr, id);
+        if state == "done" {
+            return;
+        }
+        assert!(
+            !matches!(state.as_str(), "cancelled" | "failed"),
+            "job {id} ended {state}, expected done"
+        );
+        assert!(Instant::now() < deadline, "job {id} stuck in {state}");
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[cfg(unix)]
+fn fetch_result(addr: &str, id: &str, save: &Path) {
+    let out = spartan()
+        .args(["result", "--addr", addr, "--id", id, "--save-model", save.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+/// Scenario: a journaled daemon is SIGTERM'd while a job runs. The drain
+/// checkpoints the fit and exits cleanly; a fresh daemon on the same
+/// journal re-admits the job, resumes it from the checkpoint, and the
+/// finished model must be byte-identical to a standalone decompose. A
+/// third daemon generation then proves persisted results replay too —
+/// the done job is served from `results/` without refitting.
+#[test]
+#[cfg(unix)]
+fn serve_journal_survives_sigterm_and_restart_bitwise() {
+    let dir = tmpdir("journal");
+    let data = dir.join("data.spt");
+    gen_data(&data, "40", "20", "8", "3000", "26");
+    let journal = dir.join("journal");
+
+    let d1 = Daemon::start(&["--workers", "1", "--journal", journal.to_str().unwrap()]);
+    let out = spartan()
+        .args([
+            "submit", "--addr", &d1.addr, "--input", data.to_str().unwrap(),
+            "--rank", "3", "--max-iters", "400", "--tol", "0", "--seed", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let id = text
+        .lines()
+        .find_map(|l| l.strip_prefix("submitted job "))
+        .unwrap_or_else(|| panic!("no job id in {text:?}"))
+        .trim()
+        .to_string();
+
+    // let the fit make real progress, then pull the rug
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (state, iters) = job_status(&d1.addr, &id);
+        if state == "done" || (state == "running" && iters >= 1) {
+            break;
+        }
+        assert_ne!(state, "failed");
+        assert!(Instant::now() < deadline, "job never started running");
+        thread::sleep(Duration::from_millis(5));
+    }
+    let status = d1.sigterm_and_wait();
+    assert!(status.success(), "SIGTERM drain must exit cleanly, got {status}");
+
+    // generation 2: replay the journal, resume, finish
+    let d2 = Daemon::start(&["--workers", "1", "--journal", journal.to_str().unwrap()]);
+    wait_done(&d2.addr, &id);
+    let served = dir.join("served");
+    fetch_result(&d2.addr, &id, &served);
+
+    let direct = dir.join("direct");
+    let out = spartan()
+        .args([
+            "decompose", "--input", data.to_str().unwrap(), "--rank", "3",
+            "--max-iters", "400", "--tol", "0", "--seed", "3", "--workers", "1",
+            "--save-model", direct.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_same_model_dirs(&direct, &served);
+    d2.stop();
+
+    // generation 3: the terminal job replays with its persisted result
+    let d3 = Daemon::start(&["--workers", "1", "--journal", journal.to_str().unwrap()]);
+    let (state, _) = job_status(&d3.addr, &id);
+    assert_eq!(state, "done", "persisted result must replay as done");
+    let served_again = dir.join("served_again");
+    fetch_result(&d3.addr, &id, &served_again);
+    assert_same_model_dirs(&served, &served_again);
+    d3.stop();
+
+    std::fs::remove_dir_all(&dir).ok();
+}

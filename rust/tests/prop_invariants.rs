@@ -351,6 +351,133 @@ fn prop_backoff_schedule_monotone_capped_deterministic() {
     }
 }
 
+/// Property: the checkpoint codec round-trips bitwise — every
+/// trajectory-relevant f64 (factors, prev_sse, fit history, per-slice
+/// `‖X_k‖²`) survives encode → JSON text → parse → decode with identical
+/// bits, across adversarial values (signed zero, the smallest denormal,
+/// non-terminating binary fractions, subnormal history entries) and both
+/// local and sharded layouts — and every strict prefix of the encoded
+/// document (a torn write from a non-atomic foreign writer) is rejected.
+#[test]
+fn prop_checkpoint_roundtrip_bitwise_and_torn_rejection() {
+    use spartan::parafac2::{Backend, Parafac2Config, ResumeState};
+    use spartan::service::checkpoint::{
+        checkpoint_from_json, checkpoint_to_json, Checkpoint, ShardLayout,
+    };
+    use spartan::util::json;
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seed(10_000 + seed);
+        let r = rng.range(1, 5);
+        let j = rng.range(r, r + 9);
+        let k = rng.range(1, 12);
+        let iter = rng.range(0, 6);
+        let mut h = Mat::rand_normal(r, r, &mut rng);
+        h[(0, 0)] = -0.0;
+        if r > 1 {
+            h[(1, 1)] = 5e-324; // smallest positive denormal
+            h[(0, 1)] = 0.1 + 0.2; // non-terminating binary fraction
+        }
+        // fit history with a subnormal and a signed zero among plausible
+        // fits — history feeds convergence reporting, every bit matters
+        let fit_history: Vec<f64> = (0..iter)
+            .map(|i| match i % 3 {
+                0 => 1e-310,
+                1 => -0.0,
+                _ => rng.uniform(0.0, 1.0),
+            })
+            .collect();
+        let mut x_norm_bits: Vec<f64> = (0..k).map(|_| rng.uniform(0.0, 1e6)).collect();
+        x_norm_bits[0] = 0.1 + 0.2;
+        let c = Checkpoint {
+            input: format!("/tmp/\"data\\{seed}\"/run {seed}.spt"),
+            cfg: Parafac2Config {
+                rank: r,
+                max_iters: iter + rng.range(1, 10),
+                tol: if seed % 2 == 0 { -0.0 } else { 1e-9 },
+                nonneg: seed % 3 == 0,
+                workers: rng.range(0, 5),
+                seed: rng.range(0, 1_000_000) as u64,
+                backend: Backend::Spartan,
+                mem_budget: if seed % 2 == 0 { Some(1 << 30) } else { None },
+                ..Default::default()
+            },
+            kernel_backend: "blocked".into(),
+            h,
+            v: Mat::rand_normal(j, r, &mut rng),
+            w: Mat::rand_normal(k, r, &mut rng),
+            state: ResumeState {
+                iter,
+                prev_sse_bits: if iter == 0 {
+                    f64::INFINITY.to_bits()
+                } else {
+                    rng.uniform(0.0, 1e9).to_bits()
+                },
+                converged: false,
+                fit_history,
+                yv_products: (iter * k) as u64,
+                traversals: (iter * k) as u64,
+                x_traversals: ((iter + 1) * k) as u64,
+                procrustes_secs: rng.uniform(0.0, 10.0),
+                cp_secs: rng.uniform(0.0, 10.0),
+                total_secs: rng.uniform(0.0, 20.0),
+                shard_reconnects: rng.range(0, 3) as u64,
+                shard_retries: rng.range(0, 5) as u64,
+            },
+            x_norm_bits,
+            shards: if seed % 2 == 0 {
+                Some(ShardLayout {
+                    addrs: (0..rng.range(1, 4))
+                        .map(|i| format!("127.0.0.1:{}", 9000 + i))
+                        .collect(),
+                    max_retries: rng.range(0, 9) as u32,
+                    backoff_ms: rng.range(0, 5000) as u64,
+                    read_timeout_secs: rng.range(1, 120) as u64,
+                })
+            } else {
+                None
+            },
+        };
+        let text = checkpoint_to_json(&c).to_string();
+        let back = checkpoint_from_json(&json::parse(&text).unwrap_or_else(|e| {
+            panic!("seed {seed}: checkpoint JSON failed to parse: {e}")
+        }))
+        .unwrap_or_else(|e| panic!("seed {seed}: checkpoint decode failed: {e}"));
+        assert_eq!(back.input, c.input, "seed {seed}");
+        assert_eq!(back.kernel_backend, c.kernel_backend, "seed {seed}");
+        assert_eq!(back.cfg.tol.to_bits(), c.cfg.tol.to_bits(), "seed {seed} tol");
+        assert_eq!(back.cfg.seed, c.cfg.seed, "seed {seed}");
+        assert_eq!(back.state.iter, c.state.iter, "seed {seed}");
+        assert_eq!(back.state.prev_sse_bits, c.state.prev_sse_bits, "seed {seed}");
+        assert_eq!(back.state.yv_products, c.state.yv_products, "seed {seed}");
+        assert_eq!(back.shards, c.shards, "seed {seed}");
+        for (name, a, b) in
+            [("h", &c.h, &back.h), ("v", &c.v, &back.v), ("w", &c.w, &back.w)]
+        {
+            assert_eq!(a.shape(), b.shape(), "seed {seed} {name}");
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} {name} bits");
+            }
+        }
+        assert_eq!(back.state.fit_history.len(), c.state.fit_history.len(), "seed {seed}");
+        for (x, y) in back.state.fit_history.iter().zip(&c.state.fit_history) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} history bits");
+        }
+        for (x, y) in back.x_norm_bits.iter().zip(&c.x_norm_bits) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} x_norm bits");
+        }
+        // torn-file rejection: every strict prefix must fail to decode
+        for frac in [1usize, 4, 8] {
+            let cut = text.len() * frac / 10;
+            let torn = &text[..cut.min(text.len().saturating_sub(1))];
+            let rejected = match json::parse(torn) {
+                Err(_) => true,
+                Ok(doc) => checkpoint_from_json(&doc).is_err(),
+            };
+            assert!(rejected, "seed {seed}: torn prefix ({cut} bytes) accepted");
+        }
+    }
+}
+
 /// Property: the `reattach` wire codec round-trips bitwise — every f64 in
 /// the frozen H/V/W survives encode → NDJSON text → parse → decode with
 /// identical bits (the recovery path's bitwise-identity claim starts
